@@ -1,0 +1,158 @@
+//! NN-strategy ablation (the §V design discussion, quantified):
+//! compare correspondence-estimation strategies on the same workload —
+//!
+//!   * kd-tree (PCL baseline; sequential traversal, data-dependent)
+//!   * CPU brute force, 1 thread and N threads
+//!   * the blocked kernel dataflow (NativeSim mirror of the PE array)
+//!   * projected FPGA systolic array latency (hwmodel)
+//!   * projected TPU Pallas latency structure (tpu_estimate)
+//!
+//! plus a Pallas block-shape sweep showing where VMEM/MXU trade off —
+//! the L1 §Perf structural target.
+//!
+//!   cargo run --release --example ablation_nn
+
+use fpps::hwmodel::{latency, tpu_estimate, AcceleratorConfig};
+use fpps::kdtree::KdTree;
+use fpps::nn;
+use fpps::pointcloud::PointCloud;
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use std::time::Instant;
+
+fn random_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for _ in 0..n {
+        c.push([
+            rng.range(-60.0, 60.0),
+            rng.range(-60.0, 60.0),
+            rng.range(-2.0, 6.0),
+        ]);
+    }
+    c
+}
+
+fn main() {
+    let n_src = 4096;
+    let n_tgt = 32_768;
+    let queries = random_cloud(n_src, 1);
+    let targets = random_cloud(n_tgt, 2);
+    println!("workload: {n_src} queries x {n_tgt} targets (one NN pass)\n");
+
+    let mut t = Table::new("NN strategy ablation").header(&[
+        "strategy",
+        "time (ms)",
+        "vs kd-tree",
+        "notes",
+    ]);
+
+    // kd-tree (build + query, like one ICP iteration does).
+    let t0 = Instant::now();
+    let tree = KdTree::build(&targets);
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let mut checksum = 0u64;
+    for q in queries.iter() {
+        checksum += tree.nearest(q).unwrap().index as u64;
+    }
+    let kd_ms = t0.elapsed().as_secs_f64() * 1e3;
+    t.row(vec![
+        "kd-tree (PCL baseline)".into(),
+        format!("{kd_ms:.1}"),
+        "1.00x".into(),
+        format!("+{build_ms:.1} ms build; depth-dependent latency"),
+    ]);
+
+    // Brute force single thread.
+    let t0 = Instant::now();
+    for q in queries.iter() {
+        checksum += nn::nearest_brute(&targets, q).unwrap().0 as u64;
+    }
+    let brute_ms = t0.elapsed().as_secs_f64() * 1e3;
+    t.row(vec![
+        "brute force, 1 thread".into(),
+        format!("{brute_ms:.1}"),
+        format!("{:.2}x", kd_ms / brute_ms),
+        "deterministic, O(N*M)".into(),
+    ]);
+
+    // Brute force multithreaded.
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let t0 = Instant::now();
+    let res = nn::nearest_brute_parallel(&targets, &queries, threads);
+    let par_ms = t0.elapsed().as_secs_f64() * 1e3;
+    checksum += res[0].0 as u64;
+    t.row(vec![
+        format!("brute force, {threads} threads"),
+        format!("{par_ms:.1}"),
+        format!("{:.2}x", kd_ms / par_ms),
+        "the intro's multi-core scaling path".into(),
+    ]);
+
+    // Kernel-mirror blocked dataflow (what the device executes).
+    let cfg = nn::KernelConfig::default();
+    let (ps, _) = nn::pad_cloud(&queries.xyz, cfg.block_n);
+    let (pt, mask) = nn::pad_cloud(&targets.xyz, cfg.block_m);
+    let t0 = Instant::now();
+    let r = nn::kernel_mirror(&ps, &pt, &mask, cfg);
+    let mirror_ms = t0.elapsed().as_secs_f64() * 1e3;
+    checksum += r.index[0] as u64;
+    t.row(vec![
+        "blocked PE dataflow (NativeSim)".into(),
+        format!("{mirror_ms:.1}"),
+        format!("{:.2}x", kd_ms / mirror_ms),
+        "bit-faithful kernel mirror on CPU".into(),
+    ]);
+
+    // Projected FPGA systolic array.
+    let hw = AcceleratorConfig::default();
+    let fpga_ms = latency::nn_search_cycles(&hw, n_src, n_tgt) as f64 * hw.cycle_s() * 1e3;
+    t.row(vec![
+        format!("FPGA {}x{} PE array (model)", hw.pe_rows, hw.pe_cols),
+        format!("{fpga_ms:.1}"),
+        format!("{:.2}x", kd_ms / fpga_ms),
+        format!("deterministic @ {} MHz", hw.clock_mhz),
+    ]);
+    t.print();
+    println!("(checksum {checksum})\n");
+
+    // ---- Pallas block-shape sweep (L1 structural perf target) ----
+    let core = tpu_estimate::TpuCore::default();
+    let mut sweep = Table::new("Pallas block-shape sweep (TPU structural estimate)")
+        .header(&["BN", "BM", "VMEM (KiB)", "MXU util", "flops/byte", "grid cycles (M)"]);
+    for bn in [32usize, 64, 128, 256, 512] {
+        for bm in [256usize, 512, 1024, 2048] {
+            if n_src % bn != 0 || n_tgt % bm != 0 {
+                continue;
+            }
+            let blk = tpu_estimate::BlockConfig {
+                block_n: bn,
+                block_m: bm,
+            };
+            let e = tpu_estimate::estimate(&core, &blk);
+            if e.vmem_bytes > core.vmem_bytes {
+                continue;
+            }
+            let steps = (n_src / bn) * (n_tgt / bm);
+            sweep.row(vec![
+                bn.to_string(),
+                bm.to_string(),
+                format!("{}", e.vmem_bytes / 1024),
+                format!("{:.3}", e.mxu_utilization),
+                format!("{:.1}", e.flops_per_byte),
+                format!("{:.2}", e.cycles * steps as f64 / 1e6),
+            ]);
+        }
+    }
+    sweep.print();
+    let (best, e) = tpu_estimate::best_blocks(&core, n_src, n_tgt);
+    println!(
+        "\nbest blocks by total cycles: BN={} BM={} (VMEM {} KiB, MXU {:.3})",
+        best.block_n,
+        best.block_m,
+        e.vmem_bytes / 1024,
+        e.mxu_utilization
+    );
+    println!("ablation_nn OK");
+}

@@ -1,0 +1,165 @@
+//! End-to-end driver (DESIGN.md §5): scan-to-scan LiDAR odometry over a
+//! synthetic KITTI-like sequence, run twice —
+//!
+//!   1. CPU baseline: PCL-equivalent ICP (kd-tree, full source cloud),
+//!      the paper's software-only configuration;
+//!   2. FPPS hybrid: 4096-point source sample through the AOT device
+//!      kernel (PJRT) with the host SVD loop;
+//!
+//! and reports per-frame latency, registration RMSE, trajectory ATE and
+//! the projected Alveo-U50 frame latency from the hardware model — the
+//! quantities of Tables III/IV. Results are recorded in EXPERIMENTS.md.
+//!
+//!   cargo run --release --example odometry -- [--sequence 03] [--frames 8]
+
+use anyhow::Result;
+use fpps::cli::Parser;
+use fpps::coordinator::{run_odometry, PipelineConfig};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::FppsIcp;
+use fpps::hwmodel::{latency, AcceleratorConfig};
+use fpps::icp::{IcpParams, SearchStrategy};
+use fpps::math::Mat4;
+use fpps::metrics::{absolute_trajectory_error, TimingStats};
+use fpps::report::Table;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let p = Parser::new("odometry", "end-to-end odometry driver")
+        .opt("sequence", "sequence 00..09", Some("03"))
+        .opt("frames", "frames to process", Some("8"))
+        .opt("seed", "dataset seed", Some("2026"));
+    let a = p.parse_env(1)?;
+    let name = a.get("sequence").unwrap().to_string();
+    let frames: usize = a.get_or("frames", 8)?;
+    let seed: u64 = a.get_or("seed", 2026)?;
+
+    let spec = sequence_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .expect("unknown sequence");
+    println!(
+        "sequence {name} ({:?}), {frames} frames, full 64-beam LiDAR",
+        spec.kind
+    );
+    let seq = Sequence::synthetic(spec, frames, seed, LidarConfig::default());
+    let cfg = PipelineConfig {
+        seed,
+        ..Default::default()
+    };
+
+    // ---------- CPU baseline: full cloud through kd-tree ICP ----------
+    println!("\n[1/2] CPU baseline (PCL-equivalent, full source cloud)…");
+    let params = IcpParams {
+        search: SearchStrategy::KdTree,
+        ..Default::default()
+    };
+    let mut cpu_stats = TimingStats::new();
+    let mut cpu_rmse = Vec::new();
+    let mut cpu_poses = vec![Mat4::IDENTITY];
+    let mut prev: Option<fpps::pointcloud::PointCloud> = None;
+    let mut prev_rel = Mat4::IDENTITY;
+    for i in 0..frames {
+        // The paper's software baseline registers the FULL cloud (the
+        // 4096-point sample is the accelerated path's trick), so no
+        // front end here beyond what both sides share.
+        let cloud = seq.frame(i)?;
+        if let Some(target) = prev.take() {
+            let t0 = std::time::Instant::now();
+            let res = fpps::icp::align(&cloud, &target, &prev_rel, &params);
+            cpu_stats.record(t0.elapsed());
+            cpu_rmse.push(res.rmse);
+            let pose = cpu_poses.last().unwrap().mul_mat(&res.transformation);
+            cpu_poses.push(pose);
+            prev_rel = if res.has_converged() {
+                res.transformation
+            } else {
+                Mat4::IDENTITY
+            };
+        }
+        prev = Some(cloud);
+    }
+
+    // ---------- FPPS hybrid through the AOT artifact ----------
+    println!("[2/2] FPPS hybrid (4096-pt sample on the device kernel)…");
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.txt").exists(),
+        "artifacts/ missing — run `make artifacts`"
+    );
+    let mut icp = FppsIcp::hardware_initialize(artifacts)?;
+    let fpps_res = run_odometry(&seq, frames, cfg, &mut icp)?;
+
+    // ---------- comparison ----------
+    let gt0 = seq.ground_truth[0];
+    let gt: Vec<Mat4> = seq
+        .ground_truth
+        .iter()
+        .map(|g| gt0.inverse_rigid().mul_mat(g))
+        .collect();
+    let cpu_ate = absolute_trajectory_error(&cpu_poses, &gt[..cpu_poses.len()]);
+    let fpps_ate =
+        absolute_trajectory_error(&fpps_res.poses, &gt[..fpps_res.poses.len()]);
+    let cpu_mean_rmse = cpu_rmse.iter().sum::<f64>() / cpu_rmse.len().max(1) as f64;
+
+    // Projected Alveo U50 latency for the same workload (hwmodel).
+    let hw = AcceleratorConfig::default();
+    let mean_iters = fpps_res
+        .records
+        .iter()
+        .map(|r| r.iterations as f64)
+        .sum::<f64>()
+        / fpps_res.records.len().max(1) as f64;
+    let fpga_frame =
+        latency::frame_latency(&hw, 4096, hw.target_capacity, mean_iters.round() as u32);
+
+    let mut t = Table::new("\nEnd-to-end odometry summary").header(&[
+        "metric",
+        "CPU baseline",
+        "FPPS hybrid",
+    ]);
+    t.row(vec![
+        "frames aligned".into(),
+        cpu_rmse.len().to_string(),
+        fpps_res.records.len().to_string(),
+    ]);
+    t.row(vec![
+        "mean registration RMSE (m)".into(),
+        format!("{cpu_mean_rmse:.3}"),
+        format!("{:.3}", fpps_res.mean_rmse()),
+    ]);
+    t.row(vec![
+        "trajectory ATE (m)".into(),
+        format!("{cpu_ate:.3}"),
+        format!("{fpps_ate:.3}"),
+    ]);
+    t.row(vec![
+        "mean frame latency, this host (ms)".into(),
+        format!("{:.1}", cpu_stats.mean_ms()),
+        format!("{:.1}", fpps_res.align_stats.mean_ms()),
+    ]);
+    t.row(vec![
+        "p99 frame latency, this host (ms)".into(),
+        format!("{:.1}", cpu_stats.percentile_ms(99.0)),
+        format!("{:.1}", fpps_res.align_stats.percentile_ms(99.0)),
+    ]);
+    t.row(vec![
+        "projected U50 frame latency (ms)".into(),
+        "-".into(),
+        format!("{:.1}", fpga_frame.total_s * 1e3),
+    ]);
+    t.row(vec![
+        "projected speedup vs this CPU".into(),
+        "1.00x".into(),
+        format!("{:.2}x", cpu_stats.mean_ms() / (fpga_frame.total_s * 1e3)),
+    ]);
+    t.print();
+
+    println!(
+        "\nRMSE delta CPU vs FPPS: {:.4} m (paper Table III: within 0.01 m of\n\
+         each other except seq 00; sampling differences explain the gap)",
+        (cpu_mean_rmse - fpps_res.mean_rmse()).abs()
+    );
+    println!("odometry example OK");
+    Ok(())
+}

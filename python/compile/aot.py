@@ -1,0 +1,113 @@
+"""AOT lowering: icp_step -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime loads the
+HLO text via `HloModuleProto::from_text_file` and compiles it on the
+PJRT CPU client.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest is the key=value format of rust/src/config (no JSON dep).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+Environment:
+    FPPS_FULL_ARTIFACTS=1  also emit the paper-scale 4096x131072 variant
+                           (slow to lower; not needed for tests/benches).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import nn_search as nnk
+
+# (name, N, M, block_n, block_m). N/M are buffer capacities; the rust
+# runtime picks the smallest variant that fits and pads with masks.
+VARIANTS = [
+    ("icp_step_256x1024", 256, 1024, 64, 256),
+    ("icp_step_1024x4096", 1024, 4096, 256, 1024),
+    ("icp_step_4096x16384", 4096, 16384, 512, 2048),
+]
+FULL_VARIANTS = [
+    ("icp_step_4096x131072", 4096, 131072, 512, 2048),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n, m, block_n, block_m):
+    def fn(src, tgt, src_mask, tgt_mask, transform, max_dist_sq):
+        return model.icp_step(src, tgt, src_mask, tgt_mask, transform,
+                              max_dist_sq, block_n=block_n, block_m=block_m)
+
+    args = (
+        jax.ShapeDtypeStruct((n, 3), jnp.float32),
+        jax.ShapeDtypeStruct((m, 3), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def emit(out_dir: str, full: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    variants = list(VARIANTS) + (list(FULL_VARIANTS) if full else [])
+    manifest_lines = [
+        "# FPPS AOT artifact manifest — written by python/compile/aot.py",
+        f"kernel_default_block_n={nnk.DEFAULT_BN}",
+        f"kernel_default_block_m={nnk.DEFAULT_BM}",
+        f"jax_version={jax.__version__}",
+    ]
+    written = []
+    for name, n, m, bn, bm in variants:
+        lowered = lower_variant(n, m, bn, bm)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines += [
+            f"variant.{name}.n={n}",
+            f"variant.{name}.m={m}",
+            f"variant.{name}.block_n={bn}",
+            f"variant.{name}.block_m={bm}",
+            f"variant.{name}.file={fname}",
+        ]
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')} "
+          f"({len(variants)} variants)")
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the paper-scale 4096x131072 variant")
+    args = ap.parse_args()
+    full = args.full or os.environ.get("FPPS_FULL_ARTIFACTS") == "1"
+    emit(args.out_dir, full=full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Layer 1 — the FPPS NN searcher (paper Fig. 3) as a Pallas kernel.
+
+Architecture mapping (see DESIGN.md §2 "Hardware adaptation"):
+
+* the PE array's distance tile is a (BN x BM) block computed with the
+  matmul identity  ||p - q||^2 = ||p||^2 - 2 p.q + ||q||^2,  so the
+  inner product lands on the MXU (the FPGA uses a DSP systolic array);
+* the BlockSpec over the target cloud is the paper's BRAM partitioning +
+  broadcast bus: target block j streams through while source block i is
+  resident (the "local register buffer");
+* the per-tile argmin is the comparison tree (CMP TR);
+* the cross-tile running (min, idx) update with strict `<` is the MIN
+  register pair of each PE.
+
+The kernel must be lowered with ``interpret=True``: this CPU-only image
+executes via the PJRT CPU client, which cannot run Mosaic custom calls
+(see /opt/xla-example/README.md). ``interpret=True`` lowers the grid to
+plain HLO (a scan over grid steps), preserving the blocked dataflow.
+
+The rust NativeSim backend (`rust/src/nn/kernel_mirror`) re-implements
+this dataflow operation-for-operation; keep the two in sync (same block
+sizes, same distance form, same tie-breaking) or the backend-parity
+tests will fail.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes — mirrored by rust/src/nn/mod.rs::KernelConfig.
+DEFAULT_BN = 512
+DEFAULT_BM = 2048
+
+# Distance added to masked (padding) targets; mirrored by
+# rust/src/nn/mod.rs::MASKED_DIST.
+MASKED_DIST = 1e30
+
+
+def _nn_kernel(p_ref, q_ref, qmask_ref, dist_ref, idx_ref):
+    """One grid step: distance tile + tile argmin + MIN-register update."""
+    j = pl.program_id(1)
+    p = p_ref[...]          # (BN, 3)  resident source block
+    q = q_ref[...]          # (BM, 3)  broadcast target batch
+    qmask = qmask_ref[...]  # (BM,)
+
+    # Distance tile on the MXU (matmul identity).
+    pq = jnp.dot(p, q.T)                         # (BN, BM)
+    pn = jnp.sum(p * p, axis=1, keepdims=True)   # (BN, 1)
+    qn = jnp.sum(q * q, axis=1)[None, :]         # (1, BM)
+    d = pn - 2.0 * pq + qn
+    # Masked targets are pushed beyond any real distance.
+    d = d + (1.0 - qmask)[None, :] * MASKED_DIST
+
+    # Comparison tree: per-tile argmin (ties -> lowest index).
+    local_min = jnp.min(d, axis=1)
+    local_idx = jnp.argmin(d, axis=1).astype(jnp.int32) + j * q.shape[0]
+
+    # MIN register pair: initialise on the first batch, then strict-<
+    # update, so the global result is the first argmin — identical to a
+    # serial scan over the whole target cloud.
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = local_min
+        idx_ref[...] = local_idx
+
+    @pl.when(j > 0)
+    def _update():
+        better = local_min < dist_ref[...]
+        dist_ref[...] = jnp.where(better, local_min, dist_ref[...])
+        idx_ref[...] = jnp.where(better, local_idx, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def nn_search(p, q, qmask, block_n=DEFAULT_BN, block_m=DEFAULT_BM):
+    """Masked exact nearest neighbour of each row of `p` in `q`.
+
+    Args:
+      p: (N, 3) f32 query points (N % block_n == 0).
+      q: (M, 3) f32 target points (M % block_m == 0).
+      qmask: (M,) f32 validity mask (1 = real point, 0 = padding).
+      block_n / block_m: PE-array tile shape.
+
+    Returns:
+      (dist_sq, idx): (N,) f32 squared distances (identity form) and
+      (N,) i32 indices of the nearest valid target.
+    """
+    n, m = p.shape[0], q.shape[0]
+    if n % block_n or m % block_m:
+        raise ValueError(f"shapes ({n},{m}) not divisible by blocks "
+                         f"({block_n},{block_m})")
+    grid = (n // block_n, m // block_m)
+    return pl.pallas_call(
+        _nn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,  # mandatory on CPU PJRT — see module docstring
+    )(p, q, qmask)

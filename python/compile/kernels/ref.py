@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernel and the icp_step model.
+
+These are the CORE correctness references: small, obviously-correct
+dense implementations that the blocked kernel and the fused model are
+tested against (python/tests/test_kernel.py, test_model.py). They also
+define the exact semantics the rust NativeSim backend mirrors.
+"""
+
+import jax.numpy as jnp
+
+MASKED_DIST = 1e30
+
+
+def nn_search_ref(p, q, qmask):
+    """Dense masked NN: full (N, M) distance matrix + argmin.
+
+    Uses the same matmul-identity distance form as the kernel so the
+    float rounding matches tile-for-tile.
+    """
+    pq = jnp.dot(p, q.T)
+    pn = jnp.sum(p * p, axis=1, keepdims=True)
+    qn = jnp.sum(q * q, axis=1)[None, :]
+    d = pn - 2.0 * pq + qn
+    d = d + (1.0 - qmask)[None, :] * MASKED_DIST
+    return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def transform_ref(src, transform):
+    """Rigid transform of (N, 3) by a 4x4 row-major matrix."""
+    r = transform[:3, :3]
+    t = transform[:3, 3]
+    return src @ r.T + t[None, :]
+
+
+def icp_step_ref(src, tgt, src_mask, tgt_mask, transform, max_dist_sq):
+    """Dense reference of the full device step (transform -> NN ->
+    correspondence filter -> accumulate). Returns the 5-tuple wire
+    layout: count, sum_p (3,), sum_q (3,), sum_pq (3, 3), sum_sq_dist.
+    """
+    p = transform_ref(src, transform)
+    dist, idx = nn_search_ref(p, tgt, tgt_mask)
+    q = tgt[idx]
+    w = src_mask * (dist <= max_dist_sq).astype(jnp.float32)
+    count = jnp.sum(w)
+    sum_p = jnp.sum(p * w[:, None], axis=0)
+    sum_q = jnp.sum(q * w[:, None], axis=0)
+    sum_pq = (p * w[:, None]).T @ q
+    sum_sq = jnp.sum(dist * w)
+    return count, sum_p, sum_q, sum_pq, sum_sq

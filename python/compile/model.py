@@ -1,0 +1,59 @@
+"""Layer 2 — the device-side ICP step as a single JAX computation.
+
+This is everything the paper offloads to the FPGA kernel (Fig. 2):
+
+  1. point cloud transformer:   p = R.src + t        (cumulative T)
+  2. NN searcher:               Pallas kernel (Layer 1)
+  3. correspondence filter:     w = valid & (d <= max_dist^2)
+  4. result accumulator:        count, Σw.p, Σw.q, Σw.p.qᵀ, Σw.d
+
+The host (rust Layer 3) finishes each iteration with the 3x3 SVD and the
+convergence check — exactly the paper's host/kernel split. The whole
+function is lowered ONCE per shape variant by aot.py; python never runs
+at request time.
+
+Output wire layout (17 f32 values; rust `StepAccumulators::from_wire`):
+  [count, sum_p(3), sum_q(3), sum_pq(9, row-major), sum_sq_dist]
+"""
+
+import jax.numpy as jnp
+
+from .kernels import nn_search as nnk
+
+
+def icp_step(src, tgt, src_mask, tgt_mask, transform, max_dist_sq,
+             block_n=nnk.DEFAULT_BN, block_m=nnk.DEFAULT_BM):
+    """One device ICP step over fixed-capacity padded buffers.
+
+    Args:
+      src: (N, 3) f32 source cloud, padded to the variant capacity.
+      tgt: (M, 3) f32 target cloud, padded.
+      src_mask / tgt_mask: (N,) / (M,) f32 validity masks.
+      transform: (4, 4) f32 row-major rigid transform (cumulative T).
+      max_dist_sq: () f32 squared max correspondence distance.
+
+    Returns:
+      5-tuple: count, sum_p (3,), sum_q (3,), sum_pq (3, 3), sum_sq_dist.
+    """
+    # (1) point cloud transformer — tiny dense op, fuses into the step.
+    r = transform[:3, :3]
+    t = transform[:3, 3]
+    p = src @ r.T + t[None, :]
+
+    # (2) NN searcher — the Pallas kernel.
+    dist, idx = nnk.nn_search(p, tgt, tgt_mask, block_n=block_n,
+                              block_m=block_m)
+
+    # (3) correspondence filter. Padding sources carry w=0; padding
+    # targets were pushed to +1e30 inside the kernel, so a padded-source
+    # row can never sneak in through the distance test either.
+    w = src_mask * (dist <= max_dist_sq).astype(jnp.float32)
+
+    # (4) result accumulator — the masked sums the host SVD needs.
+    q = tgt[idx]
+    count = jnp.sum(w)
+    sum_p = jnp.sum(p * w[:, None], axis=0)
+    sum_q = jnp.sum(q * w[:, None], axis=0)
+    sum_pq = (p * w[:, None]).T @ q
+    sum_sq = jnp.sum(dist * w)
+    return count, sum_p, sum_q, sum_pq, sum_sq

@@ -1,0 +1,137 @@
+"""Layer-1 correctness: Pallas NN kernel vs the dense jnp oracle.
+
+This is the core correctness signal for the device kernel: exact index
+agreement and distance agreement (same float form) across shapes,
+block configurations, masks, and adversarial point layouts — including
+hypothesis-driven randomized sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import nn_search as nnk
+from compile.kernels import ref
+
+
+def random_clouds(n, m, seed, scale=10.0):
+    rng = np.random.default_rng(seed)
+    p = (rng.standard_normal((n, 3)) * scale).astype(np.float32)
+    q = (rng.standard_normal((m, 3)) * scale).astype(np.float32)
+    return p, q
+
+
+def run_both(p, q, qmask, block_n, block_m):
+    d_k, i_k = nnk.nn_search(
+        jnp.asarray(p), jnp.asarray(q), jnp.asarray(qmask),
+        block_n=block_n, block_m=block_m)
+    d_r, i_r = ref.nn_search_ref(
+        jnp.asarray(p), jnp.asarray(q), jnp.asarray(qmask))
+    return (np.asarray(d_k), np.asarray(i_k),
+            np.asarray(d_r), np.asarray(i_r))
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n,m,bn,bm", [
+        (64, 256, 64, 256),      # single tile
+        (128, 512, 64, 256),     # 2x2 grid
+        (256, 1024, 64, 256),    # 4x4 grid
+        (128, 512, 128, 512),    # default blocks, single tile
+        (256, 1024, 128, 512),
+    ])
+    def test_indices_and_distances_match(self, n, m, bn, bm):
+        p, q = random_clouds(n, m, seed=n * 31 + m)
+        qmask = np.ones(m, np.float32)
+        d_k, i_k, d_r, i_r = run_both(p, q, qmask, bn, bm)
+        np.testing.assert_array_equal(i_k, i_r)
+        np.testing.assert_allclose(d_k, d_r, rtol=1e-4, atol=1e-3)
+
+    def test_masked_targets_never_selected(self):
+        p, q = random_clouds(64, 256, seed=7)
+        qmask = np.ones(256, np.float32)
+        # Mask out the 128 targets closest to the first query point.
+        d = np.sum((q - p[0]) ** 2, axis=1)
+        qmask[np.argsort(d)[:128]] = 0.0
+        d_k, i_k, d_r, i_r = run_both(p, q, qmask, 64, 256)
+        np.testing.assert_array_equal(i_k, i_r)
+        assert np.all(qmask[i_k] == 1.0), "kernel picked a masked target"
+
+    def test_all_masked_gives_huge_distance(self):
+        p, q = random_clouds(64, 256, seed=8)
+        qmask = np.zeros(256, np.float32)
+        d_k, i_k, _, _ = run_both(p, q, qmask, 64, 256)
+        assert np.all(d_k >= nnk.MASKED_DIST * 0.5)
+
+    def test_exact_duplicates_tie_break_to_lowest_index(self):
+        # All targets identical: argmin must be index 0 in kernel & ref.
+        p = np.zeros((64, 3), np.float32)
+        q = np.ones((256, 3), np.float32)
+        qmask = np.ones(256, np.float32)
+        d_k, i_k, d_r, i_r = run_both(p, q, qmask, 64, 128)
+        assert np.all(i_k == 0)
+        np.testing.assert_array_equal(i_k, i_r)
+
+    def test_nearest_in_last_block(self):
+        # Put the true NN in the final target block to catch
+        # initialisation-only bugs.
+        p = np.zeros((64, 3), np.float32)
+        q = np.full((512, 3), 100.0, np.float32)
+        q[-1] = [0.1, 0.0, 0.0]
+        qmask = np.ones(512, np.float32)
+        d_k, i_k, _, _ = run_both(p, q, qmask, 64, 128)
+        assert np.all(i_k == 511)
+        np.testing.assert_allclose(d_k, 0.01, rtol=1e-4)
+
+    def test_shape_validation(self):
+        p, q = random_clouds(100, 512, seed=9)  # 100 % 64 != 0
+        with pytest.raises(ValueError, match="not divisible"):
+            nnk.nn_search(jnp.asarray(p), jnp.asarray(q),
+                          jnp.ones(512), block_n=64, block_m=256)
+
+    def test_degenerate_coincident_points(self):
+        # Query exactly on a target: distance must be ~0 (identity form
+        # can go slightly negative; clamp is the caller's job).
+        q = np.array([[1.0, 2.0, 3.0]] + [[9.0, 9.0, 9.0]] * 255,
+                     np.float32)
+        p = np.tile(q[0], (64, 1))
+        qmask = np.ones(256, np.float32)
+        d_k, i_k, _, _ = run_both(p, q, qmask, 64, 256)
+        assert np.all(i_k == 0)
+        np.testing.assert_allclose(d_k, 0.0, atol=1e-4)
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        m_blocks=st.integers(1, 4),
+        bn=st.sampled_from([32, 64]),
+        bm=st.sampled_from([64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 100.0]),
+    )
+    def test_random_shapes_and_scales(self, n_blocks, m_blocks, bn, bm,
+                                      seed, scale):
+        n, m = n_blocks * bn, m_blocks * bm
+        p, q = random_clouds(n, m, seed=seed, scale=scale)
+        qmask = np.ones(m, np.float32)
+        d_k, i_k, d_r, i_r = run_both(p, q, qmask, bn, bm)
+        np.testing.assert_array_equal(i_k, i_r)
+        np.testing.assert_allclose(d_k, d_r, rtol=1e-4,
+                                   atol=1e-4 * scale * scale)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        mask_frac=st.floats(0.0, 0.9),
+    )
+    def test_random_masks(self, seed, mask_frac):
+        rng = np.random.default_rng(seed)
+        p, q = random_clouds(64, 512, seed=seed)
+        qmask = (rng.random(512) >= mask_frac).astype(np.float32)
+        d_k, i_k, d_r, i_r = run_both(p, q, qmask, 64, 128)
+        np.testing.assert_array_equal(i_k, i_r)
+        if qmask.sum() > 0:
+            assert np.all(qmask[i_k] == 1.0)

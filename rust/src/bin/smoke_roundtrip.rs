@@ -1,0 +1,79 @@
+//! Smoke test for the AOT round-trip: load the HLO text produced by
+//! `python/compile/aot.py` (or the /tmp prototype), execute the icp_step
+//! computation on the PJRT CPU client, and compare against the expected
+//! accumulator values dumped by the python side.
+//!
+//! Usage: smoke_roundtrip [hlo_path] [expect_bin]
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let hlo = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/icp_step.hlo.txt".to_string());
+    let expect_path = std::env::args()
+        .nth(2)
+        .unwrap_or_else(|| "/tmp/icp_step_expect.bin".to_string());
+
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let proto = xla::HloModuleProto::from_text_file(&hlo)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    println!("compiled {}", hlo);
+
+    let (n, m) = (256usize, 1024usize);
+    let src = read_f32("/tmp/icp_step_src.bin", n * 3)?;
+    let tgt = read_f32("/tmp/icp_step_tgt.bin", m * 3)?;
+    let smask = vec![1f32; n];
+    let mut tmask = vec![1f32; m];
+    for v in tmask[m - 7..].iter_mut() {
+        *v = 0.0;
+    }
+    let mut t = vec![0f32; 16];
+    for i in 0..4 {
+        t[i * 4 + i] = 1.0;
+    }
+    t[3] = 0.1;
+    t[7] = -0.2;
+    t[11] = 0.05;
+
+    let lits = vec![
+        xla::Literal::vec1(&src).reshape(&[n as i64, 3])?,
+        xla::Literal::vec1(&tgt).reshape(&[m as i64, 3])?,
+        xla::Literal::vec1(&smask),
+        xla::Literal::vec1(&tmask),
+        xla::Literal::vec1(&t).reshape(&[4, 4])?,
+        xla::Literal::scalar(1e30f32),
+    ];
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let outs = result.to_tuple()?;
+    println!("num outputs: {}", outs.len());
+    let mut got = Vec::new();
+    for o in &outs {
+        got.extend(o.to_vec::<f32>()?);
+    }
+    let expect = read_f32(&expect_path, 17)?;
+    let mut max_err = 0f32;
+    for (g, e) in got.iter().zip(expect.iter()) {
+        let err = (g - e).abs() / e.abs().max(1.0);
+        max_err = max_err.max(err);
+    }
+    println!("got[0..5]={:?}", &got[..5.min(got.len())]);
+    println!("max rel err vs python: {max_err:e}");
+    assert!(max_err < 1e-4, "mismatch vs python expected values");
+    println!("smoke_roundtrip OK");
+    Ok(())
+}
+
+fn read_f32(path: &str, count: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() == count * 4, "{path}: wrong size");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,210 @@
+//! Tiny argument parser for the `fpps` CLI and examples (clap is not
+//! available offline). Supports `--key value`, `--key=value`, boolean
+//! `--flag`, and positional arguments, with generated usage text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("--{name}: cannot parse {v:?}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Command parser: specs + usage rendering.
+pub struct Parser {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            s.push_str(&format!("  {arg:<34} {}", spec.help));
+            if let Some(d) = spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s.push_str("  --help                             show this help\n");
+        s
+    }
+
+    /// Parse a raw token list (without argv[0]).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let Some(spec) = self.specs.iter().find(|s| s.name == name) else {
+                    bail!("unknown option --{name}\n\n{}", self.usage());
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= tokens.len() {
+                                bail!("--{name} requires a value");
+                            }
+                            tokens[i].clone()
+                        }
+                    };
+                    args.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args().skip(2)` style iterators.
+    pub fn parse_env(&self, skip: usize) -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(skip).collect();
+        self.parse(&tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("demo", "test parser")
+            .opt("frames", "frame count", Some("20"))
+            .opt("seed", "rng seed", None)
+            .flag("verbose", "chatty output")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_or::<u32>("frames", 0).unwrap(), 20);
+        assert!(a.get("seed").is_none());
+        let a = parser().parse(&toks(&["--frames", "7", "--seed=99"])).unwrap();
+        assert_eq!(a.get_or::<u32>("frames", 0).unwrap(), 7);
+        assert_eq!(a.get_or::<u64>("seed", 0).unwrap(), 99);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parser()
+            .parse(&toks(&["pos1", "--verbose", "pos2"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("other"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parser().parse(&toks(&["--nope"])).is_err());
+        assert!(parser().parse(&toks(&["--seed"])).is_err());
+        assert!(parser().parse(&toks(&["--verbose=1"])).is_err());
+        assert!(parser().parse(&toks(&["--frames", "abc"])).unwrap().get_parsed::<u32>("frames").is_err());
+        let help = parser().parse(&toks(&["--help"])).unwrap_err().to_string();
+        assert!(help.contains("--frames"));
+        assert!(help.contains("[default: 20]"));
+    }
+}

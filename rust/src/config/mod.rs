@@ -1,0 +1,211 @@
+//! Run configuration: a small key=value format (one pair per line,
+//! `#` comments) parsed into typed run configs. Also the format of the
+//! artifact manifest written by `python/compile/aot.py`, keeping the
+//! build-time python → runtime rust interchange free of serde/JSON.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed key=value document (ordered for deterministic rendering).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvConfig {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key=value, got {line:?}", ln + 1);
+            };
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing required key {key:?}"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("key {key:?}: cannot parse {v:?}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.map {
+            s.push_str(k);
+            s.push('=');
+            s.push_str(v);
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.render())
+            .with_context(|| format!("write {}", path.display()))
+    }
+}
+
+/// Top-level run configuration for the odometry pipeline and benches.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// ICP parameters (paper §IV.A fixed configuration).
+    pub max_iterations: u32,
+    pub max_correspondence_distance: f32,
+    pub transformation_epsilon: f64,
+    /// Source sample size per frame (paper: 4096).
+    pub source_sample: usize,
+    /// Target cloud cap fed to the device (capacity of the NN buffers).
+    pub target_capacity: usize,
+    /// Frames per synthetic sequence.
+    pub frames: usize,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Artifact directory for the XLA backend.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            max_iterations: 50,
+            max_correspondence_distance: 1.0,
+            transformation_epsilon: 1e-5,
+            source_sample: 4096,
+            target_capacity: 16384,
+            frames: 20,
+            seed: 2026,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_kv(kv: &KvConfig) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            max_iterations: kv.get_or("max_iterations", d.max_iterations)?,
+            max_correspondence_distance: kv
+                .get_or("max_correspondence_distance", d.max_correspondence_distance)?,
+            transformation_epsilon: kv
+                .get_or("transformation_epsilon", d.transformation_epsilon)?,
+            source_sample: kv.get_or("source_sample", d.source_sample)?,
+            target_capacity: kv.get_or("target_capacity", d.target_capacity)?,
+            frames: kv.get_or("frames", d.frames)?,
+            seed: kv.get_or("seed", d.seed)?,
+            artifacts_dir: kv
+                .get("artifacts_dir")
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+        })
+    }
+
+    pub fn icp_params(&self) -> crate::icp::IcpParams {
+        crate::icp::IcpParams {
+            max_iterations: self.max_iterations,
+            max_correspondence_distance: self.max_correspondence_distance,
+            transformation_epsilon: self.transformation_epsilon,
+            search: crate::icp::SearchStrategy::KdTree,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let kv = KvConfig::parse("a=1\n# comment\n\n b = hello world \n").unwrap();
+        assert_eq!(kv.get("a"), Some("1"));
+        assert_eq!(kv.get("b"), Some("hello world"));
+        assert_eq!(kv.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(KvConfig::parse("novalue\n").is_err());
+        assert!(KvConfig::parse("=x\n").is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let kv = KvConfig::parse("n=42\nf=2.5\nbad=xyz\n").unwrap();
+        assert_eq!(kv.get_parsed::<u32>("n").unwrap(), Some(42));
+        assert_eq!(kv.get_or::<f32>("f", 0.0).unwrap(), 2.5);
+        assert_eq!(kv.get_or::<u32>("missing", 7).unwrap(), 7);
+        assert!(kv.get_parsed::<u32>("bad").is_err());
+        assert!(kv.require("missing").is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let mut kv = KvConfig::default();
+        kv.set("z_last", 3);
+        kv.set("a_first", "v");
+        let text = kv.render();
+        // BTreeMap → deterministic, sorted output.
+        assert_eq!(text, "a_first=v\nz_last=3\n");
+        assert_eq!(KvConfig::parse(&text).unwrap(), kv);
+    }
+
+    #[test]
+    fn run_config_defaults_and_overrides() {
+        let kv = KvConfig::parse("max_iterations=10\nsource_sample=1024\n").unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.max_iterations, 10);
+        assert_eq!(rc.source_sample, 1024);
+        // Untouched fields keep paper defaults.
+        assert_eq!(rc.max_correspondence_distance, 1.0);
+        assert_eq!(rc.transformation_epsilon, 1e-5);
+        let p = rc.icp_params();
+        assert_eq!(p.max_iterations, 10);
+    }
+}

@@ -1,0 +1,400 @@
+//! Procedural driving scenes for the synthetic LiDAR.
+//!
+//! A scene is a set of analytic surfaces the raycaster intersects:
+//! ground plane, axis-aligned boxes (buildings, vehicles), vertical
+//! cylinders (poles, trunks). Scenes are generated along a road corridor
+//! so that consecutive frames overlap the way real KITTI scans do.
+
+use crate::rng::Pcg32;
+
+/// Axis-aligned box.
+#[derive(Clone, Copy, Debug)]
+pub struct Aabb {
+    pub min: [f64; 3],
+    pub max: [f64; 3],
+}
+
+impl Aabb {
+    /// Ray/AABB slab test; returns the entry distance if hit in (tmin, tmax).
+    pub fn raycast(&self, origin: [f64; 3], dir: [f64; 3], tmax: f64) -> Option<f64> {
+        let mut t0 = 1e-6f64;
+        let mut t1 = tmax;
+        for k in 0..3 {
+            if dir[k].abs() < 1e-12 {
+                if origin[k] < self.min[k] || origin[k] > self.max[k] {
+                    return None;
+                }
+                continue;
+            }
+            let inv = 1.0 / dir[k];
+            let (mut ta, mut tb) = ((self.min[k] - origin[k]) * inv, (self.max[k] - origin[k]) * inv);
+            if ta > tb {
+                std::mem::swap(&mut ta, &mut tb);
+            }
+            t0 = t0.max(ta);
+            t1 = t1.min(tb);
+            if t0 > t1 {
+                return None;
+            }
+        }
+        Some(t0)
+    }
+}
+
+/// Vertical cylinder (pole/trunk): center (x, y), radius, z range.
+#[derive(Clone, Copy, Debug)]
+pub struct Cylinder {
+    pub cx: f64,
+    pub cy: f64,
+    pub radius: f64,
+    pub z0: f64,
+    pub z1: f64,
+}
+
+impl Cylinder {
+    pub fn raycast(&self, origin: [f64; 3], dir: [f64; 3], tmax: f64) -> Option<f64> {
+        // 2D circle intersection in XY.
+        let ox = origin[0] - self.cx;
+        let oy = origin[1] - self.cy;
+        let a = dir[0] * dir[0] + dir[1] * dir[1];
+        if a < 1e-12 {
+            return None;
+        }
+        let b = 2.0 * (ox * dir[0] + oy * dir[1]);
+        let c = ox * ox + oy * oy - self.radius * self.radius;
+        let disc = b * b - 4.0 * a * c;
+        if disc < 0.0 {
+            return None;
+        }
+        let sq = disc.sqrt();
+        for t in [(-b - sq) / (2.0 * a), (-b + sq) / (2.0 * a)] {
+            if t > 1e-6 && t < tmax {
+                let z = origin[2] + t * dir[2];
+                if z >= self.z0 && z <= self.z1 {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// A static world the LiDAR scans.
+#[derive(Clone, Debug, Default)]
+pub struct Scene {
+    /// Ground height (z of the road plane).
+    pub ground_z: f64,
+    /// Terrain undulation amplitude (m). A perfectly flat plane makes
+    /// scan-to-scan ICP degenerate — the concentric ground rings
+    /// self-match at identity (ring locking) — whereas real roads have
+    /// slope/camber/roughness that make the ground informative. 0
+    /// disables the heightfield.
+    pub terrain_amplitude: f64,
+    /// Small-scale surface roughness amplitude (m), applied as a
+    /// world-anchored displacement along each ray (~1 m wavelength).
+    /// Real facades/asphalt/vegetation have ≥ 3–5 cm of texture; perfectly
+    /// smooth analytic surfaces make the same-ray self-match of two scans
+    /// artificially near-zero, which biases point-to-point ICP toward
+    /// identity (see DESIGN.md §3 on dataset realism).
+    pub surface_roughness: f64,
+    pub boxes: Vec<Aabb>,
+    pub cylinders: Vec<Cylinder>,
+}
+
+impl Scene {
+    /// Deterministic two-scale terrain heightfield h(x, y):
+    /// * low frequency (wavelengths 15–90 m) ≈ road grade/camber;
+    /// * high frequency (wavelengths 2–5 m, ~25% of the amplitude) ≈
+    ///   surface roughness, curbs, grass verges. The high-frequency term
+    ///   is what breaks the scan-pattern self-similarity: on a perfectly
+    ///   smooth plane, the sensor-frame ground rings are *identical*
+    ///   from any viewpoint, so scan-to-scan ICP locks onto identity.
+    pub fn terrain_height(&self, x: f64, y: f64) -> f64 {
+        if self.terrain_amplitude == 0.0 {
+            return self.ground_z;
+        }
+        let a = self.terrain_amplitude;
+        let low = 0.55 * (0.071 * x + 0.3).sin() * (0.053 * y - 0.8).cos()
+            + 0.30 * (0.23 * x - 1.1).sin()
+            + 0.15 * (0.41 * y + 0.37 * x + 2.0).sin();
+        let high = 0.14 * (1.9 * x + 0.7).sin() * (1.3 * y - 0.2).cos()
+            + 0.11 * (2.7 * y + 1.3).sin() * (0.9 * x + 0.5).cos();
+        self.ground_z + a * (low + high)
+    }
+
+    /// World-anchored roughness field in [−1, 1] (wavelengths ~0.7–1.5 m).
+    /// Deterministic in world position → consistent across frames.
+    pub fn roughness(&self, x: f64, y: f64, z: f64) -> f64 {
+        0.5 * (7.3 * x + 1.0).sin() * (6.1 * y).cos()
+            + 0.3 * (5.7 * z + 2.0).sin() * (8.3 * x + 0.4).cos()
+            + 0.2 * (9.1 * y + 4.1 * z + 1.7).sin()
+    }
+}
+
+/// Scene style knobs per sequence category (urban vs highway vs rural).
+#[derive(Clone, Copy, Debug)]
+pub struct SceneStyle {
+    /// Building rows offset from the road center line (m).
+    pub building_setback: f64,
+    /// Mean gap between buildings along the road (m).
+    pub building_gap: f64,
+    /// Building presence probability per slot.
+    pub building_density: f64,
+    /// Poles (street lights, signs) per 100 m of road.
+    pub poles_per_100m: f64,
+    /// Parked/moving vehicles per 100 m.
+    pub vehicles_per_100m: f64,
+    /// Road half-width (m).
+    pub road_half_width: f64,
+    /// Small clutter objects (bushes, bins, curb segments, hydrants) per
+    /// 100 m of road — dense high-frequency structure that anchors
+    /// scan-to-scan registration the way real street furniture does.
+    pub clutter_per_100m: f64,
+}
+
+impl SceneStyle {
+    pub fn urban() -> Self {
+        Self {
+            building_setback: 8.0,
+            building_gap: 18.0,
+            building_density: 0.85,
+            poles_per_100m: 6.0,
+            vehicles_per_100m: 4.0,
+            road_half_width: 7.0,
+            clutter_per_100m: 40.0,
+        }
+    }
+
+    pub fn residential() -> Self {
+        Self {
+            building_setback: 10.0,
+            building_gap: 22.0,
+            building_density: 0.6,
+            poles_per_100m: 4.0,
+            vehicles_per_100m: 2.5,
+            road_half_width: 6.0,
+            clutter_per_100m: 30.0,
+        }
+    }
+
+    pub fn highway() -> Self {
+        Self {
+            building_setback: 30.0,
+            building_gap: 80.0,
+            building_density: 0.15,
+            poles_per_100m: 2.0,
+            vehicles_per_100m: 1.5,
+            road_half_width: 12.0,
+            clutter_per_100m: 8.0,
+        }
+    }
+
+    pub fn country() -> Self {
+        Self {
+            building_setback: 20.0,
+            building_gap: 60.0,
+            building_density: 0.25,
+            poles_per_100m: 1.0,
+            vehicles_per_100m: 0.8,
+            road_half_width: 5.0,
+            clutter_per_100m: 15.0,
+        }
+    }
+}
+
+/// Generate a corridor of world geometry along the x-axis from
+/// `x0` to `x1` (the trajectory module maps road-arclength to world
+/// coordinates; scenes are built in road-local frame for simplicity and
+/// the raycaster queries them in that frame).
+pub fn generate_corridor(style: &SceneStyle, x0: f64, x1: f64, rng: &mut Pcg32) -> Scene {
+    let mut scene = Scene {
+        ground_z: 0.0,
+        ..Default::default()
+    };
+    let length = x1 - x0;
+
+    // Building rows on both sides.
+    for side in [-1.0f64, 1.0] {
+        let mut x = x0;
+        while x < x1 {
+            let w = rng.range(8.0, 20.0) as f64;
+            let d = rng.range(6.0, 15.0) as f64;
+            let h = rng.range(4.0, 18.0) as f64;
+            if (rng.uniform() as f64) < style.building_density {
+                let y0 = side * style.building_setback;
+                let (ymin, ymax) = if side < 0.0 { (y0 - d, y0) } else { (y0, y0 + d) };
+                scene.boxes.push(Aabb {
+                    min: [x, ymin, 0.0],
+                    max: [x + w, ymax, h],
+                });
+            }
+            x += w + rng.range(0.3, 1.0) as f64 * style.building_gap;
+        }
+    }
+
+    // Poles along the curb.
+    let n_poles = (length / 100.0 * style.poles_per_100m).round() as usize;
+    for _ in 0..n_poles {
+        let x = rng.range(x0 as f32, x1 as f32) as f64;
+        let side = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        let y = side * (style.road_half_width + rng.range(0.5, 2.0) as f64);
+        scene.cylinders.push(Cylinder {
+            cx: x,
+            cy: y,
+            radius: rng.range(0.08, 0.2) as f64,
+            z0: 0.0,
+            z1: rng.range(3.0, 8.0) as f64,
+        });
+    }
+
+    // Vehicles: boxes on the road shoulder / adjacent lane.
+    let n_veh = (length / 100.0 * style.vehicles_per_100m).round() as usize;
+    for _ in 0..n_veh {
+        let x = rng.range(x0 as f32, x1 as f32) as f64;
+        let side = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        let y = side * rng.range(2.5, style.road_half_width as f32 - 0.5) as f64;
+        let (l, w, h) = (
+            rng.range(3.8, 5.2) as f64,
+            rng.range(1.6, 2.0) as f64,
+            rng.range(1.4, 2.1) as f64,
+        );
+        scene.boxes.push(Aabb {
+            min: [x - l / 2.0, y - w / 2.0, 0.0],
+            max: [x + l / 2.0, y + w / 2.0, h],
+        });
+    }
+
+    scene
+}
+
+impl Scene {
+    /// Closest hit among ground, boxes and cylinders; `None` beyond tmax.
+    ///
+    /// Ground intersection: solve against the flat plane, then refine
+    /// once against the local terrain height (one Newton step along the
+    /// ray — ample for ≤2% grades), so returned ground points lie on the
+    /// world surface z = h(x, y) consistently across frames.
+    pub fn raycast(&self, origin: [f64; 3], dir: [f64; 3], tmax: f64) -> Option<f64> {
+        let mut best = tmax;
+        let mut hit = false;
+        if dir[2] < -1e-9 {
+            let mut t = (self.ground_z - origin[2]) / dir[2];
+            if self.terrain_amplitude != 0.0 && t > 1e-6 {
+                for _ in 0..2 {
+                    let x = origin[0] + t * dir[0];
+                    let y = origin[1] + t * dir[1];
+                    let h = self.terrain_height(x, y);
+                    t = (h - origin[2]) / dir[2];
+                    if t <= 1e-6 {
+                        break;
+                    }
+                }
+            }
+            if t > 1e-6 && t < best {
+                best = t;
+                hit = true;
+            }
+        }
+        for b in &self.boxes {
+            if let Some(t) = b.raycast(origin, dir, best) {
+                best = t;
+                hit = true;
+            }
+        }
+        for c in &self.cylinders {
+            if let Some(t) = c.raycast(origin, dir, best) {
+                best = t;
+                hit = true;
+            }
+        }
+        hit.then_some(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aabb_raycast_hits_front_face() {
+        let b = Aabb {
+            min: [5.0, -1.0, -1.0],
+            max: [6.0, 1.0, 1.0],
+        };
+        let t = b.raycast([0.0, 0.0, 0.0], [1.0, 0.0, 0.0], 100.0).unwrap();
+        assert!((t - 5.0).abs() < 1e-9);
+        // Miss sideways.
+        assert!(b.raycast([0.0, 5.0, 0.0], [1.0, 0.0, 0.0], 100.0).is_none());
+        // Behind the origin.
+        assert!(b.raycast([10.0, 0.0, 0.0], [1.0, 0.0, 0.0], 100.0).is_none());
+    }
+
+    #[test]
+    fn cylinder_raycast() {
+        let c = Cylinder {
+            cx: 5.0,
+            cy: 0.0,
+            radius: 0.5,
+            z0: 0.0,
+            z1: 4.0,
+        };
+        let t = c
+            .raycast([0.0, 0.0, 1.0], [1.0, 0.0, 0.0], 100.0)
+            .unwrap();
+        assert!((t - 4.5).abs() < 1e-9);
+        // Above the cylinder top: the ray passes over it.
+        assert!(c.raycast([0.0, 0.0, 5.0], [1.0, 0.0, 0.0], 100.0).is_none());
+        // Vertical ray has no XY motion → no hit.
+        assert!(c.raycast([0.0, 0.0, 0.0], [0.0, 0.0, 1.0], 100.0).is_none());
+    }
+
+    #[test]
+    fn ground_hit() {
+        let s = Scene {
+            ground_z: 0.0,
+            ..Default::default()
+        };
+        // LiDAR 1.73 m up, beam 10° down.
+        let a = (-10.0f64).to_radians();
+        let dir = [a.cos(), 0.0, a.sin()];
+        let t = s.raycast([0.0, 0.0, 1.73], dir, 120.0).unwrap();
+        let z = 1.73 + t * dir[2];
+        assert!(z.abs() < 1e-9);
+        // Upward beam never hits the ground.
+        assert!(s.raycast([0.0, 0.0, 1.73], [1.0, 0.0, 0.1], 120.0).is_none());
+    }
+
+    #[test]
+    fn nearest_surface_wins() {
+        let mut s = Scene::default();
+        s.boxes.push(Aabb {
+            min: [10.0, -1.0, 0.0],
+            max: [11.0, 1.0, 3.0],
+        });
+        s.cylinders.push(Cylinder {
+            cx: 5.0,
+            cy: 0.0,
+            radius: 0.3,
+            z0: 0.0,
+            z1: 3.0,
+        });
+        let t = s.raycast([0.0, 0.0, 1.0], [1.0, 0.0, 0.0], 100.0).unwrap();
+        assert!((t - 4.7).abs() < 1e-9, "cylinder in front of box, t={t}");
+    }
+
+    #[test]
+    fn corridor_generation_is_deterministic_and_populated() {
+        let mut r1 = crate::rng::Pcg32::new(5);
+        let mut r2 = crate::rng::Pcg32::new(5);
+        let a = generate_corridor(&SceneStyle::urban(), 0.0, 500.0, &mut r1);
+        let b = generate_corridor(&SceneStyle::urban(), 0.0, 500.0, &mut r2);
+        assert_eq!(a.boxes.len(), b.boxes.len());
+        assert_eq!(a.cylinders.len(), b.cylinders.len());
+        assert!(a.boxes.len() > 10, "urban corridor should have buildings");
+        assert!(a.cylinders.len() > 10);
+        // Highway is sparser than urban.
+        let mut r3 = crate::rng::Pcg32::new(5);
+        let hw = generate_corridor(&SceneStyle::highway(), 0.0, 500.0, &mut r3);
+        assert!(hw.boxes.len() < a.boxes.len());
+    }
+}

@@ -1,0 +1,217 @@
+//! Vehicle trajectory models for the ten synthetic sequences.
+//!
+//! Each KITTI odometry sequence has a distinct driving character that
+//! directly shapes ICP cost (motion magnitude between frames → initial
+//! misalignment → iterations to converge). The paper's Table IV speedups
+//! vary 4.8×–35.4× across sequences largely because of this. We model
+//! each sequence as a piecewise yaw-rate/speed profile integrated at the
+//! sensor rate (10 Hz, like the Velodyne HDL-64E).
+
+use crate::math::{Mat3, Mat4, Vec3};
+use crate::rng::Pcg32;
+
+/// Per-sequence driving profile.
+#[derive(Clone, Debug)]
+pub struct TrajectoryProfile {
+    /// Mean speed (m/s).
+    pub speed_mean: f64,
+    /// Speed variation amplitude (m/s).
+    pub speed_var: f64,
+    /// Yaw rate changes: probability per frame of entering a turn.
+    pub turn_prob: f64,
+    /// Max yaw rate during a turn (rad/s).
+    pub max_yaw_rate: f64,
+    /// Typical turn duration (frames).
+    pub turn_frames: usize,
+}
+
+impl TrajectoryProfile {
+    /// Urban loop (KITTI 00/05/06/07-like): moderate speed, many turns.
+    pub fn urban() -> Self {
+        Self {
+            speed_mean: 8.0,
+            speed_var: 3.0,
+            turn_prob: 0.04,
+            max_yaw_rate: 0.5,
+            turn_frames: 25,
+        }
+    }
+
+    /// Highway (KITTI 01-like): fast, nearly straight.
+    pub fn highway() -> Self {
+        Self {
+            speed_mean: 22.0,
+            speed_var: 4.0,
+            turn_prob: 0.005,
+            max_yaw_rate: 0.08,
+            turn_frames: 40,
+        }
+    }
+
+    /// Residential (KITTI 03/09-like): slow with gentle curves.
+    pub fn residential() -> Self {
+        Self {
+            speed_mean: 6.0,
+            speed_var: 2.0,
+            turn_prob: 0.03,
+            max_yaw_rate: 0.35,
+            turn_frames: 20,
+        }
+    }
+
+    /// Country road (KITTI 02/04/08-like): medium speed, sweeping curves.
+    pub fn country() -> Self {
+        Self {
+            speed_mean: 13.0,
+            speed_var: 3.0,
+            turn_prob: 0.02,
+            max_yaw_rate: 0.2,
+            turn_frames: 35,
+        }
+    }
+}
+
+/// Sensor frame rate (Hz) — Velodyne HDL-64E spins at 10 Hz.
+pub const FRAME_RATE_HZ: f64 = 10.0;
+
+/// A generated trajectory: one pose per frame (sensor → world).
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub poses: Vec<Mat4>,
+}
+
+/// Integrate a yaw/speed random process into per-frame SE(3) poses.
+/// z stays on the ground plane + small suspension bounce; pitch/roll are
+/// ignored (dominant LiDAR odometry motion is planar).
+pub fn generate(profile: &TrajectoryProfile, frames: usize, rng: &mut Pcg32) -> Trajectory {
+    let dt = 1.0 / FRAME_RATE_HZ;
+    let mut poses = Vec::with_capacity(frames);
+    let mut x = 0.0f64;
+    let mut y = 0.0f64;
+    let mut yaw = 0.0f64;
+    let mut yaw_rate = 0.0f64;
+    let mut turn_left = 0usize;
+    let mut speed = profile.speed_mean;
+
+    for _ in 0..frames {
+        // Speed follows a bounded random walk around the mean.
+        speed += rng.normal_ms(0.0, 0.3) as f64;
+        let lo = (profile.speed_mean - profile.speed_var).max(0.5);
+        let hi = profile.speed_mean + profile.speed_var;
+        speed = speed.clamp(lo, hi);
+
+        // Turn state machine.
+        if turn_left == 0 {
+            if (rng.uniform() as f64) < profile.turn_prob {
+                turn_left = profile.turn_frames + rng.below(10) as usize;
+                let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                yaw_rate = sign * (rng.uniform() as f64) * profile.max_yaw_rate;
+            } else {
+                // Straight driving keeps a small heading jitter.
+                yaw_rate = rng.normal_ms(0.0, 0.01) as f64;
+            }
+        } else {
+            turn_left -= 1;
+        }
+
+        yaw += yaw_rate * dt;
+        x += speed * dt * yaw.cos();
+        y += speed * dt * yaw.sin();
+        let z = 1.73 + rng.normal_ms(0.0, 0.005) as f64; // sensor height + bounce
+
+        // Suspension pitch/roll wobble (±~0.4°). Real vehicles never
+        // hold the sensor perfectly level; this frame-to-frame attitude
+        // jitter is also what keeps the scan ray pattern from
+        // self-matching between consecutive frames (see DESIGN.md §3).
+        let pitch = rng.normal_ms(0.0, 0.004) as f64 + 0.003 * (0.13 * x).sin();
+        let roll = rng.normal_ms(0.0, 0.004) as f64 + 0.003 * (0.11 * y + 1.0).sin();
+        let rot = Mat3::rot_z(yaw)
+            .mul_mat(&Mat3::axis_angle([0.0, 1.0, 0.0], pitch as f32))
+            .mul_mat(&Mat3::axis_angle([1.0, 0.0, 0.0], roll as f32));
+
+        poses.push(Mat4::from_rt(rot, Vec3::new(x, y, z)));
+    }
+    Trajectory { poses }
+}
+
+impl Trajectory {
+    pub fn len(&self) -> usize {
+        self.poses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.poses.is_empty()
+    }
+
+    /// Relative motion from frame i to i+1 (used to seed ICP tests).
+    pub fn relative(&self, i: usize) -> Mat4 {
+        self.poses[i].inverse_rigid().mul_mat(&self.poses[i + 1])
+    }
+
+    /// Total arc length (m).
+    pub fn length(&self) -> f64 {
+        let mut s = 0.0;
+        for w in self.poses.windows(2) {
+            s += (w[1].translation() - w[0].translation()).norm();
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&TrajectoryProfile::urban(), 50, &mut Pcg32::new(3));
+        let b = generate(&TrajectoryProfile::urban(), 50, &mut Pcg32::new(3));
+        for (p, q) in a.poses.iter().zip(b.poses.iter()) {
+            assert_eq!(p.m, q.m);
+        }
+    }
+
+    #[test]
+    fn poses_are_rigid() {
+        let t = generate(&TrajectoryProfile::urban(), 100, &mut Pcg32::new(4));
+        for p in &t.poses {
+            assert!(p.rotation().is_rotation(1e-9));
+        }
+    }
+
+    #[test]
+    fn highway_is_faster_and_straighter_than_urban() {
+        let hw = generate(&TrajectoryProfile::highway(), 300, &mut Pcg32::new(5));
+        let ur = generate(&TrajectoryProfile::urban(), 300, &mut Pcg32::new(5));
+        assert!(hw.length() > ur.length() * 1.5, "{} vs {}", hw.length(), ur.length());
+        // Net heading change: urban should accumulate more.
+        let yaw_span = |t: &Trajectory| {
+            let mut max_angle = 0.0f64;
+            for p in &t.poses {
+                max_angle = max_angle.max(t.poses[0].rotation().rotation_angle_to(&p.rotation()));
+            }
+            max_angle
+        };
+        assert!(yaw_span(&ur) > yaw_span(&hw));
+    }
+
+    #[test]
+    fn frame_to_frame_motion_bounded() {
+        let t = generate(&TrajectoryProfile::highway(), 200, &mut Pcg32::new(6));
+        for i in 0..t.len() - 1 {
+            let rel = t.relative(i);
+            let d = rel.translation().norm();
+            // ≤ (22+4) m/s · 0.1 s plus slack.
+            assert!(d < 3.0, "frame {i} moved {d} m");
+        }
+    }
+
+    #[test]
+    fn sensor_height_approx_constant() {
+        let t = generate(&TrajectoryProfile::country(), 100, &mut Pcg32::new(7));
+        for p in &t.poses {
+            let z = p.translation().z;
+            assert!((z - 1.73).abs() < 0.05, "z={z}");
+        }
+    }
+}

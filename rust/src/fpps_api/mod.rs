@@ -1,0 +1,639 @@
+//! The FPPS public API — Table I of the paper, PCL-style.
+//!
+//! ```no_run
+//! use fpps::fpps_api::FppsIcp;
+//! use fpps::pointcloud::PointCloud;
+//!
+//! let mut icp = FppsIcp::hardware_initialize("artifacts".as_ref()).unwrap();
+//! icp.set_input_source(PointCloud::new());
+//! icp.set_input_target(PointCloud::new());
+//! icp.set_max_correspondence_distance(1.0);
+//! icp.set_max_iteration_count(50);
+//! icp.set_transformation_epsilon(1e-5);
+//! let result = icp.align().unwrap();
+//! println!("T = {:?}", result.transformation);
+//! ```
+//!
+//! | Paper (Table I)                  | Here                                |
+//! |----------------------------------|-------------------------------------|
+//! | `hardwareInitialize()`           | [`FppsIcp::hardware_initialize`]    |
+//! | `setTransformationMatrix()`      | [`FppsIcp::set_transformation_matrix`] |
+//! | `setInputSource()`               | [`FppsIcp::set_input_source`]       |
+//! | `setInputTarget()`               | [`FppsIcp::set_input_target`]       |
+//! | `setMaxCorrespondenceDistance()` | [`FppsIcp::set_max_correspondence_distance`] |
+//! | `setMaxIterationCount()`         | [`FppsIcp::set_max_iteration_count`]|
+//! | `setTransformationEpsilon()`     | [`FppsIcp::set_transformation_epsilon`] |
+//! | `align()`                        | [`FppsIcp::align`]                  |
+//!
+//! The device is abstracted behind [`KernelBackend`]: [`XlaBackend`]
+//! runs the AOT artifact on PJRT (the production path), and
+//! [`NativeSimBackend`] is a bit-faithful pure-rust mirror used for
+//! tests and artifact-less environments.
+
+use crate::icp::StopReason;
+use crate::math::{kabsch_from_sums, Mat4};
+use crate::nn::{self, KernelConfig};
+use crate::pointcloud::PointCloud;
+use crate::runtime::{Engine, StepAccumulators};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Device abstraction: one ICP step (transform → NN → accumulate) on
+/// padded, fixed-capacity buffers.
+pub trait KernelBackend {
+    /// Human-readable backend name (for logs / benches).
+    fn name(&self) -> &'static str;
+
+    /// Capacity selection: (n_capacity, m_capacity, block_n, block_m)
+    /// for a workload of (n_source, n_target); error if it cannot fit.
+    fn select_capacity(&self, n_source: usize, n_target: usize)
+        -> Result<(usize, usize, usize, usize)>;
+
+    /// Upload one alignment's padded clouds + masks to the device —
+    /// the paper's host→HBM DMA, done once per `align()` call. Buffer
+    /// sizes must match a capacity from [`Self::select_capacity`].
+    fn begin(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<()>;
+
+    /// One ICP iteration over the clouds uploaded by [`Self::begin`]:
+    /// only the cumulative transform + threshold travel to the device.
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators>;
+
+    /// Convenience: `begin` + one `step` (tests, one-shot callers).
+    #[allow(clippy::too_many_arguments)]
+    fn icp_step(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+        transform: &Mat4,
+        max_dist_sq: f32,
+    ) -> Result<StepAccumulators> {
+        self.begin(src, tgt, src_mask, tgt_mask)?;
+        self.step(transform, max_dist_sq)
+    }
+
+    /// Cumulative device-side execution time (telemetry).
+    fn device_time(&self) -> Duration;
+}
+
+/// Production backend: AOT artifact on the PJRT CPU client.
+pub struct XlaBackend {
+    engine: Engine,
+    prepared: Option<crate::runtime::PreparedClouds>,
+    device_time: Duration,
+}
+
+impl XlaBackend {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self {
+            engine: Engine::load(artifacts_dir)?,
+            prepared: None,
+            device_time: Duration::ZERO,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl KernelBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn select_capacity(
+        &self,
+        n_source: usize,
+        n_target: usize,
+    ) -> Result<(usize, usize, usize, usize)> {
+        let v = self
+            .engine
+            .manifest()
+            .select(n_source, n_target)
+            .with_context(|| {
+                format!("no artifact variant fits {n_source} source x {n_target} target points")
+            })?;
+        Ok((v.n, v.m, v.block_n, v.block_m))
+    }
+
+    fn begin(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<()> {
+        // Re-resolve the variant for the padded shape (cheap lookup),
+        // then DMA the clouds into device-resident buffers once.
+        let n = src.len() / 3;
+        let m = tgt.len() / 3;
+        let vi = self
+            .engine
+            .manifest()
+            .variants
+            .iter()
+            .position(|v| v.n == n && v.m == m)
+            .with_context(|| format!("no variant with exact capacity {n}x{m}"))?;
+        self.prepared = Some(self.engine.prepare(vi, src, tgt, src_mask, tgt_mask)?);
+        Ok(())
+    }
+
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+        let prep = self
+            .prepared
+            .as_ref()
+            .context("step() before begin(): no clouds on device")?;
+        let (acc, timing) = self.engine.execute_prepared(prep, transform, max_dist_sq)?;
+        self.device_time += timing.execute;
+        Ok(acc)
+    }
+
+    fn device_time(&self) -> Duration {
+        self.device_time
+    }
+}
+
+/// Bit-faithful software mirror of the device kernel (see
+/// [`nn::kernel_mirror`]); pads to the same block structure and applies
+/// the same accumulation semantics.
+pub struct NativeSimBackend {
+    cfg: KernelConfig,
+    device_time: Duration,
+    /// Clouds "uploaded" by begin() (the mirror of the HBM buffers).
+    state: Option<SimClouds>,
+}
+
+struct SimClouds {
+    src: Vec<f32>,
+    tgt: Vec<f32>,
+    src_mask: Vec<f32>,
+    tgt_mask: Vec<f32>,
+}
+
+impl NativeSimBackend {
+    pub fn new() -> Self {
+        Self {
+            cfg: KernelConfig::default(),
+            device_time: Duration::ZERO,
+            state: None,
+        }
+    }
+
+    pub fn with_blocks(block_n: usize, block_m: usize) -> Self {
+        Self {
+            cfg: KernelConfig { block_n, block_m },
+            device_time: Duration::ZERO,
+            state: None,
+        }
+    }
+}
+
+impl Default for NativeSimBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelBackend for NativeSimBackend {
+    fn name(&self) -> &'static str {
+        "native-sim"
+    }
+
+    fn select_capacity(
+        &self,
+        n_source: usize,
+        n_target: usize,
+    ) -> Result<(usize, usize, usize, usize)> {
+        let n = n_source.div_ceil(self.cfg.block_n).max(1) * self.cfg.block_n;
+        let m = n_target.div_ceil(self.cfg.block_m).max(1) * self.cfg.block_m;
+        Ok((n, m, self.cfg.block_n, self.cfg.block_m))
+    }
+
+    fn begin(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<()> {
+        self.state = Some(SimClouds {
+            src: src.to_vec(),
+            tgt: tgt.to_vec(),
+            src_mask: src_mask.to_vec(),
+            tgt_mask: tgt_mask.to_vec(),
+        });
+        Ok(())
+    }
+
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+        let state = self
+            .state
+            .take()
+            .context("step() before begin(): no clouds uploaded")?;
+        let (src, tgt, src_mask, tgt_mask) =
+            (&state.src, &state.tgt, &state.src_mask, &state.tgt_mask);
+        let t0 = Instant::now();
+        let n = src.len() / 3;
+        // Stage 1: point cloud transformer (f32, like the device).
+        let tm = transform.to_f32_row_major();
+        let mut p = vec![0f32; src.len()];
+        for i in 0..n {
+            let (x, y, z) = (src[3 * i], src[3 * i + 1], src[3 * i + 2]);
+            p[3 * i] = tm[0] * x + tm[1] * y + tm[2] * z + tm[3];
+            p[3 * i + 1] = tm[4] * x + tm[5] * y + tm[6] * z + tm[7];
+            p[3 * i + 2] = tm[8] * x + tm[9] * y + tm[10] * z + tm[11];
+        }
+        // Stage 2+3: NN search (blockwise mirror).
+        let res = nn::kernel_mirror(&p, tgt, tgt_mask, self.cfg);
+        // Stage 4: result accumulation (f32 partials like the jnp sums).
+        let mut count = 0f32;
+        let mut sum_p = [0f32; 3];
+        let mut sum_q = [0f32; 3];
+        let mut sum_pq = [0f32; 9];
+        let mut sum_d = 0f32;
+        for i in 0..n {
+            let w = src_mask[i] * if res.dist_sq[i] <= max_dist_sq { 1.0 } else { 0.0 };
+            if w == 0.0 {
+                continue;
+            }
+            let j = res.index[i] as usize;
+            let pi = [p[3 * i], p[3 * i + 1], p[3 * i + 2]];
+            let qj = [tgt[3 * j], tgt[3 * j + 1], tgt[3 * j + 2]];
+            count += w;
+            for a in 0..3 {
+                sum_p[a] += w * pi[a];
+                sum_q[a] += w * qj[a];
+                for b in 0..3 {
+                    sum_pq[a * 3 + b] += w * pi[a] * qj[b];
+                }
+            }
+            sum_d += w * res.dist_sq[i];
+        }
+        let mut wire = Vec::with_capacity(17);
+        wire.push(count);
+        wire.extend_from_slice(&sum_p);
+        wire.extend_from_slice(&sum_q);
+        wire.extend_from_slice(&sum_pq);
+        wire.push(sum_d);
+        self.device_time += t0.elapsed();
+        let acc = StepAccumulators::from_wire(&wire);
+        self.state = Some(state);
+        acc
+    }
+
+    fn device_time(&self) -> Duration {
+        self.device_time
+    }
+}
+
+/// Per-iteration record of an FPPS alignment.
+#[derive(Clone, Copy, Debug)]
+pub struct FppsIterationStat {
+    pub correspondences: f64,
+    pub rmse: f64,
+    pub delta: f64,
+}
+
+/// Result of [`FppsIcp::align`].
+#[derive(Clone, Debug)]
+pub struct FppsResult {
+    pub transformation: Mat4,
+    pub rmse: f64,
+    pub iterations: u32,
+    pub stop: StopReason,
+    pub stats: Vec<FppsIterationStat>,
+    pub total_time: Duration,
+    /// Time spent inside the kernel backend.
+    pub device_time: Duration,
+}
+
+impl FppsResult {
+    pub fn has_converged(&self) -> bool {
+        !matches!(self.stop, StopReason::TooFewCorrespondences)
+    }
+}
+
+/// The FPPS ICP object (Table I).
+pub struct FppsIcp<B: KernelBackend> {
+    backend: B,
+    source: Option<PointCloud>,
+    target: Option<PointCloud>,
+    initial_transform: Mat4,
+    max_correspondence_distance: f32,
+    max_iteration_count: u32,
+    transformation_epsilon: f64,
+    /// Prepared (padded) target + mask, rebuilt when the target changes.
+    prepared_target: Option<PreparedTarget>,
+}
+
+struct PreparedTarget {
+    tgt: Vec<f32>,
+    tgt_mask: Vec<f32>,
+    capacity: (usize, usize, usize, usize),
+    n_source_hint: usize,
+}
+
+impl FppsIcp<XlaBackend> {
+    /// `hardwareInitialize()`: open the device and load the bitstream
+    /// (here: create the PJRT client and compile the AOT artifacts).
+    pub fn hardware_initialize(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self::with_backend(XlaBackend::load(artifacts_dir)?))
+    }
+}
+
+impl FppsIcp<NativeSimBackend> {
+    /// FPPS over the software device mirror (no artifacts needed).
+    pub fn native_sim() -> Self {
+        Self::with_backend(NativeSimBackend::new())
+    }
+}
+
+impl<B: KernelBackend> FppsIcp<B> {
+    pub fn with_backend(backend: B) -> Self {
+        Self {
+            backend,
+            source: None,
+            target: None,
+            initial_transform: Mat4::IDENTITY,
+            max_correspondence_distance: 1.0,
+            max_iteration_count: 50,
+            transformation_epsilon: 1e-5,
+            prepared_target: None,
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// `setTransformationMatrix()`: initial transform applied before the
+    /// first iteration.
+    pub fn set_transformation_matrix(&mut self, t: Mat4) -> &mut Self {
+        self.initial_transform = t;
+        self
+    }
+
+    /// `setInputSource()`.
+    pub fn set_input_source(&mut self, cloud: PointCloud) -> &mut Self {
+        self.source = Some(cloud);
+        self
+    }
+
+    /// `setInputTarget()`.
+    pub fn set_input_target(&mut self, cloud: PointCloud) -> &mut Self {
+        self.target = Some(cloud);
+        self.prepared_target = None;
+        self
+    }
+
+    /// `setMaxCorrespondenceDistance()` (meters).
+    pub fn set_max_correspondence_distance(&mut self, d: f32) -> &mut Self {
+        assert!(d > 0.0, "max correspondence distance must be positive");
+        self.max_correspondence_distance = d;
+        self
+    }
+
+    /// `setMaxIterationCount()`.
+    pub fn set_max_iteration_count(&mut self, n: u32) -> &mut Self {
+        self.max_iteration_count = n;
+        self
+    }
+
+    /// `setTransformationEpsilon()`.
+    pub fn set_transformation_epsilon(&mut self, eps: f64) -> &mut Self {
+        assert!(eps >= 0.0);
+        self.transformation_epsilon = eps;
+        self
+    }
+
+    /// `align()`: run the hybrid ICP loop and return the final transform.
+    ///
+    /// Host/device split per iteration (paper Fig. 2):
+    /// * device: transform source by the *cumulative* T, NN search,
+    ///   correspondence filtering, accumulator reduction;
+    /// * host: Kabsch/SVD on the 3×3 covariance, convergence check,
+    ///   T ← T_j·T.
+    pub fn align(&mut self) -> Result<FppsResult> {
+        let t_start = Instant::now();
+        let source = self.source.as_ref().context("setInputSource not called")?;
+        let target = self.target.as_ref().context("setInputTarget not called")?;
+        if source.is_empty() || target.is_empty() {
+            bail!("source/target cloud is empty");
+        }
+
+        // Prepare padded device buffers (upload happens per step in the
+        // PJRT backend; a real FPGA would DMA once — see coordinator's
+        // double-buffering for where that matters).
+        if self
+            .prepared_target
+            .as_ref()
+            .map(|p| p.n_source_hint != source.len())
+            .unwrap_or(true)
+        {
+            let capacity = self.backend.select_capacity(source.len(), target.len())?;
+            let (tgt, tgt_mask) = pad_to(&target.xyz, capacity.1);
+            self.prepared_target = Some(PreparedTarget {
+                tgt,
+                tgt_mask,
+                capacity,
+                n_source_hint: source.len(),
+            });
+        }
+        let prep = self.prepared_target.as_ref().unwrap();
+        let (cap_n, _cap_m, _bn, _bm) = prep.capacity;
+        let (src, src_mask) = pad_to(&source.xyz, cap_n);
+
+        let max_d2 = self.max_correspondence_distance * self.max_correspondence_distance;
+        let mut cumulative = self.initial_transform;
+        let mut stats = Vec::new();
+        let mut stop = StopReason::MaxIterations;
+        let mut rmse = f64::NAN;
+        let mut iterations = 0;
+
+        // Host→device DMA once per alignment (the Fig. 2 upload);
+        // iterations then only ship the 4×4 transform + threshold.
+        self.backend
+            .begin(&src, &prep.tgt, &src_mask, &prep.tgt_mask)?;
+        for _ in 0..self.max_iteration_count {
+            iterations += 1;
+            let acc = self.backend.step(&cumulative, max_d2)?;
+            if acc.count < 3.0 {
+                stop = StopReason::TooFewCorrespondences;
+                break;
+            }
+            rmse = acc.rmse();
+            let Some(est) = kabsch_from_sums(acc.count, acc.sum_p, acc.sum_q, &acc.sum_pq)
+            else {
+                stop = StopReason::TooFewCorrespondences;
+                break;
+            };
+            let t_j = est.to_mat4();
+            cumulative = t_j.mul_mat(&cumulative);
+            let delta = t_j.delta_from_identity();
+            stats.push(FppsIterationStat {
+                correspondences: acc.count,
+                rmse,
+                delta,
+            });
+            if delta < self.transformation_epsilon {
+                stop = StopReason::Converged;
+                break;
+            }
+        }
+
+        Ok(FppsResult {
+            transformation: cumulative,
+            rmse,
+            iterations,
+            stop,
+            stats,
+            total_time: t_start.elapsed(),
+            device_time: self.backend.device_time(),
+        })
+    }
+}
+
+fn pad_to(xyz: &[f32], capacity: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = xyz.len() / 3;
+    assert!(n <= capacity, "cloud ({n}) exceeds capacity ({capacity})");
+    let mut out = Vec::with_capacity(capacity * 3);
+    out.extend_from_slice(xyz);
+    out.resize(capacity * 3, 0.0);
+    let mut mask = vec![1.0f32; n];
+    mask.resize(capacity, 0.0);
+    (out, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Mat3, Vec3};
+    use crate::rng::Pcg32;
+
+    fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let mut c = PointCloud::with_capacity(n);
+        for i in 0..n {
+            match i % 3 {
+                0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+                1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+                _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn native_sim_recovers_transform() {
+        let target = structured_cloud(900, 1);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.04), Vec3::new(0.2, -0.1, 0.02));
+        let source = target.transformed(&gt.inverse_rigid());
+        let mut icp = FppsIcp::native_sim();
+        icp.set_input_source(source)
+            .set_input_target(target)
+            .set_max_correspondence_distance(1.0)
+            .set_max_iteration_count(50)
+            .set_transformation_epsilon(1e-5);
+        let res = icp.align().unwrap();
+        assert!(res.has_converged());
+        let rerr = res.transformation.rotation().rotation_angle_to(&gt.rotation());
+        let terr = (res.transformation.translation() - gt.translation()).norm();
+        assert!(rerr < 2e-3, "rotation err {rerr}");
+        assert!(terr < 2e-2, "translation err {terr}");
+    }
+
+    #[test]
+    fn matches_cpu_baseline_within_001m() {
+        // Table III claim: FPGA vs CPU RMSE differs < 0.01 m.
+        let target = structured_cloud(1000, 2);
+        let gt = Mat4::from_rt(Mat3::rot_z(-0.03), Vec3::new(-0.15, 0.25, 0.01));
+        let mut source = target.transformed(&gt.inverse_rigid());
+        let mut rng = Pcg32::new(3);
+        source.add_noise(0.01, &mut rng);
+
+        let cpu = crate::icp::align(
+            &source,
+            &target,
+            &Mat4::IDENTITY,
+            &crate::icp::IcpParams::default(),
+        );
+        let mut icp = FppsIcp::native_sim();
+        icp.set_input_source(source).set_input_target(target);
+        let fpps = icp.align().unwrap();
+        assert!(
+            (cpu.rmse - fpps.rmse).abs() < 0.01,
+            "cpu {} vs fpps {}",
+            cpu.rmse,
+            fpps.rmse
+        );
+        let dt = (cpu.transformation.translation() - fpps.transformation.translation()).norm();
+        assert!(dt < 0.01, "translation differs {dt}");
+    }
+
+    #[test]
+    fn initial_transform_honored() {
+        let target = structured_cloud(600, 4);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.05), Vec3::new(0.3, 0.0, 0.0));
+        let source = target.transformed(&gt.inverse_rigid());
+        let mut icp = FppsIcp::native_sim();
+        icp.set_input_source(source)
+            .set_input_target(target)
+            .set_transformation_matrix(gt);
+        let res = icp.align().unwrap();
+        assert!(res.iterations <= 2, "should converge from the answer");
+    }
+
+    #[test]
+    fn api_validates_inputs() {
+        let mut icp = FppsIcp::native_sim();
+        assert!(icp.align().is_err(), "no clouds set");
+        icp.set_input_source(structured_cloud(10, 5));
+        assert!(icp.align().is_err(), "no target set");
+        icp.set_input_target(PointCloud::new());
+        assert!(icp.align().is_err(), "empty target");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_distance() {
+        FppsIcp::native_sim().set_max_correspondence_distance(0.0);
+    }
+
+    #[test]
+    fn disjoint_clouds_flagged() {
+        let a = structured_cloud(100, 6);
+        let mut b = structured_cloud(100, 7);
+        for v in b.xyz.iter_mut() {
+            *v += 500.0;
+        }
+        let mut icp = FppsIcp::native_sim();
+        icp.set_input_source(a).set_input_target(b);
+        let res = icp.align().unwrap();
+        assert_eq!(res.stop, StopReason::TooFewCorrespondences);
+    }
+
+    #[test]
+    fn iteration_stats_populated() {
+        let target = structured_cloud(500, 8);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, 0.1, 0.0));
+        let source = target.transformed(&gt.inverse_rigid());
+        let mut icp = FppsIcp::native_sim();
+        icp.set_input_source(source).set_input_target(target);
+        let res = icp.align().unwrap();
+        assert_eq!(res.stats.len() as u32, res.iterations);
+        for s in &res.stats {
+            assert!(s.correspondences >= 3.0);
+            assert!(s.rmse.is_finite());
+        }
+        assert!(res.device_time > Duration::ZERO);
+    }
+}

@@ -1,0 +1,308 @@
+//! FPGA resource model → Table II and the Fig. 4 floorplan report.
+//!
+//! Per-block resource costs are standard Vitis HLS f32 operator costs on
+//! UltraScale+ (DSP48E2): an f32 mul is 3 DSPs, an f32 add/sub 2 DSPs,
+//! an f32 compare is LUT-only. The constants were then calibrated so the
+//! default [`AcceleratorConfig`] reproduces the paper's Table II within
+//! a few percent; the point of the model is that resources *scale
+//! correctly with the architecture parameters* (PE count, buffer sizes),
+//! which is what the ablation benches exercise.
+
+use super::AcceleratorConfig;
+
+/// Alveo U50 totals (UltraScale+ XCU50, from the AMD data sheet).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCapacity {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram_36k: u64,
+    pub dsp: u64,
+    /// Number of SLRs; the design occupies SLR0 only (HBM access, §IV.B).
+    pub slrs: u64,
+}
+
+pub const U50: DeviceCapacity = DeviceCapacity {
+    lut: 870_000,
+    ff: 1_740_000,
+    bram_36k: 2_688,
+    dsp: 5_940,
+    slrs: 2,
+};
+
+/// Resource usage of one subsystem.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Usage {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram_36k: u64,
+    pub dsp: u64,
+}
+
+impl Usage {
+    pub fn add(&self, o: &Usage) -> Usage {
+        Usage {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram_36k: self.bram_36k + o.bram_36k,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+
+    pub fn scale(&self, k: u64) -> Usage {
+        Usage {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram_36k: self.bram_36k * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+/// Itemised breakdown (printed as the Fig. 4 floorplan substitute).
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub items: Vec<(String, Usage)>,
+    pub total: Usage,
+}
+
+/// f32 operator costs (Vitis HLS, fully pipelined, UltraScale+).
+const DSP_PER_FMUL: u64 = 3;
+const DSP_PER_FADD: u64 = 2;
+const LUT_PER_FMUL: u64 = 120;
+const LUT_PER_FADD: u64 = 220;
+const LUT_PER_FCMP: u64 = 70;
+const FF_PER_FMUL: u64 = 180;
+const FF_PER_FADD: u64 = 340;
+/// Pipeline/control overhead per PE (state machine, FIFO glue).
+const LUT_PE_CTRL: u64 = 160;
+const FF_PE_CTRL: u64 = 260;
+
+/// One Distance block: ||p−q||² = 3 subs, 3 muls, 2 adds. HLS maps the
+/// subtractors to LUT fabric (`-hls fpo` low-latency adders) and keeps
+/// DSPs for the multipliers and the accumulation adds.
+fn distance_block() -> Usage {
+    Usage {
+        lut: 3 * LUT_PER_FADD + 3 * LUT_PER_FMUL + 2 * LUT_PER_FADD,
+        ff: 3 * FF_PER_FADD + 3 * FF_PER_FMUL + 2 * FF_PER_FADD,
+        bram_36k: 0,
+        dsp: 3 * DSP_PER_FMUL + 2 * DSP_PER_FADD,
+    }
+}
+
+/// One MIN block: compare + two registers (distance, index).
+fn min_block() -> Usage {
+    Usage {
+        lut: LUT_PER_FCMP + 90,
+        ff: 2 * 64,
+        bram_36k: 0,
+        dsp: 0,
+    }
+}
+
+/// Comparison tree over `cols` columns: cols−1 comparators.
+fn cmp_tree(cols: u64) -> Usage {
+    Usage {
+        lut: (LUT_PER_FCMP + 120) * (cols - 1),
+        ff: 96 * (cols - 1),
+        bram_36k: 0,
+        dsp: 0,
+    }
+}
+
+/// Point cloud transformer: 4×4 · [x y z 1] per cycle = 9 muls + 9 adds
+/// (rotation) fully unrolled, ×`rows` lanes.
+fn transformer(rows: u64) -> Usage {
+    Usage {
+        lut: (9 * LUT_PER_FMUL + 9 * LUT_PER_FADD) * rows,
+        ff: (9 * FF_PER_FMUL + 9 * FF_PER_FADD) * rows,
+        bram_36k: 0,
+        dsp: (9 * DSP_PER_FMUL + 9 * DSP_PER_FADD) * rows,
+    }
+}
+
+/// Result accumulator: 9 MACs for Σp·qᵀ + 6 adders for Σp, Σq + 1 for Σd,
+/// double-buffered f64 accumulation (2 DSP per f64 add lane approximated).
+fn accumulator() -> Usage {
+    Usage {
+        lut: 9 * (LUT_PER_FMUL + LUT_PER_FADD) + 7 * LUT_PER_FADD + 2600,
+        ff: 9 * (FF_PER_FMUL + FF_PER_FADD) + 7 * FF_PER_FADD + 3400,
+        bram_36k: 4,
+        dsp: 9 * (DSP_PER_FMUL + DSP_PER_FADD) + 7 * DSP_PER_FADD,
+    }
+}
+
+/// Target cloud buffer: capacity × 3 × f32, partitioned into `cols`
+/// banks, each 36Kb BRAM = 1024 × 32b.
+fn target_buffer(capacity: u64, cols: u64) -> Usage {
+    let words = capacity * 3;
+    let words_per_bank = words.div_ceil(cols);
+    let brams_per_bank = words_per_bank.div_ceil(1024);
+    Usage {
+        lut: 220 * cols, // bank mux / broadcast bus
+        ff: 180 * cols,
+        bram_36k: brams_per_bank * cols,
+        dsp: 0,
+    }
+}
+
+/// Source register buffer + staging: rows × 3 × f32 registers plus a
+/// BRAM-backed staging area for the 4096-point sample.
+fn source_buffer(capacity: u64, rows: u64) -> Usage {
+    Usage {
+        lut: 150 * rows,
+        ff: rows * 3 * 32,
+        bram_36k: (capacity * 3 * 4).div_ceil(4608), // bytes / 36Kbit
+        dsp: 0,
+    }
+}
+
+/// Host interface: HBM AXI masters, DMA engines, control regs. Fixed
+/// cost measured from a Vitis shell + 2 AXI-HBM channels.
+fn host_interface() -> Usage {
+    Usage {
+        lut: 58_000,
+        ff: 96_000,
+        bram_36k: 120,
+        dsp: 4,
+    }
+}
+
+/// FIFO glue between the four pipeline stages (Fig. 3).
+fn stage_fifos() -> Usage {
+    Usage {
+        lut: 9_000,
+        ff: 14_000,
+        bram_36k: 24,
+        dsp: 0,
+    }
+}
+
+/// Full design report for a configuration.
+pub fn report(cfg: &AcceleratorConfig) -> ResourceReport {
+    let pes = cfg.pe_count() as u64;
+    let cols = cfg.pe_cols as u64;
+    let rows = cfg.pe_rows as u64;
+    let mut items: Vec<(String, Usage)> = Vec::new();
+    items.push((
+        format!("distance PEs ({}x{})", cfg.pe_rows, cfg.pe_cols),
+        distance_block().add(&min_block()).add(&Usage {
+            lut: LUT_PE_CTRL,
+            ff: FF_PE_CTRL,
+            bram_36k: 0,
+            dsp: 0,
+        })
+        .scale(pes),
+    ));
+    items.push((format!("comparison tree ({cols} cols)"), cmp_tree(cols).scale(rows)));
+    items.push(("point cloud transformer".into(), transformer(rows)));
+    items.push(("result accumulator".into(), accumulator()));
+    items.push((
+        format!("target buffer ({} pts)", cfg.target_capacity),
+        target_buffer(cfg.target_capacity as u64, cols),
+    ));
+    items.push((
+        format!("source buffer ({} pts)", cfg.source_capacity),
+        source_buffer(cfg.source_capacity as u64, rows),
+    ));
+    items.push(("stage FIFOs".into(), stage_fifos()));
+    items.push(("host interface (HBM/DMA)".into(), host_interface()));
+
+    let mut total = Usage::default();
+    for (_, u) in &items {
+        total = total.add(u);
+    }
+    ResourceReport { items, total }
+}
+
+/// Utilisation fractions vs one SLR and vs the whole device — the two
+/// percentage columns of Table II.
+pub fn utilisation(u: &Usage, dev: &DeviceCapacity) -> [(f64, f64); 4] {
+    let slr = |x: u64, cap: u64| (x as f64) / (cap as f64 / dev.slrs as f64);
+    let all = |x: u64, cap: u64| (x as f64) / cap as f64;
+    [
+        (slr(u.lut, dev.lut), all(u.lut, dev.lut)),
+        (slr(u.ff, dev.ff), all(u.ff, dev.ff)),
+        (slr(u.bram_36k, dev.bram_36k), all(u.bram_36k, dev.bram_36k)),
+        (slr(u.dsp, dev.dsp), all(u.dsp, dev.dsp)),
+    ]
+}
+
+/// Paper's Table II reference values for comparison printing.
+pub const PAPER_TABLE2: Usage = Usage {
+    lut: 313_542,
+    ff: 441_273,
+    bram_36k: 613,
+    dsp: 2_384,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_close_to_paper_table2() {
+        let rep = report(&AcceleratorConfig::default());
+        let t = rep.total;
+        let close = |got: u64, want: u64, tol: f64| {
+            let rel = (got as f64 - want as f64).abs() / want as f64;
+            assert!(
+                rel < tol,
+                "got {got}, paper {want}, rel err {rel:.3}"
+            );
+        };
+        // The model is calibrated: each resource within 20% of Table II.
+        close(t.lut, PAPER_TABLE2.lut, 0.20);
+        close(t.ff, PAPER_TABLE2.ff, 0.20);
+        close(t.bram_36k, PAPER_TABLE2.bram_36k, 0.20);
+        close(t.dsp, PAPER_TABLE2.dsp, 0.20);
+    }
+
+    #[test]
+    fn fits_in_one_slr() {
+        // §IV.B: the design occupies one of the two SLRs.
+        let rep = report(&AcceleratorConfig::default());
+        for (slr_frac, _) in utilisation(&rep.total, &U50) {
+            assert!(slr_frac < 1.0, "does not fit in SLR0: {slr_frac}");
+        }
+    }
+
+    #[test]
+    fn resources_scale_with_pe_array() {
+        let small = report(&AcceleratorConfig {
+            pe_cols: 8,
+            pe_rows: 4,
+            ..Default::default()
+        });
+        let big = report(&AcceleratorConfig::default());
+        assert!(big.total.dsp > small.total.dsp);
+        assert!(big.total.lut > small.total.lut);
+    }
+
+    #[test]
+    fn bram_scales_with_target_capacity() {
+        let small = report(&AcceleratorConfig {
+            target_capacity: 16_384,
+            ..Default::default()
+        });
+        let big = report(&AcceleratorConfig::default());
+        assert!(big.total.bram_36k > small.total.bram_36k);
+    }
+
+    #[test]
+    fn utilisation_slr_is_twice_overall() {
+        let rep = report(&AcceleratorConfig::default());
+        for (slr, all) in utilisation(&rep.total, &U50) {
+            assert!((slr - 2.0 * all).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let rep = report(&AcceleratorConfig::default());
+        let mut sum = Usage::default();
+        for (_, u) in &rep.items {
+            sum = sum.add(u);
+        }
+        assert_eq!(sum, rep.total);
+    }
+}

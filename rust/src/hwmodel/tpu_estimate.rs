@@ -1,0 +1,197 @@
+//! Structural performance estimate of the Pallas NN kernel on a real
+//! TPU — the L1 §Perf target (DESIGN.md §8).
+//!
+//! `interpret=True` on CPU gives no meaningful wallclock, so the L1
+//! optimisation loop targets *structure*: VMEM footprint per grid step
+//! must fit (≤ 16 MiB/core) and the MXU utilisation of the distance
+//! matmul should be maximised given the 3-wide contraction (which pads
+//! to the 8×128 systolic tile — the fundamental inefficiency the
+//! hardware-adaptation section of DESIGN.md discusses).
+
+/// TPU core parameters (v4-lite-ish defaults; ratios are what matter).
+#[derive(Clone, Copy, Debug)]
+pub struct TpuCore {
+    pub vmem_bytes: usize,
+    /// MXU systolic tile (rows × cols contraction granularity).
+    pub mxu_k: usize,
+    pub mxu_n: usize,
+    /// Peak f32 MACs per cycle (one 128×128 MXU at f32 throughput).
+    pub macs_per_cycle: usize,
+    /// HBM bandwidth bytes/cycle (≈ 1.2 TB/s @ 940 MHz).
+    pub hbm_bytes_per_cycle: f64,
+}
+
+impl Default for TpuCore {
+    fn default() -> Self {
+        Self {
+            vmem_bytes: 16 << 20,
+            mxu_k: 8,
+            mxu_n: 128,
+            macs_per_cycle: 16_384,
+            hbm_bytes_per_cycle: 1300.0,
+        }
+    }
+}
+
+/// Pallas kernel block configuration (mirrors nn_search.py BlockSpecs).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockConfig {
+    pub block_n: usize,
+    pub block_m: usize,
+}
+
+/// Structural estimate for one grid step.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelEstimate {
+    /// Bytes of VMEM live per grid step (inputs + distance tile + outs).
+    pub vmem_bytes: usize,
+    /// Fraction of MXU MACs doing useful work in the p·qᵀ matmul.
+    pub mxu_utilization: f64,
+    /// Arithmetic intensity (useful FLOPs per HBM byte).
+    pub flops_per_byte: f64,
+    /// Estimated cycles per grid step (max of compute and memory).
+    pub cycles: f64,
+    /// True if compute-bound (MXU is the bottleneck), else memory-bound.
+    pub compute_bound: bool,
+}
+
+/// Estimate one (block_n × block_m) grid step of the NN kernel.
+pub fn estimate(core: &TpuCore, blk: &BlockConfig) -> KernelEstimate {
+    let f = 4; // f32
+    let bn = blk.block_n;
+    let bm = blk.block_m;
+    // VMEM: p (bn×3), q (bm×3), mask (bm), distance tile (bn×bm),
+    // running min/idx (bn each), double-buffered inputs (×2).
+    let inputs = (bn * 3 + bm * 3 + bm) * f * 2;
+    let tile = bn * bm * f;
+    let outs = bn * 2 * f;
+    let vmem = inputs + tile + outs;
+
+    // Matmul p(bn×3) @ qᵀ(3×bm): contraction K=3 pads to mxu_k, and the
+    // N dimension pads to mxu_n granularity.
+    let k_pad = core.mxu_k.max(3);
+    let n_pad = bm.div_ceil(core.mxu_n) * core.mxu_n;
+    let useful_macs = (bn * 3 * bm) as f64;
+    let issued_macs = (bn * k_pad * n_pad) as f64;
+    let mxu_utilization = useful_macs / issued_macs;
+
+    // Per step HBM traffic: the q/mask block is re-read for every source
+    // block; p/outs amortise across the j loop. Conservatively count the
+    // unique bytes touched this step.
+    let hbm_bytes = ((bm * 3 + bm) * f + (bn * 3 + bn * 2) * f) as f64;
+    // FLOPs: 2·bn·bm·3 (matmul) + ~6·bn·bm (norms/compare epilogue).
+    let flops = (2 * bn * bm * 3 + 6 * bn * bm) as f64;
+    let flops_per_byte = flops / hbm_bytes;
+
+    let compute_cycles = issued_macs / core.macs_per_cycle as f64
+        + (bn * bm) as f64 / (core.mxu_n as f64 * 8.0); // VPU epilogue
+    let memory_cycles = hbm_bytes / core.hbm_bytes_per_cycle;
+    // Fixed per-grid-step overhead: grid bookkeeping + DMA descriptor
+    // setup + pipeline refill between steps (~30 cycles on TPU). This is
+    // what makes very small tiles lose: same total MACs, more bubbles.
+    let step_overhead = 30.0;
+    let cycles = compute_cycles.max(memory_cycles) + step_overhead;
+
+    KernelEstimate {
+        vmem_bytes: vmem,
+        mxu_utilization,
+        flops_per_byte,
+        cycles,
+        compute_bound: compute_cycles >= memory_cycles,
+    }
+}
+
+/// Whether a block configuration is feasible on the core.
+pub fn fits(core: &TpuCore, blk: &BlockConfig) -> bool {
+    estimate(core, blk).vmem_bytes <= core.vmem_bytes
+}
+
+/// Grid-search block shapes for max MXU utilisation subject to VMEM —
+/// used by the L1 perf pass to pick BN/BM before re-lowering.
+pub fn best_blocks(core: &TpuCore, n: usize, m: usize) -> (BlockConfig, KernelEstimate) {
+    let mut best: Option<(BlockConfig, KernelEstimate, f64)> = None;
+    let mut bn = 8;
+    while bn <= n.min(2048) {
+        let mut bm = 128;
+        while bm <= m.min(16_384) {
+            if n % bn == 0 && m % bm == 0 {
+                let blk = BlockConfig {
+                    block_n: bn,
+                    block_m: bm,
+                };
+                let e = estimate(core, &blk);
+                if e.vmem_bytes <= core.vmem_bytes {
+                    // Fewest total cycles over the whole grid wins.
+                    let total = e.cycles * ((n / bn) * (m / bm)) as f64;
+                    if best.as_ref().map_or(true, |(_, _, bt)| total < *bt) {
+                        best = Some((blk, e, total));
+                    }
+                }
+            }
+            bm *= 2;
+        }
+        bn *= 2;
+    }
+    let (blk, e, _) = best.expect("no feasible block config");
+    (blk, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_blocks_fit_vmem() {
+        let core = TpuCore::default();
+        let blk = BlockConfig {
+            block_n: 128,
+            block_m: 512,
+        };
+        let e = estimate(&core, &blk);
+        assert!(e.vmem_bytes < core.vmem_bytes, "{e:?}");
+        // 3-wide contraction on an 8-deep MXU: utilisation is 3/8 at best.
+        assert!(e.mxu_utilization <= 3.0 / 8.0 + 1e-12);
+        assert!(e.mxu_utilization > 0.2);
+    }
+
+    #[test]
+    fn vmem_grows_with_tile() {
+        let core = TpuCore::default();
+        let small = estimate(&core, &BlockConfig { block_n: 64, block_m: 256 });
+        let big = estimate(&core, &BlockConfig { block_n: 256, block_m: 1024 });
+        assert!(big.vmem_bytes > small.vmem_bytes);
+    }
+
+    #[test]
+    fn oversized_tile_rejected() {
+        let core = TpuCore::default();
+        assert!(!fits(
+            &core,
+            &BlockConfig {
+                block_n: 4096,
+                block_m: 16_384
+            }
+        ));
+    }
+
+    #[test]
+    fn best_blocks_feasible_and_divisible() {
+        let core = TpuCore::default();
+        let (blk, e) = best_blocks(&core, 4096, 16_384);
+        assert_eq!(4096 % blk.block_n, 0);
+        assert_eq!(16_384 % blk.block_m, 0);
+        assert!(e.vmem_bytes <= core.vmem_bytes);
+        // Larger bm amortises the epilogue → expect bm ≥ 512.
+        assert!(blk.block_m >= 512, "{blk:?}");
+    }
+
+    #[test]
+    fn arithmetic_intensity_improves_with_block_n() {
+        // Re-reading q for every source block is the big traffic term;
+        // larger bn amortises it.
+        let core = TpuCore::default();
+        let a = estimate(&core, &BlockConfig { block_n: 32, block_m: 512 });
+        let b = estimate(&core, &BlockConfig { block_n: 256, block_m: 512 });
+        assert!(b.flops_per_byte > a.flops_per_byte);
+    }
+}

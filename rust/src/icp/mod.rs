@@ -1,0 +1,435 @@
+//! CPU baseline ICP — a from-scratch PCL-equivalent of
+//! `pcl::IterativeClosestPoint`, the software baseline of the paper's
+//! evaluation (§IV.A: "a software-only ICP implementation based on PCL").
+//!
+//! Algorithm (paper §II):
+//! 1. correspondence estimation — exact NN in the target for every
+//!    source point (kd-tree, like PCL, or brute force);
+//! 2. correspondence rejection — drop pairs beyond
+//!    `max_correspondence_distance`;
+//! 3. transformation estimation — Umeyama/Kabsch closed form via SVD;
+//! 4. update + convergence — apply `T_j`, accumulate `T = Π T_j`
+//!    (Eq. 3), stop when `T_j` is within `transformation_epsilon` of
+//!    identity or `max_iterations` is reached.
+
+use crate::kdtree::KdTree;
+use crate::math::{kabsch_from_pairs, Mat4, Vec3};
+use crate::nn;
+use crate::pointcloud::PointCloud;
+
+/// Correspondence search strategy for the baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// kd-tree (what PCL uses; the §V discussion's sequential traversal).
+    KdTree,
+    /// Approximate kd-tree with a bounded leaf-visit budget — the §V
+    /// alternative that trades exactness for speed; the paper (and our
+    /// `section5_approx_icp` test) observe degraded ICP convergence.
+    KdTreeApproximate { max_leaf_visits: usize },
+    /// Single-thread brute force.
+    Brute,
+    /// Multi-thread brute force (the "massive multi-core parallelism"
+    /// CPU alternative the introduction mentions).
+    BruteParallel { threads: usize },
+}
+
+/// ICP parameters — mirrors the paper's Table I knobs and its fixed
+/// evaluation configuration (§IV.A: 50 iterations, 1.0 m, 1e-5).
+#[derive(Clone, Copy, Debug)]
+pub struct IcpParams {
+    pub max_iterations: u32,
+    pub max_correspondence_distance: f32,
+    pub transformation_epsilon: f64,
+    pub search: SearchStrategy,
+}
+
+impl Default for IcpParams {
+    fn default() -> Self {
+        Self {
+            max_iterations: 50,
+            max_correspondence_distance: 1.0,
+            transformation_epsilon: 1e-5,
+            search: SearchStrategy::KdTree,
+        }
+    }
+}
+
+/// Why the loop stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    Converged,
+    MaxIterations,
+    TooFewCorrespondences,
+}
+
+/// Per-iteration diagnostics (consumed by benches and EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationStat {
+    pub correspondences: usize,
+    /// RMS of matched correspondence distances (m).
+    pub rmse: f64,
+    /// max|T_j − I| convergence metric.
+    pub delta: f64,
+    /// Wall time of the correspondence-estimation stage.
+    pub nn_time: std::time::Duration,
+}
+
+/// Alignment result.
+#[derive(Clone, Debug)]
+pub struct IcpResult {
+    /// Final cumulative transform T = Π T_j mapping source → target.
+    pub transformation: Mat4,
+    /// Correspondence RMSE at the last iteration (paper Table III metric).
+    pub rmse: f64,
+    pub iterations: u32,
+    pub stop: StopReason,
+    pub stats: Vec<IterationStat>,
+    pub total_time: std::time::Duration,
+}
+
+impl IcpResult {
+    /// Did the alignment produce a usable transform?
+    pub fn has_converged(&self) -> bool {
+        !matches!(self.stop, StopReason::TooFewCorrespondences)
+    }
+}
+
+/// Align `source` onto `target` starting from `initial_guess`.
+///
+/// This is the whole baseline pipeline; the hybrid FPPS path shares the
+/// outer loop but offloads steps 1–3's heavy parts to the device (see
+/// `fpps_api`).
+pub fn align(
+    source: &PointCloud,
+    target: &PointCloud,
+    initial_guess: &Mat4,
+    params: &IcpParams,
+) -> IcpResult {
+    let t_start = std::time::Instant::now();
+    let tree = match params.search {
+        SearchStrategy::KdTree | SearchStrategy::KdTreeApproximate { .. } => {
+            Some(KdTree::build(target))
+        }
+        _ => None,
+    };
+
+    let mut cumulative = *initial_guess;
+    let mut current = source.transformed(initial_guess);
+    let mut stats = Vec::new();
+    let mut stop = StopReason::MaxIterations;
+    let mut last_rmse = f64::NAN;
+    let mut iterations = 0;
+
+    for _ in 0..params.max_iterations {
+        iterations += 1;
+        // 1+2: correspondence estimation with rejection.
+        let nn_start = std::time::Instant::now();
+        let pairs = find_correspondences(&current, target, tree.as_ref(), params);
+        let nn_time = nn_start.elapsed();
+
+        let mut sum_sq = 0.0f64;
+        let (mut ps, mut qs) = (
+            Vec::with_capacity(pairs.len()),
+            Vec::with_capacity(pairs.len()),
+        );
+        for &(si, ti, d) in &pairs {
+            ps.push(Vec3::from_f32(current.get(si as usize)));
+            qs.push(Vec3::from_f32(target.get(ti as usize)));
+            sum_sq += d as f64;
+        }
+        if ps.len() < 3 {
+            stop = StopReason::TooFewCorrespondences;
+            stats.push(IterationStat {
+                correspondences: ps.len(),
+                rmse: f64::NAN,
+                delta: f64::NAN,
+                nn_time,
+            });
+            break;
+        }
+        last_rmse = (sum_sq / ps.len() as f64).sqrt();
+
+        // 3: transformation estimation.
+        let est = match kabsch_from_pairs(&ps, &qs) {
+            Some(e) => e,
+            None => {
+                stop = StopReason::TooFewCorrespondences;
+                break;
+            }
+        };
+        let t_j = est.to_mat4();
+
+        // 4: update + convergence (PCL semantics: epsilon on T_j).
+        current.transform_in_place(&t_j);
+        cumulative = t_j.mul_mat(&cumulative);
+        let delta = t_j.delta_from_identity();
+        stats.push(IterationStat {
+            correspondences: ps.len(),
+            rmse: last_rmse,
+            delta,
+            nn_time,
+        });
+        if delta < params.transformation_epsilon {
+            stop = StopReason::Converged;
+            break;
+        }
+    }
+
+    IcpResult {
+        transformation: cumulative,
+        rmse: last_rmse,
+        iterations,
+        stop,
+        stats,
+        total_time: t_start.elapsed(),
+    }
+}
+
+/// (source idx, target idx, squared distance) for all accepted pairs.
+fn find_correspondences(
+    current: &PointCloud,
+    target: &PointCloud,
+    tree: Option<&KdTree>,
+    params: &IcpParams,
+) -> Vec<(u32, u32, f32)> {
+    let max_d = params.max_correspondence_distance;
+    let max_d2 = max_d * max_d;
+    let mut out = Vec::with_capacity(current.len());
+    match (params.search, tree) {
+        (SearchStrategy::KdTree, Some(tree)) => {
+            for (i, p) in current.iter().enumerate() {
+                if let Some(n) = tree.nearest_within(p, max_d) {
+                    out.push((i as u32, n.index, n.dist_sq));
+                }
+            }
+        }
+        (SearchStrategy::KdTreeApproximate { max_leaf_visits }, Some(tree)) => {
+            for (i, p) in current.iter().enumerate() {
+                if let Some(n) = tree.nearest_approximate(p, max_leaf_visits) {
+                    if n.dist_sq <= max_d2 {
+                        out.push((i as u32, n.index, n.dist_sq));
+                    }
+                }
+            }
+        }
+        (SearchStrategy::Brute, _) => {
+            for (i, p) in current.iter().enumerate() {
+                if let Some((j, d)) = nn::nearest_brute(target, p) {
+                    if d <= max_d2 {
+                        out.push((i as u32, j, d));
+                    }
+                }
+            }
+        }
+        (SearchStrategy::BruteParallel { threads }, _) => {
+            let res = nn::nearest_brute_parallel(target, current, threads);
+            for (i, &(j, d)) in res.iter().enumerate() {
+                if d <= max_d2 {
+                    out.push((i as u32, j, d));
+                }
+            }
+        }
+        (SearchStrategy::KdTree, None)
+        | (SearchStrategy::KdTreeApproximate { .. }, None) => {
+            unreachable!("tree built for kd-tree strategies")
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Mat3;
+    use crate::prop::{default_cases, forall};
+    use crate::rng::Pcg32;
+
+    /// Structured cloud (two walls + floor patch) — ICP needs geometry
+    /// with constraints in all 6 DoF to converge.
+    fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let mut c = PointCloud::with_capacity(n);
+        for i in 0..n {
+            match i % 3 {
+                0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+                1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+                _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+            }
+        }
+        c
+    }
+
+    fn small_transform(rng: &mut Pcg32) -> Mat4 {
+        let axis = [0.0, 0.0, 1.0];
+        let r = Mat3::axis_angle(axis, rng.range(-0.05, 0.05));
+        let t = Vec3::new(
+            rng.range(-0.3, 0.3) as f64,
+            rng.range(-0.3, 0.3) as f64,
+            rng.range(-0.05, 0.05) as f64,
+        );
+        Mat4::from_rt(r, t)
+    }
+
+    fn recovers(params: &IcpParams, seed: u64) {
+        let mut rng = Pcg32::new(seed);
+        let target = structured_cloud(1200, seed);
+        let gt = small_transform(&mut rng);
+        // Source = target moved by gt⁻¹, so aligning source→target
+        // should recover gt.
+        let source = target.transformed(&gt.inverse_rigid());
+        let res = align(&source, &target, &Mat4::IDENTITY, params);
+        assert!(res.has_converged(), "stop={:?}", res.stop);
+        let err = res.transformation.rotation().rotation_angle_to(&gt.rotation());
+        let terr = (res.transformation.translation() - gt.translation()).norm();
+        assert!(err < 2e-3, "rotation err {err} (seed {seed})");
+        assert!(terr < 2e-2, "translation err {terr} (seed {seed})");
+        assert!(res.rmse < 0.05, "rmse {}", res.rmse);
+    }
+
+    #[test]
+    fn recovers_transform_kdtree() {
+        recovers(&IcpParams::default(), 42);
+    }
+
+    #[test]
+    fn recovers_transform_brute() {
+        recovers(
+            &IcpParams {
+                search: SearchStrategy::Brute,
+                ..Default::default()
+            },
+            43,
+        );
+    }
+
+    #[test]
+    fn recovers_transform_brute_parallel() {
+        recovers(
+            &IcpParams {
+                search: SearchStrategy::BruteParallel { threads: 4 },
+                ..Default::default()
+            },
+            44,
+        );
+    }
+
+    #[test]
+    fn strategies_agree() {
+        // kd-tree and brute force must produce identical correspondences,
+        // hence near-identical transforms.
+        let target = structured_cloud(800, 7);
+        let mut rng = Pcg32::new(8);
+        let source = target.transformed(&small_transform(&mut rng).inverse_rigid());
+        let a = align(&source, &target, &Mat4::IDENTITY, &IcpParams::default());
+        let b = align(
+            &source,
+            &target,
+            &Mat4::IDENTITY,
+            &IcpParams {
+                search: SearchStrategy::Brute,
+                ..Default::default()
+            },
+        );
+        assert!(
+            a.transformation
+                .rotation()
+                .rotation_angle_to(&b.transformation.rotation())
+                < 1e-6
+        );
+        assert!((a.transformation.translation() - b.transformation.translation()).norm() < 1e-5);
+    }
+
+    #[test]
+    fn identity_alignment_converges_immediately() {
+        let c = structured_cloud(500, 9);
+        let res = align(&c, &c, &Mat4::IDENTITY, &IcpParams::default());
+        assert_eq!(res.stop, StopReason::Converged);
+        assert!(res.iterations <= 2);
+        assert!(res.rmse < 1e-6);
+        assert!(res.transformation.delta_from_identity() < 1e-9);
+    }
+
+    #[test]
+    fn initial_guess_is_honored() {
+        let target = structured_cloud(800, 10);
+        let mut rng = Pcg32::new(11);
+        let gt = small_transform(&mut rng);
+        let source = target.transformed(&gt.inverse_rigid());
+        // Start exactly at the answer: should converge in ~1 iteration.
+        let res = align(&source, &target, &gt, &IcpParams::default());
+        assert_eq!(res.stop, StopReason::Converged);
+        assert!(res.iterations <= 2, "iterations {}", res.iterations);
+    }
+
+    #[test]
+    fn too_few_correspondences_flagged() {
+        // Disjoint clouds far beyond max correspondence distance.
+        let a = structured_cloud(100, 12);
+        let mut b = structured_cloud(100, 13);
+        for v in b.xyz.iter_mut() {
+            *v += 1000.0;
+        }
+        let res = align(&a, &b, &Mat4::IDENTITY, &IcpParams::default());
+        assert_eq!(res.stop, StopReason::TooFewCorrespondences);
+        assert!(!res.has_converged());
+    }
+
+    #[test]
+    fn max_iterations_respected() {
+        let target = structured_cloud(400, 14);
+        let mut rng = Pcg32::new(15);
+        let source = target.transformed(&small_transform(&mut rng).inverse_rigid());
+        let res = align(
+            &source,
+            &target,
+            &Mat4::IDENTITY,
+            &IcpParams {
+                max_iterations: 3,
+                transformation_epsilon: 0.0, // never converge on epsilon
+                ..Default::default()
+            },
+        );
+        assert_eq!(res.iterations, 3);
+        assert_eq!(res.stop, StopReason::MaxIterations);
+        assert_eq!(res.stats.len(), 3);
+    }
+
+    #[test]
+    fn rmse_monotonically_improves_roughly() {
+        let target = structured_cloud(1000, 16);
+        let mut rng = Pcg32::new(17);
+        let source = target.transformed(&small_transform(&mut rng).inverse_rigid());
+        let res = align(&source, &target, &Mat4::IDENTITY, &IcpParams::default());
+        let first = res.stats.first().unwrap().rmse;
+        let last = res.stats.last().unwrap().rmse;
+        assert!(
+            last <= first + 1e-9,
+            "rmse went up: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn property_random_small_transforms_recovered() {
+        forall(default_cases(10), |g| {
+            let seed = g.case + 5000;
+            recovers(&IcpParams::default(), seed);
+        });
+    }
+
+    #[test]
+    fn partial_overlap_with_noise() {
+        // Source sees only part of the target and both carry noise —
+        // the realistic odometry regime; require approximate recovery.
+        let mut rng = Pcg32::new(18);
+        let target = structured_cloud(2000, 18);
+        let gt = small_transform(&mut rng);
+        let mut source = target.transformed(&gt.inverse_rigid());
+        // Keep 70% of points.
+        source = source.random_sample(1400, &mut rng);
+        source.add_noise(0.01, &mut rng);
+        let res = align(&source, &target, &Mat4::IDENTITY, &IcpParams::default());
+        assert!(res.has_converged());
+        let terr = (res.transformation.translation() - gt.translation()).norm();
+        assert!(terr < 0.1, "translation err {terr}");
+    }
+}

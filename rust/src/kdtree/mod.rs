@@ -1,0 +1,722 @@
+//! Exact 3-D kd-tree — the correspondence-search structure of the PCL
+//! baseline (paper §IV setup) and the subject of the §V discussion on
+//! why tree search maps poorly onto the FPGA pipeline.
+//!
+//! Implementation notes:
+//! * Implicit binary heap layout over a reordered index array — no
+//!   per-node allocations, cache-friendly traversal.
+//! * Median split on the widest-spread axis (sliding-midpoint is not
+//!   needed at LiDAR densities; PCL/FLANN uses mean-split but median
+//!   keeps the tree balanced deterministically, which matters for the
+//!   latency-determinism discussion in §V).
+//! * Exact NN with backtracking ("backward tracing" in the paper's
+//!   words), kNN with a bounded max-heap, and radius search.
+
+use crate::pointcloud::PointCloud;
+
+/// One flattened node. Leaves hold a contiguous range of reordered
+/// point indices; internal nodes split `axis` at `split`.
+#[derive(Clone, Debug)]
+enum Node {
+    Internal {
+        axis: u8,
+        split: f32,
+        left: u32,
+        right: u32,
+    },
+    Leaf {
+        start: u32,
+        end: u32,
+    },
+}
+
+/// Exact kd-tree over a borrowed cloud.
+pub struct KdTree<'a> {
+    cloud: &'a PointCloud,
+    nodes: Vec<Node>,
+    /// Point indices reordered so each leaf owns a contiguous slice.
+    order: Vec<u32>,
+    leaf_size: usize,
+}
+
+/// Result of a nearest-neighbour query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub index: u32,
+    pub dist_sq: f32,
+}
+
+impl<'a> KdTree<'a> {
+    /// Build with the default leaf size (16, comparable to FLANN's).
+    pub fn build(cloud: &'a PointCloud) -> Self {
+        Self::build_with_leaf_size(cloud, 16)
+    }
+
+    pub fn build_with_leaf_size(cloud: &'a PointCloud, leaf_size: usize) -> Self {
+        assert!(leaf_size >= 1);
+        let mut order: Vec<u32> = (0..cloud.len() as u32).collect();
+        let mut nodes = Vec::new();
+        if !cloud.is_empty() {
+            let n = order.len();
+            build_rec(cloud, &mut nodes, &mut order, 0, n, leaf_size);
+        }
+        Self {
+            cloud,
+            nodes,
+            order,
+            leaf_size,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cloud.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cloud.is_empty()
+    }
+
+    pub fn leaf_size(&self) -> usize {
+        self.leaf_size
+    }
+
+    /// Exact nearest neighbour; `None` on an empty tree.
+    pub fn nearest(&self, q: [f32; 3]) -> Option<Neighbor> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let mut best = Neighbor {
+            index: u32::MAX,
+            dist_sq: f32::INFINITY,
+        };
+        self.nearest_rec(0, q, &mut best);
+        (best.index != u32::MAX).then_some(best)
+    }
+
+    /// Exact nearest neighbour within `max_dist`; `None` if nothing is
+    /// that close (the ICP max-correspondence-distance rejection, pushed
+    /// into the search the way PCL does it).
+    pub fn nearest_within(&self, q: [f32; 3], max_dist: f32) -> Option<Neighbor> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let mut best = Neighbor {
+            index: u32::MAX,
+            dist_sq: max_dist * max_dist,
+        };
+        self.nearest_rec(0, q, &mut best);
+        (best.index != u32::MAX).then_some(best)
+    }
+
+    fn nearest_rec(&self, node: u32, q: [f32; 3], best: &mut Neighbor) {
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                for &i in &self.order[*start as usize..*end as usize] {
+                    let d = dist_sq(self.cloud.get(i as usize), q);
+                    // `<` (not `<=`): ties keep the earliest-found point;
+                    // combined with left-first descent this is stable.
+                    if d < best.dist_sq {
+                        *best = Neighbor {
+                            index: i,
+                            dist_sq: d,
+                        };
+                    }
+                }
+            }
+            Node::Internal {
+                axis,
+                split,
+                left,
+                right,
+            } => {
+                let delta = q[*axis as usize] - split;
+                let (near, far) = if delta <= 0.0 {
+                    (*left, *right)
+                } else {
+                    (*right, *left)
+                };
+                self.nearest_rec(near, q, best);
+                // Backtrack only if the splitting plane is closer than
+                // the current best ("backward tracing", §V).
+                if delta * delta < best.dist_sq {
+                    self.nearest_rec(far, q, best);
+                }
+            }
+        }
+    }
+
+    /// *Approximate* nearest neighbour with a bounded leaf-visit budget —
+    /// the Greenspan & Yurick style search the paper's §V discussion
+    /// evaluates ("approximate k-d tree search can reduce computational
+    /// complexity but often leads to degraded convergence in ICP").
+    /// `max_leaf_visits = usize::MAX` degenerates to exact search;
+    /// `1` is a pure greedy descent (FLANN `checks=1`).
+    pub fn nearest_approximate(
+        &self,
+        q: [f32; 3],
+        max_leaf_visits: usize,
+    ) -> Option<Neighbor> {
+        if self.nodes.is_empty() || max_leaf_visits == 0 {
+            return None;
+        }
+        let mut best = Neighbor {
+            index: u32::MAX,
+            dist_sq: f32::INFINITY,
+        };
+        let mut budget = max_leaf_visits;
+        self.nearest_approx_rec(0, q, &mut best, &mut budget);
+        (best.index != u32::MAX).then_some(best)
+    }
+
+    fn nearest_approx_rec(
+        &self,
+        node: u32,
+        q: [f32; 3],
+        best: &mut Neighbor,
+        budget: &mut usize,
+    ) {
+        if *budget == 0 {
+            return;
+        }
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                *budget -= 1;
+                for &i in &self.order[*start as usize..*end as usize] {
+                    let d = dist_sq(self.cloud.get(i as usize), q);
+                    if d < best.dist_sq {
+                        *best = Neighbor {
+                            index: i,
+                            dist_sq: d,
+                        };
+                    }
+                }
+            }
+            Node::Internal {
+                axis,
+                split,
+                left,
+                right,
+            } => {
+                let delta = q[*axis as usize] - split;
+                let (near, far) = if delta <= 0.0 {
+                    (*left, *right)
+                } else {
+                    (*right, *left)
+                };
+                self.nearest_approx_rec(near, q, best, budget);
+                // Backtrack only while budget remains — the truncated
+                // "backward tracing" that makes the search approximate.
+                if *budget > 0 && delta * delta < best.dist_sq {
+                    self.nearest_approx_rec(far, q, best, budget);
+                }
+            }
+        }
+    }
+
+    /// Exact k nearest neighbours, ascending by distance.
+    pub fn knn(&self, q: [f32; 3], k: usize) -> Vec<Neighbor> {
+        if self.nodes.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut heap = BoundedMaxHeap::new(k);
+        self.knn_rec(0, q, &mut heap);
+        heap.into_sorted()
+    }
+
+    fn knn_rec(&self, node: u32, q: [f32; 3], heap: &mut BoundedMaxHeap) {
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                for &i in &self.order[*start as usize..*end as usize] {
+                    heap.push(Neighbor {
+                        index: i,
+                        dist_sq: dist_sq(self.cloud.get(i as usize), q),
+                    });
+                }
+            }
+            Node::Internal {
+                axis,
+                split,
+                left,
+                right,
+            } => {
+                let delta = q[*axis as usize] - split;
+                let (near, far) = if delta <= 0.0 {
+                    (*left, *right)
+                } else {
+                    (*right, *left)
+                };
+                self.knn_rec(near, q, heap);
+                if !heap.full() || delta * delta < heap.worst() {
+                    self.knn_rec(far, q, heap);
+                }
+            }
+        }
+    }
+
+    /// All points within `radius` of `q`, ascending by distance.
+    pub fn radius(&self, q: [f32; 3], radius: f32) -> Vec<Neighbor> {
+        let mut out = Vec::new();
+        if self.nodes.is_empty() {
+            return out;
+        }
+        let r2 = radius * radius;
+        self.radius_rec(0, q, r2, &mut out);
+        out.sort_by(|a, b| a.dist_sq.partial_cmp(&b.dist_sq).unwrap());
+        out
+    }
+
+    fn radius_rec(&self, node: u32, q: [f32; 3], r2: f32, out: &mut Vec<Neighbor>) {
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                for &i in &self.order[*start as usize..*end as usize] {
+                    let d = dist_sq(self.cloud.get(i as usize), q);
+                    if d <= r2 {
+                        out.push(Neighbor {
+                            index: i,
+                            dist_sq: d,
+                        });
+                    }
+                }
+            }
+            Node::Internal {
+                axis,
+                split,
+                left,
+                right,
+            } => {
+                let delta = q[*axis as usize] - split;
+                let (near, far) = if delta <= 0.0 {
+                    (*left, *right)
+                } else {
+                    (*right, *left)
+                };
+                self.radius_rec(near, q, r2, out);
+                if delta * delta <= r2 {
+                    self.radius_rec(far, q, r2, out);
+                }
+            }
+        }
+    }
+
+    /// Tree statistics (depth, node count) — consumed by the §V latency
+    /// discussion bench to show traversal-depth variance.
+    pub fn stats(&self) -> TreeStats {
+        let mut s = TreeStats::default();
+        s.nodes = self.nodes.len();
+        if !self.nodes.is_empty() {
+            self.stats_rec(0, 1, &mut s);
+        }
+        s
+    }
+
+    fn stats_rec(&self, node: u32, depth: usize, s: &mut TreeStats) {
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                s.leaves += 1;
+                s.max_depth = s.max_depth.max(depth);
+                s.total_leaf_depth += depth;
+                s.max_leaf_points = s.max_leaf_points.max((end - start) as usize);
+            }
+            Node::Internal { left, right, .. } => {
+                self.stats_rec(*left, depth + 1, s);
+                self.stats_rec(*right, depth + 1, s);
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TreeStats {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub max_depth: usize,
+    pub total_leaf_depth: usize,
+    pub max_leaf_points: usize,
+}
+
+impl TreeStats {
+    pub fn mean_leaf_depth(&self) -> f64 {
+        if self.leaves == 0 {
+            0.0
+        } else {
+            self.total_leaf_depth as f64 / self.leaves as f64
+        }
+    }
+}
+
+#[inline]
+fn dist_sq(a: [f32; 3], b: [f32; 3]) -> f32 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Recursive median-split build over `order[start..end]`; returns node id.
+fn build_rec(
+    cloud: &PointCloud,
+    nodes: &mut Vec<Node>,
+    order: &mut [u32],
+    start: usize,
+    end: usize,
+    leaf_size: usize,
+) -> u32 {
+    let id = nodes.len() as u32;
+    if end - start <= leaf_size {
+        nodes.push(Node::Leaf {
+            start: start as u32,
+            end: end as u32,
+        });
+        return id;
+    }
+    // Widest-spread axis over this range.
+    let slice = &order[start..end];
+    let mut lo = [f32::INFINITY; 3];
+    let mut hi = [f32::NEG_INFINITY; 3];
+    for &i in slice {
+        let p = cloud.get(i as usize);
+        for k in 0..3 {
+            lo[k] = lo[k].min(p[k]);
+            hi[k] = hi[k].max(p[k]);
+        }
+    }
+    let mut axis = 0;
+    for k in 1..3 {
+        if hi[k] - lo[k] > hi[axis] - lo[axis] {
+            axis = k;
+        }
+    }
+    if hi[axis] - lo[axis] == 0.0 {
+        // All points identical along every axis → cannot split.
+        nodes.push(Node::Leaf {
+            start: start as u32,
+            end: end as u32,
+        });
+        return id;
+    }
+    let mid = start + (end - start) / 2;
+    order[start..end].select_nth_unstable_by(mid - start, |&a, &b| {
+        let pa = cloud.get(a as usize)[axis];
+        let pb = cloud.get(b as usize)[axis];
+        pa.partial_cmp(&pb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let split = cloud.get(order[mid] as usize)[axis];
+
+    nodes.push(Node::Internal {
+        axis: axis as u8,
+        split,
+        left: 0,
+        right: 0,
+    }); // patched below
+    let left = build_rec(cloud, nodes, order, start, mid, leaf_size);
+    let right = build_rec(cloud, nodes, order, mid, end, leaf_size);
+    if let Node::Internal {
+        left: l, right: r, ..
+    } = &mut nodes[id as usize]
+    {
+        *l = left;
+        *r = right;
+    }
+    id
+}
+
+/// Fixed-capacity max-heap keeping the k smallest distances.
+struct BoundedMaxHeap {
+    k: usize,
+    items: Vec<Neighbor>,
+}
+
+impl BoundedMaxHeap {
+    fn new(k: usize) -> Self {
+        Self {
+            k,
+            items: Vec::with_capacity(k),
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.items.len() == self.k
+    }
+
+    fn worst(&self) -> f32 {
+        self.items.first().map_or(f32::INFINITY, |n| n.dist_sq)
+    }
+
+    fn push(&mut self, n: Neighbor) {
+        if self.items.len() < self.k {
+            self.items.push(n);
+            self.sift_up(self.items.len() - 1);
+        } else if n.dist_sq < self.worst() {
+            self.items[0] = n;
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.items[i].dist_sq > self.items[parent].dist_sq {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.items.len() && self.items[l].dist_sq > self.items[largest].dist_sq {
+                largest = l;
+            }
+            if r < self.items.len() && self.items[r].dist_sq > self.items[largest].dist_sq {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.items.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    fn into_sorted(mut self) -> Vec<Neighbor> {
+        self.items
+            .sort_by(|a, b| a.dist_sq.partial_cmp(&b.dist_sq).unwrap());
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{default_cases, forall};
+    use crate::rng::Pcg32;
+
+    fn random_cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let mut c = PointCloud::with_capacity(n);
+        for _ in 0..n {
+            c.push([
+                rng.range(-50.0, 50.0),
+                rng.range(-50.0, 50.0),
+                rng.range(-5.0, 5.0),
+            ]);
+        }
+        c
+    }
+
+    fn brute_nearest(c: &PointCloud, q: [f32; 3]) -> Neighbor {
+        let mut best = Neighbor {
+            index: u32::MAX,
+            dist_sq: f32::INFINITY,
+        };
+        for (i, p) in c.iter().enumerate() {
+            let d = dist_sq(p, q);
+            if d < best.dist_sq {
+                best = Neighbor {
+                    index: i as u32,
+                    dist_sq: d,
+                };
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn empty_tree() {
+        let c = PointCloud::new();
+        let t = KdTree::build(&c);
+        assert!(t.nearest([0.0, 0.0, 0.0]).is_none());
+        assert!(t.knn([0.0, 0.0, 0.0], 3).is_empty());
+        assert!(t.radius([0.0, 0.0, 0.0], 1.0).is_empty());
+    }
+
+    #[test]
+    fn single_point() {
+        let c = PointCloud::from_points(&[[1.0, 2.0, 3.0]]);
+        let t = KdTree::build(&c);
+        let n = t.nearest([0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(n.index, 0);
+        assert!((n.dist_sq - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearest_matches_brute_force() {
+        forall(default_cases(40), |g| {
+            let n = g.usize_range(1, 800);
+            let c = random_cloud(n, g.case + 100);
+            let t = KdTree::build_with_leaf_size(&c, g.usize_range(1, 32));
+            for _ in 0..20 {
+                let q = [
+                    g.f32_range(-60.0, 60.0),
+                    g.f32_range(-60.0, 60.0),
+                    g.f32_range(-6.0, 6.0),
+                ];
+                let kd = t.nearest(q).unwrap();
+                let bf = brute_nearest(&c, q);
+                assert_eq!(kd.dist_sq, bf.dist_sq, "case {}", g.case);
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_within_respects_max_dist() {
+        let c = random_cloud(300, 7);
+        let t = KdTree::build(&c);
+        forall(50, |g| {
+            let q = [
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-6.0, 6.0),
+            ];
+            let max_d = g.f32_range(0.1, 10.0);
+            match t.nearest_within(q, max_d) {
+                Some(n) => {
+                    assert!(n.dist_sq < max_d * max_d);
+                    assert_eq!(n.dist_sq, brute_nearest(&c, q).dist_sq);
+                }
+                None => {
+                    assert!(brute_nearest(&c, q).dist_sq >= max_d * max_d);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn knn_matches_sorted_brute_force() {
+        forall(default_cases(20), |g| {
+            let c = random_cloud(g.usize_range(10, 400), g.case + 999);
+            let t = KdTree::build(&c);
+            let q = [g.f32_range(-50.0, 50.0), g.f32_range(-50.0, 50.0), 0.0];
+            let k = g.usize_range(1, 12).min(c.len());
+            let got = t.knn(q, k);
+            let mut all: Vec<Neighbor> = c
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Neighbor {
+                    index: i as u32,
+                    dist_sq: dist_sq(p, q),
+                })
+                .collect();
+            all.sort_by(|a, b| a.dist_sq.partial_cmp(&b.dist_sq).unwrap());
+            assert_eq!(got.len(), k);
+            for (a, b) in got.iter().zip(all.iter()) {
+                assert_eq!(a.dist_sq, b.dist_sq);
+            }
+        });
+    }
+
+    #[test]
+    fn knn_k_larger_than_cloud() {
+        let c = random_cloud(5, 3);
+        let t = KdTree::build(&c);
+        let got = t.knn([0.0; 3], 10);
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn radius_matches_brute_force() {
+        forall(default_cases(20), |g| {
+            let c = random_cloud(g.usize_range(10, 500), g.case + 4242);
+            let t = KdTree::build(&c);
+            let q = [g.f32_range(-50.0, 50.0), g.f32_range(-50.0, 50.0), 0.0];
+            let r = g.f32_range(1.0, 20.0);
+            let got = t.radius(q, r);
+            let expect: usize = c.iter().filter(|&p| dist_sq(p, q) <= r * r).count();
+            assert_eq!(got.len(), expect, "case {}", g.case);
+            // Sorted ascending and all within r.
+            for w in got.windows(2) {
+                assert!(w[0].dist_sq <= w[1].dist_sq);
+            }
+            for n in &got {
+                assert!(n.dist_sq <= r * r);
+            }
+        });
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        // All points identical — degenerate split must not recurse forever.
+        let c = PointCloud::from_points(&[[1.0, 1.0, 1.0]; 100]);
+        let t = KdTree::build_with_leaf_size(&c, 4);
+        let n = t.nearest([1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(n.dist_sq, 0.0);
+        assert_eq!(t.radius([1.0, 1.0, 1.0], 0.1).len(), 100);
+    }
+
+    #[test]
+    fn approximate_with_unbounded_budget_is_exact() {
+        let c = random_cloud(500, 31);
+        let t = KdTree::build(&c);
+        forall(40, |g| {
+            let q = [
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-6.0, 6.0),
+            ];
+            let exact = t.nearest(q).unwrap();
+            let approx = t.nearest_approximate(q, usize::MAX).unwrap();
+            assert_eq!(exact.dist_sq, approx.dist_sq);
+        });
+    }
+
+    #[test]
+    fn approximate_budget_trades_accuracy() {
+        // Greedy descent (budget 1) must return *a* neighbour, never a
+        // better-than-exact one, and with enough budget converges to
+        // the exact answer — the §V accuracy/latency trade-off.
+        let c = random_cloud(2000, 33);
+        let t = KdTree::build_with_leaf_size(&c, 8);
+        let mut greedy_misses = 0;
+        let mut big_budget_misses = 0;
+        let trials = 200;
+        let mut rng = Pcg32::new(7);
+        for _ in 0..trials {
+            let q = [
+                rng.range(-60.0, 60.0),
+                rng.range(-60.0, 60.0),
+                rng.range(-6.0, 6.0),
+            ];
+            let exact = t.nearest(q).unwrap();
+            let g1 = t.nearest_approximate(q, 1).unwrap();
+            let g32 = t.nearest_approximate(q, 32).unwrap();
+            assert!(g1.dist_sq >= exact.dist_sq);
+            assert!(g32.dist_sq >= exact.dist_sq);
+            assert!(g32.dist_sq <= g1.dist_sq + 1e-12);
+            if g1.dist_sq > exact.dist_sq {
+                greedy_misses += 1;
+            }
+            if g32.dist_sq > exact.dist_sq {
+                big_budget_misses += 1;
+            }
+        }
+        // Greedy descent misses on uniform data; a 32-leaf budget is
+        // near-exact.
+        assert!(greedy_misses > 0, "greedy descent should miss sometimes");
+        assert!(
+            big_budget_misses < greedy_misses,
+            "more budget must reduce misses ({big_budget_misses} vs {greedy_misses})"
+        );
+    }
+
+    #[test]
+    fn approximate_zero_budget_returns_none() {
+        let c = random_cloud(10, 35);
+        let t = KdTree::build(&c);
+        assert!(t.nearest_approximate([0.0; 3], 0).is_none());
+    }
+
+    #[test]
+    fn stats_sane() {
+        let c = random_cloud(1000, 21);
+        let t = KdTree::build_with_leaf_size(&c, 8);
+        let s = t.stats();
+        assert!(s.leaves > 0);
+        assert!(s.max_leaf_points <= 8);
+        // Median-split balanced tree: depth ≈ log2(n/leaf) + O(1).
+        assert!(s.max_depth <= 14, "depth {}", s.max_depth);
+    }
+}

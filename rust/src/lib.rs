@@ -1,0 +1,41 @@
+//! # FPPS — An FPGA-Based Point Cloud Processing System
+//!
+//! Reproduction of "FPPS: An FPGA-Based Point Cloud Processing System"
+//! (Zhou, Du, Fan, Zhang — HKUST, 2026) as a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the host-side coordinator: the PCL-like
+//!   API of Table I ([`fpps_api`]), the ICP outer loop with SVD-based
+//!   transform estimation ([`icp`], [`math`]), the frame-stream
+//!   coordinator ([`coordinator`]), and the PJRT runtime that loads the
+//!   AOT-compiled kernel ([`runtime`]).
+//! * **Layer 2 (python/compile/model.py)** — the per-iteration ICP step
+//!   (transform → NN search → correspondence accumulation) as a JAX
+//!   graph, lowered once to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/nn_search.py)** — the paper's NN
+//!   searcher (Fig. 3) as a Pallas kernel: a blockwise systolic
+//!   distance-compute + running-argmin pipeline.
+//!
+//! The FPGA itself is modelled by two substrates: [`hwmodel`] (Alveo U50
+//! resource / latency / power model regenerating Tables II and IV and the
+//! §IV.D power-efficiency claim) and [`pipesim`] (a cycle-level simulator
+//! of the Fig. 3 four-stage streaming NN pipeline).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod fpps_api;
+pub mod hwmodel;
+pub mod icp;
+pub mod kdtree;
+pub mod math;
+pub mod metrics;
+pub mod nn;
+pub mod pipesim;
+pub mod pointcloud;
+pub mod prop;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod bench_support;

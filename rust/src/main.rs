@@ -1,0 +1,331 @@
+//! `fpps` — command-line launcher for the FPPS point cloud processing
+//! system.
+//!
+//! Subcommands:
+//! * `align`     — register two point cloud files (KITTI .bin)
+//! * `odometry`  — run scan-to-scan odometry on a synthetic sequence
+//! * `resources` — print the Table II resource report
+//! * `power`     — print the §IV.D power/efficiency report
+//! * `pipesim`   — run the Fig. 3 cycle-level pipeline simulation
+//! * `info`      — artifact manifest + runtime platform
+
+use anyhow::{bail, Context, Result};
+use fpps::cli::Parser;
+use fpps::coordinator::{run_odometry, PipelineConfig};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::FppsIcp;
+use fpps::hwmodel::{latency, power, resources, AcceleratorConfig};
+use fpps::math::Mat4;
+use fpps::pointcloud::io;
+use fpps::report::{self, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    match cmd.as_str() {
+        "align" => cmd_align(),
+        "odometry" => cmd_odometry(),
+        "resources" => cmd_resources(),
+        "power" => cmd_power(),
+        "pipesim" => cmd_pipesim(),
+        "info" => cmd_info(),
+        "" | "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fpps — FPGA-based point cloud processing system (reproduction)\n\n\
+         Usage: fpps <subcommand> [options]\n\n\
+         Subcommands:\n\
+         \x20 align      register two KITTI .bin clouds (--source, --target)\n\
+         \x20 odometry   scan-to-scan odometry over a synthetic sequence\n\
+         \x20 resources  Table II resource utilisation report\n\
+         \x20 power      power / energy-efficiency report (§IV.D)\n\
+         \x20 pipesim    Fig. 3 NN-pipeline cycle simulation\n\
+         \x20 info       artifact manifest + PJRT platform\n\n\
+         Run `fpps <subcommand> --help` for options."
+    );
+}
+
+fn cmd_align() -> Result<()> {
+    let p = Parser::new("fpps align", "register source onto target")
+        .opt("source", "source cloud (.bin)", None)
+        .opt("target", "target cloud (.bin)", None)
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("max-iterations", "ICP iteration cap", Some("50"))
+        .opt("max-dist", "max correspondence distance (m)", Some("1.0"))
+        .opt("epsilon", "transformation epsilon", Some("1e-5"))
+        .flag("native-sim", "use the software device mirror");
+    let a = p.parse_env(2)?;
+    let src = io::read_kitti_bin(
+        a.get("source").context("--source required")?.as_ref(),
+    )?;
+    let tgt = io::read_kitti_bin(
+        a.get("target").context("--target required")?.as_ref(),
+    )?;
+    println!("source: {} pts, target: {} pts", src.len(), tgt.len());
+
+    let max_it: u32 = a.get_or("max-iterations", 50)?;
+    let max_d: f32 = a.get_or("max-dist", 1.0)?;
+    let eps: f64 = a.get_or("epsilon", 1e-5)?;
+
+    macro_rules! run_align {
+        ($icp:expr) => {{
+            let mut icp = $icp;
+            icp.set_input_source(src)
+                .set_input_target(tgt)
+                .set_max_correspondence_distance(max_d)
+                .set_max_iteration_count(max_it)
+                .set_transformation_epsilon(eps);
+            let res = icp.align()?;
+            println!(
+                "converged={:?} iterations={} rmse={:.4} m total={:.1} ms device={:.1} ms",
+                res.stop,
+                res.iterations,
+                res.rmse,
+                res.total_time.as_secs_f64() * 1e3,
+                res.device_time.as_secs_f64() * 1e3,
+            );
+            println!("T =");
+            for i in 0..4 {
+                println!(
+                    "  [{:+.6} {:+.6} {:+.6} {:+.6}]",
+                    res.transformation.m[i][0],
+                    res.transformation.m[i][1],
+                    res.transformation.m[i][2],
+                    res.transformation.m[i][3]
+                );
+            }
+        }};
+    }
+
+    if a.flag("native-sim") {
+        run_align!(FppsIcp::native_sim());
+    } else {
+        run_align!(FppsIcp::hardware_initialize(
+            a.get("artifacts").unwrap().as_ref()
+        )?);
+    }
+    Ok(())
+}
+
+fn cmd_odometry() -> Result<()> {
+    let p = Parser::new("fpps odometry", "synthetic-sequence odometry")
+        .opt("sequence", "sequence name 00..09", Some("00"))
+        .opt("frames", "frames to process", Some("20"))
+        .opt("sample", "source sample size", Some("4096"))
+        .opt("capacity", "target buffer capacity", Some("16384"))
+        .opt("seed", "dataset seed", Some("2026"))
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .flag("native-sim", "use the software device mirror")
+        .flag("full-lidar", "full-resolution 64-beam scan");
+    let a = p.parse_env(2)?;
+    let name = a.get("sequence").unwrap().to_string();
+    let spec = sequence_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown sequence {name}"))?;
+    let frames: usize = a.get_or("frames", 20)?;
+    let seed: u64 = a.get_or("seed", 2026)?;
+    let lidar = if a.flag("full-lidar") {
+        LidarConfig::default()
+    } else {
+        LidarConfig {
+            beams: 32,
+            azimuth_steps: 300,
+            ..Default::default()
+        }
+    };
+    let seq = Sequence::synthetic(spec, frames, seed, lidar);
+    let cfg = PipelineConfig {
+        source_sample: a.get_or("sample", 4096)?,
+        target_capacity: a.get_or("capacity", 16_384)?,
+        seed,
+        ..Default::default()
+    };
+
+    macro_rules! run_odo {
+        ($icp:expr) => {{
+            let mut icp = $icp;
+            let res = run_odometry(&seq, frames, cfg, &mut icp)?;
+            let gt0 = seq.ground_truth[0];
+            let gt: Vec<Mat4> = seq
+                .ground_truth
+                .iter()
+                .map(|p| gt0.inverse_rigid().mul_mat(p))
+                .collect();
+            let ate =
+                fpps::metrics::absolute_trajectory_error(&res.poses, &gt[..res.poses.len()]);
+            println!(
+                "sequence {name}: {} frames aligned, mean rmse {:.3} m, ATE {:.3} m",
+                res.records.len(),
+                res.mean_rmse(),
+                ate
+            );
+            println!(
+                "align latency: mean {:.1} ms, p99 {:.1} ms, total {:.1} ms (starvation {:.1} ms)",
+                res.align_stats.mean_ms(),
+                res.align_stats.percentile_ms(99.0),
+                res.align_stats.total_ms(),
+                res.starvation_ms
+            );
+        }};
+    }
+
+    if a.flag("native-sim") {
+        run_odo!(FppsIcp::native_sim());
+    } else {
+        run_odo!(FppsIcp::hardware_initialize(
+            a.get("artifacts").unwrap().as_ref()
+        )?);
+    }
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    let cfg = AcceleratorConfig::default();
+    let rep = resources::report(&cfg);
+    let mut t = Table::new("TABLE II: FPGA resource usage summary (model)").header(&[
+        "Resource",
+        "Usage",
+        "Utilization on SLR0",
+        "Overall Utilization",
+        "Paper",
+    ]);
+    let util = resources::utilisation(&rep.total, &resources::U50);
+    let paper = resources::PAPER_TABLE2;
+    let rows = [
+        ("LUT", rep.total.lut, util[0], paper.lut),
+        ("FF", rep.total.ff, util[1], paper.ff),
+        ("Block RAM", rep.total.bram_36k, util[2], paper.bram_36k),
+        ("DSP", rep.total.dsp, util[3], paper.dsp),
+    ];
+    for (name, usage, (slr, all), pval) in rows {
+        t.row(vec![
+            name.into(),
+            usage.to_string(),
+            report::pct(slr),
+            report::pct(all),
+            pval.to_string(),
+        ]);
+    }
+    t.print();
+
+    let mut b = Table::new("\nFloorplan breakdown (Fig. 4 substitute)").header(&[
+        "Block", "LUT", "FF", "BRAM", "DSP",
+    ]);
+    for (name, u) in &rep.items {
+        b.row(vec![
+            name.clone(),
+            u.lut.to_string(),
+            u.ff.to_string(),
+            u.bram_36k.to_string(),
+            u.dsp.to_string(),
+        ]);
+    }
+    b.print();
+    Ok(())
+}
+
+fn cmd_power() -> Result<()> {
+    let cfg = AcceleratorConfig::default();
+    let rep = power::power_report(&cfg);
+    let pm = power::PowerModel::default();
+    println!(
+        "FPGA static {:.1} W + dynamic {:.1} W (model) + host {:.1} W = {:.1} W total",
+        rep.static_w,
+        rep.dynamic_w,
+        rep.host_w,
+        rep.total_w()
+    );
+    println!("CPU baseline: {:.1} W", pm.cpu_baseline_w);
+    let f = latency::frame_latency(&cfg, 4096, 131_072, 20);
+    println!(
+        "modelled frame: upload {:.2} ms, kernel {:.1} ms, host-svd {:.2} ms -> {:.1} ms",
+        f.upload_s * 1e3,
+        f.kernel_s * 1e3,
+        f.host_svd_s * 1e3,
+        f.total_s * 1e3
+    );
+    for speedup in [4.82, 15.95, 35.36] {
+        println!(
+            "speedup {speedup:>6.2}x -> efficiency gain {:.2}x (paper: 8.58x @ 15.95x)",
+            pm.efficiency_gain(speedup)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pipesim() -> Result<()> {
+    let p = Parser::new("fpps pipesim", "Fig. 3 pipeline simulation")
+        .opt("source", "source points", Some("4096"))
+        .opt("target", "target points", Some("131072"));
+    let a = p.parse_env(2)?;
+    let n: usize = a.get_or("source", 4096)?;
+    let m: usize = a.get_or("target", 131_072)?;
+    let cfg = AcceleratorConfig::default();
+    let sim = fpps::pipesim::simulate(&cfg, n, m);
+    println!(
+        "{n} source x {m} target on {}x{} PEs @ {} MHz",
+        cfg.pe_rows, cfg.pe_cols, cfg.clock_mhz
+    );
+    println!(
+        "total {} cycles = {:.3} ms (closed-form model: {} cycles)",
+        sim.total_cycles,
+        sim.seconds(&cfg) * 1e3,
+        latency::nn_search_cycles(&cfg, n, m)
+    );
+    let names = ["read", "distance", "compare", "accumulate"];
+    for (name, s) in names.iter().zip(sim.stages.iter()) {
+        println!(
+            "  {name:<10} busy {:>5.1}%  stall {:>5.1}%  idle {:>5.1}%",
+            100.0 * s.busy_cycles as f64 / sim.total_cycles as f64,
+            100.0 * s.stall_cycles as f64 / sim.total_cycles as f64,
+            100.0 * s.idle_cycles as f64 / sim.total_cycles as f64,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let p = Parser::new("fpps info", "artifact + runtime info")
+        .opt("artifacts", "artifact directory", Some("artifacts"));
+    let a = p.parse_env(2)?;
+    let dir: &std::path::Path = a.get("artifacts").unwrap().as_ref();
+    match fpps::runtime::Engine::load(dir) {
+        Ok(engine) => {
+            println!("platform: {}", engine.platform());
+            println!("variants:");
+            for v in &engine.manifest().variants {
+                println!(
+                    "  {:<24} n={:<6} m={:<7} blocks {}x{}  {}",
+                    v.name,
+                    v.n,
+                    v.m,
+                    v.block_n,
+                    v.block_m,
+                    v.file.display()
+                );
+            }
+        }
+        Err(e) => {
+            println!("no artifacts loaded from {}: {e:#}", dir.display());
+            println!("run `make artifacts` first, or use --native-sim paths");
+        }
+    }
+    Ok(())
+}

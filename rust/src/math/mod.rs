@@ -1,0 +1,637 @@
+//! Small dense linear algebra for rigid registration.
+//!
+//! Everything the host side of FPPS needs: 3-vectors, 3×3 / 4×4 matrices,
+//! a robust Jacobi SVD for 3×3 (in [`svd3`]), and the Kabsch/Umeyama
+//! closed-form rigid transform estimation used in ICP's transformation
+//! estimation step (paper §II, step 2).
+//!
+//! Host math is `f64` throughout — mirroring PCL, whose registration
+//! pipeline accumulates in double — while clouds and the device kernel
+//! are `f32`.
+
+pub mod svd3;
+
+pub use svd3::{svd3, Svd3};
+
+/// 3-vector (f64; host math).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Self { x, y, z }
+    }
+
+    pub fn from_f32(p: [f32; 3]) -> Self {
+        Self::new(p[0] as f64, p[1] as f64, p[2] as f64)
+    }
+
+    pub fn to_f32(self) -> [f32; 3] {
+        [self.x as f32, self.y as f32, self.z as f32]
+    }
+
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    pub fn norm2(self) -> f64 {
+        self.dot(self)
+    }
+
+    pub fn norm(self) -> f64 {
+        self.norm2().sqrt()
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        if n == 0.0 {
+            Vec3::ZERO
+        } else {
+            self * (1.0 / n)
+        }
+    }
+
+    pub fn scale(self, s: f64) -> Vec3 {
+        self * s
+    }
+}
+
+impl std::ops::Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl std::ops::Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl std::ops::Mul<f64> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f64) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl std::ops::Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+
+/// Row-major 3×3 matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Mat3 {
+    pub m: [[f64; 3]; 3],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    pub fn zero() -> Mat3 {
+        Mat3 { m: [[0.0; 3]; 3] }
+    }
+
+    pub fn from_rows(r0: Vec3, r1: Vec3, r2: Vec3) -> Mat3 {
+        Mat3 {
+            m: [
+                [r0.x, r0.y, r0.z],
+                [r1.x, r1.y, r1.z],
+                [r2.x, r2.y, r2.z],
+            ],
+        }
+    }
+
+    pub fn col(&self, j: usize) -> Vec3 {
+        Vec3::new(self.m[0][j], self.m[1][j], self.m[2][j])
+    }
+
+    pub fn row(&self, i: usize) -> Vec3 {
+        Vec3::new(self.m[i][0], self.m[i][1], self.m[i][2])
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        let m = &self.m;
+        Mat3 {
+            m: [
+                [m[0][0], m[1][0], m[2][0]],
+                [m[0][1], m[1][1], m[2][1]],
+                [m[0][2], m[1][2], m[2][2]],
+            ],
+        }
+    }
+
+    pub fn det(&self) -> f64 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.m[0][0] + self.m[1][1] + self.m[2][2]
+    }
+
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        Vec3::new(
+            self.row(0).dot(v),
+            self.row(1).dot(v),
+            self.row(2).dot(v),
+        )
+    }
+
+    pub fn mul_mat(&self, o: &Mat3) -> Mat3 {
+        let mut r = Mat3::zero();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+
+    pub fn scale(&self, s: f64) -> Mat3 {
+        let mut r = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] *= s;
+            }
+        }
+        r
+    }
+
+    pub fn sub(&self, o: &Mat3) -> Mat3 {
+        let mut r = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] -= o.m[i][j];
+            }
+        }
+        r
+    }
+
+    /// Outer product a·bᵀ.
+    pub fn outer(a: Vec3, b: Vec3) -> Mat3 {
+        Mat3 {
+            m: [
+                [a.x * b.x, a.x * b.y, a.x * b.z],
+                [a.y * b.x, a.y * b.y, a.y * b.z],
+                [a.z * b.x, a.z * b.y, a.z * b.z],
+            ],
+        }
+    }
+
+    /// Rotation about `axis` (need not be normalised) by `angle` rad —
+    /// Rodrigues' formula.
+    pub fn axis_angle(axis: [f32; 3], angle: f32) -> Mat3 {
+        let a = Vec3::new(axis[0] as f64, axis[1] as f64, axis[2] as f64).normalized();
+        let (s, c) = (angle as f64).sin_cos();
+        let t = 1.0 - c;
+        Mat3 {
+            m: [
+                [
+                    t * a.x * a.x + c,
+                    t * a.x * a.y - s * a.z,
+                    t * a.x * a.z + s * a.y,
+                ],
+                [
+                    t * a.x * a.y + s * a.z,
+                    t * a.y * a.y + c,
+                    t * a.y * a.z - s * a.x,
+                ],
+                [
+                    t * a.x * a.z - s * a.y,
+                    t * a.y * a.z + s * a.x,
+                    t * a.z * a.z + c,
+                ],
+            ],
+        }
+    }
+
+    /// Rotation about +Z (vehicle yaw).
+    pub fn rot_z(angle: f64) -> Mat3 {
+        let (s, c) = angle.sin_cos();
+        Mat3 {
+            m: [[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]],
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                s += self.m[i][j] * self.m[i][j];
+            }
+        }
+        s.sqrt()
+    }
+
+    /// Max |mᵢⱼ − oᵢⱼ|.
+    pub fn max_abs_diff(&self, o: &Mat3) -> f64 {
+        let mut d: f64 = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                d = d.max((self.m[i][j] - o.m[i][j]).abs());
+            }
+        }
+        d
+    }
+
+    /// Is this a proper rotation (orthogonal, det ≈ +1)?
+    pub fn is_rotation(&self, tol: f64) -> bool {
+        let rtr = self.transpose().mul_mat(self);
+        rtr.max_abs_diff(&Mat3::IDENTITY) < tol && (self.det() - 1.0).abs() < tol
+    }
+
+    /// Geodesic rotation angle between two rotations (radians).
+    pub fn rotation_angle_to(&self, o: &Mat3) -> f64 {
+        let r = self.transpose().mul_mat(o);
+        let c = ((r.trace() - 1.0) * 0.5).clamp(-1.0, 1.0);
+        c.acos()
+    }
+}
+
+/// Row-major 4×4 rigid transform (R | t over 0 0 0 1) — the paper's
+/// `T_j` of Eq. (2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f64; 4]; 4],
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    /// Augment rotation + translation (Eq. 2).
+    pub fn from_rt(r: Mat3, t: Vec3) -> Mat4 {
+        Mat4 {
+            m: [
+                [r.m[0][0], r.m[0][1], r.m[0][2], t.x],
+                [r.m[1][0], r.m[1][1], r.m[1][2], t.y],
+                [r.m[2][0], r.m[2][1], r.m[2][2], t.z],
+                [0.0, 0.0, 0.0, 1.0],
+            ],
+        }
+    }
+
+    pub fn rotation(&self) -> Mat3 {
+        let m = &self.m;
+        Mat3 {
+            m: [
+                [m[0][0], m[0][1], m[0][2]],
+                [m[1][0], m[1][1], m[1][2]],
+                [m[2][0], m[2][1], m[2][2]],
+            ],
+        }
+    }
+
+    pub fn translation(&self) -> Vec3 {
+        Vec3::new(self.m[0][3], self.m[1][3], self.m[2][3])
+    }
+
+    pub fn mul_mat(&self, o: &Mat4) -> Mat4 {
+        let mut r = Mat4 { m: [[0.0; 4]; 4] };
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+
+    /// Apply to a point (w = 1).
+    pub fn apply(&self, p: Vec3) -> Vec3 {
+        let r = self.rotation().mul_vec(p);
+        r + self.translation()
+    }
+
+    /// Rigid inverse: [Rᵀ | −Rᵀt].
+    pub fn inverse_rigid(&self) -> Mat4 {
+        let rt = self.rotation().transpose();
+        let t = -rt.mul_vec(self.translation());
+        Mat4::from_rt(rt, t)
+    }
+
+    /// Row-major f32 flattening — the wire format fed to the device
+    /// kernel (the paper's `setTransformationMatrix` argument layout).
+    pub fn to_f32_row_major(&self) -> [f32; 16] {
+        let mut out = [0f32; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                out[i * 4 + j] = self.m[i][j] as f32;
+            }
+        }
+        out
+    }
+
+    pub fn from_f32_row_major(v: &[f32; 16]) -> Mat4 {
+        let mut m = [[0.0f64; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = v[i * 4 + j] as f64;
+            }
+        }
+        Mat4 { m }
+    }
+
+    /// Convergence metric used by PCL's `transformationEpsilon`: the max
+    /// absolute element of (T − I), i.e. how far this incremental
+    /// transform is from "no further motion" (paper §II step 4).
+    pub fn delta_from_identity(&self) -> f64 {
+        let mut d: f64 = 0.0;
+        for i in 0..4 {
+            for j in 0..4 {
+                let target = if i == j { 1.0 } else { 0.0 };
+                d = d.max((self.m[i][j] - target).abs());
+            }
+        }
+        d
+    }
+}
+
+/// Result of the closed-form rigid estimation.
+#[derive(Clone, Copy, Debug)]
+pub struct RigidEstimate {
+    pub rotation: Mat3,
+    pub translation: Vec3,
+}
+
+impl RigidEstimate {
+    pub fn to_mat4(&self) -> Mat4 {
+        Mat4::from_rt(self.rotation, self.translation)
+    }
+}
+
+/// Kabsch/Umeyama rigid transform from correspondence accumulators.
+///
+/// This is the host half of the paper's "transformation estimation"
+/// (§II step 2): the device accumulates `count`, `Σp`, `Σq`, `Σp·qᵀ`
+/// (the *result accumulator* block of Fig. 2) and the host finishes with
+/// the 3×3 SVD:
+///
+///   H = Σp·qᵀ − (Σp)(Σq)ᵀ/n,   H = UΣVᵀ,
+///   R = V·diag(1,1,det(VUᵀ))·Uᵀ,   t = q̄ − R·p̄.
+///
+/// Returns `None` when there are too few correspondences (n < 3) or the
+/// covariance is numerically degenerate.
+pub fn kabsch_from_sums(
+    count: f64,
+    sum_p: Vec3,
+    sum_q: Vec3,
+    sum_pq: &Mat3,
+) -> Option<RigidEstimate> {
+    if count < 3.0 {
+        return None;
+    }
+    let inv_n = 1.0 / count;
+    let cp = sum_p * inv_n;
+    let cq = sum_q * inv_n;
+    // Cross-covariance H = Σ (p−p̄)(q−q̄)ᵀ = Σpqᵀ − n·p̄q̄ᵀ
+    let h = sum_pq.sub(&Mat3::outer(sum_p, sum_q).scale(inv_n));
+    if !h.frobenius().is_finite() {
+        return None;
+    }
+    let Svd3 { u, sigma, v } = svd3(&h);
+    // Guard against a degenerate (rank < 2) covariance: rotation is then
+    // under-determined and ICP should reject the step.
+    if sigma[1] <= 1e-12 * sigma[0].max(1e-300) {
+        return None;
+    }
+    let d = v.mul_mat(&u.transpose()).det();
+    let sign = if d < 0.0 { -1.0 } else { 1.0 };
+    // R = V diag(1,1,sign) Uᵀ
+    let mut v_fixed = v;
+    for i in 0..3 {
+        v_fixed.m[i][2] *= sign;
+    }
+    let r = v_fixed.mul_mat(&u.transpose());
+    let t = cq - r.mul_vec(cp);
+    Some(RigidEstimate {
+        rotation: r,
+        translation: t,
+    })
+}
+
+/// Kabsch from explicit correspondence lists (used by the CPU baseline
+/// and in tests as the oracle for the accumulator path).
+pub fn kabsch_from_pairs(ps: &[Vec3], qs: &[Vec3]) -> Option<RigidEstimate> {
+    assert_eq!(ps.len(), qs.len());
+    let n = ps.len() as f64;
+    if ps.len() < 3 {
+        return None;
+    }
+    let mut sum_p = Vec3::ZERO;
+    let mut sum_q = Vec3::ZERO;
+    let mut sum_pq = Mat3::zero();
+    for (&p, &q) in ps.iter().zip(qs.iter()) {
+        sum_p = sum_p + p;
+        sum_q = sum_q + q;
+        for i in 0..3 {
+            for j in 0..3 {
+                let pi = [p.x, p.y, p.z][i];
+                let qj = [q.x, q.y, q.z][j];
+                sum_pq.m[i][j] += pi * qj;
+            }
+        }
+    }
+    kabsch_from_sums(n, sum_p, sum_q, &sum_pq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    fn assert_vec_close(a: Vec3, b: Vec3, tol: f64) {
+        assert!(
+            (a - b).norm() < tol,
+            "vectors differ: {a:?} vs {b:?} (tol {tol})"
+        );
+    }
+
+    #[test]
+    fn mat3_identities() {
+        let r = Mat3::axis_angle([0.3, -0.5, 0.8], 0.7);
+        assert!(r.is_rotation(1e-12));
+        let rt = r.transpose();
+        assert!(r.mul_mat(&rt).max_abs_diff(&Mat3::IDENTITY) < 1e-12);
+        assert!((r.det() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rot_z_quarter_turn() {
+        let r = Mat3::rot_z(std::f64::consts::FRAC_PI_2);
+        let v = r.mul_vec(Vec3::new(1.0, 0.0, 0.0));
+        assert_vec_close(v, Vec3::new(0.0, 1.0, 0.0), 1e-12);
+    }
+
+    #[test]
+    fn mat4_rigid_inverse() {
+        forall(50, |g| {
+            let r = g.rotation(3.0);
+            let t = Vec3::from_f32(g.point(5.0));
+            let m = Mat4::from_rt(r, t);
+            let inv = m.inverse_rigid();
+            let prod = m.mul_mat(&inv);
+            assert!(prod.delta_from_identity() < 1e-9, "{prod:?}");
+        });
+    }
+
+    #[test]
+    fn mat4_apply_matches_rt() {
+        let r = Mat3::axis_angle([0.0, 0.0, 1.0], 0.5);
+        let t = Vec3::new(1.0, 2.0, 3.0);
+        let m = Mat4::from_rt(r, t);
+        let p = Vec3::new(0.5, -0.25, 2.0);
+        assert_vec_close(m.apply(p), r.mul_vec(p) + t, 1e-14);
+    }
+
+    #[test]
+    fn mat4_f32_roundtrip() {
+        let m = Mat4::from_rt(
+            Mat3::axis_angle([1.0, 2.0, 3.0], 0.3),
+            Vec3::new(0.1, 0.2, 0.3),
+        );
+        let rt = Mat4::from_f32_row_major(&m.to_f32_row_major());
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m.m[i][j] - rt.m[i][j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn kabsch_recovers_known_transform() {
+        forall(100, |g| {
+            let r = g.rotation(3.0);
+            let t = Vec3::from_f32(g.point(10.0));
+            let n = g.usize_range(4, 64);
+            let ps: Vec<Vec3> = g.points(n, 5.0).into_iter().map(Vec3::from_f32).collect();
+            let qs: Vec<Vec3> = ps.iter().map(|&p| r.mul_vec(p) + t).collect();
+            let est = kabsch_from_pairs(&ps, &qs).expect("estimate");
+            assert!(
+                est.rotation.max_abs_diff(&r) < 1e-6,
+                "rotation mismatch case {}",
+                g.case
+            );
+            assert_vec_close(est.translation, t, 1e-5);
+        });
+    }
+
+    #[test]
+    fn kabsch_handles_reflection_guard() {
+        // Coplanar points whose best orthogonal alignment would be a
+        // reflection; the det() guard must still return a rotation.
+        let ps = vec![
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(-1.0, 0.0, 0.0),
+            Vec3::new(0.0, -1.0, 0.0),
+        ];
+        // Mirror through the XY plane then rotate.
+        let r = Mat3::rot_z(0.3);
+        let qs: Vec<Vec3> = ps
+            .iter()
+            .map(|&p| r.mul_vec(Vec3::new(p.x, p.y, -p.z)))
+            .collect();
+        let est = kabsch_from_pairs(&ps, &qs).expect("estimate");
+        assert!(est.rotation.is_rotation(1e-9), "must be proper rotation");
+    }
+
+    #[test]
+    fn kabsch_rejects_degenerate() {
+        // All points identical → rank-0 covariance.
+        let ps = vec![Vec3::new(1.0, 1.0, 1.0); 5];
+        let qs = vec![Vec3::new(2.0, 2.0, 2.0); 5];
+        assert!(kabsch_from_pairs(&ps, &qs).is_none());
+        // Fewer than 3 pairs.
+        assert!(kabsch_from_pairs(&ps[..2], &qs[..2]).is_none());
+    }
+
+    #[test]
+    fn kabsch_sums_match_pairs_path() {
+        forall(50, |g| {
+            let n = g.usize_range(3, 32);
+            let ps: Vec<Vec3> = g.points(n, 2.0).into_iter().map(Vec3::from_f32).collect();
+            let r = g.rotation(1.0);
+            let t = Vec3::from_f32(g.point(1.0));
+            let qs: Vec<Vec3> = ps
+                .iter()
+                .map(|&p| r.mul_vec(p) + t + Vec3::from_f32(g.point(0.01)))
+                .collect();
+            let a = kabsch_from_pairs(&ps, &qs);
+            // Rebuild through the accumulator API.
+            let mut sum_p = Vec3::ZERO;
+            let mut sum_q = Vec3::ZERO;
+            let mut sum_pq = Mat3::zero();
+            for (&p, &q) in ps.iter().zip(qs.iter()) {
+                sum_p = sum_p + p;
+                sum_q = sum_q + q;
+                sum_pq = Mat3 {
+                    m: {
+                        let o = Mat3::outer(p, q);
+                        let mut m = sum_pq.m;
+                        for i in 0..3 {
+                            for j in 0..3 {
+                                m[i][j] += o.m[i][j];
+                            }
+                        }
+                        m
+                    },
+                };
+            }
+            let b = kabsch_from_sums(n as f64, sum_p, sum_q, &sum_pq);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert!(a.rotation.max_abs_diff(&b.rotation) < 1e-9);
+                    assert_vec_close(a.translation, b.translation, 1e-9);
+                }
+                (None, None) => {}
+                _ => panic!("paths disagree on degeneracy"),
+            }
+        });
+    }
+
+    #[test]
+    fn rotation_angle_metric() {
+        let a = Mat3::rot_z(0.0);
+        let b = Mat3::rot_z(0.25);
+        assert!((a.rotation_angle_to(&b) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,290 @@
+//! Singular value decomposition of 3×3 matrices via two-sided Jacobi.
+//!
+//! The host side of FPPS only ever decomposes the 3×3 cross-covariance
+//! matrix H produced by the device's result accumulator, so a dedicated
+//! 3×3 routine is both faster and easier to validate than a general
+//! LAPACK-style driver. The algorithm:
+//!
+//! 1. One-sided Jacobi on A: repeatedly apply rotations J so that
+//!    B = A·J has orthogonal columns (sweeps over the 3 column pairs
+//!    until off-diagonal mass of BᵀB is negligible).
+//! 2. Column norms of B are the singular values; U = B·diag(1/σ);
+//!    V accumulates the Jacobi rotations.
+//! 3. Sort σ descending, permute U/V, and fix signs so σᵢ ≥ 0.
+//!
+//! Degenerate columns (σ ≈ 0) get U columns completed via cross products
+//! so U is always a full orthogonal matrix — required by the Kabsch
+//! reflection guard, which inspects det(V·Uᵀ).
+
+use super::Mat3;
+
+/// SVD result: `a = u · diag(sigma) · vᵀ`, `sigma[0] ≥ sigma[1] ≥ sigma[2] ≥ 0`,
+/// `u` and `v` orthogonal (not necessarily det +1).
+#[derive(Clone, Copy, Debug)]
+pub struct Svd3 {
+    pub u: Mat3,
+    pub sigma: [f64; 3],
+    pub v: Mat3,
+}
+
+/// Compute the SVD of a 3×3 matrix. Always succeeds for finite input;
+/// NaN/Inf inputs produce NaN outputs the caller should screen (see
+/// `kabsch_from_sums`).
+pub fn svd3(a: &Mat3) -> Svd3 {
+    // Work on B = A (columns rotated in place), V accumulates rotations.
+    let mut b = *a;
+    let mut v = Mat3::IDENTITY;
+
+    const MAX_SWEEPS: usize = 60;
+    const EPS: f64 = 1e-15;
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        // Column pairs (p, q): (0,1), (0,2), (1,2)
+        for (p, q) in [(0usize, 1usize), (0, 2), (1, 2)] {
+            // Gram entries of the current B.
+            let mut app = 0.0;
+            let mut aqq = 0.0;
+            let mut apq = 0.0;
+            for i in 0..3 {
+                app += b.m[i][p] * b.m[i][p];
+                aqq += b.m[i][q] * b.m[i][q];
+                apq += b.m[i][p] * b.m[i][q];
+            }
+            off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+            if apq.abs() <= EPS * (app * aqq).sqrt() {
+                continue;
+            }
+            // Jacobi rotation annihilating the (p,q) Gram entry.
+            let tau = (aqq - app) / (2.0 * apq);
+            let t = if tau >= 0.0 {
+                1.0 / (tau + (1.0 + tau * tau).sqrt())
+            } else {
+                1.0 / (tau - (1.0 + tau * tau).sqrt())
+            };
+            let c = 1.0 / (1.0 + t * t).sqrt();
+            let s = c * t;
+            // B ← B·J, V ← V·J
+            for i in 0..3 {
+                let bp = b.m[i][p];
+                let bq = b.m[i][q];
+                b.m[i][p] = c * bp - s * bq;
+                b.m[i][q] = s * bp + c * bq;
+                let vp = v.m[i][p];
+                let vq = v.m[i][q];
+                v.m[i][p] = c * vp - s * vq;
+                v.m[i][q] = s * vp + c * vq;
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of B.
+    let mut sigma = [0.0f64; 3];
+    for j in 0..3 {
+        let mut s = 0.0;
+        for i in 0..3 {
+            s += b.m[i][j] * b.m[i][j];
+        }
+        sigma[j] = s.sqrt();
+    }
+
+    // Sort descending, permuting B's and V's columns in lockstep.
+    let mut order = [0usize, 1, 2];
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+    let (mut bs, mut vs, mut ss) = (Mat3::zero(), Mat3::zero(), [0.0f64; 3]);
+    for (dst, &src) in order.iter().enumerate() {
+        ss[dst] = sigma[src];
+        for i in 0..3 {
+            bs.m[i][dst] = b.m[i][src];
+            vs.m[i][dst] = v.m[i][src];
+        }
+    }
+
+    // U columns: normalised B columns; complete degenerate ones.
+    let mut u = Mat3::zero();
+    let tol = ss[0].max(1e-300) * 1e-12;
+    let mut rank = 0;
+    for j in 0..3 {
+        if ss[j] > tol {
+            for i in 0..3 {
+                u.m[i][j] = bs.m[i][j] / ss[j];
+            }
+            rank = j + 1;
+        }
+    }
+    complete_orthonormal(&mut u, rank);
+
+    Svd3 {
+        u,
+        sigma: ss,
+        v: vs,
+    }
+}
+
+/// Fill columns `rank..3` of `u` so its columns form an orthonormal basis.
+fn complete_orthonormal(u: &mut Mat3, rank: usize) {
+    use super::Vec3;
+    let mut cols: Vec<Vec3> = (0..rank).map(|j| u.col(j)).collect();
+    while cols.len() < 3 {
+        // Find a unit vector orthogonal to all current columns: start from
+        // the least-aligned axis and Gram-Schmidt it.
+        let mut best = Vec3::new(1.0, 0.0, 0.0);
+        let mut best_res = -1.0f64;
+        for axis in [
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+        ] {
+            let mut r = axis;
+            for c in &cols {
+                r = r - *c * c.dot(axis);
+            }
+            let n = r.norm();
+            if n > best_res {
+                best_res = n;
+                best = r;
+            }
+        }
+        cols.push(best.normalized());
+    }
+    for (j, c) in cols.iter().enumerate() {
+        u.m[0][j] = c.x;
+        u.m[1][j] = c.y;
+        u.m[2][j] = c.z;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+    use crate::prop::forall;
+
+    fn reconstruct(s: &Svd3) -> Mat3 {
+        let mut sd = Mat3::zero();
+        for i in 0..3 {
+            sd.m[i][i] = s.sigma[i];
+        }
+        s.u.mul_mat(&sd).mul_mat(&s.v.transpose())
+    }
+
+    fn assert_orthogonal(m: &Mat3, tol: f64) {
+        let g = m.transpose().mul_mat(m);
+        assert!(
+            g.max_abs_diff(&Mat3::IDENTITY) < tol,
+            "not orthogonal: {m:?} gram {g:?}"
+        );
+    }
+
+    #[test]
+    fn identity() {
+        let s = svd3(&Mat3::IDENTITY);
+        assert!((s.sigma[0] - 1.0).abs() < 1e-14);
+        assert!((s.sigma[2] - 1.0).abs() < 1e-14);
+        assert!(reconstruct(&s).max_abs_diff(&Mat3::IDENTITY) < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_with_negatives() {
+        let a = Mat3 {
+            m: [[-3.0, 0.0, 0.0], [0.0, 2.0, 0.0], [0.0, 0.0, -0.5]],
+        };
+        let s = svd3(&a);
+        assert!((s.sigma[0] - 3.0).abs() < 1e-12);
+        assert!((s.sigma[1] - 2.0).abs() < 1e-12);
+        assert!((s.sigma[2] - 0.5).abs() < 1e-12);
+        assert!(reconstruct(&s).max_abs_diff(&a) < 1e-12);
+        assert_orthogonal(&s.u, 1e-12);
+        assert_orthogonal(&s.v, 1e-12);
+    }
+
+    #[test]
+    fn random_matrices_reconstruct() {
+        forall(200, |g| {
+            let mut a = Mat3::zero();
+            for i in 0..3 {
+                for j in 0..3 {
+                    a.m[i][j] = g.f32_range(-10.0, 10.0) as f64;
+                }
+            }
+            let s = svd3(&a);
+            let err = reconstruct(&s).max_abs_diff(&a);
+            assert!(err < 1e-9 * (1.0 + s.sigma[0]), "err={err} case={}", g.case);
+            assert_orthogonal(&s.u, 1e-9);
+            assert_orthogonal(&s.v, 1e-9);
+            assert!(s.sigma[0] >= s.sigma[1] && s.sigma[1] >= s.sigma[2]);
+            assert!(s.sigma[2] >= 0.0);
+        });
+    }
+
+    #[test]
+    fn rank_one() {
+        let u = Vec3::new(1.0, 2.0, 3.0);
+        let v = Vec3::new(-1.0, 0.5, 2.0);
+        let a = Mat3::outer(u, v);
+        let s = svd3(&a);
+        assert!((s.sigma[0] - u.norm() * v.norm()).abs() < 1e-10);
+        assert!(s.sigma[1] < 1e-10);
+        assert!(s.sigma[2] < 1e-10);
+        assert!(reconstruct(&s).max_abs_diff(&a) < 1e-10);
+        // U must still be fully orthogonal for the Kabsch det() guard.
+        assert_orthogonal(&s.u, 1e-9);
+        assert_orthogonal(&s.v, 1e-9);
+    }
+
+    #[test]
+    fn rank_two() {
+        // Two independent outer products → rank 2.
+        let a = Mat3::outer(Vec3::new(1.0, 0.0, 0.0), Vec3::new(0.0, 2.0, 0.0));
+        let b = Mat3::outer(Vec3::new(0.0, 1.0, 0.0), Vec3::new(3.0, 0.0, 0.0));
+        let mut m = Mat3::zero();
+        for i in 0..3 {
+            for j in 0..3 {
+                m.m[i][j] = a.m[i][j] + b.m[i][j];
+            }
+        }
+        let s = svd3(&m);
+        assert!(s.sigma[1] > 1.0);
+        assert!(s.sigma[2] < 1e-10);
+        assert!(reconstruct(&s).max_abs_diff(&m) < 1e-10);
+        assert_orthogonal(&s.u, 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let s = svd3(&Mat3::zero());
+        assert_eq!(s.sigma, [0.0, 0.0, 0.0]);
+        assert_orthogonal(&s.u, 1e-12);
+        assert_orthogonal(&s.v, 1e-12);
+    }
+
+    #[test]
+    fn near_singular_conditioning() {
+        // σ spread over 12 orders of magnitude still reconstructs.
+        let d = Mat3 {
+            m: [[1e6, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1e-6]],
+        };
+        let r1 = Mat3::axis_angle([1.0, 1.0, 0.0], 0.7);
+        let r2 = Mat3::axis_angle([0.0, 1.0, 1.0], -0.4);
+        let a = r1.mul_mat(&d).mul_mat(&r2);
+        let s = svd3(&a);
+        assert!((s.sigma[0] - 1e6).abs() / 1e6 < 1e-10);
+        assert!((s.sigma[1] - 1.0).abs() < 1e-8);
+        let err = reconstruct(&s).max_abs_diff(&a);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn rotations_have_unit_singular_values() {
+        forall(100, |g| {
+            let r = g.rotation(3.1);
+            let s = svd3(&r);
+            for k in 0..3 {
+                assert!((s.sigma[k] - 1.0).abs() < 1e-9, "sigma={:?}", s.sigma);
+            }
+        });
+    }
+}

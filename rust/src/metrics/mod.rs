@@ -1,0 +1,192 @@
+//! Measurement utilities: timing statistics, latency histograms, and the
+//! trajectory / registration error metrics reported in the paper's
+//! evaluation (per-frame latency, registration RMSE, trajectory error).
+
+use crate::math::Mat4;
+use std::time::Duration;
+
+/// Online mean/min/max/percentile collector for latencies.
+#[derive(Clone, Debug, Default)]
+pub struct TimingStats {
+    samples_ms: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_ms
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via nearest-rank on a sorted copy (p in [0, 100]).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Sum of all samples (total runtime) — used for the paper's
+    /// runtime-weighted average speedup (abstract: 15.95×).
+    pub fn total_ms(&self) -> f64 {
+        self.samples_ms.iter().sum()
+    }
+}
+
+/// Absolute trajectory error: RMS of translational distance between
+/// estimated and ground-truth poses (after both start at identity).
+pub fn absolute_trajectory_error(estimate: &[Mat4], ground_truth: &[Mat4]) -> f64 {
+    assert_eq!(estimate.len(), ground_truth.len());
+    if estimate.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    for (e, g) in estimate.iter().zip(ground_truth.iter()) {
+        let d = (e.translation() - g.translation()).norm();
+        sum += d * d;
+    }
+    (sum / estimate.len() as f64).sqrt()
+}
+
+/// Relative pose error over `delta`-frame intervals: RMS translational
+/// drift per interval — the standard KITTI odometry drift metric.
+pub fn relative_pose_error(estimate: &[Mat4], ground_truth: &[Mat4], delta: usize) -> f64 {
+    assert_eq!(estimate.len(), ground_truth.len());
+    if estimate.len() <= delta {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for i in 0..estimate.len() - delta {
+        let e_rel = estimate[i].inverse_rigid().mul_mat(&estimate[i + delta]);
+        let g_rel = ground_truth[i]
+            .inverse_rigid()
+            .mul_mat(&ground_truth[i + delta]);
+        let err = g_rel.inverse_rigid().mul_mat(&e_rel);
+        let d = err.translation().norm();
+        sum += d * d;
+        n += 1;
+    }
+    (sum / n as f64).sqrt()
+}
+
+/// Speedup helpers for Table IV.
+pub fn speedup(cpu_ms: f64, accel_ms: f64) -> f64 {
+    cpu_ms / accel_ms
+}
+
+/// Runtime-weighted average speedup across sequences — the abstract's
+/// "runtime-weighted average of 15.95×": total CPU time / total
+/// accelerated time (so long sequences weigh more).
+pub fn runtime_weighted_speedup(cpu_ms: &[f64], accel_ms: &[f64]) -> f64 {
+    assert_eq!(cpu_ms.len(), accel_ms.len());
+    let num: f64 = cpu_ms.iter().sum();
+    let den: f64 = accel_ms.iter().sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Mat3, Vec3};
+
+    #[test]
+    fn timing_stats_basic() {
+        let mut t = TimingStats::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 10.0] {
+            t.record_ms(ms);
+        }
+        assert_eq!(t.count(), 5);
+        assert!((t.mean_ms() - 4.0).abs() < 1e-12);
+        assert_eq!(t.min_ms(), 1.0);
+        assert_eq!(t.max_ms(), 10.0);
+        assert_eq!(t.percentile_ms(50.0), 3.0);
+        assert_eq!(t.percentile_ms(100.0), 10.0);
+        assert!((t.total_ms() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timing_stats_empty() {
+        let t = TimingStats::new();
+        assert_eq!(t.mean_ms(), 0.0);
+        assert_eq!(t.percentile_ms(99.0), 0.0);
+    }
+
+    #[test]
+    fn ate_zero_for_identical() {
+        let traj: Vec<Mat4> = (0..10)
+            .map(|i| Mat4::from_rt(Mat3::rot_z(0.01 * i as f64), Vec3::new(i as f64, 0.0, 0.0)))
+            .collect();
+        assert_eq!(absolute_trajectory_error(&traj, &traj), 0.0);
+        assert_eq!(relative_pose_error(&traj, &traj, 1), 0.0);
+    }
+
+    #[test]
+    fn ate_constant_offset() {
+        let gt: Vec<Mat4> = (0..5)
+            .map(|i| Mat4::from_rt(Mat3::IDENTITY, Vec3::new(i as f64, 0.0, 0.0)))
+            .collect();
+        let est: Vec<Mat4> = gt
+            .iter()
+            .map(|t| Mat4::from_rt(Mat3::IDENTITY, t.translation() + Vec3::new(0.0, 3.0, 4.0)))
+            .collect();
+        // Each pose off by 5 → RMS is 5.
+        assert!((absolute_trajectory_error(&est, &gt) - 5.0).abs() < 1e-12);
+        // But relative error is zero (constant offset cancels).
+        assert!(relative_pose_error(&est, &gt, 1) < 1e-12);
+    }
+
+    #[test]
+    fn rpe_catches_drift() {
+        let gt: Vec<Mat4> = (0..10)
+            .map(|i| Mat4::from_rt(Mat3::IDENTITY, Vec3::new(i as f64, 0.0, 0.0)))
+            .collect();
+        // Estimated trajectory drifts 0.1 m per frame laterally.
+        let est: Vec<Mat4> = (0..10)
+            .map(|i| Mat4::from_rt(Mat3::IDENTITY, Vec3::new(i as f64, 0.1 * i as f64, 0.0)))
+            .collect();
+        let rpe = relative_pose_error(&est, &gt, 1);
+        assert!((rpe - 0.1).abs() < 1e-9, "rpe={rpe}");
+    }
+
+    #[test]
+    fn weighted_speedup_matches_paper_semantics() {
+        // Two sequences: one long slow, one short fast.
+        let cpu = [1000.0, 100.0];
+        let acc = [100.0, 50.0];
+        let w = runtime_weighted_speedup(&cpu, &acc);
+        assert!((w - 1100.0 / 150.0).abs() < 1e-12);
+        assert_eq!(speedup(100.0, 10.0), 10.0);
+    }
+}

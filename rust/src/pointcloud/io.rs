@@ -1,0 +1,205 @@
+//! Point cloud file I/O.
+//!
+//! * KITTI velodyne `.bin`: little-endian f32 quadruples `x y z
+//!   reflectance` — the format of the odometry benchmark the paper
+//!   evaluates on. We read real KITTI files when present and write the
+//!   same format from the synthetic generator, so the rest of the stack
+//!   cannot tell the difference.
+//! * ASCII PLY export for eyeballing clouds in external viewers.
+
+use super::PointCloud;
+use anyhow::{ensure, Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read a KITTI velodyne `.bin` (x, y, z, reflectance f32 LE records).
+/// Reflectance is discarded; FPPS only registers geometry.
+pub fn read_kitti_bin(path: &Path) -> Result<PointCloud> {
+    let mut file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    ensure!(
+        bytes.len() % 16 == 0,
+        "{}: size {} is not a multiple of 16 (x,y,z,r f32 records)",
+        path.display(),
+        bytes.len()
+    );
+    let n = bytes.len() / 16;
+    let mut xyz = Vec::with_capacity(n * 3);
+    for rec in bytes.chunks_exact(16) {
+        for k in 0..3 {
+            let off = k * 4;
+            xyz.push(f32::from_le_bytes([
+                rec[off],
+                rec[off + 1],
+                rec[off + 2],
+                rec[off + 3],
+            ]));
+        }
+    }
+    Ok(PointCloud { xyz })
+}
+
+/// Write a KITTI velodyne `.bin` with constant reflectance.
+pub fn write_kitti_bin(cloud: &PointCloud, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for p in cloud.iter() {
+        for v in p {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&0.0f32.to_le_bytes())?; // reflectance
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write ASCII PLY (for external viewers; not on any hot path).
+pub fn write_ply(cloud: &PointCloud, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "ply")?;
+    writeln!(w, "format ascii 1.0")?;
+    writeln!(w, "element vertex {}", cloud.len())?;
+    writeln!(w, "property float x")?;
+    writeln!(w, "property float y")?;
+    writeln!(w, "property float z")?;
+    writeln!(w, "end_header")?;
+    for p in cloud.iter() {
+        writeln!(w, "{} {} {}", p[0], p[1], p[2])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read KITTI ground-truth poses (`poses/XX.txt`): one 3×4 row-major
+/// matrix per line, 12 whitespace-separated floats.
+pub fn read_kitti_poses(path: &Path) -> Result<Vec<crate::math::Mat4>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Vec<f64> = line
+            .split_whitespace()
+            .map(|t| t.parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("{}:{}: bad float", path.display(), ln + 1))?;
+        ensure!(
+            vals.len() == 12,
+            "{}:{}: expected 12 values, got {}",
+            path.display(),
+            ln + 1,
+            vals.len()
+        );
+        let mut m = [[0.0f64; 4]; 4];
+        for i in 0..3 {
+            for j in 0..4 {
+                m[i][j] = vals[i * 4 + j];
+            }
+        }
+        m[3][3] = 1.0;
+        out.push(crate::math::Mat4 { m });
+    }
+    Ok(out)
+}
+
+/// Write poses in the KITTI ground-truth format.
+pub fn write_kitti_poses(poses: &[crate::math::Mat4], path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for t in poses {
+        let mut fields = Vec::with_capacity(12);
+        for i in 0..3 {
+            for j in 0..4 {
+                fields.push(format!("{:e}", t.m[i][j]));
+            }
+        }
+        writeln!(w, "{}", fields.join(" "))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Mat3, Mat4, Vec3};
+    use crate::rng::Pcg32;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fpps_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn kitti_bin_roundtrip() {
+        let mut rng = Pcg32::new(1);
+        let mut c = PointCloud::new();
+        for _ in 0..257 {
+            c.push([rng.normal(), rng.normal(), rng.normal()]);
+        }
+        let path = tmpdir().join("cloud.bin");
+        write_kitti_bin(&c, &path).unwrap();
+        let back = read_kitti_bin(&path).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn kitti_bin_rejects_bad_size() {
+        let path = tmpdir().join("bad.bin");
+        std::fs::write(&path, [0u8; 15]).unwrap();
+        assert!(read_kitti_bin(&path).is_err());
+    }
+
+    #[test]
+    fn poses_roundtrip() {
+        let poses: Vec<Mat4> = (0..10)
+            .map(|i| {
+                Mat4::from_rt(
+                    Mat3::rot_z(i as f64 * 0.1),
+                    Vec3::new(i as f64, -0.5 * i as f64, 0.01),
+                )
+            })
+            .collect();
+        let path = tmpdir().join("poses.txt");
+        write_kitti_poses(&poses, &path).unwrap();
+        let back = read_kitti_poses(&path).unwrap();
+        assert_eq!(back.len(), poses.len());
+        for (a, b) in poses.iter().zip(back.iter()) {
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert!((a.m[i][j] - b.m[i][j]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poses_reject_malformed() {
+        let path = tmpdir().join("bad_poses.txt");
+        std::fs::write(&path, "1 2 3\n").unwrap();
+        assert!(read_kitti_poses(&path).is_err());
+        std::fs::write(&path, "a b c d e f g h i j k l\n").unwrap();
+        assert!(read_kitti_poses(&path).is_err());
+    }
+
+    #[test]
+    fn ply_header_and_vertex_count() {
+        let c = PointCloud::from_points(&[[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]]);
+        let path = tmpdir().join("cloud.ply");
+        write_ply(&c, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("ply\n"));
+        assert!(text.contains("element vertex 2"));
+        assert_eq!(text.lines().count(), 7 + 2);
+    }
+}

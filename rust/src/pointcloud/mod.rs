@@ -1,0 +1,338 @@
+//! Point cloud container and operations.
+//!
+//! Clouds are stored SoA-flat (`xyz: Vec<f32>` of length 3·n, row-major
+//! per point) — the exact wire layout both the device kernel and the
+//! KITTI `.bin` format use, so uploads and file I/O are memcpy-shaped.
+
+pub mod io;
+
+use crate::math::{Mat4, Vec3};
+use crate::rng::Pcg32;
+
+/// A 3D point cloud (f32, SoA-flat).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PointCloud {
+    /// Flat `[x0, y0, z0, x1, y1, z1, …]`, length `3 * len()`.
+    pub xyz: Vec<f32>,
+}
+
+impl PointCloud {
+    pub fn new() -> Self {
+        Self { xyz: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            xyz: Vec::with_capacity(3 * n),
+        }
+    }
+
+    /// Build from a flat xyz buffer (must be a multiple of 3 long).
+    pub fn from_xyz(xyz: Vec<f32>) -> Self {
+        assert!(xyz.len() % 3 == 0, "xyz length {} not divisible by 3", xyz.len());
+        Self { xyz }
+    }
+
+    pub fn from_points(pts: &[[f32; 3]]) -> Self {
+        let mut xyz = Vec::with_capacity(pts.len() * 3);
+        for p in pts {
+            xyz.extend_from_slice(p);
+        }
+        Self { xyz }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.xyz.len() / 3
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.xyz.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> [f32; 3] {
+        [self.xyz[3 * i], self.xyz[3 * i + 1], self.xyz[3 * i + 2]]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, p: [f32; 3]) {
+        self.xyz[3 * i] = p[0];
+        self.xyz[3 * i + 1] = p[1];
+        self.xyz[3 * i + 2] = p[2];
+    }
+
+    pub fn push(&mut self, p: [f32; 3]) {
+        self.xyz.extend_from_slice(&p);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = [f32; 3]> + '_ {
+        self.xyz.chunks_exact(3).map(|c| [c[0], c[1], c[2]])
+    }
+
+    /// Apply a rigid transform, returning a new cloud (f32 math — this is
+    /// what the device's point cloud transformer does).
+    pub fn transformed(&self, t: &Mat4) -> PointCloud {
+        let m = t.to_f32_row_major();
+        let mut out = Vec::with_capacity(self.xyz.len());
+        for p in self.iter() {
+            out.push(m[0] * p[0] + m[1] * p[1] + m[2] * p[2] + m[3]);
+            out.push(m[4] * p[0] + m[5] * p[1] + m[6] * p[2] + m[7]);
+            out.push(m[8] * p[0] + m[9] * p[1] + m[10] * p[2] + m[11]);
+        }
+        PointCloud { xyz: out }
+    }
+
+    /// In-place rigid transform.
+    pub fn transform_in_place(&mut self, t: &Mat4) {
+        let m = t.to_f32_row_major();
+        for c in self.xyz.chunks_exact_mut(3) {
+            let (x, y, z) = (c[0], c[1], c[2]);
+            c[0] = m[0] * x + m[1] * y + m[2] * z + m[3];
+            c[1] = m[4] * x + m[5] * y + m[6] * z + m[7];
+            c[2] = m[8] * x + m[9] * y + m[10] * z + m[11];
+        }
+    }
+
+    pub fn centroid(&self) -> Vec3 {
+        let mut s = Vec3::ZERO;
+        for p in self.iter() {
+            s = s + Vec3::from_f32(p);
+        }
+        if self.is_empty() {
+            s
+        } else {
+            s * (1.0 / self.len() as f64)
+        }
+    }
+
+    /// Axis-aligned bounds (min, max); `None` when empty.
+    pub fn bounds(&self) -> Option<([f32; 3], [f32; 3])> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut lo = self.get(0);
+        let mut hi = lo;
+        for p in self.iter() {
+            for k in 0..3 {
+                lo[k] = lo[k].min(p[k]);
+                hi[k] = hi[k].max(p[k]);
+            }
+        }
+        Some((lo, hi))
+    }
+
+    /// Random subsample of exactly `k` points (the paper samples 4096
+    /// source points per frame). If `k >= len()`, returns a clone.
+    pub fn random_sample(&self, k: usize, rng: &mut Pcg32) -> PointCloud {
+        if k >= self.len() {
+            return self.clone();
+        }
+        let idx = rng.sample_indices(self.len(), k);
+        let mut out = PointCloud::with_capacity(k);
+        for &i in &idx {
+            out.push(self.get(i as usize));
+        }
+        out
+    }
+
+    /// Voxel-grid downsample: one representative (centroid) per occupied
+    /// voxel of size `leaf` — PCL's `VoxelGrid` filter, used by mapping
+    /// pipelines to control target cloud density.
+    pub fn voxel_downsample(&self, leaf: f32) -> PointCloud {
+        assert!(leaf > 0.0);
+        use std::collections::HashMap;
+        let inv = 1.0 / leaf;
+        let mut cells: HashMap<(i32, i32, i32), ([f64; 3], u32)> = HashMap::new();
+        for p in self.iter() {
+            let key = (
+                (p[0] * inv).floor() as i32,
+                (p[1] * inv).floor() as i32,
+                (p[2] * inv).floor() as i32,
+            );
+            let e = cells.entry(key).or_insert(([0.0; 3], 0));
+            for k in 0..3 {
+                e.0[k] += p[k] as f64;
+            }
+            e.1 += 1;
+        }
+        let mut keys: Vec<_> = cells.keys().copied().collect();
+        keys.sort_unstable(); // deterministic output order
+        let mut out = PointCloud::with_capacity(keys.len());
+        for k in keys {
+            let (s, n) = cells[&k];
+            let inv_n = 1.0 / n as f64;
+            out.push([
+                (s[0] * inv_n) as f32,
+                (s[1] * inv_n) as f32,
+                (s[2] * inv_n) as f32,
+            ]);
+        }
+        out
+    }
+
+    /// Append gaussian sensor noise (σ per axis).
+    pub fn add_noise(&mut self, sigma: f32, rng: &mut Pcg32) {
+        for v in self.xyz.iter_mut() {
+            *v += rng.normal() * sigma;
+        }
+    }
+
+    /// Root-mean-square distance between corresponding points of two
+    /// equally-sized clouds (the paper's registration RMSE metric).
+    pub fn rmse_to(&self, other: &PointCloud) -> f64 {
+        assert_eq!(self.len(), other.len(), "rmse over unequal clouds");
+        if self.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0.0f64;
+        for (p, q) in self.iter().zip(other.iter()) {
+            let dx = (p[0] - q[0]) as f64;
+            let dy = (p[1] - q[1]) as f64;
+            let dz = (p[2] - q[2]) as f64;
+            s += dx * dx + dy * dy + dz * dz;
+        }
+        (s / self.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Mat3, Mat4, Vec3};
+    use crate::prop::forall;
+    use crate::rng::Pcg32;
+
+    fn cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let mut c = PointCloud::with_capacity(n);
+        for _ in 0..n {
+            c.push([
+                rng.range(-10.0, 10.0),
+                rng.range(-10.0, 10.0),
+                rng.range(-2.0, 2.0),
+            ]);
+        }
+        c
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let mut c = PointCloud::new();
+        assert!(c.is_empty());
+        c.push([1.0, 2.0, 3.0]);
+        c.push([4.0, 5.0, 6.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1), [4.0, 5.0, 6.0]);
+        c.set(0, [7.0, 8.0, 9.0]);
+        assert_eq!(c.get(0), [7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by 3")]
+    fn from_xyz_validates_length() {
+        let _ = PointCloud::from_xyz(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn transform_roundtrip() {
+        forall(50, |g| {
+            let c = cloud(g.usize_range(1, 200), g.case);
+            let t = Mat4::from_rt(g.rotation(3.0), Vec3::from_f32(g.point(5.0)));
+            let back = c.transformed(&t).transformed(&t.inverse_rigid());
+            for (p, q) in c.iter().zip(back.iter()) {
+                for k in 0..3 {
+                    assert!((p[k] - q[k]).abs() < 1e-3, "case {}", g.case);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn transform_in_place_matches_transformed() {
+        let c = cloud(100, 3);
+        let t = Mat4::from_rt(Mat3::rot_z(0.4), Vec3::new(1.0, -2.0, 0.5));
+        let a = c.transformed(&t);
+        let mut b = c.clone();
+        b.transform_in_place(&t);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn centroid_of_symmetric_cloud_is_origin() {
+        let c = PointCloud::from_points(&[
+            [1.0, 0.0, 0.0],
+            [-1.0, 0.0, 0.0],
+            [0.0, 2.0, 0.0],
+            [0.0, -2.0, 0.0],
+        ]);
+        let ctr = c.centroid();
+        assert!(ctr.norm() < 1e-9);
+    }
+
+    #[test]
+    fn bounds_cover_all_points() {
+        let c = cloud(500, 9);
+        let (lo, hi) = c.bounds().unwrap();
+        for p in c.iter() {
+            for k in 0..3 {
+                assert!(p[k] >= lo[k] && p[k] <= hi[k]);
+            }
+        }
+        assert!(PointCloud::new().bounds().is_none());
+    }
+
+    #[test]
+    fn random_sample_size_and_membership() {
+        let c = cloud(1000, 5);
+        let mut rng = Pcg32::new(77);
+        let s = c.random_sample(128, &mut rng);
+        assert_eq!(s.len(), 128);
+        // Every sampled point exists in the source.
+        let set: std::collections::HashSet<[u32; 3]> = c
+            .iter()
+            .map(|p| [p[0].to_bits(), p[1].to_bits(), p[2].to_bits()])
+            .collect();
+        for p in s.iter() {
+            assert!(set.contains(&[p[0].to_bits(), p[1].to_bits(), p[2].to_bits()]));
+        }
+        // k >= n clones.
+        assert_eq!(c.random_sample(2000, &mut rng).len(), 1000);
+    }
+
+    #[test]
+    fn voxel_downsample_reduces_and_bounds_preserved() {
+        let c = cloud(2000, 11);
+        let d = c.voxel_downsample(1.0);
+        assert!(d.len() < c.len());
+        assert!(!d.is_empty());
+        let (lo, hi) = c.bounds().unwrap();
+        for p in d.iter() {
+            for k in 0..3 {
+                // Centroids stay within the original bounds.
+                assert!(p[k] >= lo[k] - 1e-4 && p[k] <= hi[k] + 1e-4);
+            }
+        }
+        // Coarser leaf → fewer points.
+        assert!(c.voxel_downsample(4.0).len() <= d.len());
+    }
+
+    #[test]
+    fn voxel_downsample_deterministic() {
+        let c = cloud(500, 13);
+        assert_eq!(c.voxel_downsample(0.7), c.voxel_downsample(0.7));
+    }
+
+    #[test]
+    fn rmse_zero_on_identical() {
+        let c = cloud(64, 17);
+        assert_eq!(c.rmse_to(&c), 0.0);
+        let mut d = c.clone();
+        for v in d.xyz.iter_mut() {
+            *v += 1.0;
+        }
+        // Uniform +1 shift in 3 axes → rmse = sqrt(3).
+        assert!((c.rmse_to(&d) - 3f64.sqrt()).abs() < 1e-5);
+    }
+}

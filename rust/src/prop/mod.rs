@@ -1,0 +1,133 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available offline, so this module provides the small
+//! subset the test suite needs: seeded case generation with failure
+//! reporting. There is deliberately no shrinking — cases carry their seed,
+//! so a failure is replayed exactly by running the test again (the seed
+//! is printed and stable).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this image)
+//! use fpps::prop::{forall, Gen};
+//! forall(100, |g: &mut Gen| {
+//!     let x = g.f32_range(-10.0, 10.0);
+//!     assert!((x.abs()).sqrt().powi(2) - x.abs() < 1e-3);
+//! });
+//! ```
+
+use crate::rng::Pcg32;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg32,
+    /// Case index, exposed so properties can vary structure per case.
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + self.rng.below((hi_incl - lo + 1) as u32) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// A normally-distributed 3-vector (cloud point around origin).
+    pub fn point(&mut self, scale: f32) -> [f32; 3] {
+        [
+            self.rng.normal() * scale,
+            self.rng.normal() * scale,
+            self.rng.normal() * scale,
+        ]
+    }
+
+    /// `n` points with the given scale.
+    pub fn points(&mut self, n: usize, scale: f32) -> Vec<[f32; 3]> {
+        (0..n).map(|_| self.point(scale)).collect()
+    }
+
+    /// Random rotation matrix (uniform axis, bounded angle in radians).
+    pub fn rotation(&mut self, max_angle: f32) -> crate::math::Mat3 {
+        let axis = self.rng.unit_vector();
+        let angle = self.rng.range(-max_angle, max_angle);
+        crate::math::Mat3::axis_angle(axis, angle)
+    }
+}
+
+/// Environment-tunable default case count: `FPPS_PROP_CASES`.
+pub fn default_cases(fallback: u32) -> u32 {
+    std::env::var("FPPS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(fallback)
+}
+
+/// Run `property` over `cases` seeded generator states. Panics (with the
+/// case seed in the message) on the first failing case.
+pub fn forall(cases: u32, mut property: impl FnMut(&mut Gen)) {
+    forall_seeded(0xF995_5EED, cases, &mut property);
+}
+
+/// Like [`forall`] but with an explicit base seed (printed on failure).
+pub fn forall_seeded(seed: u64, cases: u32, property: &mut dyn FnMut(&mut Gen)) {
+    for case in 0..cases as u64 {
+        let mut g = Gen {
+            rng: Pcg32::substream(seed, case),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn forall_reports_case_index() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, |g| {
+                assert!(g.case < 10, "boom at {}", g.case);
+            })
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("case 10"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall(100, |g| {
+            let x = g.f32_range(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+            let u = g.usize_range(5, 9);
+            assert!((5..=9).contains(&u));
+        });
+    }
+}

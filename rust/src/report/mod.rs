@@ -1,0 +1,146 @@
+//! ASCII table rendering for the benchmark harnesses — every bench
+//! prints its table in the same row/column layout as the paper so
+//! paper-vs-measured comparison in EXPERIMENTS.md is a visual diff.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert!(
+            self.header.is_empty() || cells.len() == self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                s.push_str(&format!(" {c:<w$} |", w = w));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers used across benches.
+pub fn ms(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn times(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+pub fn meters(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("TABLE X: demo").header(&["Sequence", "CPU (ms)", "Accel"]);
+        t.row(vec!["00".into(), "3714.5".into(), "22.84x".into()]);
+        t.row(vec!["01".into(), "8640.1".into(), "16.07x".into()]);
+        let s = t.render();
+        assert!(s.contains("TABLE X: demo"));
+        assert!(s.contains("| Sequence | CPU (ms) | Accel  |"));
+        assert!(s.contains("| 00       | 3714.5   | 22.84x |"));
+        // All data lines equal width.
+        let widths: std::collections::HashSet<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.len())
+            .collect();
+        assert_eq!(widths.len(), 1, "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("t").header(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(ms(3714.53), "3714.5");
+        assert_eq!(times(22.838), "22.84x");
+        assert_eq!(meters(0.1984), "0.198");
+        assert_eq!(pct(0.7194), "71.94%");
+    }
+}

@@ -1,0 +1,462 @@
+//! PJRT runtime — the host↔device interface of Fig. 2.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` (HLO
+//! *text*; see /opt/xla-example/README.md for why not serialized protos),
+//! compiles them once on the PJRT CPU client, and executes the
+//! `icp_step` computation from the ICP hot loop. This is the software
+//! stand-in for the Alveo's xclbin load + kernel enqueue: python never
+//! runs at request time, exactly as the FPGA bitstream is synthesised
+//! offline.
+//!
+//! Artifact layout (written by `make artifacts`):
+//! ```text
+//! artifacts/
+//!   manifest.txt                 # key=value (config::KvConfig)
+//!   icp_step_<N>x<M>.hlo.txt     # one per shape variant
+//! ```
+//! Manifest keys per variant `v`:
+//! `variant.<v>.n`, `variant.<v>.m`, `variant.<v>.file`,
+//! `variant.<v>.block_n`, `variant.<v>.block_m`.
+
+use crate::config::KvConfig;
+use crate::math::{Mat3, Mat4, Vec3};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// One fixed-shape compiled variant of the device program.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    /// Source capacity (points).
+    pub n: usize,
+    /// Target capacity (points).
+    pub m: usize,
+    /// Kernel block sizes (must mirror nn_search.py for NativeSim parity).
+    pub block_n: usize,
+    pub block_m: usize,
+    pub file: PathBuf,
+}
+
+/// The accumulators returned by one device ICP step — the output of the
+/// paper's result accumulator block, consumed by the host SVD.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepAccumulators {
+    /// Number of accepted correspondences (Σw).
+    pub count: f64,
+    /// Σw·p (transformed source points).
+    pub sum_p: Vec3,
+    /// Σw·q (matched target points).
+    pub sum_q: Vec3,
+    /// Σw·p·qᵀ.
+    pub sum_pq: Mat3,
+    /// Σw·‖p−q‖².
+    pub sum_sq_dist: f64,
+}
+
+impl StepAccumulators {
+    /// Parse the 17-float wire layout the artifact returns:
+    /// [count, sum_p(3), sum_q(3), sum_pq(9 row-major), sum_sq_dist].
+    pub fn from_wire(vals: &[f32]) -> Result<Self> {
+        if vals.len() != 17 {
+            bail!("expected 17 accumulator floats, got {}", vals.len());
+        }
+        let mut sum_pq = Mat3::zero();
+        for i in 0..3 {
+            for j in 0..3 {
+                sum_pq.m[i][j] = vals[7 + i * 3 + j] as f64;
+            }
+        }
+        Ok(Self {
+            count: vals[0] as f64,
+            sum_p: Vec3::new(vals[1] as f64, vals[2] as f64, vals[3] as f64),
+            sum_q: Vec3::new(vals[4] as f64, vals[5] as f64, vals[6] as f64),
+            sum_pq,
+            sum_sq_dist: vals[16] as f64,
+        })
+    }
+
+    /// RMS correspondence distance (Table III metric, per iteration).
+    pub fn rmse(&self) -> f64 {
+        if self.count <= 0.0 {
+            f64::NAN
+        } else {
+            (self.sum_sq_dist / self.count).sqrt()
+        }
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let kv = KvConfig::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("artifact manifest in {}", dir.display()))?;
+        Self::from_kv(&kv, dir)
+    }
+
+    pub fn from_kv(kv: &KvConfig, dir: &Path) -> Result<Self> {
+        let mut names: Vec<String> = Vec::new();
+        for k in kv.keys() {
+            if let Some(rest) = k.strip_prefix("variant.") {
+                if let Some(name) = rest.strip_suffix(".n") {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        names.sort();
+        if names.is_empty() {
+            bail!("manifest has no variants");
+        }
+        let mut variants = Vec::new();
+        for name in names {
+            let get = |suffix: &str| -> Result<&str> {
+                kv.require(&format!("variant.{name}.{suffix}"))
+            };
+            let variant = VariantSpec {
+                n: get("n")?.parse().context("variant n")?,
+                m: get("m")?.parse().context("variant m")?,
+                block_n: get("block_n")?.parse().context("variant block_n")?,
+                block_m: get("block_m")?.parse().context("variant block_m")?,
+                file: dir.join(get("file")?),
+                name: name.clone(),
+            };
+            if variant.n % variant.block_n != 0 || variant.m % variant.block_m != 0 {
+                bail!("variant {name}: shape not divisible by blocks");
+            }
+            variants.push(variant);
+        }
+        // Smallest capacity first → selection picks the cheapest fit.
+        variants.sort_by_key(|v| (v.n as u64) * (v.m as u64));
+        Ok(Self { variants })
+    }
+
+    /// Smallest variant that fits (n_source, n_target).
+    pub fn select(&self, n_source: usize, n_target: usize) -> Option<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.n >= n_source && v.m >= n_target)
+    }
+}
+
+/// Execution timing of one device step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub upload: Duration,
+    pub execute: Duration,
+}
+
+/// Cloud buffers resident on the device — the paper's HBM-uploaded
+/// point cloud data, written once per alignment and reused across all
+/// ICP iterations (only the 4×4 transform and the scalar threshold
+/// change per iteration).
+pub struct PreparedClouds {
+    vi: usize,
+    src: xla::PjRtBuffer,
+    tgt: xla::PjRtBuffer,
+    src_mask: xla::PjRtBuffer,
+    tgt_mask: xla::PjRtBuffer,
+}
+
+impl PreparedClouds {
+    pub fn variant_index(&self) -> usize {
+        self.vi
+    }
+}
+
+/// PJRT engine: client + per-variant compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: Vec<Option<xla::PjRtLoadedExecutable>>,
+    /// Cumulative executions (metrics).
+    pub executions: u64,
+}
+
+impl Engine {
+    /// `hardwareInitialize()` of Table I: create the client and load the
+    /// "bitstream" (compile all HLO variants eagerly so the request path
+    /// never compiles).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+        let mut executables = Vec::new();
+        for v in &manifest.variants {
+            let proto = xla::HloModuleProto::from_text_file(
+                v.file
+                    .to_str()
+                    .with_context(|| format!("non-utf8 path {:?}", v.file))?,
+            )
+            .map_err(xla_err)
+            .with_context(|| format!("load HLO for variant {}", v.name))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(xla_err)
+                .with_context(|| format!("compile variant {}", v.name))?;
+            executables.push(Some(exe));
+        }
+        Ok(Self {
+            client,
+            manifest,
+            executables,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one ICP step on variant `vi`.
+    ///
+    /// `src`/`tgt` must already be padded to the variant capacities and
+    /// the masks sized accordingly (see `nn::pad_cloud`). `transform` is
+    /// applied to the source *inside* the device program (the point
+    /// cloud transformer stage).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_step(
+        &mut self,
+        vi: usize,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+        transform: &Mat4,
+        max_dist_sq: f32,
+    ) -> Result<(StepAccumulators, StepTiming)> {
+        let v = &self.manifest.variants[vi];
+        if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
+            bail!(
+                "variant {} expects {}x{} points, got {}x{}",
+                v.name,
+                v.n,
+                v.m,
+                src.len() / 3,
+                tgt.len() / 3
+            );
+        }
+        if src_mask.len() != v.n || tgt_mask.len() != v.m {
+            bail!("mask sizes do not match variant {}", v.name);
+        }
+        let t0 = Instant::now();
+        let t_mat = transform.to_f32_row_major();
+        let lits = vec![
+            xla::Literal::vec1(src)
+                .reshape(&[v.n as i64, 3])
+                .map_err(xla_err)?,
+            xla::Literal::vec1(tgt)
+                .reshape(&[v.m as i64, 3])
+                .map_err(xla_err)?,
+            xla::Literal::vec1(src_mask),
+            xla::Literal::vec1(tgt_mask),
+            xla::Literal::vec1(&t_mat).reshape(&[4, 4]).map_err(xla_err)?,
+            xla::Literal::scalar(max_dist_sq),
+        ];
+        let upload = t0.elapsed();
+
+        let t1 = Instant::now();
+        let exe = self.executables[vi]
+            .as_ref()
+            .expect("variant compiled at load");
+        let result = exe.execute::<xla::Literal>(&lits).map_err(xla_err)?[0][0]
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        let execute = t1.elapsed();
+        self.executions += 1;
+
+        let outs = result.to_tuple().map_err(xla_err)?;
+        let mut wire = Vec::with_capacity(17);
+        for o in &outs {
+            wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
+        }
+        let acc = StepAccumulators::from_wire(&wire)?;
+        Ok((acc, StepTiming { upload, execute }))
+    }
+}
+
+impl Engine {
+    /// Upload the padded clouds + masks to device buffers once
+    /// (the host→HBM DMA of Fig. 2). Returns a handle to reuse across
+    /// iterations via [`Engine::execute_prepared`].
+    pub fn prepare(
+        &self,
+        vi: usize,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<PreparedClouds> {
+        let v = &self.manifest.variants[vi];
+        if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
+            bail!(
+                "variant {} expects {}x{} points, got {}x{}",
+                v.name,
+                v.n,
+                v.m,
+                src.len() / 3,
+                tgt.len() / 3
+            );
+        }
+        if src_mask.len() != v.n || tgt_mask.len() != v.m {
+            bail!("mask sizes do not match variant {}", v.name);
+        }
+        Ok(PreparedClouds {
+            vi,
+            src: self
+                .client
+                .buffer_from_host_buffer(src, &[v.n, 3], None)
+                .map_err(xla_err)?,
+            tgt: self
+                .client
+                .buffer_from_host_buffer(tgt, &[v.m, 3], None)
+                .map_err(xla_err)?,
+            src_mask: self
+                .client
+                .buffer_from_host_buffer(src_mask, &[v.n], None)
+                .map_err(xla_err)?,
+            tgt_mask: self
+                .client
+                .buffer_from_host_buffer(tgt_mask, &[v.m], None)
+                .map_err(xla_err)?,
+        })
+    }
+
+    /// One ICP iteration over device-resident clouds: uploads only the
+    /// 4×4 transform + threshold, executes buffer-to-buffer.
+    pub fn execute_prepared(
+        &mut self,
+        prep: &PreparedClouds,
+        transform: &Mat4,
+        max_dist_sq: f32,
+    ) -> Result<(StepAccumulators, StepTiming)> {
+        let t0 = Instant::now();
+        let t_mat = transform.to_f32_row_major();
+        let t_buf = self
+            .client
+            .buffer_from_host_buffer(&t_mat, &[4, 4], None)
+            .map_err(xla_err)?;
+        let d_buf = self
+            .client
+            .buffer_from_host_buffer(&[max_dist_sq], &[], None)
+            .map_err(xla_err)?;
+        let upload = t0.elapsed();
+
+        let t1 = Instant::now();
+        let exe = self.executables[prep.vi]
+            .as_ref()
+            .expect("variant compiled at load");
+        let args = [
+            &prep.src,
+            &prep.tgt,
+            &prep.src_mask,
+            &prep.tgt_mask,
+            &t_buf,
+            &d_buf,
+        ];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(xla_err)?[0][0]
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        let execute = t1.elapsed();
+        self.executions += 1;
+
+        let outs = result.to_tuple().map_err(xla_err)?;
+        let mut wire = Vec::with_capacity(17);
+        for o in &outs {
+            wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
+        }
+        let acc = StepAccumulators::from_wire(&wire)?;
+        Ok((acc, StepTiming { upload, execute }))
+    }
+}
+
+/// The `xla` crate's error type does not implement `std::error::Error`
+/// for anyhow interop in all versions; stringify defensively.
+fn xla_err(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_kv(entries: &[(&str, usize, usize, usize, usize)]) -> KvConfig {
+        let mut kv = KvConfig::default();
+        for (name, n, m, bn, bm) in entries {
+            kv.set(&format!("variant.{name}.n"), n);
+            kv.set(&format!("variant.{name}.m"), m);
+            kv.set(&format!("variant.{name}.block_n"), bn);
+            kv.set(&format!("variant.{name}.block_m"), bm);
+            kv.set(&format!("variant.{name}.file"), format!("{name}.hlo.txt"));
+        }
+        kv
+    }
+
+    #[test]
+    fn manifest_parse_and_selection() {
+        let kv = manifest_kv(&[
+            ("icp_step_4096x16384", 4096, 16384, 128, 512),
+            ("icp_step_256x1024", 256, 1024, 64, 256),
+        ]);
+        let m = Manifest::from_kv(&kv, Path::new("/tmp/a")).unwrap();
+        // Sorted smallest-first.
+        assert_eq!(m.variants[0].n, 256);
+        // Selection takes the smallest fit.
+        assert_eq!(m.select(100, 800).unwrap().n, 256);
+        assert_eq!(m.select(300, 800).unwrap().n, 4096);
+        assert_eq!(m.select(4096, 16384).unwrap().m, 16384);
+        assert!(m.select(5000, 1).is_none());
+        // File paths are joined onto the artifact dir.
+        assert!(m.variants[0]
+            .file
+            .to_str()
+            .unwrap()
+            .starts_with("/tmp/a/"));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_blocks() {
+        let kv = manifest_kv(&[("v", 100, 1000, 64, 256)]); // 100 % 64 != 0
+        assert!(Manifest::from_kv(&kv, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_empty() {
+        let kv = KvConfig::default();
+        assert!(Manifest::from_kv(&kv, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn accumulator_wire_roundtrip() {
+        let mut wire = vec![0f32; 17];
+        wire[0] = 42.0;
+        wire[1] = 1.0;
+        wire[4] = 2.0;
+        wire[7] = 3.0; // pq[0][0]
+        wire[11] = 5.0; // pq[1][1]
+        wire[16] = 168.0;
+        let acc = StepAccumulators::from_wire(&wire).unwrap();
+        assert_eq!(acc.count, 42.0);
+        assert_eq!(acc.sum_p.x, 1.0);
+        assert_eq!(acc.sum_q.x, 2.0);
+        assert_eq!(acc.sum_pq.m[0][0], 3.0);
+        assert_eq!(acc.sum_pq.m[1][1], 5.0);
+        assert_eq!(acc.sum_sq_dist, 168.0);
+        assert!((acc.rmse() - 2.0).abs() < 1e-12);
+        assert!(StepAccumulators::from_wire(&wire[..16]).is_err());
+    }
+
+    #[test]
+    fn rmse_nan_when_no_correspondences() {
+        let acc = StepAccumulators::default();
+        assert!(acc.rmse().is_nan());
+    }
+}
