@@ -13,22 +13,22 @@
 //!   cargo run --release --example odometry -- [--sequence 03] [--frames 8]
 
 use anyhow::Result;
-use fpps::cli::Parser;
+use fpps::cli::{backend_selection, Parser};
 use fpps::coordinator::{run_odometry, PipelineConfig};
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::FppsIcp;
+use fpps::fpps_api::{FppsIcp, KernelBackend};
 use fpps::hwmodel::{latency, AcceleratorConfig};
 use fpps::icp::{IcpParams, SearchStrategy};
 use fpps::math::Mat4;
 use fpps::metrics::{absolute_trajectory_error, TimingStats};
 use fpps::report::Table;
-use std::path::Path;
 
 fn main() -> Result<()> {
     let p = Parser::new("odometry", "end-to-end odometry driver")
         .opt("sequence", "sequence 00..09", Some("03"))
         .opt("frames", "frames to process", Some("8"))
-        .opt("seed", "dataset seed", Some("2026"));
+        .opt("seed", "dataset seed", Some("2026"))
+        .backend_opts();
     let a = p.parse_env(1)?;
     let name = a.get("sequence").unwrap().to_string();
     let frames: usize = a.get_or("frames", 8)?;
@@ -80,14 +80,11 @@ fn main() -> Result<()> {
         prev = Some(cloud);
     }
 
-    // ---------- FPPS hybrid through the AOT artifact ----------
+    // ---------- FPPS hybrid through the selected device backend ----------
     println!("[2/2] FPPS hybrid (4096-pt sample on the device kernel)…");
-    let artifacts = Path::new("artifacts");
-    anyhow::ensure!(
-        artifacts.join("manifest.txt").exists(),
-        "artifacts/ missing — run `make artifacts`"
-    );
-    let mut icp = FppsIcp::hardware_initialize(artifacts)?;
+    let (kind, artifacts) = backend_selection(&a)?;
+    let mut icp = FppsIcp::with_kind(kind, &artifacts)?;
+    println!("        backend: {}", icp.backend().name());
     let fpps_res = run_odometry(&seq, frames, cfg, &mut icp)?;
 
     // ---------- comparison ----------

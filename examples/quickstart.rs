@@ -4,9 +4,10 @@
 //!   cargo run --release --example quickstart
 //!
 //! Loads the AOT artifacts when present (`make artifacts`), otherwise
-//! falls back to the NativeSim device mirror so the example always runs.
+//! falls back to the NativeSim device mirror so the example always runs
+//! (the `Auto` backend kind resolves this at runtime).
 
-use fpps::fpps_api::{FppsIcp, KernelBackend};
+use fpps::fpps_api::{BackendKind, FppsIcp, KernelBackend};
 use fpps::math::{Mat3, Mat4, Vec3};
 use fpps::pointcloud::PointCloud;
 use fpps::rng::Pcg32;
@@ -104,11 +105,5 @@ fn run<B: KernelBackend>(mut icp: FppsIcp<B>) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = Path::new("artifacts");
-    if artifacts.join("manifest.txt").exists() {
-        run(FppsIcp::hardware_initialize(artifacts)?)
-    } else {
-        eprintln!("note: artifacts/ missing, using NativeSim (run `make artifacts`)");
-        run(FppsIcp::native_sim())
-    }
+    run(FppsIcp::with_kind(BackendKind::Auto, Path::new("artifacts"))?)
 }

@@ -1,171 +1,178 @@
-//! Streaming registration service demo — the coordinator as a long-
-//! running system component: a LiDAR source thread produces frames at a
-//! configurable rate, the alignment thread keeps the device busy, and a
-//! stats thread reports throughput / latency percentiles / backpressure,
-//! the way the FPPS host process would run inside a perception stack.
+//! Multi-client registration service demo — the coordinator's lane pool
+//! as a long-running system component: M concurrent client streams
+//! (each a LiDAR source producing frame pairs at its own rate) are
+//! multiplexed over K worker lanes, each lane owning its own backend
+//! instance, the way the FPPS host process would serve several
+//! perception stacks from one shared accelerator.
 //!
-//!   cargo run --release --example registration_server -- [--frames 30]
+//! Reports aggregate throughput, p50/p99 service latency, queue-wait
+//! backpressure, and per-lane / per-stream breakdowns.
+//!
+//!   cargo run --release --example registration_server -- \
+//!       [--streams 4] [--lanes 2] [--frames 10] [--backend native-sim]
 
-use anyhow::Result;
-use fpps::cli::Parser;
-use fpps::coordinator::{fit_to_capacity, preprocess, PipelineConfig};
+use anyhow::{Context, Result};
+use fpps::cli::{backend_selection, Parser};
+use fpps::coordinator::{
+    run_lane_pool, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+};
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::{FppsIcp, KernelBackend};
-use fpps::math::Mat4;
-use fpps::metrics::TimingStats;
-use fpps::pointcloud::PointCloud;
-use std::path::Path;
-use std::sync::mpsc::sync_channel;
-use std::time::{Duration, Instant};
+use fpps::fpps_api::BackendHandle;
+use fpps::report::Table;
 
-struct Request {
-    frame_index: usize,
-    source: PointCloud,
-    target: PointCloud,
-    enqueued: Instant,
-}
+fn main() -> Result<()> {
+    let p = Parser::new("registration_server", "multi-client lane-pool demo")
+        .opt("streams", "concurrent client streams", Some("4"))
+        .opt("frames", "frames per stream", Some("10"))
+        .opt("sample", "source sample size", Some("1024"))
+        .opt("capacity", "target buffer capacity", Some("8192"))
+        .lane_opts("2")
+        .backend_opts();
+    let a = p.parse_env(1)?;
+    let streams: usize = a.get_or("streams", 4)?;
+    let frames: usize = a.get_or("frames", 10)?;
+    let lanes: usize = a.get_or("lanes", 2)?;
+    let queue_depth: usize = a.get_or("queue-depth", 4)?;
+    let sample: usize = a.get_or("sample", 1024)?;
+    let capacity: usize = a.get_or("capacity", 8192)?;
+    let (kind, artifacts) = backend_selection(&a)?;
+    let artifacts = artifacts.as_path();
 
-struct Response {
-    frame_index: usize,
-    transform: Mat4,
-    rmse: f64,
-    queue_wait: Duration,
-    service: Duration,
-}
-
-fn serve<B: KernelBackend>(mut icp: FppsIcp<B>, frames: usize) -> Result<()> {
-    let spec = sequence_specs()[5].clone(); // 05: urban loop
-    let seq = Sequence::synthetic(
-        spec,
-        frames,
-        99,
-        LidarConfig {
-            beams: 48,
-            azimuth_steps: 900,
-            ..Default::default()
-        },
+    // One synthetic sequence per client, cycling through the paper's
+    // sequence characters so the streams are genuinely heterogeneous.
+    let specs = sequence_specs();
+    let sequences: Vec<Sequence> = (0..streams)
+        .map(|s| {
+            Sequence::synthetic(
+                specs[s % specs.len()].clone(),
+                frames,
+                1000 + s as u64,
+                LidarConfig {
+                    beams: 32,
+                    azimuth_steps: 500,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    println!(
+        "serving {streams} client streams x {frames} frames over {lanes} lane(s), \
+         queue depth {queue_depth}"
     );
-    let cfg = PipelineConfig::default();
 
-    // Bounded request queue — depth 2 = device double buffering; the
-    // producer blocks when the device falls behind (backpressure).
-    let (req_tx, req_rx) = sync_channel::<Request>(2);
-    let (rsp_tx, rsp_rx) = sync_channel::<Response>(64);
-
-    let mut wait_stats = TimingStats::new();
-    let mut service_stats = TimingStats::new();
-    let mut pose = Mat4::IDENTITY;
-    let mut prev_rel = Mat4::IDENTITY;
-    let served_t0 = Instant::now();
-    let mut served = 0usize;
-
-    std::thread::scope(|scope| -> Result<()> {
-        // Producer: LiDAR acquisition + preprocessing. Owns the request
-        // sender so the service loop sees a clean hang-up at stream end.
-        let seq = &seq;
-        scope.spawn(move || -> Result<()> {
-            let req_tx = req_tx;
-            let mut prev: Option<PointCloud> = None;
-            for i in 0..seq.len() {
-                let cloud = preprocess(&seq.frame(i)?, &cfg);
-                let mut rng = fpps::rng::Pcg32::substream(cfg.seed, i as u64);
-                let sample = cloud.random_sample(cfg.source_sample, &mut rng);
-                let full = fit_to_capacity(cloud, cfg.target_capacity);
-                if let Some(target) = prev.take() {
-                    req_tx
-                        .send(Request {
-                            frame_index: i,
-                            source: sample,
-                            target,
-                            enqueued: Instant::now(),
-                        })
-                        .ok();
+    // Producer side: one thread per client stream. Acquisition (raycast +
+    // sample + downsample) runs concurrently with alignment on the lanes,
+    // and the bounded queue applies backpressure to fast clients.
+    let sequences_ref = &sequences;
+    let report = run_lane_pool(
+        lanes,
+        queue_depth,
+        LaneIcpConfig::default(),
+        |_lane| BackendHandle::create(kind, artifacts),
+        move |tx| {
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::new();
+                for (stream, seq) in sequences_ref.iter().enumerate() {
+                    let tx = tx.clone();
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        let cfg = PipelineConfig {
+                            source_sample: sample,
+                            target_capacity: capacity,
+                            seed: 7 + stream as u64,
+                            ..Default::default()
+                        };
+                        // Acquisition (raycast + sample + downsample) for
+                        // this stream happens here, concurrent with the
+                        // other streams and with alignment on the lanes.
+                        let jobs = sequence_pair_jobs(seq, frames, stream, &cfg)
+                            .with_context(|| format!("stream {stream} acquisition"))?;
+                        for mut job in jobs {
+                            job.mark_submitted(); // queue wait starts at send
+                            if tx.send(job).is_err() {
+                                return Ok(()); // pool shut down
+                            }
+                        }
+                        Ok(())
+                    }));
                 }
-                prev = Some(full);
-            }
-            Ok(())
-        });
+                drop(tx);
+                for h in handles {
+                    match h.join() {
+                        Ok(r) => r?,
+                        Err(_) => anyhow::bail!("stream producer panicked"),
+                    }
+                }
+                Ok(())
+            })
+        },
+    )?;
 
-        // Service loop: the device-facing worker.
-        while let Ok(req) = req_rx.recv() {
-            let queue_wait = req.enqueued.elapsed();
-            let t0 = Instant::now();
-            icp.set_input_source(req.source);
-            icp.set_input_target(req.target);
-            icp.set_transformation_matrix(prev_rel);
-            let res = icp.align()?;
-            let service = t0.elapsed();
-            prev_rel = if res.has_converged() {
-                res.transformation
-            } else {
-                Mat4::IDENTITY
-            };
-            pose = pose.mul_mat(&res.transformation);
-            served += 1;
-            wait_stats.record(queue_wait);
-            service_stats.record(service);
-            rsp_tx
-                .send(Response {
-                    frame_index: req.frame_index,
-                    transform: res.transformation,
-                    rmse: res.rmse,
-                    queue_wait,
-                    service,
-                })
-                .ok();
-        }
-        Ok(())
-    })?;
-    drop(rsp_tx);
-    let wall = served_t0.elapsed();
-
-    // Drain and print a few responses as a service log.
+    // ---- service log (last few responses) ----
     println!("\nservice log (last 5):");
-    let responses: Vec<Response> = rsp_rx.try_iter().collect();
-    for r in responses.iter().rev().take(5).rev() {
+    for o in report.outcomes.iter().rev().take(5).rev() {
         println!(
-            "  frame {:>3}  rmse {:.3} m  wait {:>6.1} ms  service {:>7.1} ms  |t| {:.2} m",
-            r.frame_index,
-            r.rmse,
-            r.queue_wait.as_secs_f64() * 1e3,
-            r.service.as_secs_f64() * 1e3,
-            r.transform.translation().norm(),
+            "  stream {:>2} job {:>10}  lane {}  rmse {:.3} m  wait {:>6.1} ms  \
+             service {:>7.1} ms  |t| {:.2} m",
+            o.stream,
+            o.id,
+            o.lane,
+            o.rmse,
+            o.queue_wait_ms,
+            o.service_ms,
+            o.transform.translation().norm(),
         );
     }
 
-    println!("\nserver summary ({} backend):", icp.backend().name());
+    // ---- per-lane breakdown (merged into the aggregate below) ----
+    report.lane_table("\nPer-lane breakdown").print();
+
+    // ---- per-stream accounting ----
+    let mut st = Table::new("\nPer-stream results").header(&[
+        "stream", "sequence", "jobs", "mean rmse (m)", "mean service (ms)",
+    ]);
+    for stream in 0..streams {
+        let (mut jobs, mut rmse_sum, mut service_sum) = (0usize, 0.0f64, 0.0f64);
+        for o in report.outcomes.iter().filter(|o| o.stream == stream) {
+            jobs += 1;
+            rmse_sum += o.rmse;
+            service_sum += o.service_ms;
+        }
+        let denom = jobs.max(1) as f64;
+        st.row(vec![
+            stream.to_string(),
+            sequences[stream].spec.name.to_string(),
+            jobs.to_string(),
+            format!("{:.3}", rmse_sum / denom),
+            format!("{:.1}", service_sum / denom),
+        ]);
+    }
+    st.print();
+
+    // ---- aggregate summary ----
+    println!("\nserver summary:");
     println!(
-        "  served {} alignments in {:.1} s  ->  {:.2} frames/s",
-        served,
-        wall.as_secs_f64(),
-        served as f64 / wall.as_secs_f64()
+        "  served {} alignments in {:.1} s  ->  {:.2} jobs/s aggregate",
+        report.outcomes.len(),
+        report.wall_ms / 1e3,
+        report.jobs_per_s()
     );
     println!(
         "  service latency: mean {:.1} ms  p50 {:.1}  p99 {:.1}",
-        service_stats.mean_ms(),
-        service_stats.percentile_ms(50.0),
-        service_stats.percentile_ms(99.0)
+        report.service.mean_ms(),
+        report.service.percentile_ms(50.0),
+        report.service.percentile_ms(99.0)
     );
     println!(
         "  queue wait (backpressure): mean {:.1} ms  max {:.1} ms",
-        wait_stats.mean_ms(),
-        wait_stats.max_ms()
+        report.queue_wait.mean_ms(),
+        report.queue_wait.max_ms()
     );
-    println!("  final pose |t| = {:.2} m", pose.translation().norm());
+    anyhow::ensure!(
+        report.outcomes.len() == streams * frames.saturating_sub(1),
+        "dropped jobs: served {} of {}",
+        report.outcomes.len(),
+        streams * frames.saturating_sub(1)
+    );
     println!("\nregistration_server OK");
     Ok(())
-}
-
-fn main() -> Result<()> {
-    let p = Parser::new("registration_server", "streaming coordinator demo")
-        .opt("frames", "frames to stream", Some("30"));
-    let a = p.parse_env(1)?;
-    let frames: usize = a.get_or("frames", 30)?;
-    let artifacts = Path::new("artifacts");
-    if artifacts.join("manifest.txt").exists() {
-        serve(FppsIcp::hardware_initialize(artifacts)?, frames)
-    } else {
-        eprintln!("note: artifacts/ missing, using NativeSim");
-        serve(FppsIcp::native_sim(), frames)
-    }
 }

@@ -1,0 +1,110 @@
+//! Bench: multi-lane batched registration throughput — 1 lane vs K
+//! lanes over the same seeded frame-pair batch.
+//!
+//! Each lane owns a private NativeSim backend instance, so lanes scale
+//! with cores the way K accelerator queues would: aggregate throughput
+//! rises while per-job latency (and bit-exact transforms — see the
+//! `lane_engine` integration test) stay constant. With ≥ 4 physical
+//! cores the 4-lane row shows ≥ 2× the 1-lane aggregate throughput; on
+//! smaller machines the ratio tracks the core count.
+//!
+//!   cargo bench --bench lane_scaling
+//!   FPPS_BENCH_PAIRS=64 cargo bench --bench lane_scaling   # longer run
+
+use fpps::coordinator::{
+    run_registration_batch, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+    RegistrationJob,
+};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::NativeSimBackend;
+use fpps::report::Table;
+
+fn batch() -> Vec<RegistrationJob> {
+    let pairs: usize = std::env::var("FPPS_BENCH_PAIRS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let spec = sequence_specs()[5].clone(); // 05: urban loop
+    let seq = Sequence::synthetic(
+        spec,
+        pairs + 1,
+        2026,
+        LidarConfig {
+            beams: 32,
+            azimuth_steps: 500,
+            ..Default::default()
+        },
+    );
+    let cfg = PipelineConfig {
+        source_sample: 1024,
+        target_capacity: 8192,
+        ..Default::default()
+    };
+    sequence_pair_jobs(&seq, pairs + 1, 0, &cfg).expect("job generation")
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    let jobs = batch().len();
+    println!(
+        "lane scaling: {jobs} frame pairs, native-sim backend per lane, {cores} cores\n"
+    );
+
+    let mut lane_counts = vec![1usize, 2, 4];
+    if cores > 4 {
+        lane_counts.push(cores);
+    }
+    lane_counts.dedup();
+
+    let mut t = Table::new("Aggregate throughput vs lane count").header(&[
+        "lanes",
+        "wall (ms)",
+        "jobs/s",
+        "speedup vs 1 lane",
+        "p50 (ms)",
+        "p99 (ms)",
+        "queue wait mean (ms)",
+    ]);
+    let mut base_jps = 0.0f64;
+    let mut four_lane_ratio = None;
+    for &lanes in &lane_counts {
+        let report = run_registration_batch(
+            batch(),
+            lanes,
+            2 * lanes,
+            LaneIcpConfig::default(),
+            |_| Ok(NativeSimBackend::new()),
+        )
+        .expect("lane pool run");
+        assert_eq!(report.outcomes.len(), jobs, "work conservation");
+        let jps = report.jobs_per_s();
+        if lanes == 1 {
+            base_jps = jps;
+        }
+        let ratio = if base_jps > 0.0 { jps / base_jps } else { 0.0 };
+        if lanes == 4 {
+            four_lane_ratio = Some(ratio);
+        }
+        t.row(vec![
+            lanes.to_string(),
+            format!("{:.0}", report.wall_ms),
+            format!("{jps:.2}"),
+            format!("{ratio:.2}x"),
+            format!("{:.1}", report.service.percentile_ms(50.0)),
+            format!("{:.1}", report.service.percentile_ms(99.0)),
+            format!("{:.1}", report.queue_wait.mean_ms()),
+        ]);
+        eprintln!("  {lanes} lane(s) done");
+    }
+    t.print();
+
+    if let Some(r) = four_lane_ratio {
+        println!(
+            "\n4-lane vs 1-lane aggregate throughput: {r:.2}x \
+             (target ≥ 2x with ≥ 4 cores; this host has {cores})"
+        );
+    }
+    println!("lane_scaling bench complete");
+}

@@ -24,7 +24,13 @@ fn main() {
         return;
     }
     let t0 = Instant::now();
-    let mut engine = Engine::load(dir).expect("engine");
+    let mut engine = match Engine::load(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("engine unavailable ({e:#}); skipping");
+            return;
+        }
+    };
     println!(
         "engine load+compile (hardwareInitialize): {:.0} ms, platform {}\n",
         t0.elapsed().as_secs_f64() * 1e3,

@@ -14,7 +14,9 @@
 
 use crate::coordinator::{run_odometry, PipelineConfig};
 use crate::dataset::{lidar::LidarConfig, Sequence, SequenceSpec};
-use crate::fpps_api::{FppsIcp, KernelBackend, NativeSimBackend, XlaBackend};
+use crate::fpps_api::{
+    BackendHandle, BackendKind, FppsIcp, KernelBackend, NativeSimBackend,
+};
 use crate::hwmodel::{latency, AcceleratorConfig};
 use crate::icp::{IcpParams, SearchStrategy};
 use crate::math::Mat4;
@@ -137,42 +139,34 @@ pub fn projected_fpga_ms(mean_iterations: f64) -> f64 {
 }
 
 /// Preferred FPPS backend: the AOT artifact when present, else the
-/// bit-faithful NativeSim mirror (identical numerics, no PJRT).
-pub enum AnyBackend {
-    Xla(Box<FppsIcp<XlaBackend>>),
-    Sim(Box<FppsIcp<NativeSimBackend>>),
+/// bit-faithful NativeSim mirror (identical numerics, no PJRT) — a thin
+/// wrapper over the runtime-selectable `BackendHandle`.
+pub struct AnyBackend {
+    icp: FppsIcp<BackendHandle>,
 }
 
 impl AnyBackend {
     pub fn detect() -> AnyBackend {
-        let dir = Path::new("artifacts");
-        if dir.join("manifest.txt").exists() {
-            match FppsIcp::hardware_initialize(dir) {
-                Ok(icp) => return AnyBackend::Xla(Box::new(icp)),
-                Err(e) => eprintln!("artifact load failed ({e:#}); using NativeSim"),
-            }
-        }
-        AnyBackend::Sim(Box::new(FppsIcp::native_sim()))
+        // `Auto` falls back to NativeSim internally and never errors.
+        let icp = FppsIcp::with_kind(BackendKind::Auto, Path::new("artifacts"))
+            .expect("Auto backend resolution is infallible");
+        AnyBackend { icp }
     }
 
     /// NativeSim regardless of artifacts (used by benches where PJRT
     /// interpret-mode wall time would dominate the run for no signal).
     pub fn sim() -> AnyBackend {
-        AnyBackend::Sim(Box::new(FppsIcp::native_sim()))
+        AnyBackend {
+            icp: FppsIcp::with_backend(BackendHandle::NativeSim(NativeSimBackend::new())),
+        }
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            AnyBackend::Xla(_) => "xla-pjrt",
-            AnyBackend::Sim(_) => "native-sim",
-        }
+        self.icp.backend().name()
     }
 
     pub fn run(&mut self, seq: &Sequence, frames: usize) -> Result<SeqResult> {
-        match self {
-            AnyBackend::Xla(icp) => run_fpps(seq, frames, icp),
-            AnyBackend::Sim(icp) => run_fpps(seq, frames, icp),
-        }
+        run_fpps(seq, frames, &mut self.icp)
     }
 }
 

@@ -1,9 +1,13 @@
 //! Tiny argument parser for the `fpps` CLI and examples (clap is not
 //! available offline). Supports `--key value`, `--key=value`, boolean
-//! `--flag`, and positional arguments, with generated usage text.
+//! `--flag`, and positional arguments, with generated usage text — plus
+//! the shared `--backend`/`--artifacts`/`--lanes` option block every
+//! device-facing subcommand and example uses.
 
+use crate::fpps_api::BackendKind;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 /// Declarative option spec.
 #[derive(Clone, Debug)]
@@ -160,6 +164,39 @@ impl Parser {
         let tokens: Vec<String> = std::env::args().skip(skip).collect();
         self.parse(&tokens)
     }
+
+    /// Attach the shared device-selection options: `--backend`,
+    /// `--artifacts`, and the legacy `--native-sim` shorthand.
+    pub fn backend_opts(self) -> Self {
+        self.opt(
+            "backend",
+            "device backend: auto | xla | native-sim | kdtree",
+            Some("auto"),
+        )
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .flag("native-sim", "shorthand for --backend native-sim")
+    }
+
+    /// Attach the lane-count options for multi-lane subcommands.
+    pub fn lane_opts(self, default_lanes: &'static str) -> Self {
+        self.opt(
+            "lanes",
+            "worker lanes (one backend instance each)",
+            Some(default_lanes),
+        )
+        .opt("queue-depth", "bounded job-queue depth", Some("4"))
+    }
+}
+
+/// Resolve the backend selection added by [`Parser::backend_opts`].
+pub fn backend_selection(a: &Args) -> Result<(BackendKind, PathBuf)> {
+    let kind = if a.flag("native-sim") {
+        BackendKind::NativeSim
+    } else {
+        a.get("backend").unwrap_or("auto").parse()?
+    };
+    let dir = PathBuf::from(a.get("artifacts").unwrap_or("artifacts"));
+    Ok((kind, dir))
 }
 
 #[cfg(test)]
@@ -195,6 +232,31 @@ mod tests {
         assert!(a.flag("verbose"));
         assert!(!a.flag("other"));
         assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn backend_and_lane_opts() {
+        let p = Parser::new("demo", "test").backend_opts().lane_opts("1");
+        let a = p.parse(&toks(&[])).unwrap();
+        let (kind, dir) = backend_selection(&a).unwrap();
+        assert_eq!(kind, BackendKind::Auto);
+        assert_eq!(dir, PathBuf::from("artifacts"));
+        assert_eq!(a.get_or::<usize>("lanes", 0).unwrap(), 1);
+
+        let a = p
+            .parse(&toks(&["--backend", "kdtree", "--lanes", "4", "--artifacts", "x"]))
+            .unwrap();
+        let (kind, dir) = backend_selection(&a).unwrap();
+        assert_eq!(kind, BackendKind::KdTreeCpu);
+        assert_eq!(dir, PathBuf::from("x"));
+        assert_eq!(a.get_or::<usize>("lanes", 0).unwrap(), 4);
+
+        // Legacy flag wins over the default.
+        let a = p.parse(&toks(&["--native-sim"])).unwrap();
+        assert_eq!(backend_selection(&a).unwrap().0, BackendKind::NativeSim);
+        // Bad backend name errors.
+        let a = p.parse(&toks(&["--backend", "fpga"])).unwrap();
+        assert!(backend_selection(&a).is_err());
     }
 
     #[test]

@@ -110,6 +110,9 @@ pub struct RunConfig {
     pub seed: u64,
     /// Artifact directory for the XLA backend.
     pub artifacts_dir: String,
+    /// Worker lanes for batched registration (one backend instance per
+    /// lane; see `coordinator::run_lane_pool`).
+    pub lanes: usize,
 }
 
 impl Default for RunConfig {
@@ -123,6 +126,7 @@ impl Default for RunConfig {
             frames: 20,
             seed: 2026,
             artifacts_dir: "artifacts".to_string(),
+            lanes: 1,
         }
     }
 }
@@ -144,6 +148,7 @@ impl RunConfig {
                 .get("artifacts_dir")
                 .unwrap_or(&d.artifacts_dir)
                 .to_string(),
+            lanes: kv.get_or("lanes", d.lanes)?,
         })
     }
 
@@ -198,13 +203,15 @@ mod tests {
 
     #[test]
     fn run_config_defaults_and_overrides() {
-        let kv = KvConfig::parse("max_iterations=10\nsource_sample=1024\n").unwrap();
+        let kv = KvConfig::parse("max_iterations=10\nsource_sample=1024\nlanes=4\n").unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
         assert_eq!(rc.max_iterations, 10);
         assert_eq!(rc.source_sample, 1024);
+        assert_eq!(rc.lanes, 4);
         // Untouched fields keep paper defaults.
         assert_eq!(rc.max_correspondence_distance, 1.0);
         assert_eq!(rc.transformation_epsilon, 1e-5);
+        assert_eq!(RunConfig::from_kv(&KvConfig::default()).unwrap().lanes, 1);
         let p = rc.icp_params();
         assert_eq!(p.max_iterations, 10);
     }

@@ -8,6 +8,15 @@
 //! pipeline over std threads with bounded channels (backpressure), plus
 //! the scan-to-scan odometry driver used by the end-to-end example and
 //! the Table III / IV benches.
+//!
+//! On top of the single-stream odometry pipeline sits the **multi-lane
+//! registration engine** ([`run_lane_pool`] / [`run_registration_batch`]):
+//! K worker lanes, each owning its own [`KernelBackend`] instance, pull
+//! independent frame-pair jobs from one shared bounded queue and merge
+//! their per-lane [`TimingStats`] into an aggregate [`LaneReport`]. This
+//! is how related FPGA registration stacks treat the accelerator — as a
+//! shared, multi-client resource with batched dispatch — and it is the
+//! scaling substrate every multi-client scenario here builds on.
 
 use crate::dataset::Sequence;
 use crate::fpps_api::{FppsIcp, KernelBackend};
@@ -16,8 +25,10 @@ use crate::math::Mat4;
 use crate::metrics::TimingStats;
 use crate::pointcloud::PointCloud;
 use crate::rng::Pcg32;
-use anyhow::{Context, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Preprocessed frame ready for alignment.
 pub struct PreparedFrame {
@@ -322,6 +333,341 @@ pub fn run_odometry<B: KernelBackend>(
             starvation_ms,
         })
     })
+}
+
+// ---------------------------------------------------------------------------
+// Multi-lane batched registration engine
+// ---------------------------------------------------------------------------
+
+/// One independent frame-pair registration request.
+pub struct RegistrationJob {
+    /// Caller-assigned id; results are returned sorted by it, so ids
+    /// define the deterministic output order regardless of lane count.
+    pub id: u64,
+    /// Client/stream the job belongs to (multi-client bookkeeping).
+    pub stream: usize,
+    pub source: PointCloud,
+    pub target: PointCloud,
+    /// Initial transform (`setTransformationMatrix`).
+    pub initial: Mat4,
+    submitted: Instant,
+}
+
+impl RegistrationJob {
+    pub fn new(
+        id: u64,
+        stream: usize,
+        source: PointCloud,
+        target: PointCloud,
+        initial: Mat4,
+    ) -> Self {
+        Self {
+            id,
+            stream,
+            source,
+            target,
+            initial,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Reset the submission timestamp — call immediately before sending
+    /// a job that was built ahead of time, so the reported queue wait
+    /// measures time *queued*, not time since construction.
+    pub fn mark_submitted(&mut self) {
+        self.submitted = Instant::now();
+    }
+}
+
+/// Result of one lane-pool job.
+#[derive(Clone, Debug)]
+pub struct RegistrationOutcome {
+    pub id: u64,
+    pub stream: usize,
+    /// Which lane served the job (scheduling detail — the transform must
+    /// not depend on it; see the `lane_engine` determinism test).
+    pub lane: usize,
+    pub transform: Mat4,
+    pub rmse: f64,
+    pub iterations: u32,
+    pub stop: StopReason,
+    /// Time from submission to a lane picking the job up.
+    pub queue_wait_ms: f64,
+    /// Time inside `align()` on the lane.
+    pub service_ms: f64,
+}
+
+/// ICP parameters shared by every lane (per-job overrides travel in the
+/// job's `initial` transform only, to keep lane-count invariance).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneIcpConfig {
+    pub max_correspondence_distance: f32,
+    pub max_iteration_count: u32,
+    pub transformation_epsilon: f64,
+}
+
+impl Default for LaneIcpConfig {
+    fn default() -> Self {
+        Self {
+            max_correspondence_distance: 1.0,
+            max_iteration_count: 50,
+            transformation_epsilon: 1e-5,
+        }
+    }
+}
+
+/// Per-lane execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub jobs: usize,
+    /// Service latency samples of this lane.
+    pub service: TimingStats,
+    /// Cumulative backend ("device") time of this lane.
+    pub device_ms: f64,
+}
+
+/// Aggregate report of one lane-pool run.
+#[derive(Debug)]
+pub struct LaneReport {
+    /// All outcomes, sorted by job id (deterministic order).
+    pub outcomes: Vec<RegistrationOutcome>,
+    /// Per-lane statistics, sorted by lane index.
+    pub lanes: Vec<LaneStats>,
+    /// Per-lane service stats merged into one aggregate distribution.
+    pub service: TimingStats,
+    /// Queue-wait distribution across all jobs (backpressure signal).
+    pub queue_wait: TimingStats,
+    pub wall_ms: f64,
+}
+
+impl LaneReport {
+    /// Aggregate throughput over the whole run.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.outcomes.len() as f64 / (self.wall_ms / 1e3)
+        }
+    }
+
+    /// Render the per-lane breakdown — shared by the `fpps batch`
+    /// subcommand and the registration-server example.
+    pub fn lane_table(&self, title: &str) -> crate::report::Table {
+        let mut t = crate::report::Table::new(title).header(&[
+            "lane",
+            "jobs",
+            "mean (ms)",
+            "p99 (ms)",
+            "device (ms)",
+        ]);
+        for l in &self.lanes {
+            t.row(vec![
+                l.lane.to_string(),
+                l.jobs.to_string(),
+                format!("{:.1}", l.service.mean_ms()),
+                format!("{:.1}", l.service.percentile_ms(99.0)),
+                format!("{:.1}", l.device_ms),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run a pool of `lanes` worker lanes over a shared bounded job queue.
+///
+/// * `make_backend(lane)` is called **on** each lane thread, so backends
+///   never cross threads and need not be `Send`;
+/// * `produce(tx)` runs on its own thread and feeds the queue — it may
+///   clone the sender and fan out to per-client producer threads (see
+///   `examples/registration_server.rs`). A `send` error means the pool
+///   is shutting down; treat it as a stop signal, not a failure.
+///
+/// Each job is an independent alignment, so the mapping of jobs to lanes
+/// cannot change any transform: `lanes = 1` and `lanes = K` produce
+/// bit-identical outcomes for a deterministic backend.
+pub fn run_lane_pool<B, F, P>(
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+    produce: P,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
+{
+    let lanes = lanes.max(1);
+    let (job_tx, job_rx) = sync_channel::<RegistrationJob>(queue_depth.max(1));
+    // spmc: lanes share the receiver behind a mutex; the Arc means the
+    // receiver dies with the last lane, unblocking a stuck producer.
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (out_tx, out_rx) = channel::<RegistrationOutcome>();
+    let (lane_tx, lane_rx) = channel::<LaneStats>();
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let producer = scope.spawn(move || produce(job_tx));
+        let mut workers = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let job_rx = Arc::clone(&job_rx);
+            let out_tx = out_tx.clone();
+            let lane_tx = lane_tx.clone();
+            let make_backend = &make_backend;
+            workers.push(scope.spawn(move || -> Result<()> {
+                let backend = make_backend(lane)
+                    .with_context(|| format!("create backend for lane {lane}"))?;
+                let mut icp = FppsIcp::with_backend(backend);
+                icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
+                    .set_max_iteration_count(icp_cfg.max_iteration_count)
+                    .set_transformation_epsilon(icp_cfg.transformation_epsilon);
+                let mut stats = LaneStats {
+                    lane,
+                    ..Default::default()
+                };
+                loop {
+                    // Lock covers only the receive; alignment runs unlocked.
+                    let msg = job_rx.lock().unwrap().recv();
+                    let job = match msg {
+                        Ok(j) => j,
+                        Err(_) => break, // producer done, queue drained
+                    };
+                    let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    icp.set_input_source(job.source);
+                    icp.set_input_target(job.target);
+                    icp.set_transformation_matrix(job.initial);
+                    let t_align = Instant::now();
+                    let res = icp
+                        .align()
+                        .with_context(|| format!("job {} on lane {lane}", job.id))?;
+                    let service_ms = t_align.elapsed().as_secs_f64() * 1e3;
+                    stats.jobs += 1;
+                    stats.service.record_ms(service_ms);
+                    out_tx
+                        .send(RegistrationOutcome {
+                            id: job.id,
+                            stream: job.stream,
+                            lane,
+                            transform: res.transformation,
+                            rmse: res.rmse,
+                            iterations: res.iterations,
+                            stop: res.stop,
+                            queue_wait_ms,
+                            service_ms,
+                        })
+                        .ok();
+                }
+                stats.device_ms = icp.backend().device_time().as_secs_f64() * 1e3;
+                lane_tx.send(stats).ok();
+                Ok(())
+            }));
+        }
+        // Drop the originals so the collection channels close when the
+        // last lane finishes, and the shared receiver dies with the lanes.
+        drop(out_tx);
+        drop(lane_tx);
+        drop(job_rx);
+
+        match producer.join() {
+            Ok(r) => r.context("job producer")?,
+            Err(_) => bail!("job producer panicked"),
+        }
+        for w in workers {
+            match w.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("lane worker panicked"),
+            }
+        }
+        Ok(())
+    })?;
+
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut outcomes: Vec<RegistrationOutcome> = out_rx.into_iter().collect();
+    outcomes.sort_by_key(|o| o.id);
+    let mut lane_stats: Vec<LaneStats> = lane_rx.into_iter().collect();
+    lane_stats.sort_by_key(|s| s.lane);
+
+    // Merge the per-lane distributions into the aggregate report.
+    let mut service = TimingStats::new();
+    for l in &lane_stats {
+        service.merge(&l.service);
+    }
+    let mut queue_wait = TimingStats::new();
+    for o in &outcomes {
+        queue_wait.record_ms(o.queue_wait_ms);
+    }
+
+    Ok(LaneReport {
+        outcomes,
+        lanes: lane_stats,
+        service,
+        queue_wait,
+        wall_ms,
+    })
+}
+
+/// Convenience wrapper: push a prebuilt batch of jobs through the pool.
+pub fn run_registration_batch<B, F>(
+    jobs: Vec<RegistrationJob>,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    let expected = jobs.len();
+    let report = run_lane_pool(lanes, queue_depth, icp_cfg, make_backend, move |tx| {
+        for mut job in jobs {
+            job.mark_submitted(); // queue wait starts at send, not build
+            if tx.send(job).is_err() {
+                break; // pool shut down early
+            }
+        }
+        Ok(())
+    })?;
+    if report.outcomes.len() != expected {
+        return Err(anyhow!(
+            "lane pool returned {} outcomes for {} jobs",
+            report.outcomes.len(),
+            expected
+        ));
+    }
+    Ok(report)
+}
+
+/// Build frame-pair jobs (frame i aligned onto frame i−1) from a
+/// synthetic sequence — the shared job generator for the multi-client
+/// example, the `fpps batch` subcommand and the lane-scaling bench.
+pub fn sequence_pair_jobs(
+    seq: &Sequence,
+    frames: usize,
+    stream: usize,
+    cfg: &PipelineConfig,
+) -> Result<Vec<RegistrationJob>> {
+    let frames = frames.min(seq.len());
+    let mut jobs = Vec::new();
+    let mut prev: Option<PointCloud> = None;
+    for i in 0..frames {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        let sample = cloud.random_sample(cfg.source_sample, &mut rng);
+        let full = fit_to_capacity(cloud, cfg.target_capacity);
+        if let Some(target) = prev.take() {
+            jobs.push(RegistrationJob::new(
+                (stream as u64) << 32 | i as u64,
+                stream,
+                sample,
+                target,
+                Mat4::IDENTITY,
+            ));
+        }
+        prev = Some(full);
+    }
+    Ok(jobs)
 }
 
 #[cfg(test)]

@@ -26,12 +26,17 @@
 //! | `align()`                        | [`FppsIcp::align`]                  |
 //!
 //! The device is abstracted behind [`KernelBackend`]: [`XlaBackend`]
-//! runs the AOT artifact on PJRT (the production path), and
+//! runs the AOT artifact on PJRT (the production path),
 //! [`NativeSimBackend`] is a bit-faithful pure-rust mirror used for
-//! tests and artifact-less environments.
+//! tests and artifact-less environments, and [`KdTreeCpuBackend`] is the
+//! exact kd-tree CPU path behind the same interface. Backends are
+//! selectable at *runtime* through [`BackendHandle`] / [`BackendKind`]
+//! (the multi-lane coordinator instantiates one backend per lane), so
+//! nothing above this layer is monomorphised to a single device.
 
 use crate::icp::StopReason;
-use crate::math::{kabsch_from_sums, Mat4};
+use crate::kdtree::OwnedKdTree;
+use crate::math::{kabsch_from_sums, Mat4, Vec3};
 use crate::nn::{self, KernelConfig};
 use crate::pointcloud::PointCloud;
 use crate::runtime::{Engine, StepAccumulators};
@@ -93,8 +98,21 @@ pub struct XlaBackend {
 
 impl XlaBackend {
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        if !artifacts_dir.join("manifest.txt").exists() {
+            bail!(
+                "no artifact manifest at {}/manifest.txt — the AOT compile step is \
+                 python-side: run `python python/compile/aot.py` first, or use the \
+                 native-sim backend, which needs no artifacts",
+                artifacts_dir.display()
+            );
+        }
         Ok(Self {
-            engine: Engine::load(artifacts_dir)?,
+            engine: Engine::load(artifacts_dir).with_context(|| {
+                format!(
+                    "initialise the PJRT engine from {} (hardwareInitialize)",
+                    artifacts_dir.display()
+                )
+            })?,
             prepared: None,
             device_time: Duration::ZERO,
         })
@@ -295,6 +313,247 @@ impl KernelBackend for NativeSimBackend {
     }
 }
 
+/// Exact kd-tree CPU path behind the [`KernelBackend`] interface — the
+/// PCL-style correspondence search as a third selectable device. Unlike
+/// [`NativeSimBackend`] it accumulates in f64 (host precision) and needs
+/// no padding, so its numerics match the `icp` CPU baseline rather than
+/// the FPGA wire format; Table III shows the two agree to < 0.01 m.
+pub struct KdTreeCpuBackend {
+    device_time: Duration,
+    state: Option<KdClouds>,
+}
+
+struct KdClouds {
+    src: Vec<f32>,
+    src_mask: Vec<f32>,
+    /// Index over the unmasked target points only (masked padding is
+    /// dropped at upload); built once per `begin()`, queried every step.
+    tree: OwnedKdTree,
+}
+
+impl KdTreeCpuBackend {
+    pub fn new() -> Self {
+        Self {
+            device_time: Duration::ZERO,
+            state: None,
+        }
+    }
+}
+
+impl Default for KdTreeCpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelBackend for KdTreeCpuBackend {
+    fn name(&self) -> &'static str {
+        "kdtree-cpu"
+    }
+
+    fn select_capacity(
+        &self,
+        n_source: usize,
+        n_target: usize,
+    ) -> Result<(usize, usize, usize, usize)> {
+        // No block structure: exact capacities, no padding.
+        Ok((n_source.max(1), n_target.max(1), 1, 1))
+    }
+
+    fn begin(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<()> {
+        let m = tgt.len() / 3;
+        if tgt_mask.len() != m || src_mask.len() != src.len() / 3 {
+            bail!("mask sizes do not match cloud sizes");
+        }
+        let mut kept = PointCloud::with_capacity(m);
+        for j in 0..m {
+            if tgt_mask[j] > 0.0 {
+                kept.push([tgt[3 * j], tgt[3 * j + 1], tgt[3 * j + 2]]);
+            }
+        }
+        self.state = Some(KdClouds {
+            src: src.to_vec(),
+            src_mask: src_mask.to_vec(),
+            tree: OwnedKdTree::build(kept),
+        });
+        Ok(())
+    }
+
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+        let state = self
+            .state
+            .as_ref()
+            .context("step() before begin(): no clouds uploaded")?;
+        let t0 = Instant::now();
+        let n = state.src.len() / 3;
+        // Transform in f32, like the device's point cloud transformer.
+        let tm = transform.to_f32_row_major();
+        let mut acc = StepAccumulators::default();
+        for i in 0..n {
+            if state.src_mask[i] == 0.0 {
+                continue;
+            }
+            let (x, y, z) = (
+                state.src[3 * i],
+                state.src[3 * i + 1],
+                state.src[3 * i + 2],
+            );
+            let p = [
+                tm[0] * x + tm[1] * y + tm[2] * z + tm[3],
+                tm[4] * x + tm[5] * y + tm[6] * z + tm[7],
+                tm[8] * x + tm[9] * y + tm[10] * z + tm[11],
+            ];
+            // Bounded search: the threshold prunes the descent, and the
+            // strict bound matches the `icp` CPU baseline's rejection.
+            let Some(nb) = state.tree.nearest_within_sq(p, max_dist_sq) else {
+                continue;
+            };
+            let q = state.tree.cloud().get(nb.index as usize);
+            let pv = Vec3::from_f32(p);
+            let qv = Vec3::from_f32(q);
+            acc.count += 1.0;
+            acc.sum_p = acc.sum_p + pv;
+            acc.sum_q = acc.sum_q + qv;
+            for a in 0..3 {
+                for b in 0..3 {
+                    let pa = [pv.x, pv.y, pv.z][a];
+                    let qb = [qv.x, qv.y, qv.z][b];
+                    acc.sum_pq.m[a][b] += pa * qb;
+                }
+            }
+            acc.sum_sq_dist += nb.dist_sq as f64;
+        }
+        self.device_time += t0.elapsed();
+        Ok(acc)
+    }
+
+    fn device_time(&self) -> Duration {
+        self.device_time
+    }
+}
+
+/// Which device implementation to run — parsed from `--backend` and from
+/// `backend=` config keys, resolved by [`BackendHandle::create`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// XLA when artifacts load, otherwise fall back to NativeSim.
+    Auto,
+    Xla,
+    NativeSim,
+    KdTreeCpu,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "xla" | "xla-pjrt" => BackendKind::Xla,
+            "native-sim" | "sim" => BackendKind::NativeSim,
+            "kdtree" | "kdtree-cpu" | "cpu" => BackendKind::KdTreeCpu,
+            other => bail!(
+                "unknown backend {other:?} (expected auto | xla | native-sim | kdtree)"
+            ),
+        })
+    }
+}
+
+/// Runtime-selectable backend: one enum over every [`KernelBackend`]
+/// implementation, so `FppsIcp<BackendHandle>` can switch devices per
+/// process — or per *lane* in the multi-lane coordinator — without
+/// monomorphising the whole stack per backend.
+pub enum BackendHandle {
+    Xla(Box<XlaBackend>),
+    NativeSim(NativeSimBackend),
+    KdTreeCpu(KdTreeCpuBackend),
+}
+
+impl BackendHandle {
+    /// Resolve a [`BackendKind`] into a live backend. `Auto` prefers the
+    /// AOT artifact path and falls back (with a note) to the bit-faithful
+    /// NativeSim mirror when artifacts are absent or PJRT is unavailable,
+    /// so artifact-less checkouts always work.
+    pub fn create(kind: BackendKind, artifacts_dir: &Path) -> Result<BackendHandle> {
+        match kind {
+            BackendKind::Xla => Ok(BackendHandle::Xla(Box::new(XlaBackend::load(
+                artifacts_dir,
+            )?))),
+            BackendKind::NativeSim => Ok(BackendHandle::NativeSim(NativeSimBackend::new())),
+            BackendKind::KdTreeCpu => Ok(BackendHandle::KdTreeCpu(KdTreeCpuBackend::new())),
+            BackendKind::Auto => {
+                if artifacts_dir.join("manifest.txt").exists() {
+                    match XlaBackend::load(artifacts_dir) {
+                        Ok(b) => return Ok(BackendHandle::Xla(Box::new(b))),
+                        Err(e) => eprintln!(
+                            "note: XLA backend unavailable ({e:#}); using native-sim"
+                        ),
+                    }
+                }
+                Ok(BackendHandle::NativeSim(NativeSimBackend::new()))
+            }
+        }
+    }
+}
+
+impl KernelBackend for BackendHandle {
+    fn name(&self) -> &'static str {
+        match self {
+            BackendHandle::Xla(b) => b.name(),
+            BackendHandle::NativeSim(b) => b.name(),
+            BackendHandle::KdTreeCpu(b) => b.name(),
+        }
+    }
+
+    fn select_capacity(
+        &self,
+        n_source: usize,
+        n_target: usize,
+    ) -> Result<(usize, usize, usize, usize)> {
+        match self {
+            BackendHandle::Xla(b) => b.select_capacity(n_source, n_target),
+            BackendHandle::NativeSim(b) => b.select_capacity(n_source, n_target),
+            BackendHandle::KdTreeCpu(b) => b.select_capacity(n_source, n_target),
+        }
+    }
+
+    fn begin(
+        &mut self,
+        src: &[f32],
+        tgt: &[f32],
+        src_mask: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<()> {
+        match self {
+            BackendHandle::Xla(b) => b.begin(src, tgt, src_mask, tgt_mask),
+            BackendHandle::NativeSim(b) => b.begin(src, tgt, src_mask, tgt_mask),
+            BackendHandle::KdTreeCpu(b) => b.begin(src, tgt, src_mask, tgt_mask),
+        }
+    }
+
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+        match self {
+            BackendHandle::Xla(b) => b.step(transform, max_dist_sq),
+            BackendHandle::NativeSim(b) => b.step(transform, max_dist_sq),
+            BackendHandle::KdTreeCpu(b) => b.step(transform, max_dist_sq),
+        }
+    }
+
+    fn device_time(&self) -> Duration {
+        match self {
+            BackendHandle::Xla(b) => b.device_time(),
+            BackendHandle::NativeSim(b) => b.device_time(),
+            BackendHandle::KdTreeCpu(b) => b.device_time(),
+        }
+    }
+}
+
 /// Per-iteration record of an FPPS alignment.
 #[derive(Clone, Copy, Debug)]
 pub struct FppsIterationStat {
@@ -354,6 +613,23 @@ impl FppsIcp<NativeSimBackend> {
     /// FPPS over the software device mirror (no artifacts needed).
     pub fn native_sim() -> Self {
         Self::with_backend(NativeSimBackend::new())
+    }
+}
+
+impl FppsIcp<KdTreeCpuBackend> {
+    /// FPPS over the exact kd-tree CPU path.
+    pub fn kdtree_cpu() -> Self {
+        Self::with_backend(KdTreeCpuBackend::new())
+    }
+}
+
+impl FppsIcp<BackendHandle> {
+    /// FPPS over a runtime-selected backend (see [`BackendHandle::create`]).
+    pub fn with_kind(kind: BackendKind, artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self::with_backend(BackendHandle::create(
+            kind,
+            artifacts_dir,
+        )?))
     }
 }
 
@@ -619,6 +895,89 @@ mod tests {
         icp.set_input_source(a).set_input_target(b);
         let res = icp.align().unwrap();
         assert_eq!(res.stop, StopReason::TooFewCorrespondences);
+    }
+
+    #[test]
+    fn kdtree_cpu_backend_recovers_transform() {
+        let target = structured_cloud(900, 21);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.03), Vec3::new(0.15, -0.2, 0.01));
+        let source = target.transformed(&gt.inverse_rigid());
+        let mut icp = FppsIcp::kdtree_cpu();
+        icp.set_input_source(source).set_input_target(target);
+        let res = icp.align().unwrap();
+        assert!(res.has_converged());
+        assert_eq!(icp.backend().name(), "kdtree-cpu");
+        let terr = (res.transformation.translation() - gt.translation()).norm();
+        assert!(terr < 2e-2, "translation err {terr}");
+    }
+
+    #[test]
+    fn kdtree_and_native_sim_agree_within_table3_margin() {
+        let target = structured_cloud(800, 22);
+        let gt = Mat4::from_rt(Mat3::rot_z(-0.02), Vec3::new(0.1, 0.15, 0.0));
+        let mut source = target.transformed(&gt.inverse_rigid());
+        let mut rng = Pcg32::new(23);
+        source.add_noise(0.01, &mut rng);
+
+        let mut a = FppsIcp::kdtree_cpu();
+        a.set_input_source(source.clone()).set_input_target(target.clone());
+        let ra = a.align().unwrap();
+        let mut b = FppsIcp::native_sim();
+        b.set_input_source(source).set_input_target(target);
+        let rb = b.align().unwrap();
+        assert!((ra.rmse - rb.rmse).abs() < 0.01, "{} vs {}", ra.rmse, rb.rmse);
+        let dt = (ra.transformation.translation() - rb.transformation.translation()).norm();
+        assert!(dt < 0.01, "translations differ by {dt}");
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!(
+            "native-sim".parse::<BackendKind>().unwrap(),
+            BackendKind::NativeSim
+        );
+        assert_eq!(
+            "kdtree".parse::<BackendKind>().unwrap(),
+            BackendKind::KdTreeCpu
+        );
+        assert!("fpga".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn backend_handle_auto_falls_back_without_artifacts() {
+        let dir = Path::new("definitely/not/an/artifact/dir");
+        let handle = BackendHandle::create(BackendKind::Auto, dir).unwrap();
+        assert_eq!(handle.name(), "native-sim");
+        // Explicit XLA request must error with an actionable message.
+        let err = BackendHandle::create(BackendKind::Xla, dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+
+    #[test]
+    fn backend_handle_aligns_like_its_inner_backend() {
+        let target = structured_cloud(700, 24);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.2, 0.0, 0.0));
+        let source = target.transformed(&gt.inverse_rigid());
+
+        let mut via_handle = FppsIcp::with_backend(
+            BackendHandle::create(BackendKind::NativeSim, Path::new("artifacts")).unwrap(),
+        );
+        via_handle
+            .set_input_source(source.clone())
+            .set_input_target(target.clone());
+        let a = via_handle.align().unwrap();
+
+        let mut direct = FppsIcp::native_sim();
+        direct.set_input_source(source).set_input_target(target);
+        let b = direct.align().unwrap();
+
+        // Same backend, same inputs → bit-identical outputs.
+        assert_eq!(a.transformation.m, b.transformation.m);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits());
+        assert_eq!(a.iterations, b.iterations);
     }
 
     #[test]

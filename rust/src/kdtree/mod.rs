@@ -109,40 +109,7 @@ impl<'a> KdTree<'a> {
     }
 
     fn nearest_rec(&self, node: u32, q: [f32; 3], best: &mut Neighbor) {
-        match &self.nodes[node as usize] {
-            Node::Leaf { start, end } => {
-                for &i in &self.order[*start as usize..*end as usize] {
-                    let d = dist_sq(self.cloud.get(i as usize), q);
-                    // `<` (not `<=`): ties keep the earliest-found point;
-                    // combined with left-first descent this is stable.
-                    if d < best.dist_sq {
-                        *best = Neighbor {
-                            index: i,
-                            dist_sq: d,
-                        };
-                    }
-                }
-            }
-            Node::Internal {
-                axis,
-                split,
-                left,
-                right,
-            } => {
-                let delta = q[*axis as usize] - split;
-                let (near, far) = if delta <= 0.0 {
-                    (*left, *right)
-                } else {
-                    (*right, *left)
-                };
-                self.nearest_rec(near, q, best);
-                // Backtrack only if the splitting plane is closer than
-                // the current best ("backward tracing", §V).
-                if delta * delta < best.dist_sq {
-                    self.nearest_rec(far, q, best);
-                }
-            }
-        }
+        nearest_rec_impl(self.cloud, &self.nodes, &self.order, node, q, best);
     }
 
     /// *Approximate* nearest neighbour with a bounded leaf-visit budget —
@@ -341,6 +308,103 @@ impl TreeStats {
         } else {
             self.total_leaf_depth as f64 / self.leaves as f64
         }
+    }
+}
+
+/// Exact NN descent shared by the borrowing [`KdTree`] and the owning
+/// [`OwnedKdTree`].
+fn nearest_rec_impl(
+    cloud: &PointCloud,
+    nodes: &[Node],
+    order: &[u32],
+    node: u32,
+    q: [f32; 3],
+    best: &mut Neighbor,
+) {
+    match &nodes[node as usize] {
+        Node::Leaf { start, end } => {
+            for &i in &order[*start as usize..*end as usize] {
+                let d = dist_sq(cloud.get(i as usize), q);
+                // `<` (not `<=`): ties keep the earliest-found point;
+                // combined with left-first descent this is stable.
+                if d < best.dist_sq {
+                    *best = Neighbor {
+                        index: i,
+                        dist_sq: d,
+                    };
+                }
+            }
+        }
+        Node::Internal {
+            axis,
+            split,
+            left,
+            right,
+        } => {
+            let delta = q[*axis as usize] - split;
+            let (near, far) = if delta <= 0.0 {
+                (*left, *right)
+            } else {
+                (*right, *left)
+            };
+            nearest_rec_impl(cloud, nodes, order, near, q, best);
+            // Backtrack only if the splitting plane is closer than
+            // the current best ("backward tracing", §V).
+            if delta * delta < best.dist_sq {
+                nearest_rec_impl(cloud, nodes, order, far, q, best);
+            }
+        }
+    }
+}
+
+/// A kd-tree that owns its cloud — for callers that must persist the
+/// index across calls (the borrow-based [`KdTree`] cannot be stored next
+/// to the cloud it borrows). Built once per target upload by the
+/// `KdTreeCpuBackend`, queried every ICP iteration.
+pub struct OwnedKdTree {
+    cloud: PointCloud,
+    nodes: Vec<Node>,
+    order: Vec<u32>,
+}
+
+impl OwnedKdTree {
+    pub fn build(cloud: PointCloud) -> Self {
+        let mut order: Vec<u32> = (0..cloud.len() as u32).collect();
+        let mut nodes = Vec::new();
+        if !cloud.is_empty() {
+            let n = order.len();
+            build_rec(&cloud, &mut nodes, &mut order, 0, n, 16);
+        }
+        Self {
+            cloud,
+            nodes,
+            order,
+        }
+    }
+
+    pub fn cloud(&self) -> &PointCloud {
+        &self.cloud
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cloud.is_empty()
+    }
+
+    /// Exact nearest neighbour with squared distance < `max_dist_sq`;
+    /// `None` if nothing is that close (or the tree is empty). Same
+    /// strict-bound semantics as [`KdTree::nearest_within`], so the
+    /// `KdTreeCpuBackend` rejects correspondences exactly like the
+    /// `icp` CPU baseline does.
+    pub fn nearest_within_sq(&self, q: [f32; 3], max_dist_sq: f32) -> Option<Neighbor> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let mut best = Neighbor {
+            index: u32::MAX,
+            dist_sq: max_dist_sq,
+        };
+        nearest_rec_impl(&self.cloud, &self.nodes, &self.order, 0, q, &mut best);
+        (best.index != u32::MAX).then_some(best)
     }
 }
 
@@ -707,6 +771,37 @@ mod tests {
         let c = random_cloud(10, 35);
         let t = KdTree::build(&c);
         assert!(t.nearest_approximate([0.0; 3], 0).is_none());
+    }
+
+    #[test]
+    fn owned_tree_matches_borrowed_tree() {
+        let c = random_cloud(600, 41);
+        let borrowed = KdTree::build(&c);
+        let owned = OwnedKdTree::build(c.clone());
+        assert!(!owned.is_empty());
+        assert_eq!(owned.cloud().len(), 600);
+        forall(40, |g| {
+            let q = [
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-60.0, 60.0),
+                g.f32_range(-6.0, 6.0),
+            ];
+            let max_d = g.f32_range(0.5, 15.0);
+            let a = borrowed.nearest_within(q, max_d);
+            let b = owned.nearest_within_sq(q, max_d * max_d);
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.index, y.index);
+                    assert_eq!(x.dist_sq, y.dist_sq);
+                }
+                (None, None) => {}
+                other => panic!("owned/borrowed disagree: {other:?}"),
+            }
+        });
+        // Empty tree behaves.
+        let empty = OwnedKdTree::build(PointCloud::new());
+        assert!(empty.is_empty());
+        assert!(empty.nearest_within_sq([0.0; 3], 1.0).is_none());
     }
 
     #[test]

@@ -4,16 +4,24 @@
 //! Subcommands:
 //! * `align`     — register two point cloud files (KITTI .bin)
 //! * `odometry`  — run scan-to-scan odometry on a synthetic sequence
+//! * `batch`     — multi-lane batched registration over frame pairs
 //! * `resources` — print the Table II resource report
 //! * `power`     — print the §IV.D power/efficiency report
 //! * `pipesim`   — run the Fig. 3 cycle-level pipeline simulation
 //! * `info`      — artifact manifest + runtime platform
+//!
+//! Every device-facing subcommand takes `--backend auto|xla|native-sim|
+//! kdtree` (runtime selection via `fpps_api::BackendHandle`); `auto`
+//! falls back to the bit-faithful NativeSim mirror when no AOT artifacts
+//! are present, so the CLI works from a fresh checkout.
 
 use anyhow::{bail, Context, Result};
-use fpps::cli::Parser;
-use fpps::coordinator::{run_odometry, PipelineConfig};
+use fpps::cli::{backend_selection, Parser};
+use fpps::coordinator::{
+    run_odometry, run_registration_batch, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+};
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::FppsIcp;
+use fpps::fpps_api::{FppsIcp, KernelBackend};
 use fpps::hwmodel::{latency, power, resources, AcceleratorConfig};
 use fpps::math::Mat4;
 use fpps::pointcloud::io;
@@ -31,6 +39,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "align" => cmd_align(),
         "odometry" => cmd_odometry(),
+        "batch" => cmd_batch(),
         "resources" => cmd_resources(),
         "power" => cmd_power(),
         "pipesim" => cmd_pipesim(),
@@ -53,6 +62,7 @@ fn print_usage() {
          Subcommands:\n\
          \x20 align      register two KITTI .bin clouds (--source, --target)\n\
          \x20 odometry   scan-to-scan odometry over a synthetic sequence\n\
+         \x20 batch      multi-lane batched registration (--lanes, --pairs)\n\
          \x20 resources  Table II resource utilisation report\n\
          \x20 power      power / energy-efficiency report (§IV.D)\n\
          \x20 pipesim    Fig. 3 NN-pipeline cycle simulation\n\
@@ -65,11 +75,10 @@ fn cmd_align() -> Result<()> {
     let p = Parser::new("fpps align", "register source onto target")
         .opt("source", "source cloud (.bin)", None)
         .opt("target", "target cloud (.bin)", None)
-        .opt("artifacts", "artifact directory", Some("artifacts"))
         .opt("max-iterations", "ICP iteration cap", Some("50"))
         .opt("max-dist", "max correspondence distance (m)", Some("1.0"))
         .opt("epsilon", "transformation epsilon", Some("1e-5"))
-        .flag("native-sim", "use the software device mirror");
+        .backend_opts();
     let a = p.parse_env(2)?;
     let src = io::read_kitti_bin(
         a.get("source").context("--source required")?.as_ref(),
@@ -82,43 +91,33 @@ fn cmd_align() -> Result<()> {
     let max_it: u32 = a.get_or("max-iterations", 50)?;
     let max_d: f32 = a.get_or("max-dist", 1.0)?;
     let eps: f64 = a.get_or("epsilon", 1e-5)?;
+    let (kind, artifacts) = backend_selection(&a)?;
 
-    macro_rules! run_align {
-        ($icp:expr) => {{
-            let mut icp = $icp;
-            icp.set_input_source(src)
-                .set_input_target(tgt)
-                .set_max_correspondence_distance(max_d)
-                .set_max_iteration_count(max_it)
-                .set_transformation_epsilon(eps);
-            let res = icp.align()?;
-            println!(
-                "converged={:?} iterations={} rmse={:.4} m total={:.1} ms device={:.1} ms",
-                res.stop,
-                res.iterations,
-                res.rmse,
-                res.total_time.as_secs_f64() * 1e3,
-                res.device_time.as_secs_f64() * 1e3,
-            );
-            println!("T =");
-            for i in 0..4 {
-                println!(
-                    "  [{:+.6} {:+.6} {:+.6} {:+.6}]",
-                    res.transformation.m[i][0],
-                    res.transformation.m[i][1],
-                    res.transformation.m[i][2],
-                    res.transformation.m[i][3]
-                );
-            }
-        }};
-    }
-
-    if a.flag("native-sim") {
-        run_align!(FppsIcp::native_sim());
-    } else {
-        run_align!(FppsIcp::hardware_initialize(
-            a.get("artifacts").unwrap().as_ref()
-        )?);
+    let mut icp = FppsIcp::with_kind(kind, &artifacts)?;
+    println!("backend: {}", icp.backend().name());
+    icp.set_input_source(src)
+        .set_input_target(tgt)
+        .set_max_correspondence_distance(max_d)
+        .set_max_iteration_count(max_it)
+        .set_transformation_epsilon(eps);
+    let res = icp.align()?;
+    println!(
+        "converged={:?} iterations={} rmse={:.4} m total={:.1} ms device={:.1} ms",
+        res.stop,
+        res.iterations,
+        res.rmse,
+        res.total_time.as_secs_f64() * 1e3,
+        res.device_time.as_secs_f64() * 1e3,
+    );
+    println!("T =");
+    for i in 0..4 {
+        println!(
+            "  [{:+.6} {:+.6} {:+.6} {:+.6}]",
+            res.transformation.m[i][0],
+            res.transformation.m[i][1],
+            res.transformation.m[i][2],
+            res.transformation.m[i][3]
+        );
     }
     Ok(())
 }
@@ -130,9 +129,8 @@ fn cmd_odometry() -> Result<()> {
         .opt("sample", "source sample size", Some("4096"))
         .opt("capacity", "target buffer capacity", Some("16384"))
         .opt("seed", "dataset seed", Some("2026"))
-        .opt("artifacts", "artifact directory", Some("artifacts"))
-        .flag("native-sim", "use the software device mirror")
-        .flag("full-lidar", "full-resolution 64-beam scan");
+        .flag("full-lidar", "full-resolution 64-beam scan")
+        .backend_opts();
     let a = p.parse_env(2)?;
     let name = a.get("sequence").unwrap().to_string();
     let spec = sequence_specs()
@@ -158,41 +156,99 @@ fn cmd_odometry() -> Result<()> {
         ..Default::default()
     };
 
-    macro_rules! run_odo {
-        ($icp:expr) => {{
-            let mut icp = $icp;
-            let res = run_odometry(&seq, frames, cfg, &mut icp)?;
-            let gt0 = seq.ground_truth[0];
-            let gt: Vec<Mat4> = seq
-                .ground_truth
-                .iter()
-                .map(|p| gt0.inverse_rigid().mul_mat(p))
-                .collect();
-            let ate =
-                fpps::metrics::absolute_trajectory_error(&res.poses, &gt[..res.poses.len()]);
-            println!(
-                "sequence {name}: {} frames aligned, mean rmse {:.3} m, ATE {:.3} m",
-                res.records.len(),
-                res.mean_rmse(),
-                ate
-            );
-            println!(
-                "align latency: mean {:.1} ms, p99 {:.1} ms, total {:.1} ms (starvation {:.1} ms)",
-                res.align_stats.mean_ms(),
-                res.align_stats.percentile_ms(99.0),
-                res.align_stats.total_ms(),
-                res.starvation_ms
-            );
-        }};
-    }
+    let (kind, artifacts) = backend_selection(&a)?;
+    let mut icp = FppsIcp::with_kind(kind, &artifacts)?;
+    println!("backend: {}", icp.backend().name());
+    let res = run_odometry(&seq, frames, cfg, &mut icp)?;
+    let gt0 = seq.ground_truth[0];
+    let gt: Vec<Mat4> = seq
+        .ground_truth
+        .iter()
+        .map(|p| gt0.inverse_rigid().mul_mat(p))
+        .collect();
+    let ate = fpps::metrics::absolute_trajectory_error(&res.poses, &gt[..res.poses.len()]);
+    println!(
+        "sequence {name}: {} frames aligned, mean rmse {:.3} m, ATE {:.3} m",
+        res.records.len(),
+        res.mean_rmse(),
+        ate
+    );
+    println!(
+        "align latency: mean {:.1} ms, p99 {:.1} ms, total {:.1} ms (starvation {:.1} ms)",
+        res.align_stats.mean_ms(),
+        res.align_stats.percentile_ms(99.0),
+        res.align_stats.total_ms(),
+        res.starvation_ms
+    );
+    Ok(())
+}
 
-    if a.flag("native-sim") {
-        run_odo!(FppsIcp::native_sim());
-    } else {
-        run_odo!(FppsIcp::hardware_initialize(
-            a.get("artifacts").unwrap().as_ref()
-        )?);
-    }
+fn cmd_batch() -> Result<()> {
+    let p = Parser::new(
+        "fpps batch",
+        "multi-lane batched registration over synthetic frame pairs",
+    )
+    .opt("sequence", "sequence name 00..09", Some("05"))
+    .opt("pairs", "frame pairs to register", Some("16"))
+    .opt("sample", "source sample size", Some("2048"))
+    .opt("capacity", "target buffer capacity", Some("8192"))
+    .opt("seed", "dataset seed", Some("2026"))
+    .lane_opts("1")
+    .backend_opts();
+    let a = p.parse_env(2)?;
+    let name = a.get("sequence").unwrap().to_string();
+    let spec = sequence_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown sequence {name}"))?;
+    let pairs: usize = a.get_or("pairs", 16)?;
+    let seed: u64 = a.get_or("seed", 2026)?;
+    let lanes: usize = a.get_or("lanes", 1)?;
+    let queue_depth: usize = a.get_or("queue-depth", 4)?;
+    let (kind, artifacts) = backend_selection(&a)?;
+
+    let seq = Sequence::synthetic(
+        spec,
+        pairs + 1,
+        seed,
+        LidarConfig {
+            beams: 32,
+            azimuth_steps: 400,
+            ..Default::default()
+        },
+    );
+    let cfg = PipelineConfig {
+        source_sample: a.get_or("sample", 2048)?,
+        target_capacity: a.get_or("capacity", 8192)?,
+        seed,
+        ..Default::default()
+    };
+    let jobs = sequence_pair_jobs(&seq, pairs + 1, 0, &cfg)?;
+    println!(
+        "registering {} frame pairs over {lanes} lane(s), queue depth {queue_depth}",
+        jobs.len()
+    );
+
+    let artifacts = artifacts.as_path();
+    let report = run_registration_batch(
+        jobs,
+        lanes,
+        queue_depth,
+        LaneIcpConfig::default(),
+        |_lane| fpps::fpps_api::BackendHandle::create(kind, artifacts),
+    )?;
+
+    report.lane_table("Per-lane summary").print();
+    println!(
+        "aggregate: {} jobs in {:.1} ms -> {:.2} jobs/s; service p50 {:.1} ms, p99 {:.1} ms; \
+         queue wait mean {:.1} ms",
+        report.outcomes.len(),
+        report.wall_ms,
+        report.jobs_per_s(),
+        report.service.percentile_ms(50.0),
+        report.service.percentile_ms(99.0),
+        report.queue_wait.mean_ms(),
+    );
     Ok(())
 }
 
@@ -324,7 +380,7 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => {
             println!("no artifacts loaded from {}: {e:#}", dir.display());
-            println!("run `make artifacts` first, or use --native-sim paths");
+            println!("run `make artifacts` first, or use --backend native-sim paths");
         }
     }
     Ok(())

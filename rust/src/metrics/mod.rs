@@ -62,6 +62,13 @@ impl TimingStats {
     pub fn total_ms(&self) -> f64 {
         self.samples_ms.iter().sum()
     }
+
+    /// Fold another collector's samples into this one — used by the
+    /// multi-lane coordinator to merge per-lane stats into the aggregate
+    /// report (percentiles stay exact: samples are kept, not summarised).
+    pub fn merge(&mut self, other: &TimingStats) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
 }
 
 /// Absolute trajectory error: RMS of translational distance between
@@ -141,6 +148,26 @@ mod tests {
         let t = TimingStats::new();
         assert_eq!(t.mean_ms(), 0.0);
         assert_eq!(t.percentile_ms(99.0), 0.0);
+    }
+
+    #[test]
+    fn merge_preserves_exact_percentiles() {
+        let mut a = TimingStats::new();
+        let mut b = TimingStats::new();
+        for ms in [1.0, 5.0, 9.0] {
+            a.record_ms(ms);
+        }
+        for ms in [2.0, 3.0] {
+            b.record_ms(ms);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.percentile_ms(50.0), 3.0);
+        assert_eq!(a.max_ms(), 9.0);
+        assert!((a.total_ms() - 20.0).abs() < 1e-12);
+        // Merging an empty collector is a no-op.
+        a.merge(&TimingStats::new());
+        assert_eq!(a.count(), 5);
     }
 
     #[test]

@@ -58,9 +58,9 @@ impl Table {
         };
         let fmt_row = |cells: &[String]| -> String {
             let mut s = String::from("|");
-            for (i, w) in widths.iter().enumerate() {
+            for (i, w) in widths.iter().copied().enumerate() {
                 let c = cells.get(i).map(String::as_str).unwrap_or("");
-                s.push_str(&format!(" {c:<w$} |", w = w));
+                s.push_str(&format!(" {c:<w$} |"));
             }
             s
         };

@@ -8,6 +8,12 @@
 //! runs at request time, exactly as the FPGA bitstream is synthesised
 //! offline.
 //!
+//! The PJRT client itself needs the `xla` bindings, which are an
+//! optional dependency behind the `xla` cargo feature (see Cargo.toml).
+//! Without the feature, [`Engine::load`] returns a contextful error and
+//! the rest of the crate (manifest parsing, accumulator wire format)
+//! still works — callers fall back to `fpps_api::NativeSimBackend`.
+//!
 //! Artifact layout (written by `make artifacts`):
 //! ```text
 //! artifacts/
@@ -19,10 +25,12 @@
 //! `variant.<v>.block_n`, `variant.<v>.block_m`.
 
 use crate::config::KvConfig;
-use crate::math::{Mat3, Mat4, Vec3};
+use crate::math::{Mat3, Vec3};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+pub use engine::{Engine, PreparedClouds};
 
 /// One fixed-shape compiled variant of the device program.
 #[derive(Clone, Debug)]
@@ -150,238 +158,338 @@ pub struct StepTiming {
     pub execute: Duration,
 }
 
-/// Cloud buffers resident on the device — the paper's HBM-uploaded
-/// point cloud data, written once per alignment and reused across all
-/// ICP iterations (only the 4×4 transform and the scalar threshold
-/// change per iteration).
-pub struct PreparedClouds {
-    vi: usize,
-    src: xla::PjRtBuffer,
-    tgt: xla::PjRtBuffer,
-    src_mask: xla::PjRtBuffer,
-    tgt_mask: xla::PjRtBuffer,
-}
+#[cfg(feature = "xla")]
+mod engine {
+    //! Real PJRT engine: client + per-variant compiled executables.
 
-impl PreparedClouds {
-    pub fn variant_index(&self) -> usize {
-        self.vi
+    use super::{Manifest, StepAccumulators, StepTiming};
+    use crate::math::Mat4;
+    use anyhow::{bail, Context, Result};
+    use std::path::Path;
+    use std::time::Instant;
+
+    /// Cloud buffers resident on the device — the paper's HBM-uploaded
+    /// point cloud data, written once per alignment and reused across all
+    /// ICP iterations (only the 4×4 transform and the scalar threshold
+    /// change per iteration).
+    pub struct PreparedClouds {
+        vi: usize,
+        src: xla::PjRtBuffer,
+        tgt: xla::PjRtBuffer,
+        src_mask: xla::PjRtBuffer,
+        tgt_mask: xla::PjRtBuffer,
     }
-}
 
-/// PJRT engine: client + per-variant compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    executables: Vec<Option<xla::PjRtLoadedExecutable>>,
-    /// Cumulative executions (metrics).
-    pub executions: u64,
-}
+    impl PreparedClouds {
+        pub fn variant_index(&self) -> usize {
+            self.vi
+        }
+    }
 
-impl Engine {
-    /// `hardwareInitialize()` of Table I: create the client and load the
-    /// "bitstream" (compile all HLO variants eagerly so the request path
-    /// never compiles).
-    pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
-        let mut executables = Vec::new();
-        for v in &manifest.variants {
-            let proto = xla::HloModuleProto::from_text_file(
-                v.file
-                    .to_str()
-                    .with_context(|| format!("non-utf8 path {:?}", v.file))?,
-            )
-            .map_err(xla_err)
-            .with_context(|| format!("load HLO for variant {}", v.name))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
+    /// PJRT engine: client + per-variant compiled executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        executables: Vec<Option<xla::PjRtLoadedExecutable>>,
+        /// Cumulative executions (metrics).
+        pub executions: u64,
+    }
+
+    impl Engine {
+        /// `hardwareInitialize()` of Table I: create the client and load the
+        /// "bitstream" (compile all HLO variants eagerly so the request path
+        /// never compiles).
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+            let mut executables = Vec::new();
+            for v in &manifest.variants {
+                let proto = xla::HloModuleProto::from_text_file(
+                    v.file
+                        .to_str()
+                        .with_context(|| format!("non-utf8 path {:?}", v.file))?,
+                )
                 .map_err(xla_err)
-                .with_context(|| format!("compile variant {}", v.name))?;
-            executables.push(Some(exe));
+                .with_context(|| format!("load HLO for variant {}", v.name))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(xla_err)
+                    .with_context(|| format!("compile variant {}", v.name))?;
+                executables.push(Some(exe));
+            }
+            Ok(Self {
+                client,
+                manifest,
+                executables,
+                executions: 0,
+            })
         }
-        Ok(Self {
-            client,
-            manifest,
-            executables,
-            executions: 0,
-        })
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute one ICP step on variant `vi`.
+        ///
+        /// `src`/`tgt` must already be padded to the variant capacities and
+        /// the masks sized accordingly (see `nn::pad_cloud`). `transform` is
+        /// applied to the source *inside* the device program (the point
+        /// cloud transformer stage).
+        #[allow(clippy::too_many_arguments)]
+        pub fn execute_step(
+            &mut self,
+            vi: usize,
+            src: &[f32],
+            tgt: &[f32],
+            src_mask: &[f32],
+            tgt_mask: &[f32],
+            transform: &Mat4,
+            max_dist_sq: f32,
+        ) -> Result<(StepAccumulators, StepTiming)> {
+            let v = &self.manifest.variants[vi];
+            if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
+                bail!(
+                    "variant {} expects {}x{} points, got {}x{}",
+                    v.name,
+                    v.n,
+                    v.m,
+                    src.len() / 3,
+                    tgt.len() / 3
+                );
+            }
+            if src_mask.len() != v.n || tgt_mask.len() != v.m {
+                bail!("mask sizes do not match variant {}", v.name);
+            }
+            let t0 = Instant::now();
+            let t_mat = transform.to_f32_row_major();
+            let lits = vec![
+                xla::Literal::vec1(src)
+                    .reshape(&[v.n as i64, 3])
+                    .map_err(xla_err)?,
+                xla::Literal::vec1(tgt)
+                    .reshape(&[v.m as i64, 3])
+                    .map_err(xla_err)?,
+                xla::Literal::vec1(src_mask),
+                xla::Literal::vec1(tgt_mask),
+                xla::Literal::vec1(&t_mat).reshape(&[4, 4]).map_err(xla_err)?,
+                xla::Literal::scalar(max_dist_sq),
+            ];
+            let upload = t0.elapsed();
+
+            let t1 = Instant::now();
+            let exe = self.executables[vi]
+                .as_ref()
+                .expect("variant compiled at load");
+            let result = exe.execute::<xla::Literal>(&lits).map_err(xla_err)?[0][0]
+                .to_literal_sync()
+                .map_err(xla_err)?;
+            let execute = t1.elapsed();
+            self.executions += 1;
+
+            let outs = result.to_tuple().map_err(xla_err)?;
+            let mut wire = Vec::with_capacity(17);
+            for o in &outs {
+                wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
+            }
+            let acc = StepAccumulators::from_wire(&wire)?;
+            Ok((acc, StepTiming { upload, execute }))
+        }
+
+        /// Upload the padded clouds + masks to device buffers once
+        /// (the host→HBM DMA of Fig. 2). Returns a handle to reuse across
+        /// iterations via [`Engine::execute_prepared`].
+        pub fn prepare(
+            &self,
+            vi: usize,
+            src: &[f32],
+            tgt: &[f32],
+            src_mask: &[f32],
+            tgt_mask: &[f32],
+        ) -> Result<PreparedClouds> {
+            let v = &self.manifest.variants[vi];
+            if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
+                bail!(
+                    "variant {} expects {}x{} points, got {}x{}",
+                    v.name,
+                    v.n,
+                    v.m,
+                    src.len() / 3,
+                    tgt.len() / 3
+                );
+            }
+            if src_mask.len() != v.n || tgt_mask.len() != v.m {
+                bail!("mask sizes do not match variant {}", v.name);
+            }
+            Ok(PreparedClouds {
+                vi,
+                src: self
+                    .client
+                    .buffer_from_host_buffer(src, &[v.n, 3], None)
+                    .map_err(xla_err)?,
+                tgt: self
+                    .client
+                    .buffer_from_host_buffer(tgt, &[v.m, 3], None)
+                    .map_err(xla_err)?,
+                src_mask: self
+                    .client
+                    .buffer_from_host_buffer(src_mask, &[v.n], None)
+                    .map_err(xla_err)?,
+                tgt_mask: self
+                    .client
+                    .buffer_from_host_buffer(tgt_mask, &[v.m], None)
+                    .map_err(xla_err)?,
+            })
+        }
+
+        /// One ICP iteration over device-resident clouds: uploads only the
+        /// 4×4 transform + threshold, executes buffer-to-buffer.
+        pub fn execute_prepared(
+            &mut self,
+            prep: &PreparedClouds,
+            transform: &Mat4,
+            max_dist_sq: f32,
+        ) -> Result<(StepAccumulators, StepTiming)> {
+            let t0 = Instant::now();
+            let t_mat = transform.to_f32_row_major();
+            let t_buf = self
+                .client
+                .buffer_from_host_buffer(&t_mat, &[4, 4], None)
+                .map_err(xla_err)?;
+            let d_buf = self
+                .client
+                .buffer_from_host_buffer(&[max_dist_sq], &[], None)
+                .map_err(xla_err)?;
+            let upload = t0.elapsed();
+
+            let t1 = Instant::now();
+            let exe = self.executables[prep.vi]
+                .as_ref()
+                .expect("variant compiled at load");
+            let args = [
+                &prep.src,
+                &prep.tgt,
+                &prep.src_mask,
+                &prep.tgt_mask,
+                &t_buf,
+                &d_buf,
+            ];
+            let result = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(xla_err)?[0][0]
+                .to_literal_sync()
+                .map_err(xla_err)?;
+            let execute = t1.elapsed();
+            self.executions += 1;
+
+            let outs = result.to_tuple().map_err(xla_err)?;
+            let mut wire = Vec::with_capacity(17);
+            for o in &outs {
+                wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
+            }
+            let acc = StepAccumulators::from_wire(&wire)?;
+            Ok((acc, StepTiming { upload, execute }))
+        }
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute one ICP step on variant `vi`.
-    ///
-    /// `src`/`tgt` must already be padded to the variant capacities and
-    /// the masks sized accordingly (see `nn::pad_cloud`). `transform` is
-    /// applied to the source *inside* the device program (the point
-    /// cloud transformer stage).
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_step(
-        &mut self,
-        vi: usize,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-        transform: &Mat4,
-        max_dist_sq: f32,
-    ) -> Result<(StepAccumulators, StepTiming)> {
-        let v = &self.manifest.variants[vi];
-        if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
-            bail!(
-                "variant {} expects {}x{} points, got {}x{}",
-                v.name,
-                v.n,
-                v.m,
-                src.len() / 3,
-                tgt.len() / 3
-            );
-        }
-        if src_mask.len() != v.n || tgt_mask.len() != v.m {
-            bail!("mask sizes do not match variant {}", v.name);
-        }
-        let t0 = Instant::now();
-        let t_mat = transform.to_f32_row_major();
-        let lits = vec![
-            xla::Literal::vec1(src)
-                .reshape(&[v.n as i64, 3])
-                .map_err(xla_err)?,
-            xla::Literal::vec1(tgt)
-                .reshape(&[v.m as i64, 3])
-                .map_err(xla_err)?,
-            xla::Literal::vec1(src_mask),
-            xla::Literal::vec1(tgt_mask),
-            xla::Literal::vec1(&t_mat).reshape(&[4, 4]).map_err(xla_err)?,
-            xla::Literal::scalar(max_dist_sq),
-        ];
-        let upload = t0.elapsed();
-
-        let t1 = Instant::now();
-        let exe = self.executables[vi]
-            .as_ref()
-            .expect("variant compiled at load");
-        let result = exe.execute::<xla::Literal>(&lits).map_err(xla_err)?[0][0]
-            .to_literal_sync()
-            .map_err(xla_err)?;
-        let execute = t1.elapsed();
-        self.executions += 1;
-
-        let outs = result.to_tuple().map_err(xla_err)?;
-        let mut wire = Vec::with_capacity(17);
-        for o in &outs {
-            wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
-        }
-        let acc = StepAccumulators::from_wire(&wire)?;
-        Ok((acc, StepTiming { upload, execute }))
+    /// The `xla` crate's error type does not implement `std::error::Error`
+    /// for anyhow interop in all versions; stringify defensively.
+    fn xla_err(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e:?}")
     }
 }
 
-impl Engine {
-    /// Upload the padded clouds + masks to device buffers once
-    /// (the host→HBM DMA of Fig. 2). Returns a handle to reuse across
-    /// iterations via [`Engine::execute_prepared`].
-    pub fn prepare(
-        &self,
-        vi: usize,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-    ) -> Result<PreparedClouds> {
-        let v = &self.manifest.variants[vi];
-        if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
+#[cfg(not(feature = "xla"))]
+mod engine {
+    //! Stub engine compiled when the `xla` feature is off.
+    //!
+    //! [`Engine::load`] always fails with an actionable error, so the
+    //! engine can never exist at runtime (both types contain an
+    //! uninhabited field); every method body is therefore unreachable and
+    //! typechecks via the empty match. Callers such as
+    //! `fpps_api::XlaBackend` and the CLI keep compiling unchanged and
+    //! fall back to `NativeSimBackend`.
+
+    use super::{Manifest, StepAccumulators, StepTiming};
+    use crate::math::Mat4;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    enum Never {}
+
+    /// Stub for the device-resident cloud buffers (never constructed).
+    pub struct PreparedClouds {
+        never: Never,
+    }
+
+    impl PreparedClouds {
+        pub fn variant_index(&self) -> usize {
+            match self.never {}
+        }
+    }
+
+    /// Stub PJRT engine (never constructed; `load` always errors).
+    pub struct Engine {
+        never: Never,
+        /// Cumulative executions (metrics).
+        pub executions: u64,
+    }
+
+    impl Engine {
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
             bail!(
-                "variant {} expects {}x{} points, got {}x{}",
-                v.name,
-                v.n,
-                v.m,
-                src.len() / 3,
-                tgt.len() / 3
-            );
+                "XLA/PJRT runtime not compiled in (crate built without the `xla` feature); \
+                 cannot load artifacts from {}. Use the native-sim backend (bit-faithful \
+                 software mirror, no artifacts needed), or vendor the xla-rs bindings and \
+                 rebuild with `--features xla`",
+                artifacts_dir.display()
+            )
         }
-        if src_mask.len() != v.n || tgt_mask.len() != v.m {
-            bail!("mask sizes do not match variant {}", v.name);
+
+        pub fn manifest(&self) -> &Manifest {
+            match self.never {}
         }
-        Ok(PreparedClouds {
-            vi,
-            src: self
-                .client
-                .buffer_from_host_buffer(src, &[v.n, 3], None)
-                .map_err(xla_err)?,
-            tgt: self
-                .client
-                .buffer_from_host_buffer(tgt, &[v.m, 3], None)
-                .map_err(xla_err)?,
-            src_mask: self
-                .client
-                .buffer_from_host_buffer(src_mask, &[v.n], None)
-                .map_err(xla_err)?,
-            tgt_mask: self
-                .client
-                .buffer_from_host_buffer(tgt_mask, &[v.m], None)
-                .map_err(xla_err)?,
-        })
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn execute_step(
+            &mut self,
+            _vi: usize,
+            _src: &[f32],
+            _tgt: &[f32],
+            _src_mask: &[f32],
+            _tgt_mask: &[f32],
+            _transform: &Mat4,
+            _max_dist_sq: f32,
+        ) -> Result<(StepAccumulators, StepTiming)> {
+            match self.never {}
+        }
+
+        pub fn prepare(
+            &self,
+            _vi: usize,
+            _src: &[f32],
+            _tgt: &[f32],
+            _src_mask: &[f32],
+            _tgt_mask: &[f32],
+        ) -> Result<PreparedClouds> {
+            match self.never {}
+        }
+
+        pub fn execute_prepared(
+            &mut self,
+            _prep: &PreparedClouds,
+            _transform: &Mat4,
+            _max_dist_sq: f32,
+        ) -> Result<(StepAccumulators, StepTiming)> {
+            match self.never {}
+        }
     }
-
-    /// One ICP iteration over device-resident clouds: uploads only the
-    /// 4×4 transform + threshold, executes buffer-to-buffer.
-    pub fn execute_prepared(
-        &mut self,
-        prep: &PreparedClouds,
-        transform: &Mat4,
-        max_dist_sq: f32,
-    ) -> Result<(StepAccumulators, StepTiming)> {
-        let t0 = Instant::now();
-        let t_mat = transform.to_f32_row_major();
-        let t_buf = self
-            .client
-            .buffer_from_host_buffer(&t_mat, &[4, 4], None)
-            .map_err(xla_err)?;
-        let d_buf = self
-            .client
-            .buffer_from_host_buffer(&[max_dist_sq], &[], None)
-            .map_err(xla_err)?;
-        let upload = t0.elapsed();
-
-        let t1 = Instant::now();
-        let exe = self.executables[prep.vi]
-            .as_ref()
-            .expect("variant compiled at load");
-        let args = [
-            &prep.src,
-            &prep.tgt,
-            &prep.src_mask,
-            &prep.tgt_mask,
-            &t_buf,
-            &d_buf,
-        ];
-        let result = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(xla_err)?[0][0]
-            .to_literal_sync()
-            .map_err(xla_err)?;
-        let execute = t1.elapsed();
-        self.executions += 1;
-
-        let outs = result.to_tuple().map_err(xla_err)?;
-        let mut wire = Vec::with_capacity(17);
-        for o in &outs {
-            wire.extend(o.to_vec::<f32>().map_err(xla_err)?);
-        }
-        let acc = StepAccumulators::from_wire(&wire)?;
-        Ok((acc, StepTiming { upload, execute }))
-    }
-}
-
-/// The `xla` crate's error type does not implement `std::error::Error`
-/// for anyhow interop in all versions; stringify defensively.
-fn xla_err(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e:?}")
 }
 
 #[cfg(test)]
@@ -458,5 +566,14 @@ mod tests {
     fn rmse_nan_when_no_correspondences() {
         let acc = StepAccumulators::default();
         assert!(acc.rmse().is_nan());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_load_is_a_contextful_error() {
+        let err = Engine::load(Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "{msg}");
+        assert!(msg.contains("native-sim"), "{msg}");
     }
 }

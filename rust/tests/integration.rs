@@ -13,11 +13,16 @@ use fpps::rng::Pcg32;
 use std::path::{Path, PathBuf};
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature — PJRT runtime unavailable");
+        return None;
+    }
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
     let candidates = [
-        Path::new("artifacts"),
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path(),
-    ]
-    .map(|p| p.to_path_buf());
+        PathBuf::from("artifacts"),
+        manifest_dir.join("artifacts"),
+        manifest_dir.join("../artifacts"),
+    ];
     for c in candidates {
         if c.join("manifest.txt").exists() {
             return Some(c);

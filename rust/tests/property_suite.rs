@@ -213,8 +213,10 @@ fn kitti_dir_roundtrip_through_sequence_loader() {
 
 #[test]
 fn preprocess_filters_are_sound() {
-    let mut cfg = PipelineConfig::default();
-    cfg.voxel_leaf = 0.0; // test crop/ground in isolation
+    let cfg = PipelineConfig {
+        voxel_leaf: 0.0, // test crop/ground in isolation
+        ..Default::default()
+    };
     let mut cloud = PointCloud::new();
     cloud.push([1.0, 0.0, 0.0]); // keep
     cloud.push([100.0, 0.0, 0.0]); // beyond crop_range 40
