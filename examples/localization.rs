@@ -1,0 +1,105 @@
+//! Scan-to-map localization demo — the resident-target path end to end:
+//! one map stays device-resident while M scans align against it, so the
+//! per-scan upload (and, on the kd-tree backend, the index build) is
+//! paid once per lane instead of once per scan. This is the workload
+//! the `upload_target` / `upload_source` split exists for: odometry
+//! re-targets every frame, localization re-targets (almost) never.
+//!
+//!   cargo run --release --example localization -- \
+//!       [--scans 16] [--lanes 2] [--backend kdtree]
+
+use anyhow::{Context, Result};
+use fpps::cli::{backend_selection, Parser};
+use fpps::coordinator::{run_localization, LaneIcpConfig, PipelineConfig};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::BackendHandle;
+
+fn main() -> Result<()> {
+    let p = Parser::new("localization", "scan-to-map localization demo")
+        .opt("sequence", "sequence name 00..09", Some("03"))
+        .opt("scans", "scans to localize", Some("16"))
+        .opt("sample", "source sample size per scan", Some("1024"))
+        .opt("capacity", "map buffer capacity", Some("8192"))
+        .opt("seed", "dataset seed", Some("2026"))
+        .lane_opts("2")
+        .backend_opts();
+    let a = p.parse_env(1)?;
+    let name = a.get("sequence").unwrap().to_string();
+    let spec = sequence_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown sequence {name}"))?;
+    let scans: usize = a.get_or("scans", 16)?;
+    let seed: u64 = a.get_or("seed", 2026)?;
+    let lanes: usize = a.get_or("lanes", 2)?;
+    let queue_depth: usize = a.get_or("queue-depth", 4)?;
+    let (kind, artifacts) = backend_selection(&a)?;
+    let artifacts = artifacts.as_path();
+
+    let seq = Sequence::synthetic(
+        spec,
+        scans,
+        seed,
+        LidarConfig {
+            beams: 32,
+            azimuth_steps: 400,
+            ..Default::default()
+        },
+    );
+    let cfg = PipelineConfig {
+        source_sample: a.get_or("sample", 1024)?,
+        target_capacity: a.get_or("capacity", 8192)?,
+        seed,
+        ..Default::default()
+    };
+    println!("localizing {scans} scans over {lanes} lane(s), backend {kind:?}");
+
+    let res = run_localization(
+        &seq,
+        scans,
+        &cfg,
+        lanes,
+        queue_depth,
+        LaneIcpConfig::default(),
+        |_lane| BackendHandle::create(kind, artifacts),
+    )?;
+
+    println!(
+        "map: {} points resident; {} scans localized in {:.1} ms ({:.2} jobs/s)",
+        res.map_points,
+        res.report.outcomes.len(),
+        res.report.wall_ms,
+        res.report.jobs_per_s()
+    );
+    res.report.lane_table("\nPer-lane breakdown").print();
+
+    let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+    println!(
+        "\nmap residency: {uploads} upload(s), {hits} cache hit(s) \
+         — shipped per lane, not per scan"
+    );
+    println!(
+        "localization error: mean {:.3} m, max {:.3} m",
+        res.mean_translation_error(),
+        res.max_translation_error()
+    );
+
+    // The whole point of the resident-target path: the map is uploaded
+    // at most once per lane, never once per scan.
+    anyhow::ensure!(
+        uploads <= lanes.max(1),
+        "map re-uploaded {uploads} times over {lanes} lanes"
+    );
+    anyhow::ensure!(
+        uploads + hits == res.report.outcomes.len(),
+        "upload/hit accounting does not cover every scan"
+    );
+    anyhow::ensure!(
+        res.mean_translation_error() < 0.5,
+        "localization drifted: mean error {:.3} m",
+        res.mean_translation_error()
+    );
+    println!("\nlocalization OK");
+    Ok(())
+}

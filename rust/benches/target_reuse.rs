@@ -1,0 +1,136 @@
+//! Bench: cross-frame target reuse — cached (resident map) vs.
+//! fresh-upload alignment cost on the kd-tree CPU backend, where the
+//! target upload includes an index build. With an unchanged map the
+//! build is paid once, so the amortized per-scan cost converges to the
+//! query-only cost; the "build share" column shows the kd-tree build
+//! cost dropping to near zero for map reuse. The CPU baseline's
+//! map-reuse path (`icp::align_with_tree`) is included for reference.
+//!
+//!   cargo bench --bench target_reuse
+//!   FPPS_BENCH_SCANS=64 cargo bench --bench target_reuse   # longer run
+
+use fpps::fpps_api::FppsIcp;
+use fpps::icp::{align_with_tree, IcpParams};
+use fpps::kdtree::OwnedKdTree;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn map_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-20.0, 20.0), rng.range(-20.0, 20.0), 0.0]),
+            1 => c.push([rng.range(-20.0, 20.0), 20.0, rng.range(0.0, 6.0)]),
+            _ => c.push([-20.0, rng.range(-20.0, 20.0), rng.range(0.0, 6.0)]),
+        }
+    }
+    c
+}
+
+fn scan_sources(map: &PointCloud, scans: usize) -> Vec<(PointCloud, Mat4)> {
+    (0..scans as u64)
+        .map(|k| {
+            let mut rng = Pcg32::new(1000 + k);
+            let gt = Mat4::from_rt(
+                Mat3::rot_z(0.01 * (k as f64 + 1.0)),
+                Vec3::new(0.1 + 0.01 * k as f64, -0.05, 0.0),
+            );
+            let mut s = map.transformed(&gt.inverse_rigid());
+            s.add_noise(0.01, &mut rng);
+            (s.random_sample(2048, &mut rng), gt)
+        })
+        .collect()
+}
+
+fn main() {
+    let scans: usize = std::env::var("FPPS_BENCH_SCANS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let map = Arc::new(map_cloud(16_384, 2026));
+    let sources = scan_sources(&map, scans);
+    println!(
+        "target reuse: {scans} scans x {}-point map, kdtree-cpu backend\n",
+        map.len()
+    );
+
+    // Fresh upload: a new session per scan — every align rebuilds the
+    // kd-tree (what the pre-split begin() did implicitly).
+    let t0 = Instant::now();
+    let mut fresh_builds = 0;
+    let mut fresh_results = Vec::new();
+    for (s, _) in &sources {
+        let mut icp = FppsIcp::kdtree_cpu();
+        icp.set_input_source(s.clone());
+        icp.set_input_target(Arc::clone(&map));
+        fresh_results.push(icp.align().expect("fresh align"));
+        fresh_builds += icp.backend().tree_builds();
+    }
+    let fresh_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Cached: one session, the map stays resident — one build total.
+    let t0 = Instant::now();
+    let mut icp = FppsIcp::kdtree_cpu();
+    let mut cached_results = Vec::new();
+    for (s, _) in &sources {
+        icp.set_input_source(s.clone());
+        icp.set_input_target(Arc::clone(&map));
+        cached_results.push(icp.align().expect("cached align"));
+    }
+    let cached_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cached_builds = icp.backend().tree_builds();
+
+    // CPU-baseline map reuse: prebuilt OwnedKdTree + align_with_tree.
+    let t_build = Instant::now();
+    let tree = OwnedKdTree::build((*map).clone());
+    let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    for (s, _) in &sources {
+        let _ = align_with_tree(s, &tree, &Mat4::IDENTITY, &IcpParams::default());
+    }
+    let baseline_ms = t0.elapsed().as_secs_f64() * 1e3 + build_ms;
+
+    // Cached and fresh must agree bit-for-bit — reuse is free, not lossy.
+    for (f, c) in fresh_results.iter().zip(cached_results.iter()) {
+        assert_eq!(f.transformation.m, c.transformation.m);
+        assert_eq!(f.rmse.to_bits(), c.rmse.to_bits());
+    }
+
+    let mut t = Table::new("cached vs fresh-upload (same results, bit-identical)").header(&[
+        "mode",
+        "kd builds",
+        "total (ms)",
+        "per-scan (ms)",
+        "build share",
+    ]);
+    let rows = [
+        ("fresh upload", fresh_builds, fresh_ms),
+        ("cached target", cached_builds, cached_ms),
+        ("cpu align_with_tree", 1, baseline_ms),
+    ];
+    for (mode, builds, total) in rows {
+        let share = 100.0 * (builds as f64 * build_ms) / total.max(1e-9);
+        t.row(vec![
+            mode.to_string(),
+            builds.to_string(),
+            format!("{total:.1}"),
+            format!("{:.2}", total / scans as f64),
+            format!("{share:.1}%"),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nspeedup from residency: {:.2}x  (kd builds {} -> {})",
+        fresh_ms / cached_ms.max(1e-9),
+        fresh_builds,
+        cached_builds
+    );
+    assert_eq!(cached_builds, 1, "resident map must build exactly once");
+    println!("target_reuse bench complete");
+}

@@ -113,6 +113,9 @@ pub struct RunConfig {
     /// Worker lanes for batched registration (one backend instance per
     /// lane; see `coordinator::run_lane_pool`).
     pub lanes: usize,
+    /// Scans per localization run (`fpps localize`; see
+    /// `coordinator::run_localization`).
+    pub scans: usize,
 }
 
 impl Default for RunConfig {
@@ -127,6 +130,7 @@ impl Default for RunConfig {
             seed: 2026,
             artifacts_dir: "artifacts".to_string(),
             lanes: 1,
+            scans: 16,
         }
     }
 }
@@ -149,6 +153,7 @@ impl RunConfig {
                 .unwrap_or(&d.artifacts_dir)
                 .to_string(),
             lanes: kv.get_or("lanes", d.lanes)?,
+            scans: kv.get_or("scans", d.scans)?,
         })
     }
 
@@ -203,11 +208,14 @@ mod tests {
 
     #[test]
     fn run_config_defaults_and_overrides() {
-        let kv = KvConfig::parse("max_iterations=10\nsource_sample=1024\nlanes=4\n").unwrap();
+        let kv =
+            KvConfig::parse("max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\n").unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
         assert_eq!(rc.max_iterations, 10);
         assert_eq!(rc.source_sample, 1024);
         assert_eq!(rc.lanes, 4);
+        assert_eq!(rc.scans, 8);
+        assert_eq!(RunConfig::from_kv(&KvConfig::default()).unwrap().scans, 16);
         // Untouched fields keep paper defaults.
         assert_eq!(rc.max_correspondence_distance, 1.0);
         assert_eq!(rc.transformation_epsilon, 1e-5);

@@ -11,12 +11,17 @@
 //!
 //! On top of the single-stream odometry pipeline sits the **multi-lane
 //! registration engine** ([`run_lane_pool`] / [`run_registration_batch`]):
-//! K worker lanes, each owning its own [`KernelBackend`] instance, pull
-//! independent frame-pair jobs from one shared bounded queue and merge
-//! their per-lane [`TimingStats`] into an aggregate [`LaneReport`]. This
-//! is how related FPGA registration stacks treat the accelerator — as a
-//! shared, multi-client resource with batched dispatch — and it is the
-//! scaling substrate every multi-client scenario here builds on.
+//! K worker lanes, each owning its own [`KernelBackend`] instance, are
+//! fed by a **target-affinity dispatcher** — jobs sharing a target key
+//! route to the lane whose backend already holds that target resident
+//! (no re-upload, no kd-tree rebuild), spilling to other lanes when the
+//! keyed lane saturates. Per-lane [`TimingStats`] merge into an
+//! aggregate [`LaneReport`]. This is how related FPGA registration
+//! stacks treat the accelerator — a shared, multi-client resource with
+//! batched dispatch and device-resident reference clouds — and it is
+//! the scaling substrate every multi-client scenario here builds on,
+//! including the scan-to-map [`run_localization`] scenario (M scans
+//! against one resident map).
 
 use crate::dataset::Sequence;
 use crate::fpps_api::{FppsIcp, KernelBackend};
@@ -26,8 +31,8 @@ use crate::metrics::TimingStats;
 use crate::pointcloud::PointCloud;
 use crate::rng::Pcg32;
 use anyhow::{anyhow, bail, Context, Result};
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Preprocessed frame ready for alignment.
@@ -170,8 +175,10 @@ impl OdometryResult {
 
 /// Fit a cloud into the device target buffer: voxel-downsample with a
 /// growing leaf until it fits (PCL pipelines do exactly this to bound
-/// map density).
-pub fn fit_to_capacity(cloud: PointCloud, capacity: usize) -> PointCloud {
+/// map density). `seed` drives the random-sample fallback, so different
+/// pipeline seeds produce different fallback samples (a fixed internal
+/// seed would silently make them identical).
+pub fn fit_to_capacity(cloud: PointCloud, capacity: usize, seed: u64) -> PointCloud {
     if cloud.len() <= capacity {
         return cloud;
     }
@@ -183,8 +190,9 @@ pub fn fit_to_capacity(cloud: PointCloud, capacity: usize) -> PointCloud {
         }
         leaf *= 1.6;
     }
-    // Fall back to random sampling at the last resort.
-    let mut rng = Pcg32::new(0xF17);
+    // Fall back to random sampling at the last resort (substream keeps
+    // it independent of the per-frame source-sampling streams).
+    let mut rng = Pcg32::substream(seed, 0xF17);
     cloud.random_sample(capacity, &mut rng)
 }
 
@@ -201,7 +209,7 @@ fn acquisition_thread(
             let cloud = preprocess(&seq.frame(i)?, &cfg);
             let mut rng = Pcg32::substream(cfg.seed, i as u64);
             let source_sample = cloud.random_sample(cfg.source_sample, &mut rng);
-            let full = fit_to_capacity(cloud, cfg.target_capacity);
+            let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
             Ok(PreparedFrame {
                 index: i,
                 source_sample,
@@ -346,8 +354,16 @@ pub struct RegistrationJob {
     pub id: u64,
     /// Client/stream the job belongs to (multi-client bookkeeping).
     pub stream: usize,
+    /// Target identity for affinity scheduling: jobs with equal keys are
+    /// routed to the lane whose backend already holds that target, so
+    /// the resident-target cache hits across jobs. [`Self::new`] derives
+    /// it from the target's content fingerprint; [`Self::new_keyed`]
+    /// takes it from the caller (e.g. one shared map, hashed once).
+    pub target_key: u64,
     pub source: PointCloud,
-    pub target: PointCloud,
+    /// Shared so map-reuse workloads submit M jobs against one cloud
+    /// without M copies.
+    pub target: Arc<PointCloud>,
     /// Initial transform (`setTransformationMatrix`).
     pub initial: Mat4,
     submitted: Instant,
@@ -358,14 +374,38 @@ impl RegistrationJob {
         id: u64,
         stream: usize,
         source: PointCloud,
-        target: PointCloud,
+        target: impl Into<Arc<PointCloud>>,
+        initial: Mat4,
+    ) -> Self {
+        let target = target.into();
+        Self {
+            id,
+            stream,
+            target_key: target.fingerprint(),
+            source,
+            target,
+            initial,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Like [`Self::new`] with a caller-supplied affinity key — skips
+    /// hashing the target, for callers that build many jobs against one
+    /// shared cloud (see [`localization_jobs`]).
+    pub fn new_keyed(
+        id: u64,
+        stream: usize,
+        source: PointCloud,
+        target: impl Into<Arc<PointCloud>>,
+        target_key: u64,
         initial: Mat4,
     ) -> Self {
         Self {
             id,
             stream,
+            target_key,
             source,
-            target,
+            target: target.into(),
             initial,
             submitted: Instant::now(),
         }
@@ -423,8 +463,16 @@ pub struct LaneStats {
     pub jobs: usize,
     /// Service latency samples of this lane.
     pub service: TimingStats,
+    /// Queue-wait samples of the jobs this lane served (scheduler
+    /// pressure as seen from this lane).
+    pub queue_wait: TimingStats,
     /// Cumulative backend ("device") time of this lane.
     pub device_ms: f64,
+    /// Target uploads this lane's backend actually performed.
+    pub target_uploads: usize,
+    /// Alignments that found their target already resident (affinity
+    /// scheduling + unchanged target = cache hit).
+    pub target_hits: usize,
 }
 
 /// Aggregate report of one lane-pool run.
@@ -451,22 +499,36 @@ impl LaneReport {
         }
     }
 
-    /// Render the per-lane breakdown — shared by the `fpps batch`
-    /// subcommand and the registration-server example.
+    /// Render the per-lane breakdown — shared by the `fpps batch` /
+    /// `fpps localize` subcommands and the registration-server example.
+    /// Queue-wait and jobs/s make scheduler pressure visible: a lane
+    /// whose wait grows while its jobs/s stalls is the backpressure
+    /// bottleneck.
     pub fn lane_table(&self, title: &str) -> crate::report::Table {
         let mut t = crate::report::Table::new(title).header(&[
             "lane",
             "jobs",
             "mean (ms)",
             "p99 (ms)",
+            "wait (ms)",
+            "jobs/s",
+            "tgt up/hit",
             "device (ms)",
         ]);
         for l in &self.lanes {
+            let jobs_per_s = if self.wall_ms > 0.0 {
+                l.jobs as f64 / (self.wall_ms / 1e3)
+            } else {
+                0.0
+            };
             t.row(vec![
                 l.lane.to_string(),
                 l.jobs.to_string(),
                 format!("{:.1}", l.service.mean_ms()),
                 format!("{:.1}", l.service.percentile_ms(99.0)),
+                format!("{:.1}", l.queue_wait.mean_ms()),
+                format!("{jobs_per_s:.2}"),
+                format!("{}/{}", l.target_uploads, l.target_hits),
                 format!("{:.1}", l.device_ms),
             ]);
         }
@@ -474,14 +536,92 @@ impl LaneReport {
     }
 }
 
-/// Run a pool of `lanes` worker lanes over a shared bounded job queue.
+/// Route jobs from the shared intake queue to per-lane queues by
+/// **target affinity**: a job goes to the lane whose backend already
+/// holds its target (resident-target cache hit — no re-upload, no
+/// kd-tree rebuild) — but only while that lane keeps up. Once the keyed
+/// lane has a backlog and another lane sits idle, parallelism wins: the
+/// idle lane takes the job and pays one extra target upload (bounded by
+/// the lane count), instead of a whole same-target batch serializing on
+/// one lane. `done_rx` carries lane-completion events, giving the
+/// dispatcher its per-lane load estimate without locking. Routing can
+/// never change numerics: every job is an independent alignment, so
+/// `lanes = 1` and `lanes = K` stay bit-identical regardless of
+/// placement.
+fn dispatch_by_affinity(
+    rx: Receiver<RegistrationJob>,
+    lane_txs: Vec<SyncSender<RegistrationJob>>,
+    done_rx: Receiver<usize>,
+) {
+    let lanes = lane_txs.len();
+    // Which target key each lane's backend most recently received.
+    let mut lane_key: Vec<Option<u64>> = vec![None; lanes];
+    // Jobs sent to each lane minus completions seen (drained lazily).
+    let mut pending: Vec<usize> = vec![0; lanes];
+    let mut rr = 0usize;
+    'jobs: for mut job in rx.iter() {
+        while let Ok(l) = done_rx.try_recv() {
+            pending[l] = pending[l].saturating_sub(1);
+        }
+        let key = job.target_key;
+        let affinity = lane_key.iter().position(|k| *k == Some(key));
+        // Warmth vs. parallelism: idle affinity lane → keep it warm;
+        // busy affinity lane with an idle peer → steal to the peer.
+        let first_choice = match affinity {
+            Some(l) if pending[l] == 0 => Some(l),
+            Some(l) => Some((0..lanes).find(|&c| pending[c] == 0).unwrap_or(l)),
+            None => None,
+        };
+        if let Some(l) = first_choice {
+            match lane_txs[l].try_send(job) {
+                Ok(()) => {
+                    lane_key[l] = Some(key);
+                    pending[l] += 1;
+                    continue 'jobs;
+                }
+                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Disconnected(_)) => return, // pool shutting down
+            }
+        }
+        // Spill order: fresh lanes first (their cache is empty anyway),
+        // then round-robin over everyone.
+        let order: Vec<usize> = (0..lanes)
+            .filter(|&l| lane_key[l].is_none())
+            .chain((0..lanes).map(|i| (rr + i) % lanes))
+            .collect();
+        for l in order {
+            match lane_txs[l].try_send(job) {
+                Ok(()) => {
+                    lane_key[l] = Some(key);
+                    pending[l] += 1;
+                    rr = (l + 1) % lanes;
+                    continue 'jobs;
+                }
+                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+        // Every queue is full: block on the affinity lane (keeps the
+        // cache warm) or, keyless, on the next round-robin lane.
+        let l = affinity.unwrap_or(rr);
+        lane_key[l] = Some(key);
+        rr = (l + 1) % lanes;
+        if lane_txs[l].send(job).is_err() {
+            return;
+        }
+        pending[l] += 1;
+    }
+}
+
+/// Run a pool of `lanes` worker lanes, each with its own bounded queue,
+/// fed by a target-affinity dispatcher (see [`dispatch_by_affinity`]).
 ///
 /// * `make_backend(lane)` is called **on** each lane thread, so backends
 ///   never cross threads and need not be `Send`;
-/// * `produce(tx)` runs on its own thread and feeds the queue — it may
-///   clone the sender and fan out to per-client producer threads (see
-///   `examples/registration_server.rs`). A `send` error means the pool
-///   is shutting down; treat it as a stop signal, not a failure.
+/// * `produce(tx)` runs on its own thread and feeds the intake queue —
+///   it may clone the sender and fan out to per-client producer threads
+///   (see `examples/registration_server.rs`). A `send` error means the
+///   pool is shutting down; treat it as a stop signal, not a failure.
 ///
 /// Each job is an independent alignment, so the mapping of jobs to lanes
 /// cannot change any transform: `lanes = 1` and `lanes = K` produce
@@ -499,21 +639,28 @@ where
     P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
 {
     let lanes = lanes.max(1);
-    let (job_tx, job_rx) = sync_channel::<RegistrationJob>(queue_depth.max(1));
-    // spmc: lanes share the receiver behind a mutex; the Arc means the
-    // receiver dies with the last lane, unblocking a stuck producer.
-    let job_rx = Arc::new(Mutex::new(job_rx));
+    let depth = queue_depth.max(1);
+    let (job_tx, job_rx) = sync_channel::<RegistrationJob>(depth);
+    let mut lane_txs = Vec::with_capacity(lanes);
+    let mut lane_rxs = Vec::with_capacity(lanes);
+    for _ in 0..lanes {
+        let (tx, rx) = sync_channel::<RegistrationJob>(depth);
+        lane_txs.push(tx);
+        lane_rxs.push(rx);
+    }
     let (out_tx, out_rx) = channel::<RegistrationOutcome>();
     let (lane_tx, lane_rx) = channel::<LaneStats>();
+    let (done_tx, done_rx) = channel::<usize>();
     let t0 = Instant::now();
 
     std::thread::scope(|scope| -> Result<()> {
         let producer = scope.spawn(move || produce(job_tx));
+        let dispatcher = scope.spawn(move || dispatch_by_affinity(job_rx, lane_txs, done_rx));
         let mut workers = Vec::with_capacity(lanes);
-        for lane in 0..lanes {
-            let job_rx = Arc::clone(&job_rx);
+        for (lane, job_rx) in lane_rxs.into_iter().enumerate() {
             let out_tx = out_tx.clone();
             let lane_tx = lane_tx.clone();
+            let done_tx = done_tx.clone();
             let make_backend = &make_backend;
             workers.push(scope.spawn(move || -> Result<()> {
                 let backend = make_backend(lane)
@@ -526,13 +673,8 @@ where
                     lane,
                     ..Default::default()
                 };
-                loop {
-                    // Lock covers only the receive; alignment runs unlocked.
-                    let msg = job_rx.lock().unwrap().recv();
-                    let job = match msg {
-                        Ok(j) => j,
-                        Err(_) => break, // producer done, queue drained
-                    };
+                // Own queue, no lock: the dispatcher already routed.
+                for job in job_rx.iter() {
                     let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
                     icp.set_input_source(job.source);
                     icp.set_input_target(job.target);
@@ -544,6 +686,7 @@ where
                     let service_ms = t_align.elapsed().as_secs_f64() * 1e3;
                     stats.jobs += 1;
                     stats.service.record_ms(service_ms);
+                    stats.queue_wait.record_ms(queue_wait_ms);
                     out_tx
                         .send(RegistrationOutcome {
                             id: job.id,
@@ -557,21 +700,28 @@ where
                             service_ms,
                         })
                         .ok();
+                    done_tx.send(lane).ok();
                 }
                 stats.device_ms = icp.backend().device_time().as_secs_f64() * 1e3;
+                let (uploads, hits) = icp.target_cache_stats();
+                stats.target_uploads = uploads as usize;
+                stats.target_hits = hits as usize;
                 lane_tx.send(stats).ok();
                 Ok(())
             }));
         }
         // Drop the originals so the collection channels close when the
-        // last lane finishes, and the shared receiver dies with the lanes.
+        // last lane finishes.
         drop(out_tx);
         drop(lane_tx);
-        drop(job_rx);
+        drop(done_tx);
 
         match producer.join() {
             Ok(r) => r.context("job producer")?,
             Err(_) => bail!("job producer panicked"),
+        }
+        if dispatcher.join().is_err() {
+            bail!("affinity dispatcher panicked");
         }
         for w in workers {
             match w.join() {
@@ -655,7 +805,7 @@ pub fn sequence_pair_jobs(
         let cloud = preprocess(&seq.frame(i)?, cfg);
         let mut rng = Pcg32::substream(cfg.seed, i as u64);
         let sample = cloud.random_sample(cfg.source_sample, &mut rng);
-        let full = fit_to_capacity(cloud, cfg.target_capacity);
+        let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
         if let Some(target) = prev.take() {
             jobs.push(RegistrationJob::new(
                 (stream as u64) << 32 | i as u64,
@@ -668,6 +818,129 @@ pub fn sequence_pair_jobs(
         prev = Some(full);
     }
     Ok(jobs)
+}
+
+// ---------------------------------------------------------------------------
+// Scan-to-map localization (resident-target scenario)
+// ---------------------------------------------------------------------------
+
+/// Prebuilt scan-to-map localization workload: one shared map, M scan
+/// jobs against it, plus the ground-truth poses to score against.
+pub struct LocalizationWorkload {
+    /// The map every scan aligns against (frame-0 coordinates). All jobs
+    /// share this one `Arc` and one target key, so the lane pool keeps
+    /// it device-resident.
+    pub map: Arc<PointCloud>,
+    pub jobs: Vec<RegistrationJob>,
+    /// Ground-truth map←sensor poses, indexed like `jobs`.
+    pub truth: Vec<Mat4>,
+}
+
+/// Build a localization workload from a synthetic sequence: the map is
+/// the union of all preprocessed scans placed into frame-0 coordinates
+/// by ground truth (then capacity-bounded), and each scan becomes a job
+/// whose prior is the *previous* frame's true pose — the "last known
+/// pose" a localization stack would start from.
+pub fn localization_jobs(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+) -> Result<LocalizationWorkload> {
+    let scans = scans.min(seq.len());
+    if scans == 0 {
+        bail!("localization needs at least one scan");
+    }
+    let origin = seq.ground_truth[0].inverse_rigid();
+    let mut map = PointCloud::new();
+    let mut sources = Vec::with_capacity(scans);
+    let mut truth = Vec::with_capacity(scans);
+    for i in 0..scans {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
+        let world = cloud.transformed(&pose);
+        map.xyz.extend_from_slice(&world.xyz);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        sources.push(cloud.random_sample(cfg.source_sample, &mut rng));
+        truth.push(pose);
+    }
+    let map = Arc::new(fit_to_capacity(map, cfg.target_capacity, cfg.seed));
+    let key = map.fingerprint(); // hash the shared map once, not per job
+
+    let mut jobs = Vec::with_capacity(scans);
+    for (i, source) in sources.into_iter().enumerate() {
+        let prior = match i {
+            0 => Mat4::IDENTITY,
+            _ => truth[i - 1],
+        };
+        jobs.push(RegistrationJob::new_keyed(
+            i as u64,
+            0,
+            source,
+            Arc::clone(&map),
+            key,
+            prior,
+        ));
+    }
+    Ok(LocalizationWorkload { map, jobs, truth })
+}
+
+/// Result of a [`run_localization`] run.
+#[derive(Debug)]
+pub struct LocalizationResult {
+    pub report: LaneReport,
+    pub map_points: usize,
+    /// Per-scan translation error vs. ground truth (m), in job order.
+    pub translation_errors: Vec<f64>,
+}
+
+impl LocalizationResult {
+    pub fn mean_translation_error(&self) -> f64 {
+        if self.translation_errors.is_empty() {
+            f64::NAN
+        } else {
+            self.translation_errors.iter().sum::<f64>() / self.translation_errors.len() as f64
+        }
+    }
+
+    pub fn max_translation_error(&self) -> f64 {
+        self.translation_errors.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+}
+
+/// Scan-to-map localization: align `scans` frames of `seq` against one
+/// shared map over the lane pool. Every job carries the same target key,
+/// so the affinity dispatcher keeps the map resident — the kd-tree
+/// backend builds its index once for the whole run, and the amortized
+/// upload cost drops to zero (see `benches/target_reuse.rs`).
+pub fn run_localization<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<LocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    let workload = localization_jobs(seq, scans, cfg)?;
+    let map_points = workload.map.len();
+    let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
+    let translation_errors = report
+        .outcomes
+        .iter()
+        .map(|o| {
+            let gt = workload.truth[o.id as usize];
+            (o.transform.translation() - gt.translation()).norm()
+        })
+        .collect();
+    Ok(LocalizationResult {
+        report,
+        map_points,
+        translation_errors,
+    })
 }
 
 #[cfg(test)]
@@ -688,11 +961,90 @@ mod tests {
         for _ in 0..5000 {
             c.push([rng.range(-40.0, 40.0), rng.range(-40.0, 40.0), rng.range(0.0, 5.0)]);
         }
-        let f = fit_to_capacity(c.clone(), 1000);
+        let f = fit_to_capacity(c.clone(), 1000, 7);
         assert!(f.len() <= 1000);
         assert!(f.len() > 100, "over-shrunk to {}", f.len());
         // Under capacity → untouched.
-        assert_eq!(fit_to_capacity(c.clone(), 10_000).len(), c.len());
+        assert_eq!(fit_to_capacity(c.clone(), 10_000, 7).len(), c.len());
+    }
+
+    #[test]
+    fn fit_to_capacity_fallback_respects_seed() {
+        // Force the random-sample fallback with a cloud too spread out
+        // for 12 voxel passes to tame, and check the pipeline seed
+        // actually reaches it (a fixed internal seed made all fallback
+        // samples identical regardless of cfg.seed).
+        let mut rng = Pcg32::new(2);
+        let mut c = PointCloud::with_capacity(4000);
+        for _ in 0..4000 {
+            c.push([
+                rng.range(-4.0e6, 4.0e6),
+                rng.range(-4.0e6, 4.0e6),
+                rng.range(-4.0e6, 4.0e6),
+            ]);
+        }
+        let a = fit_to_capacity(c.clone(), 100, 1);
+        let b = fit_to_capacity(c.clone(), 100, 1);
+        let d = fit_to_capacity(c.clone(), 100, 2);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.xyz, b.xyz, "same seed must reproduce the sample");
+        assert_ne!(a.xyz, d.xyz, "different seeds must differ");
+    }
+
+    #[test]
+    fn localization_workload_shares_one_target() {
+        let seq = tiny_sequence(5);
+        let cfg = PipelineConfig {
+            source_sample: 256,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let w = localization_jobs(&seq, 5, &cfg).unwrap();
+        assert_eq!(w.jobs.len(), 5);
+        assert_eq!(w.truth.len(), 5);
+        let key = w.jobs[0].target_key;
+        for j in &w.jobs {
+            assert_eq!(j.target_key, key, "all scans share the map key");
+            assert!(Arc::ptr_eq(&j.target, &w.map), "no map copies");
+        }
+        // First scan's prior is identity (it *is* the map origin).
+        assert_eq!(w.jobs[0].initial.m, Mat4::IDENTITY.m);
+    }
+
+    #[test]
+    fn localization_tracks_ground_truth() {
+        let seq = tiny_sequence(5);
+        let cfg = PipelineConfig {
+            source_sample: 512,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let res = run_localization(
+            &seq,
+            5,
+            &cfg,
+            2,
+            8,
+            LaneIcpConfig {
+                max_iteration_count: 30,
+                ..Default::default()
+            },
+            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(res.translation_errors.len(), 5);
+        assert!(
+            res.mean_translation_error() < 0.3,
+            "mean localization error {}",
+            res.mean_translation_error()
+        );
+        assert!(res.map_points > 0);
+        // Affinity + shared key: the map was uploaded by at most `lanes`
+        // backends, never once per scan.
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        assert!(uploads <= 2, "{uploads} uploads for 5 same-map scans");
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        assert_eq!(uploads + hits, 5, "every job either uploads or hits");
     }
 
     #[test]

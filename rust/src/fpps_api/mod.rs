@@ -42,10 +42,35 @@ use crate::pointcloud::PointCloud;
 use crate::runtime::{Engine, StepAccumulators};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Identity of the target currently resident on a backend. Every actual
+/// [`KernelBackend::upload_target`] mints a fresh epoch, so a caller
+/// that remembers the epoch it uploaded can later check
+/// [`KernelBackend::target_epoch`] to learn whether its target is still
+/// the resident one — if so, the re-upload (and, for the kd-tree
+/// backend, the index rebuild) is skipped entirely. Epochs are scoped to
+/// one backend instance and never reused within it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TargetEpoch(u64);
+
+impl TargetEpoch {
+    fn mint(counter: &mut u64) -> Self {
+        *counter += 1;
+        TargetEpoch(*counter)
+    }
+}
 
 /// Device abstraction: one ICP step (transform → NN → accumulate) on
 /// padded, fixed-capacity buffers.
+///
+/// The upload path is split the way the paper's Fig. 2 DMA actually
+/// behaves on a target-resident device: [`Self::upload_target`] ships
+/// the reference cloud once and keeps it resident (scan-to-map callers
+/// reuse it across thousands of alignments), while
+/// [`Self::upload_source`] ships the per-alignment query cloud.
 pub trait KernelBackend {
     /// Human-readable backend name (for logs / benches).
     fn name(&self) -> &'static str;
@@ -55,20 +80,36 @@ pub trait KernelBackend {
     fn select_capacity(&self, n_source: usize, n_target: usize)
         -> Result<(usize, usize, usize, usize)>;
 
-    /// Upload one alignment's padded clouds + masks to the device —
-    /// the paper's host→HBM DMA, done once per `align()` call. Buffer
-    /// sizes must match a capacity from [`Self::select_capacity`].
+    /// Upload the padded target cloud + mask — the target half of the
+    /// host→HBM DMA. The target stays resident across any number of
+    /// [`Self::upload_source`] / [`Self::step`] cycles until the next
+    /// `upload_target`. Returns the new resident epoch.
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch>;
+
+    /// Epoch of the currently resident target, if any.
+    fn target_epoch(&self) -> Option<TargetEpoch>;
+
+    /// Upload the padded source cloud + mask — the per-alignment half of
+    /// the DMA. Buffer sizes must match a capacity from
+    /// [`Self::select_capacity`].
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()>;
+
+    /// One ICP iteration over the uploaded clouds: only the cumulative
+    /// transform + threshold travel to the device.
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators>;
+
+    /// Convenience: upload target + source in one call (the pre-split
+    /// `begin()`; one-shot callers that never reuse a target).
     fn begin(
         &mut self,
         src: &[f32],
         tgt: &[f32],
         src_mask: &[f32],
         tgt_mask: &[f32],
-    ) -> Result<()>;
-
-    /// One ICP iteration over the clouds uploaded by [`Self::begin`]:
-    /// only the cumulative transform + threshold travel to the device.
-    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators>;
+    ) -> Result<()> {
+        self.upload_target(tgt, tgt_mask)?;
+        self.upload_source(src, src_mask)
+    }
 
     /// Convenience: `begin` + one `step` (tests, one-shot callers).
     #[allow(clippy::too_many_arguments)]
@@ -92,7 +133,9 @@ pub trait KernelBackend {
 /// Production backend: AOT artifact on the PJRT CPU client.
 pub struct XlaBackend {
     engine: Engine,
-    prepared: Option<crate::runtime::PreparedClouds>,
+    target: Option<(crate::runtime::PreparedTarget, TargetEpoch)>,
+    source: Option<crate::runtime::PreparedSource>,
+    epochs: u64,
     device_time: Duration,
 }
 
@@ -113,7 +156,9 @@ impl XlaBackend {
                     artifacts_dir.display()
                 )
             })?,
-            prepared: None,
+            target: None,
+            source: None,
+            epochs: 0,
             device_time: Duration::ZERO,
         })
     }
@@ -143,34 +188,35 @@ impl KernelBackend for XlaBackend {
         Ok((v.n, v.m, v.block_n, v.block_m))
     }
 
-    fn begin(
-        &mut self,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-    ) -> Result<()> {
-        // Re-resolve the variant for the padded shape (cheap lookup),
-        // then DMA the clouds into device-resident buffers once.
-        let n = src.len() / 3;
-        let m = tgt.len() / 3;
-        let vi = self
-            .engine
-            .manifest()
-            .variants
-            .iter()
-            .position(|v| v.n == n && v.m == m)
-            .with_context(|| format!("no variant with exact capacity {n}x{m}"))?;
-        self.prepared = Some(self.engine.prepare(vi, src, tgt, src_mask, tgt_mask)?);
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+        // DMA the reference cloud into device-resident buffers; it stays
+        // there across alignments until the next upload_target.
+        let prep = self.engine.prepare_target(tgt, tgt_mask)?;
+        let epoch = TargetEpoch::mint(&mut self.epochs);
+        self.target = Some((prep, epoch));
+        Ok(epoch)
+    }
+
+    fn target_epoch(&self) -> Option<TargetEpoch> {
+        self.target.as_ref().map(|(_, e)| *e)
+    }
+
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+        self.source = Some(self.engine.prepare_source(src, src_mask)?);
         Ok(())
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let prep = self
-            .prepared
+        let (tgt, _) = self
+            .target
             .as_ref()
-            .context("step() before begin(): no clouds on device")?;
-        let (acc, timing) = self.engine.execute_prepared(prep, transform, max_dist_sq)?;
+            .context("step() before upload_target(): no target on device")?;
+        let src = self
+            .source
+            .as_ref()
+            .context("step() before upload_source(): no source on device")?;
+        let engine = &mut self.engine;
+        let (acc, timing) = engine.execute_resident(tgt, src, transform, max_dist_sq)?;
         self.device_time += timing.execute;
         Ok(acc)
     }
@@ -186,15 +232,22 @@ impl KernelBackend for XlaBackend {
 pub struct NativeSimBackend {
     cfg: KernelConfig,
     device_time: Duration,
-    /// Clouds "uploaded" by begin() (the mirror of the HBM buffers).
-    state: Option<SimClouds>,
+    /// Resident target (the mirror of the HBM reference-cloud buffers).
+    target: Option<SimTarget>,
+    /// Per-alignment source (the mirror of the query-cloud buffers).
+    source: Option<SimSource>,
+    epochs: u64,
 }
 
-struct SimClouds {
-    src: Vec<f32>,
+struct SimTarget {
     tgt: Vec<f32>,
-    src_mask: Vec<f32>,
     tgt_mask: Vec<f32>,
+    epoch: TargetEpoch,
+}
+
+struct SimSource {
+    src: Vec<f32>,
+    src_mask: Vec<f32>,
 }
 
 impl NativeSimBackend {
@@ -202,7 +255,9 @@ impl NativeSimBackend {
         Self {
             cfg: KernelConfig::default(),
             device_time: Duration::ZERO,
-            state: None,
+            target: None,
+            source: None,
+            epochs: 0,
         }
     }
 
@@ -210,7 +265,9 @@ impl NativeSimBackend {
         Self {
             cfg: KernelConfig { block_n, block_m },
             device_time: Duration::ZERO,
-            state: None,
+            target: None,
+            source: None,
+            epochs: 0,
         }
     }
 }
@@ -236,29 +293,51 @@ impl KernelBackend for NativeSimBackend {
         Ok((n, m, self.cfg.block_n, self.cfg.block_m))
     }
 
-    fn begin(
-        &mut self,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-    ) -> Result<()> {
-        self.state = Some(SimClouds {
-            src: src.to_vec(),
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+        let m = tgt.len() / 3;
+        if tgt_mask.len() != m {
+            bail!("target mask has {} entries for {m} points", tgt_mask.len());
+        }
+        let epoch = TargetEpoch::mint(&mut self.epochs);
+        self.target = Some(SimTarget {
             tgt: tgt.to_vec(),
-            src_mask: src_mask.to_vec(),
             tgt_mask: tgt_mask.to_vec(),
+            epoch,
+        });
+        Ok(epoch)
+    }
+
+    fn target_epoch(&self) -> Option<TargetEpoch> {
+        self.target.as_ref().map(|t| t.epoch)
+    }
+
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+        let n = src.len() / 3;
+        if src_mask.len() != n {
+            bail!("source mask has {} entries for {n} points", src_mask.len());
+        }
+        self.source = Some(SimSource {
+            src: src.to_vec(),
+            src_mask: src_mask.to_vec(),
         });
         Ok(())
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let state = self
-            .state
-            .take()
-            .context("step() before begin(): no clouds uploaded")?;
-        let (src, tgt, src_mask, tgt_mask) =
-            (&state.src, &state.tgt, &state.src_mask, &state.tgt_mask);
+        let target = self
+            .target
+            .as_ref()
+            .context("step() before upload_target(): no target uploaded")?;
+        let source = self
+            .source
+            .as_ref()
+            .context("step() before upload_source(): no source uploaded")?;
+        let (src, tgt, src_mask, tgt_mask) = (
+            &source.src,
+            &target.tgt,
+            &source.src_mask,
+            &target.tgt_mask,
+        );
         let t0 = Instant::now();
         let n = src.len() / 3;
         // Stage 1: point cloud transformer (f32, like the device).
@@ -303,9 +382,7 @@ impl KernelBackend for NativeSimBackend {
         wire.extend_from_slice(&sum_pq);
         wire.push(sum_d);
         self.device_time += t0.elapsed();
-        let acc = StepAccumulators::from_wire(&wire);
-        self.state = Some(state);
-        acc
+        StepAccumulators::from_wire(&wire)
     }
 
     fn device_time(&self) -> Duration {
@@ -320,23 +397,55 @@ impl KernelBackend for NativeSimBackend {
 /// the FPGA wire format; Table III shows the two agree to < 0.01 m.
 pub struct KdTreeCpuBackend {
     device_time: Duration,
-    state: Option<KdClouds>,
+    target: Option<KdTarget>,
+    source: Option<KdSource>,
+    epochs: u64,
+    builds: u64,
+    /// Optional cross-instance build counter (lane-pool tests sum the
+    /// builds of every lane's backend through one shared counter).
+    shared_builds: Option<Arc<AtomicU64>>,
 }
 
-struct KdClouds {
+struct KdTarget {
+    /// Index over the unmasked target points only (masked padding is
+    /// dropped at upload); built once per `upload_target()`, queried
+    /// every step of every alignment that reuses this target.
+    tree: OwnedKdTree,
+    epoch: TargetEpoch,
+}
+
+struct KdSource {
     src: Vec<f32>,
     src_mask: Vec<f32>,
-    /// Index over the unmasked target points only (masked padding is
-    /// dropped at upload); built once per `begin()`, queried every step.
-    tree: OwnedKdTree,
 }
 
 impl KdTreeCpuBackend {
     pub fn new() -> Self {
         Self {
             device_time: Duration::ZERO,
-            state: None,
+            target: None,
+            source: None,
+            epochs: 0,
+            builds: 0,
+            shared_builds: None,
         }
+    }
+
+    /// Like [`Self::new`], but every kd-tree build also increments
+    /// `counter` — lets a test (or a report) count builds across the
+    /// backends of a whole lane pool.
+    pub fn with_shared_build_counter(counter: Arc<AtomicU64>) -> Self {
+        Self {
+            shared_builds: Some(counter),
+            ..Self::new()
+        }
+    }
+
+    /// How many times this instance has built its kd-tree — with target
+    /// caching, K alignments against one unchanged target build exactly
+    /// once.
+    pub fn tree_builds(&self) -> u64 {
+        self.builds
     }
 }
 
@@ -360,16 +469,10 @@ impl KernelBackend for KdTreeCpuBackend {
         Ok((n_source.max(1), n_target.max(1), 1, 1))
     }
 
-    fn begin(
-        &mut self,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-    ) -> Result<()> {
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
         let m = tgt.len() / 3;
-        if tgt_mask.len() != m || src_mask.len() != src.len() / 3 {
-            bail!("mask sizes do not match cloud sizes");
+        if tgt_mask.len() != m {
+            bail!("target mask has {} entries for {m} points", tgt_mask.len());
         }
         let mut kept = PointCloud::with_capacity(m);
         for j in 0..m {
@@ -377,19 +480,43 @@ impl KernelBackend for KdTreeCpuBackend {
                 kept.push([tgt[3 * j], tgt[3 * j + 1], tgt[3 * j + 2]]);
             }
         }
-        self.state = Some(KdClouds {
+        self.builds += 1;
+        if let Some(c) = &self.shared_builds {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        let epoch = TargetEpoch::mint(&mut self.epochs);
+        self.target = Some(KdTarget {
+            tree: OwnedKdTree::build(kept),
+            epoch,
+        });
+        Ok(epoch)
+    }
+
+    fn target_epoch(&self) -> Option<TargetEpoch> {
+        self.target.as_ref().map(|t| t.epoch)
+    }
+
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+        let n = src.len() / 3;
+        if src_mask.len() != n {
+            bail!("source mask has {} entries for {n} points", src_mask.len());
+        }
+        self.source = Some(KdSource {
             src: src.to_vec(),
             src_mask: src_mask.to_vec(),
-            tree: OwnedKdTree::build(kept),
         });
         Ok(())
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let state = self
-            .state
+        let target = self
+            .target
             .as_ref()
-            .context("step() before begin(): no clouds uploaded")?;
+            .context("step() before upload_target(): no target uploaded")?;
+        let state = self
+            .source
+            .as_ref()
+            .context("step() before upload_source(): no source uploaded")?;
         let t0 = Instant::now();
         let n = state.src.len() / 3;
         // Transform in f32, like the device's point cloud transformer.
@@ -411,10 +538,10 @@ impl KernelBackend for KdTreeCpuBackend {
             ];
             // Bounded search: the threshold prunes the descent, and the
             // strict bound matches the `icp` CPU baseline's rejection.
-            let Some(nb) = state.tree.nearest_within_sq(p, max_dist_sq) else {
+            let Some(nb) = target.tree.nearest_within_sq(p, max_dist_sq) else {
                 continue;
             };
-            let q = state.tree.cloud().get(nb.index as usize);
+            let q = target.tree.cloud().get(nb.index as usize);
             let pv = Vec3::from_f32(p);
             let qv = Vec3::from_f32(q);
             acc.count += 1.0;
@@ -523,17 +650,27 @@ impl KernelBackend for BackendHandle {
         }
     }
 
-    fn begin(
-        &mut self,
-        src: &[f32],
-        tgt: &[f32],
-        src_mask: &[f32],
-        tgt_mask: &[f32],
-    ) -> Result<()> {
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
         match self {
-            BackendHandle::Xla(b) => b.begin(src, tgt, src_mask, tgt_mask),
-            BackendHandle::NativeSim(b) => b.begin(src, tgt, src_mask, tgt_mask),
-            BackendHandle::KdTreeCpu(b) => b.begin(src, tgt, src_mask, tgt_mask),
+            BackendHandle::Xla(b) => b.upload_target(tgt, tgt_mask),
+            BackendHandle::NativeSim(b) => b.upload_target(tgt, tgt_mask),
+            BackendHandle::KdTreeCpu(b) => b.upload_target(tgt, tgt_mask),
+        }
+    }
+
+    fn target_epoch(&self) -> Option<TargetEpoch> {
+        match self {
+            BackendHandle::Xla(b) => b.target_epoch(),
+            BackendHandle::NativeSim(b) => b.target_epoch(),
+            BackendHandle::KdTreeCpu(b) => b.target_epoch(),
+        }
+    }
+
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+        match self {
+            BackendHandle::Xla(b) => b.upload_source(src, src_mask),
+            BackendHandle::NativeSim(b) => b.upload_source(src, src_mask),
+            BackendHandle::KdTreeCpu(b) => b.upload_source(src, src_mask),
         }
     }
 
@@ -585,20 +722,29 @@ impl FppsResult {
 pub struct FppsIcp<B: KernelBackend> {
     backend: B,
     source: Option<PointCloud>,
-    target: Option<PointCloud>,
+    /// Shared so scan-to-map callers can hand the same map to thousands
+    /// of alignments without cloning it (`Arc::ptr_eq` is also the fast
+    /// path of the unchanged-target check).
+    target: Option<Arc<PointCloud>>,
     initial_transform: Mat4,
     max_correspondence_distance: f32,
     max_iteration_count: u32,
     transformation_epsilon: f64,
-    /// Prepared (padded) target + mask, rebuilt when the target changes.
-    prepared_target: Option<PreparedTarget>,
+    /// Padded target + mask staged for the device, kept (with the epoch
+    /// it was uploaded under) while the target cloud stays unchanged.
+    staged_target: Option<StagedTarget>,
+    target_uploads: u64,
+    target_cache_hits: u64,
 }
 
-struct PreparedTarget {
+struct StagedTarget {
     tgt: Vec<f32>,
     tgt_mask: Vec<f32>,
-    capacity: (usize, usize, usize, usize),
-    n_source_hint: usize,
+    /// Target capacity the padding was built for (re-padded if capacity
+    /// selection changes, e.g. a different artifact variant).
+    cap_m: usize,
+    /// Epoch this staging was uploaded under; `None` = not yet uploaded.
+    epoch: Option<TargetEpoch>,
 }
 
 impl FppsIcp<XlaBackend> {
@@ -643,12 +789,21 @@ impl<B: KernelBackend> FppsIcp<B> {
             max_correspondence_distance: 1.0,
             max_iteration_count: 50,
             transformation_epsilon: 1e-5,
-            prepared_target: None,
+            staged_target: None,
+            target_uploads: 0,
+            target_cache_hits: 0,
         }
     }
 
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// `(uploads, cache hits)` of the resident-target path: how many
+    /// `align()` calls actually shipped the target to the device vs.
+    /// found it already resident.
+    pub fn target_cache_stats(&self) -> (u64, u64) {
+        (self.target_uploads, self.target_cache_hits)
     }
 
     /// `setTransformationMatrix()`: initial transform applied before the
@@ -664,10 +819,24 @@ impl<B: KernelBackend> FppsIcp<B> {
         self
     }
 
-    /// `setInputTarget()`.
-    pub fn set_input_target(&mut self, cloud: PointCloud) -> &mut Self {
+    /// `setInputTarget()`. Accepts an owned cloud or a shared
+    /// `Arc<PointCloud>` (map reuse). Setting a target whose content is
+    /// unchanged keeps the staged upload — and the device-resident
+    /// target — alive, so the next `align()` skips the re-upload.
+    pub fn set_input_target(&mut self, cloud: impl Into<Arc<PointCloud>>) -> &mut Self {
+        let cloud = cloud.into();
+        let unchanged = match &self.target {
+            // Pointer equality first (free for shared maps), full content
+            // compare otherwise — a false "changed" only costs a
+            // re-upload, but a false "unchanged" would corrupt results,
+            // so content equality is exact, not a fingerprint.
+            Some(t) => Arc::ptr_eq(t, &cloud) || **t == *cloud,
+            None => false,
+        };
+        if !unchanged {
+            self.staged_target = None;
+        }
         self.target = Some(cloud);
-        self.prepared_target = None;
         self
     }
 
@@ -706,27 +875,37 @@ impl<B: KernelBackend> FppsIcp<B> {
             bail!("source/target cloud is empty");
         }
 
-        // Prepare padded device buffers (upload happens per step in the
-        // PJRT backend; a real FPGA would DMA once — see coordinator's
-        // double-buffering for where that matters).
-        if self
-            .prepared_target
-            .as_ref()
-            .map(|p| p.n_source_hint != source.len())
-            .unwrap_or(true)
-        {
-            let capacity = self.backend.select_capacity(source.len(), target.len())?;
-            let (tgt, tgt_mask) = pad_to(&target.xyz, capacity.1);
-            self.prepared_target = Some(PreparedTarget {
+        // Capacity selection is per-workload (the artifact variant can
+        // change with the source size), but the staged target only
+        // depends on the target capacity — an unchanged (target, cap_m)
+        // pair survives across alignments with different sources.
+        let (cap_n, cap_m, ..) = self.backend.select_capacity(source.len(), target.len())?;
+        if !matches!(&self.staged_target, Some(s) if s.cap_m == cap_m) {
+            let (tgt, tgt_mask) = pad_to(&target.xyz, cap_m);
+            self.staged_target = Some(StagedTarget {
                 tgt,
                 tgt_mask,
-                capacity,
-                n_source_hint: source.len(),
+                cap_m,
+                epoch: None,
             });
         }
-        let prep = self.prepared_target.as_ref().unwrap();
-        let (cap_n, _cap_m, _bn, _bm) = prep.capacity;
+
+        // Target half of the Fig. 2 DMA: only if the device does not
+        // already hold this exact target (cross-frame target cache —
+        // scan-to-map localization uploads its map once, and the kd-tree
+        // backend builds its index once).
+        let staged = self.staged_target.as_mut().unwrap();
+        if staged.epoch.is_some() && staged.epoch == self.backend.target_epoch() {
+            self.target_cache_hits += 1;
+        } else {
+            staged.epoch = Some(self.backend.upload_target(&staged.tgt, &staged.tgt_mask)?);
+            self.target_uploads += 1;
+        }
+
+        // Source half: once per alignment; iterations then only ship the
+        // 4×4 transform + threshold.
         let (src, src_mask) = pad_to(&source.xyz, cap_n);
+        self.backend.upload_source(&src, &src_mask)?;
 
         let max_d2 = self.max_correspondence_distance * self.max_correspondence_distance;
         let mut cumulative = self.initial_transform;
@@ -734,11 +913,6 @@ impl<B: KernelBackend> FppsIcp<B> {
         let mut stop = StopReason::MaxIterations;
         let mut rmse = f64::NAN;
         let mut iterations = 0;
-
-        // Host→device DMA once per alignment (the Fig. 2 upload);
-        // iterations then only ship the 4×4 transform + threshold.
-        self.backend
-            .begin(&src, &prep.tgt, &src_mask, &prep.tgt_mask)?;
         for _ in 0..self.max_iteration_count {
             iterations += 1;
             let acc = self.backend.step(&cumulative, max_d2)?;
@@ -978,6 +1152,96 @@ mod tests {
         assert_eq!(a.transformation.m, b.transformation.m);
         assert_eq!(a.rmse.to_bits(), b.rmse.to_bits());
         assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn unchanged_target_skips_reupload_and_matches_fresh() {
+        let target = structured_cloud(700, 30);
+        let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, -0.05, 0.0));
+        let sources: Vec<PointCloud> = (0..4)
+            .map(|k| {
+                let mut rng = Pcg32::new(40 + k);
+                let mut s = target.transformed(&gt.inverse_rigid());
+                s.add_noise(0.005, &mut rng);
+                s
+            })
+            .collect();
+
+        // Cached: one session, same target across all aligns.
+        let mut cached = FppsIcp::native_sim();
+        let mut cached_results = Vec::new();
+        for s in &sources {
+            cached.set_input_source(s.clone());
+            cached.set_input_target(target.clone());
+            cached_results.push(cached.align().unwrap());
+        }
+        let (uploads, hits) = cached.target_cache_stats();
+        assert_eq!(uploads, 1, "one upload for an unchanged target");
+        assert_eq!(hits, 3);
+
+        // Fresh: a new session per align (always re-uploads).
+        for (s, c) in sources.iter().zip(&cached_results) {
+            let mut fresh = FppsIcp::native_sim();
+            fresh.set_input_source(s.clone());
+            fresh.set_input_target(target.clone());
+            let f = fresh.align().unwrap();
+            assert_eq!(f.transformation.m, c.transformation.m);
+            assert_eq!(f.rmse.to_bits(), c.rmse.to_bits());
+            assert_eq!(f.iterations, c.iterations);
+        }
+    }
+
+    #[test]
+    fn kdtree_builds_once_per_target_epoch() {
+        let target_a = structured_cloud(600, 31);
+        let target_b = structured_cloud(600, 32);
+        let source = target_a.transformed(
+            &Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.05, 0.0, 0.0)).inverse_rigid(),
+        );
+        let mut icp = FppsIcp::kdtree_cpu();
+        for _ in 0..3 {
+            icp.set_input_source(source.clone());
+            icp.set_input_target(target_a.clone());
+            icp.align().unwrap();
+        }
+        assert_eq!(icp.backend().tree_builds(), 1, "built once");
+        // A genuinely different target invalidates the epoch.
+        icp.set_input_source(source.clone());
+        icp.set_input_target(target_b.clone());
+        icp.align().unwrap();
+        assert_eq!(icp.backend().tree_builds(), 2);
+        // Returning to A is a *content* change again (no LRU, one slot).
+        icp.set_input_source(source);
+        icp.set_input_target(target_a);
+        icp.align().unwrap();
+        assert_eq!(icp.backend().tree_builds(), 3);
+    }
+
+    #[test]
+    fn shared_map_via_arc_hits_pointer_fast_path() {
+        let map = Arc::new(structured_cloud(800, 33));
+        let mut icp = FppsIcp::native_sim();
+        for k in 0..3u64 {
+            let source = map.random_sample(400, &mut Pcg32::new(50 + k));
+            icp.set_input_source(source);
+            icp.set_input_target(Arc::clone(&map));
+            icp.align().unwrap();
+        }
+        let (uploads, hits) = icp.target_cache_stats();
+        assert_eq!((uploads, hits), (1, 2));
+    }
+
+    #[test]
+    fn epoch_tracks_actual_uploads() {
+        let mut b = NativeSimBackend::with_blocks(4, 4);
+        assert!(b.target_epoch().is_none());
+        let tgt = vec![0.5f32; 4 * 3];
+        let mask = vec![1f32; 4];
+        let e1 = b.upload_target(&tgt, &mask).unwrap();
+        assert_eq!(b.target_epoch(), Some(e1));
+        let e2 = b.upload_target(&tgt, &mask).unwrap();
+        assert_ne!(e1, e2, "every upload mints a fresh epoch");
+        assert_eq!(b.target_epoch(), Some(e2));
     }
 
     #[test]

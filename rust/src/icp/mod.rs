@@ -12,7 +12,7 @@
 //!    (Eq. 3), stop when `T_j` is within `transformation_epsilon` of
 //!    identity or `max_iterations` is reached.
 
-use crate::kdtree::KdTree;
+use crate::kdtree::{KdTree, OwnedKdTree};
 use crate::math::{kabsch_from_pairs, Mat4, Vec3};
 use crate::nn;
 use crate::pointcloud::PointCloud;
@@ -105,14 +105,61 @@ pub fn align(
     initial_guess: &Mat4,
     params: &IcpParams,
 ) -> IcpResult {
-    let t_start = std::time::Instant::now();
     let tree = match params.search {
         SearchStrategy::KdTree | SearchStrategy::KdTreeApproximate { .. } => {
             Some(KdTree::build(target))
         }
         _ => None,
     };
+    align_impl(
+        source,
+        target,
+        &CorrSource::PerCall(tree.as_ref()),
+        initial_guess,
+        params,
+    )
+}
 
+/// Align `source` onto a target already indexed by an [`OwnedKdTree`] —
+/// the CPU baseline's map-reuse path. Localization-style callers build
+/// the map index once and amortize it over many scans, mirroring the
+/// device-side resident-target cache in `fpps_api`. Both trees use the
+/// same build and traversal, so this produces results identical to
+/// [`align`] with [`SearchStrategy::KdTree`] on `tree.cloud()`.
+pub fn align_with_tree(
+    source: &PointCloud,
+    tree: &OwnedKdTree,
+    initial_guess: &Mat4,
+    params: &IcpParams,
+) -> IcpResult {
+    align_impl(
+        source,
+        tree.cloud(),
+        &CorrSource::Resident(tree),
+        initial_guess,
+        params,
+    )
+}
+
+/// Where each iteration's correspondences come from: the per-call search
+/// strategy (over a tree built for this alignment, if any), or a
+/// caller-owned resident index (map reuse).
+enum CorrSource<'a> {
+    PerCall(Option<&'a KdTree<'a>>),
+    Resident(&'a OwnedKdTree),
+}
+
+/// The shared ICP outer loop — one implementation for the per-call and
+/// resident-index paths, so the two cannot drift apart (the map-reuse
+/// bit-identity tests depend on that).
+fn align_impl(
+    source: &PointCloud,
+    target: &PointCloud,
+    corr: &CorrSource,
+    initial_guess: &Mat4,
+    params: &IcpParams,
+) -> IcpResult {
+    let t_start = std::time::Instant::now();
     let mut cumulative = *initial_guess;
     let mut current = source.transformed(initial_guess);
     let mut stats = Vec::new();
@@ -124,7 +171,7 @@ pub fn align(
         iterations += 1;
         // 1+2: correspondence estimation with rejection.
         let nn_start = std::time::Instant::now();
-        let pairs = find_correspondences(&current, target, tree.as_ref(), params);
+        let pairs = find_correspondences(&current, target, corr, params);
         let nn_time = nn_start.elapsed();
 
         let mut sum_sq = 0.0f64;
@@ -189,12 +236,26 @@ pub fn align(
 fn find_correspondences(
     current: &PointCloud,
     target: &PointCloud,
-    tree: Option<&KdTree>,
+    corr: &CorrSource,
     params: &IcpParams,
 ) -> Vec<(u32, u32, f32)> {
     let max_d = params.max_correspondence_distance;
     let max_d2 = max_d * max_d;
     let mut out = Vec::with_capacity(current.len());
+    let tree = match corr {
+        CorrSource::Resident(tree) => {
+            // Resident index: exact bounded NN with the same build and
+            // traversal as the borrowing KdTree, so the pairs match
+            // SearchStrategy::KdTree exactly.
+            for (i, p) in current.iter().enumerate() {
+                if let Some(n) = tree.nearest_within_sq(p, max_d2) {
+                    out.push((i as u32, n.index, n.dist_sq));
+                }
+            }
+            return out;
+        }
+        CorrSource::PerCall(tree) => *tree,
+    };
     match (params.search, tree) {
         (SearchStrategy::KdTree, Some(tree)) => {
             for (i, p) in current.iter().enumerate() {
@@ -337,6 +398,24 @@ mod tests {
                 < 1e-6
         );
         assert!((a.transformation.translation() - b.transformation.translation()).norm() < 1e-5);
+    }
+
+    #[test]
+    fn align_with_tree_matches_align_bitwise() {
+        // Map-reuse path (prebuilt OwnedKdTree) vs per-call KdTree build:
+        // same build + traversal → identical correspondences → identical
+        // transforms, so amortizing the build cannot change results.
+        let target = structured_cloud(900, 19);
+        let mut rng = Pcg32::new(20);
+        let gt = small_transform(&mut rng);
+        let source = target.transformed(&gt.inverse_rigid());
+        let a = align(&source, &target, &Mat4::IDENTITY, &IcpParams::default());
+        let tree = OwnedKdTree::build(target.clone());
+        let b = align_with_tree(&source, &tree, &Mat4::IDENTITY, &IcpParams::default());
+        assert_eq!(a.transformation.m, b.transformation.m);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.stop, b.stop);
     }
 
     #[test]

@@ -368,12 +368,20 @@ pub struct OwnedKdTree {
 }
 
 impl OwnedKdTree {
+    /// Build with the default leaf size (16, matching [`KdTree::build`] so
+    /// the owned and borrowing trees traverse identically — a requirement
+    /// for the map-reuse path to stay bit-identical to per-call builds).
     pub fn build(cloud: PointCloud) -> Self {
+        Self::build_with_leaf_size(cloud, 16)
+    }
+
+    pub fn build_with_leaf_size(cloud: PointCloud, leaf_size: usize) -> Self {
+        assert!(leaf_size >= 1);
         let mut order: Vec<u32> = (0..cloud.len() as u32).collect();
         let mut nodes = Vec::new();
         if !cloud.is_empty() {
             let n = order.len();
-            build_rec(&cloud, &mut nodes, &mut order, 0, n, 16);
+            build_rec(&cloud, &mut nodes, &mut order, 0, n, leaf_size);
         }
         Self {
             cloud,
@@ -384,6 +392,10 @@ impl OwnedKdTree {
 
     pub fn cloud(&self) -> &PointCloud {
         &self.cloud
+    }
+
+    pub fn len(&self) -> usize {
+        self.cloud.len()
     }
 
     pub fn is_empty(&self) -> bool {

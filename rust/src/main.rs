@@ -5,6 +5,7 @@
 //! * `align`     — register two point cloud files (KITTI .bin)
 //! * `odometry`  — run scan-to-scan odometry on a synthetic sequence
 //! * `batch`     — multi-lane batched registration over frame pairs
+//! * `localize`  — scan-to-map localization against one resident map
 //! * `resources` — print the Table II resource report
 //! * `power`     — print the §IV.D power/efficiency report
 //! * `pipesim`   — run the Fig. 3 cycle-level pipeline simulation
@@ -17,8 +18,10 @@
 
 use anyhow::{bail, Context, Result};
 use fpps::cli::{backend_selection, Parser};
+use fpps::config::{KvConfig, RunConfig};
 use fpps::coordinator::{
-    run_odometry, run_registration_batch, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+    run_localization, run_odometry, run_registration_batch, sequence_pair_jobs, LaneIcpConfig,
+    PipelineConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
 use fpps::fpps_api::{FppsIcp, KernelBackend};
@@ -40,6 +43,7 @@ fn run() -> Result<()> {
         "align" => cmd_align(),
         "odometry" => cmd_odometry(),
         "batch" => cmd_batch(),
+        "localize" => cmd_localize(),
         "resources" => cmd_resources(),
         "power" => cmd_power(),
         "pipesim" => cmd_pipesim(),
@@ -63,6 +67,7 @@ fn print_usage() {
          \x20 align      register two KITTI .bin clouds (--source, --target)\n\
          \x20 odometry   scan-to-scan odometry over a synthetic sequence\n\
          \x20 batch      multi-lane batched registration (--lanes, --pairs)\n\
+         \x20 localize   scan-to-map localization on a resident map (--scans)\n\
          \x20 resources  Table II resource utilisation report\n\
          \x20 power      power / energy-efficiency report (§IV.D)\n\
          \x20 pipesim    Fig. 3 NN-pipeline cycle simulation\n\
@@ -248,6 +253,91 @@ fn cmd_batch() -> Result<()> {
         report.service.percentile_ms(50.0),
         report.service.percentile_ms(99.0),
         report.queue_wait.mean_ms(),
+    );
+    Ok(())
+}
+
+fn cmd_localize() -> Result<()> {
+    let p = Parser::new(
+        "fpps localize",
+        "scan-to-map localization: M scans against one resident map",
+    )
+    .opt("config", "key=value run config supplying defaults", None)
+    .opt("sequence", "sequence name 00..09", Some("03"))
+    .opt("scans", "scans to localize (default: config `scans`, 16)", None)
+    .opt("sample", "source sample size (default: config `source_sample`)", None)
+    .opt("capacity", "map capacity (default: config `target_capacity`)", None)
+    .opt("seed", "dataset seed (default: config `seed`)", None)
+    .opt("lanes", "worker lanes (default: config `lanes`)", None)
+    .opt("queue-depth", "bounded job-queue depth", Some("4"))
+    .backend_opts();
+    let a = p.parse_env(2)?;
+    let name = a.get("sequence").unwrap().to_string();
+    let spec = sequence_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown sequence {name}"))?;
+    // Config file (if any) supplies the defaults; CLI flags override.
+    let rc = match a.get("config") {
+        Some(path) => RunConfig::from_kv(&KvConfig::load(std::path::Path::new(path))?)?,
+        None => RunConfig::default(),
+    };
+    let scans: usize = a.get_or("scans", rc.scans)?;
+    let seed: u64 = a.get_or("seed", rc.seed)?;
+    let lanes: usize = a.get_or("lanes", rc.lanes)?;
+    let queue_depth: usize = a.get_or("queue-depth", 4)?;
+    let (kind, artifacts) = backend_selection(&a)?;
+
+    let seq = Sequence::synthetic(
+        spec,
+        scans,
+        seed,
+        LidarConfig {
+            beams: 32,
+            azimuth_steps: 400,
+            ..Default::default()
+        },
+    );
+    let cfg = PipelineConfig {
+        source_sample: a.get_or("sample", rc.source_sample)?,
+        target_capacity: a.get_or("capacity", rc.target_capacity)?,
+        seed,
+        ..Default::default()
+    };
+    let icp_cfg = LaneIcpConfig {
+        max_correspondence_distance: rc.max_correspondence_distance,
+        max_iteration_count: rc.max_iterations,
+        transformation_epsilon: rc.transformation_epsilon,
+    };
+
+    let artifacts = artifacts.as_path();
+    let res = run_localization(&seq, scans, &cfg, lanes, queue_depth, icp_cfg, |_lane| {
+        fpps::fpps_api::BackendHandle::create(kind, artifacts)
+    })?;
+
+    println!(
+        "localized {} scans against a {}-point resident map over {lanes} lane(s)",
+        res.report.outcomes.len(),
+        res.map_points,
+    );
+    res.report.lane_table("Per-lane summary").print();
+    let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+    println!(
+        "map residency: {uploads} upload(s), {hits} cache hit(s) — the map is shipped \
+         per lane, not per scan"
+    );
+    println!(
+        "aggregate: {:.2} jobs/s; service p50 {:.1} ms, p99 {:.1} ms; queue wait mean {:.1} ms",
+        res.report.jobs_per_s(),
+        res.report.service.percentile_ms(50.0),
+        res.report.service.percentile_ms(99.0),
+        res.report.queue_wait.mean_ms(),
+    );
+    println!(
+        "localization error: mean {:.3} m, max {:.3} m",
+        res.mean_translation_error(),
+        res.max_translation_error()
     );
     Ok(())
 }

@@ -172,6 +172,23 @@ impl PointCloud {
         out
     }
 
+    /// Content fingerprint over the exact f32 bit pattern (FNV-1a-64).
+    /// Two clouds with equal `xyz` buffers always fingerprint equal, so
+    /// this is the identity key of the cross-frame target cache: a job
+    /// whose target fingerprints like the device-resident one can skip
+    /// the re-upload (and the kd-tree rebuild) entirely.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h ^= self.xyz.len() as u64;
+        h = h.wrapping_mul(PRIME);
+        for v in &self.xyz {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+
     /// Append gaussian sensor noise (σ per axis).
     pub fn add_noise(&mut self, sigma: f32, rng: &mut Pcg32) {
         for v in self.xyz.iter_mut() {
@@ -215,6 +232,24 @@ mod tests {
             ]);
         }
         c
+    }
+
+    #[test]
+    fn fingerprint_is_content_identity() {
+        let a = cloud(200, 1);
+        let b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // A single-ulp change in one coordinate changes the fingerprint.
+        let mut c = a.clone();
+        c.xyz[17] = f32::from_bits(c.xyz[17].to_bits() ^ 1);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // Different lengths never collide trivially.
+        let mut d = a.clone();
+        d.push([0.0, 0.0, 0.0]);
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        // Empty cloud has a stable fingerprint.
+        let empty = PointCloud::new();
+        assert_eq!(empty.fingerprint(), PointCloud::new().fingerprint());
     }
 
     #[test]

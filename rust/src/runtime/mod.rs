@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-pub use engine::{Engine, PreparedClouds};
+pub use engine::{Engine, PreparedSource, PreparedTarget};
 
 /// One fixed-shape compiled variant of the device program.
 #[derive(Clone, Debug)]
@@ -168,21 +168,36 @@ mod engine {
     use std::path::Path;
     use std::time::Instant;
 
-    /// Cloud buffers resident on the device — the paper's HBM-uploaded
-    /// point cloud data, written once per alignment and reused across all
-    /// ICP iterations (only the 4×4 transform and the scalar threshold
-    /// change per iteration).
-    pub struct PreparedClouds {
-        vi: usize,
-        src: xla::PjRtBuffer,
+    /// Target half of the device-resident cloud buffers — the paper's
+    /// HBM-uploaded reference cloud. Uploaded once per *target*, not per
+    /// alignment: scan-to-map callers keep one of these alive across
+    /// thousands of queries (the cross-frame target cache).
+    pub struct PreparedTarget {
+        m: usize,
         tgt: xla::PjRtBuffer,
-        src_mask: xla::PjRtBuffer,
         tgt_mask: xla::PjRtBuffer,
     }
 
-    impl PreparedClouds {
-        pub fn variant_index(&self) -> usize {
-            self.vi
+    impl PreparedTarget {
+        /// Padded target capacity (points).
+        pub fn points(&self) -> usize {
+            self.m
+        }
+    }
+
+    /// Source half of the device-resident cloud buffers — uploaded once
+    /// per alignment and reused across all ICP iterations (only the 4×4
+    /// transform and the scalar threshold change per iteration).
+    pub struct PreparedSource {
+        n: usize,
+        src: xla::PjRtBuffer,
+        src_mask: xla::PjRtBuffer,
+    }
+
+    impl PreparedSource {
+        /// Padded source capacity (points).
+        pub fn points(&self) -> usize {
+            self.n
         }
     }
 
@@ -300,60 +315,77 @@ mod engine {
             Ok((acc, StepTiming { upload, execute }))
         }
 
-        /// Upload the padded clouds + masks to device buffers once
-        /// (the host→HBM DMA of Fig. 2). Returns a handle to reuse across
-        /// iterations via [`Engine::execute_prepared`].
-        pub fn prepare(
-            &self,
-            vi: usize,
-            src: &[f32],
-            tgt: &[f32],
-            src_mask: &[f32],
-            tgt_mask: &[f32],
-        ) -> Result<PreparedClouds> {
-            let v = &self.manifest.variants[vi];
-            if src.len() != v.n * 3 || tgt.len() != v.m * 3 {
-                bail!(
-                    "variant {} expects {}x{} points, got {}x{}",
-                    v.name,
-                    v.n,
-                    v.m,
-                    src.len() / 3,
-                    tgt.len() / 3
-                );
+        /// Upload the padded target cloud + mask to device buffers once
+        /// (the target half of the Fig. 2 host→HBM DMA). The returned
+        /// handle outlives any number of alignments against this target —
+        /// pair it with fresh [`Engine::prepare_source`] uploads and
+        /// execute via [`Engine::execute_resident`].
+        pub fn prepare_target(&self, tgt: &[f32], tgt_mask: &[f32]) -> Result<PreparedTarget> {
+            let m = tgt.len() / 3;
+            if tgt_mask.len() != m {
+                bail!("target mask has {} entries for {m} points", tgt_mask.len());
             }
-            if src_mask.len() != v.n || tgt_mask.len() != v.m {
-                bail!("mask sizes do not match variant {}", v.name);
+            if !self.manifest.variants.iter().any(|v| v.m == m) {
+                bail!("no artifact variant with target capacity {m}");
             }
-            Ok(PreparedClouds {
-                vi,
-                src: self
-                    .client
-                    .buffer_from_host_buffer(src, &[v.n, 3], None)
-                    .map_err(xla_err)?,
+            Ok(PreparedTarget {
+                m,
                 tgt: self
                     .client
-                    .buffer_from_host_buffer(tgt, &[v.m, 3], None)
-                    .map_err(xla_err)?,
-                src_mask: self
-                    .client
-                    .buffer_from_host_buffer(src_mask, &[v.n], None)
+                    .buffer_from_host_buffer(tgt, &[m, 3], None)
                     .map_err(xla_err)?,
                 tgt_mask: self
                     .client
-                    .buffer_from_host_buffer(tgt_mask, &[v.m], None)
+                    .buffer_from_host_buffer(tgt_mask, &[m], None)
+                    .map_err(xla_err)?,
+            })
+        }
+
+        /// Upload the padded source cloud + mask (the per-alignment half
+        /// of the DMA).
+        pub fn prepare_source(&self, src: &[f32], src_mask: &[f32]) -> Result<PreparedSource> {
+            let n = src.len() / 3;
+            if src_mask.len() != n {
+                bail!("source mask has {} entries for {n} points", src_mask.len());
+            }
+            if !self.manifest.variants.iter().any(|v| v.n == n) {
+                bail!("no artifact variant with source capacity {n}");
+            }
+            Ok(PreparedSource {
+                n,
+                src: self
+                    .client
+                    .buffer_from_host_buffer(src, &[n, 3], None)
+                    .map_err(xla_err)?,
+                src_mask: self
+                    .client
+                    .buffer_from_host_buffer(src_mask, &[n], None)
                     .map_err(xla_err)?,
             })
         }
 
         /// One ICP iteration over device-resident clouds: uploads only the
-        /// 4×4 transform + threshold, executes buffer-to-buffer.
-        pub fn execute_prepared(
+        /// 4×4 transform + threshold, executes buffer-to-buffer. The
+        /// (source, target) capacities must name a compiled variant.
+        pub fn execute_resident(
             &mut self,
-            prep: &PreparedClouds,
+            tgt: &PreparedTarget,
+            src: &PreparedSource,
             transform: &Mat4,
             max_dist_sq: f32,
         ) -> Result<(StepAccumulators, StepTiming)> {
+            let vi = self
+                .manifest
+                .variants
+                .iter()
+                .position(|v| v.n == src.n && v.m == tgt.m)
+                .with_context(|| {
+                    format!(
+                        "no compiled variant with capacity {}x{} \
+                         (resident target and uploaded source disagree?)",
+                        src.n, tgt.m
+                    )
+                })?;
             let t0 = Instant::now();
             let t_mat = transform.to_f32_row_major();
             let t_buf = self
@@ -367,14 +399,14 @@ mod engine {
             let upload = t0.elapsed();
 
             let t1 = Instant::now();
-            let exe = self.executables[prep.vi]
+            let exe = self.executables[vi]
                 .as_ref()
                 .expect("variant compiled at load");
             let args = [
-                &prep.src,
-                &prep.tgt,
-                &prep.src_mask,
-                &prep.tgt_mask,
+                &src.src,
+                &tgt.tgt,
+                &src.src_mask,
+                &tgt.tgt_mask,
                 &t_buf,
                 &d_buf,
             ];
@@ -406,7 +438,7 @@ mod engine {
     //! Stub engine compiled when the `xla` feature is off.
     //!
     //! [`Engine::load`] always fails with an actionable error, so the
-    //! engine can never exist at runtime (both types contain an
+    //! engine can never exist at runtime (every type here contains an
     //! uninhabited field); every method body is therefore unreachable and
     //! typechecks via the empty match. Callers such as
     //! `fpps_api::XlaBackend` and the CLI keep compiling unchanged and
@@ -419,13 +451,24 @@ mod engine {
 
     enum Never {}
 
-    /// Stub for the device-resident cloud buffers (never constructed).
-    pub struct PreparedClouds {
+    /// Stub for the device-resident target buffers (never constructed).
+    pub struct PreparedTarget {
         never: Never,
     }
 
-    impl PreparedClouds {
-        pub fn variant_index(&self) -> usize {
+    impl PreparedTarget {
+        pub fn points(&self) -> usize {
+            match self.never {}
+        }
+    }
+
+    /// Stub for the device-resident source buffers (never constructed).
+    pub struct PreparedSource {
+        never: Never,
+    }
+
+    impl PreparedSource {
+        pub fn points(&self) -> usize {
             match self.never {}
         }
     }
@@ -470,20 +513,18 @@ mod engine {
             match self.never {}
         }
 
-        pub fn prepare(
-            &self,
-            _vi: usize,
-            _src: &[f32],
-            _tgt: &[f32],
-            _src_mask: &[f32],
-            _tgt_mask: &[f32],
-        ) -> Result<PreparedClouds> {
+        pub fn prepare_target(&self, _tgt: &[f32], _tgt_mask: &[f32]) -> Result<PreparedTarget> {
             match self.never {}
         }
 
-        pub fn execute_prepared(
+        pub fn prepare_source(&self, _src: &[f32], _src_mask: &[f32]) -> Result<PreparedSource> {
+            match self.never {}
+        }
+
+        pub fn execute_resident(
             &mut self,
-            _prep: &PreparedClouds,
+            _tgt: &PreparedTarget,
+            _src: &PreparedSource,
             _transform: &Mat4,
             _max_dist_sq: f32,
         ) -> Result<(StepAccumulators, StepTiming)> {

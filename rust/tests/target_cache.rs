@@ -1,0 +1,251 @@
+//! Integration tests for the cross-frame target cache: the cached
+//! (resident-target) path must be bit-identical to fresh-upload on
+//! seeded synthetic sequences, the kd-tree backend must build its index
+//! exactly once per target epoch — including across a whole lane pool
+//! via affinity scheduling — and a genuinely changed target must
+//! invalidate the epoch.
+
+use fpps::coordinator::{
+    localization_jobs, run_registration_batch, LaneIcpConfig, PipelineConfig, RegistrationJob,
+};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::{FppsIcp, KdTreeCpuBackend, NativeSimBackend};
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+fn tiny_sequence(frames: usize) -> Sequence {
+    let spec = sequence_specs()[3].clone(); // residential: gentle
+    Sequence::synthetic(spec, frames, 11, LidarConfig::tiny())
+}
+
+/// Cached-target alignments (one session, resident target) must be
+/// bit-identical to fresh-upload alignments (new session per scan) on a
+/// seeded synthetic localization sequence — same claim and pattern as
+/// `tests/lane_engine.rs`, one layer down.
+#[test]
+fn cached_target_is_bit_identical_to_fresh_upload() {
+    let seq = tiny_sequence(6);
+    let cfg = PipelineConfig {
+        source_sample: 512,
+        target_capacity: 4096,
+        ..Default::default()
+    };
+    let workload = localization_jobs(&seq, 6, &cfg).unwrap();
+
+    // Cached: one FppsIcp session keeps the map resident across scans.
+    let mut cached = FppsIcp::kdtree_cpu();
+    let mut cached_results = Vec::new();
+    for job in &workload.jobs {
+        cached.set_input_source(job.source.clone());
+        cached.set_input_target(Arc::clone(&job.target));
+        cached.set_transformation_matrix(job.initial);
+        cached_results.push(cached.align().unwrap());
+    }
+    assert_eq!(
+        cached.backend().tree_builds(),
+        1,
+        "K scans against one unchanged map: the kd-tree is built exactly once"
+    );
+    let (uploads, hits) = cached.target_cache_stats();
+    assert_eq!(uploads, 1);
+    assert_eq!(hits as usize, workload.jobs.len() - 1);
+
+    // Fresh: a brand-new session per scan re-uploads (and rebuilds).
+    for (job, c) in workload.jobs.iter().zip(&cached_results) {
+        let mut fresh = FppsIcp::kdtree_cpu();
+        fresh.set_input_source(job.source.clone());
+        fresh.set_input_target(Arc::clone(&job.target));
+        fresh.set_transformation_matrix(job.initial);
+        let f = fresh.align().unwrap();
+        assert_eq!(fresh.backend().tree_builds(), 1);
+        assert_eq!(f.transformation.m, c.transformation.m, "job {}", job.id);
+        assert_eq!(f.rmse.to_bits(), c.rmse.to_bits(), "job {}", job.id);
+        assert_eq!(f.iterations, c.iterations, "job {}", job.id);
+    }
+}
+
+/// Same bit-identity claim for the NativeSim (device-mirror) backend.
+#[test]
+fn native_sim_cached_target_matches_fresh() {
+    let target = structured_cloud(800, 60);
+    let gt = Mat4::from_rt(Mat3::rot_z(0.03), Vec3::new(0.2, -0.1, 0.01));
+    let sources: Vec<PointCloud> = (0..4)
+        .map(|k| {
+            let mut rng = Pcg32::new(70 + k);
+            let mut s = target.transformed(&gt.inverse_rigid());
+            s.add_noise(0.005, &mut rng);
+            s
+        })
+        .collect();
+
+    let mut cached = FppsIcp::native_sim();
+    for (k, s) in sources.iter().enumerate() {
+        cached.set_input_source(s.clone());
+        cached.set_input_target(target.clone());
+        let c = cached.align().unwrap();
+
+        let mut fresh = FppsIcp::native_sim();
+        fresh.set_input_source(s.clone());
+        fresh.set_input_target(target.clone());
+        let f = fresh.align().unwrap();
+        assert_eq!(f.transformation.m, c.transformation.m, "scan {k}");
+        assert_eq!(f.rmse.to_bits(), c.rmse.to_bits(), "scan {k}");
+    }
+    let (uploads, hits) = cached.target_cache_stats();
+    assert_eq!((uploads, hits), (1, 3));
+}
+
+/// A genuinely changed target must invalidate the resident epoch — and
+/// the post-invalidation results must equal a fresh session's.
+#[test]
+fn target_change_invalidates_epoch() {
+    let target_a = structured_cloud(700, 61);
+    let target_b = structured_cloud(700, 62);
+    let source = target_a.transformed(
+        &Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, 0.05, 0.0)).inverse_rigid(),
+    );
+
+    let mut icp = FppsIcp::kdtree_cpu();
+    for (round, tgt) in [&target_a, &target_b, &target_a, &target_b].iter().enumerate() {
+        icp.set_input_source(source.clone());
+        icp.set_input_target((*tgt).clone());
+        let c = icp.align().unwrap();
+        assert_eq!(
+            icp.backend().tree_builds(),
+            round as u64 + 1,
+            "every target change rebuilds"
+        );
+
+        let mut fresh = FppsIcp::kdtree_cpu();
+        fresh.set_input_source(source.clone());
+        fresh.set_input_target((*tgt).clone());
+        let f = fresh.align().unwrap();
+        assert_eq!(f.transformation.m, c.transformation.m, "round {round}");
+        assert_eq!(f.rmse.to_bits(), c.rmse.to_bits(), "round {round}");
+    }
+    let (uploads, hits) = icp.target_cache_stats();
+    assert_eq!((uploads, hits), (4, 0), "alternating targets never hit");
+}
+
+/// Across a whole lane pool, affinity scheduling keeps the shared map
+/// resident: a single lane builds the kd-tree exactly once for the whole
+/// batch, K lanes build it at most once *per lane* (the dispatcher may
+/// steal to an idle lane for parallelism) — and the outcomes stay
+/// bit-identical between the two.
+#[test]
+fn lane_pool_builds_shared_map_once_per_lane() {
+    let seq = tiny_sequence(6);
+    let cfg = PipelineConfig {
+        source_sample: 512,
+        target_capacity: 4096,
+        ..Default::default()
+    };
+    let icp_cfg = LaneIcpConfig {
+        max_iteration_count: 30,
+        ..Default::default()
+    };
+
+    // One lane: deterministic — six same-map jobs, exactly one build.
+    let builds = Arc::new(AtomicU64::new(0));
+    let builds_ref = Arc::clone(&builds);
+    let sequential = run_registration_batch(
+        localization_jobs(&seq, 6, &cfg).unwrap().jobs,
+        1,
+        2,
+        icp_cfg,
+        move |_lane| {
+            let counter = Arc::clone(&builds_ref);
+            Ok(KdTreeCpuBackend::with_shared_build_counter(counter))
+        },
+    )
+    .unwrap();
+    assert_eq!(sequential.outcomes.len(), 6);
+    assert_eq!(
+        builds.load(Ordering::Relaxed),
+        1,
+        "six scans, one unchanged map: the kd-tree is built exactly once"
+    );
+
+    // Two lanes: at most one build per lane, never one per scan.
+    let builds2 = Arc::new(AtomicU64::new(0));
+    let builds2_ref = Arc::clone(&builds2);
+    let pooled = run_registration_batch(
+        localization_jobs(&seq, 6, &cfg).unwrap().jobs,
+        2,
+        16,
+        icp_cfg,
+        move |_lane| {
+            let counter = Arc::clone(&builds2_ref);
+            Ok(KdTreeCpuBackend::with_shared_build_counter(counter))
+        },
+    )
+    .unwrap();
+    assert_eq!(pooled.outcomes.len(), 6);
+    let b = builds2.load(Ordering::Relaxed);
+    assert!((1..=2).contains(&b), "expected ≤ 1 build per lane, got {b}");
+
+    for (a, b) in sequential.outcomes.iter().zip(pooled.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+/// Mixed-target batches still conserve work under affinity scheduling,
+/// and per-lane upload/hit accounting adds up.
+#[test]
+fn affinity_scheduler_conserves_work_on_mixed_targets() {
+    let map_a = Arc::new(structured_cloud(600, 80));
+    let map_b = Arc::new(structured_cloud(600, 81));
+    let gt = Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.05, 0.0, 0.0));
+    let jobs: Vec<_> = (0..10u64)
+        .map(|k| {
+            let map = if k % 2 == 0 { &map_a } else { &map_b };
+            let mut rng = Pcg32::new(90 + k);
+            let mut source = map.transformed(&gt.inverse_rigid());
+            source.add_noise(0.005, &mut rng);
+            RegistrationJob::new(
+                k,
+                (k % 2) as usize,
+                source.random_sample(300, &mut rng),
+                Arc::clone(map),
+                Mat4::IDENTITY,
+            )
+        })
+        .collect();
+
+    let report = run_registration_batch(jobs, 2, 16, LaneIcpConfig::default(), |_| {
+        Ok(NativeSimBackend::new())
+    })
+    .unwrap();
+    assert_eq!(report.outcomes.len(), 10);
+    let served: usize = report.lanes.iter().map(|l| l.jobs).sum();
+    assert_eq!(served, 10);
+    let uploads: usize = report.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits: usize = report.lanes.iter().map(|l| l.target_hits).sum();
+    assert_eq!(uploads + hits, 10, "every job uploads or hits");
+    // Two distinct maps: at least one upload each; the exact split
+    // depends on steal timing (each lane holds one resident target).
+    assert!(uploads >= 2, "both maps must be uploaded at least once");
+    // Queue-wait accounting reached the per-lane stats (satellite:
+    // lane_table renders these).
+    let waits: usize = report.lanes.iter().map(|l| l.queue_wait.count()).sum();
+    assert_eq!(waits, 10);
+}
