@@ -4,15 +4,20 @@
 //! paid once per lane instead of once per scan. This is the workload
 //! the `upload_target` / `upload_source` split exists for: odometry
 //! re-targets every frame, localization re-targets (almost) never.
+//! `--tiles N` switches to the tile-crossing variant: N submaps
+//! interleave A,B,…,A,B,… and the backends' LRU residency slots absorb
+//! the ping-pong (uploads bounded by tiles × lanes, not scans).
 //!
 //!   cargo run --release --example localization -- \
-//!       [--scans 16] [--lanes 2] [--backend kdtree]
+//!       [--scans 16] [--lanes 2] [--backend kdtree] [--tiles 2]
 
 use anyhow::{Context, Result};
 use fpps::cli::{backend_selection, Parser};
-use fpps::coordinator::{run_localization, LaneIcpConfig, PipelineConfig};
+use fpps::coordinator::{
+    run_localization, run_tiled_localization, LaneIcpConfig, PipelineConfig,
+};
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::BackendHandle;
+use fpps::fpps_api::{BackendHandle, KernelBackend};
 
 fn main() -> Result<()> {
     let p = Parser::new("localization", "scan-to-map localization demo")
@@ -22,6 +27,7 @@ fn main() -> Result<()> {
         .opt("capacity", "map buffer capacity", Some("8192"))
         .opt("seed", "dataset seed", Some("2026"))
         .lane_opts("2")
+        .residency_opts()
         .backend_opts();
     let a = p.parse_env(1)?;
     let name = a.get("sequence").unwrap().to_string();
@@ -52,7 +58,50 @@ fn main() -> Result<()> {
         seed,
         ..Default::default()
     };
+    let tiles: usize = a.get_or("tiles", 1)?;
+    let slots: usize = a.get_or("slots", 0)?;
     println!("localizing {scans} scans over {lanes} lane(s), backend {kind:?}");
+
+    let make_backend = |_lane: usize| -> Result<BackendHandle> {
+        let mut b = BackendHandle::create(kind, artifacts)?;
+        if slots > 0 {
+            b.set_residency_slots(slots);
+        }
+        Ok(b)
+    };
+
+    if tiles > 1 {
+        let res = run_tiled_localization(
+            &seq,
+            scans,
+            tiles,
+            &cfg,
+            lanes,
+            queue_depth,
+            LaneIcpConfig::default(),
+            make_backend,
+        )?;
+        res.report.lane_table("\nPer-lane breakdown").print();
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        println!(
+            "\ntile residency: {} submaps, {uploads} upload(s), {hits} cache hit(s); \
+             localization error mean {:.3} m",
+            res.map_points.len(),
+            res.mean_translation_error()
+        );
+        anyhow::ensure!(
+            res.report.failed_jobs() == 0,
+            "{} scans failed (contained per lane)",
+            res.report.failed_jobs()
+        );
+        anyhow::ensure!(
+            uploads + hits == res.report.outcomes.len(),
+            "upload/hit accounting does not cover every scan"
+        );
+        println!("\ntiled localization OK");
+        return Ok(());
+    }
 
     let res = run_localization(
         &seq,
@@ -61,7 +110,7 @@ fn main() -> Result<()> {
         lanes,
         queue_depth,
         LaneIcpConfig::default(),
-        |_lane| BackendHandle::create(kind, artifacts),
+        make_backend,
     )?;
 
     println!(
@@ -85,6 +134,11 @@ fn main() -> Result<()> {
         res.max_translation_error()
     );
 
+    anyhow::ensure!(
+        res.report.failed_jobs() == 0,
+        "{} scans failed (contained per lane)",
+        res.report.failed_jobs()
+    );
     // The whole point of the resident-target path: the map is uploaded
     // at most once per lane, never once per scan.
     anyhow::ensure!(

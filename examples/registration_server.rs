@@ -131,19 +131,30 @@ fn main() -> Result<()> {
         "stream", "sequence", "jobs", "mean rmse (m)", "mean service (ms)",
     ]);
     for stream in 0..streams {
-        let (mut jobs, mut rmse_sum, mut service_sum) = (0usize, 0.0f64, 0.0f64);
+        let (mut jobs, mut ok_jobs) = (0usize, 0usize);
+        let (mut rmse_sum, mut service_sum) = (0.0f64, 0.0f64);
         for o in report.outcomes.iter().filter(|o| o.stream == stream) {
             jobs += 1;
-            rmse_sum += o.rmse;
             service_sum += o.service_ms;
+            // Contained failures carry NaN rmse; keep them out of the
+            // mean instead of letting one bad job poison the column.
+            if !o.is_failed() {
+                ok_jobs += 1;
+                rmse_sum += o.rmse;
+            }
         }
-        let denom = jobs.max(1) as f64;
+        // An all-failed stream shows NaN, never a perfect-looking 0.000.
+        let mean_rmse = if ok_jobs == 0 {
+            f64::NAN
+        } else {
+            rmse_sum / ok_jobs as f64
+        };
         st.row(vec![
             stream.to_string(),
             sequences[stream].spec.name.to_string(),
             jobs.to_string(),
-            format!("{:.3}", rmse_sum / denom),
-            format!("{:.1}", service_sum / denom),
+            format!("{mean_rmse:.3}"),
+            format!("{:.1}", service_sum / jobs.max(1) as f64),
         ]);
     }
     st.print();
@@ -172,6 +183,11 @@ fn main() -> Result<()> {
         "dropped jobs: served {} of {}",
         report.outcomes.len(),
         streams * frames.saturating_sub(1)
+    );
+    anyhow::ensure!(
+        report.failed_jobs() == 0,
+        "{} jobs failed (contained per lane; see RegistrationOutcome::error)",
+        report.failed_jobs()
     );
     println!("\nregistration_server OK");
     Ok(())

@@ -1,0 +1,173 @@
+//! Bench: tile-crossing residency — a two-map alternating workload
+//! (A,B,A,B,…: the submap ping-pong of a vehicle tracking along a tile
+//! boundary) on the kd-tree CPU backend, single-slot vs LRU multi-slot
+//! residency. One slot re-uploads (and rebuilds the kd-tree) on every
+//! map switch; with ≥ 2 slots each map uploads exactly once and every
+//! further scan is a cache hit — same transforms, bit-identical. A lane
+//! pool section shows the affinity dispatcher keeping the ping-pong
+//! warm across lanes.
+//!
+//!   cargo bench --bench tile_residency
+//!   FPPS_BENCH_SCANS=64 cargo bench --bench tile_residency   # longer run
+
+use fpps::coordinator::{run_registration_batch, LaneIcpConfig, RegistrationJob};
+use fpps::fpps_api::{FppsIcp, KdTreeCpuBackend, KernelBackend};
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn map_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-20.0, 20.0), rng.range(-20.0, 20.0), 0.0]),
+            1 => c.push([rng.range(-20.0, 20.0), 20.0, rng.range(0.0, 6.0)]),
+            _ => c.push([-20.0, rng.range(-20.0, 20.0), rng.range(0.0, 6.0)]),
+        }
+    }
+    c
+}
+
+/// Alternating scans: scan k queries map A (k even) or map B (k odd).
+fn ping_pong_scans(
+    maps: &[Arc<PointCloud>; 2],
+    scans: usize,
+) -> Vec<(Arc<PointCloud>, PointCloud)> {
+    (0..scans as u64)
+        .map(|k| {
+            let map = &maps[(k % 2) as usize];
+            let mut rng = Pcg32::new(2000 + k);
+            let gt = Mat4::from_rt(
+                Mat3::rot_z(0.01 * (k as f64 + 1.0)),
+                Vec3::new(0.1 + 0.01 * k as f64, -0.05, 0.0),
+            );
+            let mut s = map.transformed(&gt.inverse_rigid());
+            s.add_noise(0.01, &mut rng);
+            (Arc::clone(map), s.random_sample(2048, &mut rng))
+        })
+        .collect()
+}
+
+fn main() {
+    // At least two scans: the assertions below describe a two-map
+    // ping-pong, which needs one visit to each map.
+    let scans: usize = std::env::var("FPPS_BENCH_SCANS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+        .max(2);
+    let maps = [
+        Arc::new(map_cloud(16_384, 2026)),
+        Arc::new(map_cloud(16_384, 2027)),
+    ];
+    let workload = ping_pong_scans(&maps, scans);
+    println!(
+        "tile residency: {scans} scans ping-ponging across 2 x {}-point maps, \
+         kdtree-cpu backend\n",
+        maps[0].len()
+    );
+
+    // Single slot: every map switch re-uploads and rebuilds the index —
+    // the pre-LRU behavior the tile-crossing workload thrashes.
+    let t0 = Instant::now();
+    let mut single = FppsIcp::with_backend(KdTreeCpuBackend::with_residency_slots(1));
+    let mut single_results = Vec::new();
+    for (map, src) in &workload {
+        single.set_input_source(src.clone());
+        single.set_input_target(Arc::clone(map));
+        single_results.push(single.align().expect("single-slot align"));
+    }
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let single_builds = single.backend().tree_builds();
+    let (single_uploads, _) = single.target_cache_stats();
+
+    // LRU residency (hwmodel default, ≥ 2 slots): both maps stay
+    // resident, so the ping-pong costs two uploads total.
+    let t0 = Instant::now();
+    let mut multi = FppsIcp::kdtree_cpu();
+    let slots = multi.backend().residency_slots();
+    let mut multi_results = Vec::new();
+    for (map, src) in &workload {
+        multi.set_input_source(src.clone());
+        multi.set_input_target(Arc::clone(map));
+        multi_results.push(multi.align().expect("multi-slot align"));
+    }
+    let multi_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let multi_builds = multi.backend().tree_builds();
+    let (multi_uploads, multi_hits) = multi.target_cache_stats();
+
+    // Residency is a cache, not a numerics change: bit-identical.
+    for (s, m) in single_results.iter().zip(multi_results.iter()) {
+        assert_eq!(s.transformation.m, m.transformation.m);
+        assert_eq!(s.rmse.to_bits(), m.rmse.to_bits());
+    }
+
+    let mut t = Table::new("single-slot vs LRU residency (same results, bit-identical)")
+        .header(&["mode", "uploads", "kd builds", "total (ms)", "per-scan (ms)"]);
+    let rows = [
+        ("1 slot (thrash)", single_uploads, single_builds, single_ms),
+        (
+            "LRU slots (hwmodel)",
+            multi_uploads,
+            multi_builds,
+            multi_ms,
+        ),
+    ];
+    for (mode, uploads, builds, total) in rows {
+        t.row(vec![
+            mode.to_string(),
+            uploads.to_string(),
+            builds.to_string(),
+            format!("{total:.1}"),
+            format!("{:.2}", total / scans as f64),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nspeedup from multi-target residency: {:.2}x  (uploads {} -> {}, builds {} -> {}, \
+         {slots} slots)",
+        single_ms / multi_ms.max(1e-9),
+        single_uploads,
+        multi_uploads,
+        single_builds,
+        multi_builds
+    );
+    assert!(slots >= 2, "hwmodel budget must grant >= 2 slots");
+    assert_eq!(multi_uploads, 2, "one upload per map with LRU residency");
+    assert_eq!(multi_builds, 2, "one kd-tree build per map");
+    assert_eq!(multi_hits as usize, scans - 2);
+    assert_eq!(single_uploads as usize, scans, "one slot: upload per scan");
+
+    // Lane-pool flavor: the affinity dispatcher mirrors the warm sets,
+    // so pool-wide uploads stay bounded by maps x lanes.
+    let lanes = 2;
+    let jobs: Vec<RegistrationJob> = workload
+        .iter()
+        .enumerate()
+        .map(|(k, (map, src))| {
+            RegistrationJob::new(k as u64, k % 2, src.clone(), Arc::clone(map), Mat4::IDENTITY)
+        })
+        .collect();
+    let report = run_registration_batch(jobs, lanes, 8, LaneIcpConfig::default(), |_| {
+        Ok(KdTreeCpuBackend::new())
+    })
+    .expect("lane pool");
+    report.lane_table("\nPer-lane breakdown (2 lanes)").print();
+    let pool_uploads: usize = report.lanes.iter().map(|l| l.target_uploads).sum();
+    let pool_hits: usize = report.lanes.iter().map(|l| l.target_hits).sum();
+    println!(
+        "\npool residency: {pool_uploads} upload(s) + {pool_hits} hit(s) over {lanes} lanes \
+         ({scans} scans, 2 maps)"
+    );
+    assert!(
+        pool_uploads <= 2 * lanes,
+        "pool uploads {pool_uploads} exceed maps x lanes"
+    );
+    assert_eq!(pool_uploads + pool_hits, scans);
+    println!("tile_residency bench complete");
+}

@@ -1,7 +1,8 @@
 //! Tiny argument parser for the `fpps` CLI and examples (clap is not
 //! available offline). Supports `--key value`, `--key=value`, boolean
 //! `--flag`, and positional arguments, with generated usage text — plus
-//! the shared `--backend`/`--artifacts`/`--lanes` option block every
+//! the shared `--backend`/`--artifacts`/`--lanes` (and, for
+//! localization, `--tiles`/`--slots` residency) option blocks every
 //! device-facing subcommand and example uses.
 
 use crate::fpps_api::BackendKind;
@@ -186,6 +187,23 @@ impl Parser {
         )
         .opt("queue-depth", "bounded job-queue depth", Some("4"))
     }
+
+    /// Attach the target-residency options shared by the localization
+    /// subcommand/example: `--tiles` (submap ping-pong scenario) and
+    /// `--slots` (resident-target slots per backend, 0 = hwmodel
+    /// default).
+    pub fn residency_opts(self) -> Self {
+        self.opt(
+            "tiles",
+            "submap tiles; >1 interleaves tile-crossing jobs",
+            None,
+        )
+        .opt(
+            "slots",
+            "resident-target slots per backend (0 = hwmodel budget)",
+            None,
+        )
+    }
 }
 
 /// Resolve the backend selection added by [`Parser::backend_opts`].
@@ -232,6 +250,17 @@ mod tests {
         assert!(a.flag("verbose"));
         assert!(!a.flag("other"));
         assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn residency_opts_parse() {
+        let p = Parser::new("demo", "test").residency_opts();
+        let a = p.parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_or::<usize>("tiles", 1).unwrap(), 1);
+        assert_eq!(a.get_or::<usize>("slots", 0).unwrap(), 0);
+        let a = p.parse(&toks(&["--tiles", "3", "--slots=2"])).unwrap();
+        assert_eq!(a.get_or::<usize>("tiles", 1).unwrap(), 3);
+        assert_eq!(a.get_or::<usize>("slots", 0).unwrap(), 2);
     }
 
     #[test]

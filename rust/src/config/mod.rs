@@ -116,6 +116,13 @@ pub struct RunConfig {
     /// Scans per localization run (`fpps localize`; see
     /// `coordinator::run_localization`).
     pub scans: usize,
+    /// Submap tiles for the tile-crossing localization scenario
+    /// (`fpps localize --tiles`; see
+    /// `coordinator::run_tiled_localization`). 1 = single shared map.
+    pub tiles: usize,
+    /// Resident-target slots per backend; 0 = derive from the `hwmodel`
+    /// HBM residency budget (the default).
+    pub residency_slots: usize,
 }
 
 impl Default for RunConfig {
@@ -131,6 +138,8 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".to_string(),
             lanes: 1,
             scans: 16,
+            tiles: 1,
+            residency_slots: 0,
         }
     }
 }
@@ -154,6 +163,8 @@ impl RunConfig {
                 .to_string(),
             lanes: kv.get_or("lanes", d.lanes)?,
             scans: kv.get_or("scans", d.scans)?,
+            tiles: kv.get_or("tiles", d.tiles)?,
+            residency_slots: kv.get_or("residency_slots", d.residency_slots)?,
         })
     }
 
@@ -208,18 +219,25 @@ mod tests {
 
     #[test]
     fn run_config_defaults_and_overrides() {
-        let kv =
-            KvConfig::parse("max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\n").unwrap();
+        let kv = KvConfig::parse(
+            "max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\ntiles=3\nresidency_slots=2\n",
+        )
+        .unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
         assert_eq!(rc.max_iterations, 10);
         assert_eq!(rc.source_sample, 1024);
         assert_eq!(rc.lanes, 4);
         assert_eq!(rc.scans, 8);
+        assert_eq!(rc.tiles, 3);
+        assert_eq!(rc.residency_slots, 2);
         assert_eq!(RunConfig::from_kv(&KvConfig::default()).unwrap().scans, 16);
         // Untouched fields keep paper defaults.
         assert_eq!(rc.max_correspondence_distance, 1.0);
         assert_eq!(rc.transformation_epsilon, 1e-5);
-        assert_eq!(RunConfig::from_kv(&KvConfig::default()).unwrap().lanes, 1);
+        let defaults = RunConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(defaults.lanes, 1);
+        assert_eq!(defaults.tiles, 1, "single shared map by default");
+        assert_eq!(defaults.residency_slots, 0, "0 = hwmodel-derived");
         let p = rc.icp_params();
         assert_eq!(p.max_iterations, 10);
     }

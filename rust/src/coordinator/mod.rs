@@ -13,15 +13,21 @@
 //! registration engine** ([`run_lane_pool`] / [`run_registration_batch`]):
 //! K worker lanes, each owning its own [`KernelBackend`] instance, are
 //! fed by a **target-affinity dispatcher** — jobs sharing a target key
-//! route to the lane whose backend already holds that target resident
+//! route to a lane whose backend already holds that target resident
 //! (no re-upload, no kd-tree rebuild), spilling to other lanes when the
-//! keyed lane saturates. Per-lane [`TimingStats`] merge into an
-//! aggregate [`LaneReport`]. This is how related FPGA registration
-//! stacks treat the accelerator — a shared, multi-client resource with
-//! batched dispatch and device-resident reference clouds — and it is
-//! the scaling substrate every multi-client scenario here builds on,
-//! including the scan-to-map [`run_localization`] scenario (M scans
-//! against one resident map).
+//! warm lanes saturate. Each backend keeps an LRU *set* of resident
+//! targets (sized by the `hwmodel` HBM residency budget) and the
+//! dispatcher mirrors that set per lane, so alternating-map workloads
+//! stay warm too. Per-job failures are contained in their
+//! [`RegistrationOutcome`] instead of killing the lane. Per-lane
+//! [`TimingStats`] merge into an aggregate [`LaneReport`]. This is how
+//! related FPGA registration stacks treat the accelerator — a shared,
+//! multi-client resource with batched dispatch and device-resident
+//! reference clouds — and it is the scaling substrate every
+//! multi-client scenario here builds on: the scan-to-map
+//! [`run_localization`] scenario (M scans against one resident map) and
+//! the tile-crossing [`run_tiled_localization`] scenario (submap
+//! ping-pong across an LRU residency set).
 
 use crate::dataset::Sequence;
 use crate::fpps_api::{FppsIcp, KernelBackend};
@@ -435,6 +441,18 @@ pub struct RegistrationOutcome {
     pub queue_wait_ms: f64,
     /// Time inside `align()` on the lane.
     pub service_ms: f64,
+    /// `Some(message)` when the alignment itself errored. A failed job
+    /// is *contained*: its lane keeps draining, the outcome carries the
+    /// job's initial transform and NaN rmse, and the rest of the batch
+    /// is unaffected.
+    pub error: Option<String>,
+}
+
+impl RegistrationOutcome {
+    /// Did the alignment error (as opposed to merely not converging)?
+    pub fn is_failed(&self) -> bool {
+        self.error.is_some()
+    }
 }
 
 /// ICP parameters shared by every lane (per-job overrides travel in the
@@ -461,6 +479,12 @@ impl Default for LaneIcpConfig {
 pub struct LaneStats {
     pub lane: usize,
     pub jobs: usize,
+    /// Jobs whose alignment errored (contained per-job, see
+    /// [`RegistrationOutcome::error`]); included in `jobs`.
+    pub failed: usize,
+    /// Targets still resident on this lane's backend at the end of the
+    /// run (≤ its residency slot count).
+    pub resident_targets: usize,
     /// Service latency samples of this lane.
     pub service: TimingStats,
     /// Queue-wait samples of the jobs this lane served (scheduler
@@ -508,11 +532,13 @@ impl LaneReport {
         let mut t = crate::report::Table::new(title).header(&[
             "lane",
             "jobs",
+            "fail",
             "mean (ms)",
             "p99 (ms)",
             "wait (ms)",
             "jobs/s",
             "tgt up/hit",
+            "resident",
             "device (ms)",
         ]);
         for l in &self.lanes {
@@ -524,97 +550,214 @@ impl LaneReport {
             t.row(vec![
                 l.lane.to_string(),
                 l.jobs.to_string(),
+                l.failed.to_string(),
                 format!("{:.1}", l.service.mean_ms()),
                 format!("{:.1}", l.service.percentile_ms(99.0)),
                 format!("{:.1}", l.queue_wait.mean_ms()),
                 format!("{jobs_per_s:.2}"),
                 format!("{}/{}", l.target_uploads, l.target_hits),
+                l.resident_targets.to_string(),
                 format!("{:.1}", l.device_ms),
             ]);
         }
         t
     }
+
+    /// Total contained job failures across all lanes.
+    pub fn failed_jobs(&self) -> usize {
+        self.lanes.iter().map(|l| l.failed).sum()
+    }
+}
+
+/// Routing core of [`dispatch_by_affinity`]: a pure, deterministic
+/// state machine over per-lane **warm key sets** — the dispatcher-side
+/// mirror of each lane backend's LRU resident-target set — plus a
+/// pending-job load estimate. Separated from the channel plumbing so
+/// the scheduling policy is unit-testable without threads.
+///
+/// Two invariants the channel loop must uphold:
+/// * routing state is committed via [`Self::committed`] only **after** a
+///   send succeeds (a failed `try_send` must not poison the warm sets);
+/// * completions arrive via [`Self::completed`].
+struct AffinityRouter {
+    /// Per-lane warm target keys, LRU first / MRU last, each bounded by
+    /// `slots` — uploads past capacity evict exactly like the backend.
+    warm: Vec<Vec<u64>>,
+    /// Jobs sent to each lane minus completions seen.
+    pending: Vec<usize>,
+    /// Residency slots mirrored per lane.
+    slots: usize,
+    /// Round-robin cursor for tie-breaking and spill.
+    rr: usize,
+}
+
+impl AffinityRouter {
+    fn new(lanes: usize, slots: usize) -> Self {
+        Self {
+            warm: vec![Vec::new(); lanes],
+            pending: vec![0; lanes],
+            slots: slots.max(1),
+            rr: 0,
+        }
+    }
+
+    fn lanes(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Every lane warm for `key` — after a steal there can be several —
+    /// least-loaded first (ties by lane index).
+    fn warm_lanes(&self, key: u64) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.lanes())
+            .filter(|&l| self.warm[l].contains(&key))
+            .collect();
+        v.sort_by_key(|&l| self.pending[l]); // stable sort keeps index order on ties
+        v
+    }
+
+    /// Warmth vs. parallelism: the least-loaded warm lane if it keeps
+    /// up, an idle lane (steal — one extra upload, bounded by the lane
+    /// count) when every warm lane lags, the least-loaded warm lane when
+    /// nobody is idle, `None` when the key is cold everywhere.
+    fn first_choice(&self, key: u64) -> Option<usize> {
+        let warm = self.warm_lanes(key);
+        let &best = warm.first()?;
+        if self.pending[best] == 0 {
+            return Some(best);
+        }
+        if let Some(idle) = (0..self.lanes()).find(|&l| self.pending[l] == 0) {
+            return Some(idle);
+        }
+        Some(best)
+    }
+
+    /// Spill order for non-blocking attempts: fresh lanes first (their
+    /// cache is empty anyway), then everyone by load (ties in
+    /// round-robin rotation order).
+    fn spill_order(&self) -> Vec<usize> {
+        let lanes = self.lanes();
+        let mut order: Vec<usize> = (0..lanes).filter(|&l| self.warm[l].is_empty()).collect();
+        let mut rest: Vec<usize> = (0..lanes)
+            .map(|i| (self.rr + i) % lanes)
+            .filter(|l| !order.contains(l))
+            .collect();
+        rest.sort_by_key(|&l| self.pending[l]);
+        order.extend(rest);
+        order
+    }
+
+    /// Lane to block on when every queue is full: the least-loaded warm
+    /// lane (keeps the cache hot), else the shortest queue (rotation
+    /// order on ties) — never a blind round-robin pick past a shorter
+    /// queue.
+    fn blocking_choice(&self, key: u64) -> usize {
+        if let Some(&l) = self.warm_lanes(key).first() {
+            return l;
+        }
+        let lanes = self.lanes();
+        (0..lanes)
+            .map(|i| (self.rr + i) % lanes)
+            .min_by_key(|&l| self.pending[l])
+            .unwrap_or(0)
+    }
+
+    /// A job with `key` was *successfully* sent to `lane`: bump its
+    /// load, mark the key warm (MRU), evict the lane's LRU key past the
+    /// slot count, advance the round-robin cursor.
+    fn committed(&mut self, lane: usize, key: u64) {
+        self.pending[lane] += 1;
+        let w = &mut self.warm[lane];
+        if let Some(i) = w.iter().position(|&k| k == key) {
+            w.remove(i);
+        }
+        w.push(key);
+        while w.len() > self.slots {
+            w.remove(0);
+        }
+        self.rr = (lane + 1) % self.lanes();
+    }
+
+    /// `lane` finished one job.
+    fn completed(&mut self, lane: usize) {
+        self.pending[lane] = self.pending[lane].saturating_sub(1);
+    }
 }
 
 /// Route jobs from the shared intake queue to per-lane queues by
-/// **target affinity**: a job goes to the lane whose backend already
-/// holds its target (resident-target cache hit — no re-upload, no
-/// kd-tree rebuild) — but only while that lane keeps up. Once the keyed
-/// lane has a backlog and another lane sits idle, parallelism wins: the
-/// idle lane takes the job and pays one extra target upload (bounded by
-/// the lane count), instead of a whole same-target batch serializing on
-/// one lane. `done_rx` carries lane-completion events, giving the
-/// dispatcher its per-lane load estimate without locking. Routing can
-/// never change numerics: every job is an independent alignment, so
-/// `lanes = 1` and `lanes = K` stay bit-identical regardless of
-/// placement.
+/// **target affinity**: a job goes to a lane whose backend already
+/// holds its target resident (cache hit — no re-upload, no kd-tree
+/// rebuild) — but only while that lane keeps up. Once every warm lane
+/// has a backlog and another lane sits idle, parallelism wins: the idle
+/// lane takes the job and pays one extra target upload (bounded by the
+/// lane count), instead of a whole same-target batch serializing on one
+/// lane. The router tracks each lane's full warm *set* (`slots` keys,
+/// mirroring the backends' LRU residency), so after a steal both warm
+/// lanes stay candidates and the least-loaded one is picked. `done_rx`
+/// carries lane-completion events, giving the dispatcher its per-lane
+/// load estimate without locking. Routing can never change numerics:
+/// every job is an independent alignment, so `lanes = 1` and
+/// `lanes = K` stay bit-identical regardless of placement.
 fn dispatch_by_affinity(
     rx: Receiver<RegistrationJob>,
     lane_txs: Vec<SyncSender<RegistrationJob>>,
     done_rx: Receiver<usize>,
+    slots_rx: Receiver<usize>,
 ) {
     let lanes = lane_txs.len();
-    // Which target key each lane's backend most recently received.
-    let mut lane_key: Vec<Option<u64>> = vec![None; lanes];
-    // Jobs sent to each lane minus completions seen (drained lazily).
-    let mut pending: Vec<usize> = vec![0; lanes];
-    let mut rr = 0usize;
+    // Mirror the *actual* backends, not an assumed default: every lane
+    // reports its backend's residency slot count once it exists (a lane
+    // that fails to start just drops its sender). The most conservative
+    // (minimum) count drives the warm sets — over-estimating residency
+    // would route jobs to lanes whose backend already evicted the key.
+    let mut slots: Option<usize> = None;
+    for _ in 0..lanes {
+        match slots_rx.recv() {
+            Ok(s) => slots = Some(slots.map_or(s, |m| m.min(s))),
+            Err(_) => break,
+        }
+    }
+    let mut router = AffinityRouter::new(lanes, slots.unwrap_or(1));
     'jobs: for mut job in rx.iter() {
         while let Ok(l) = done_rx.try_recv() {
-            pending[l] = pending[l].saturating_sub(1);
+            router.completed(l);
         }
         let key = job.target_key;
-        let affinity = lane_key.iter().position(|k| *k == Some(key));
-        // Warmth vs. parallelism: idle affinity lane → keep it warm;
-        // busy affinity lane with an idle peer → steal to the peer.
-        let first_choice = match affinity {
-            Some(l) if pending[l] == 0 => Some(l),
-            Some(l) => Some((0..lanes).find(|&c| pending[c] == 0).unwrap_or(l)),
-            None => None,
-        };
-        if let Some(l) = first_choice {
+        if let Some(l) = router.first_choice(key) {
             match lane_txs[l].try_send(job) {
                 Ok(()) => {
-                    lane_key[l] = Some(key);
-                    pending[l] += 1;
+                    router.committed(l, key);
                     continue 'jobs;
                 }
                 Err(TrySendError::Full(j)) => job = j,
                 Err(TrySendError::Disconnected(_)) => return, // pool shutting down
             }
         }
-        // Spill order: fresh lanes first (their cache is empty anyway),
-        // then round-robin over everyone.
-        let order: Vec<usize> = (0..lanes)
-            .filter(|&l| lane_key[l].is_none())
-            .chain((0..lanes).map(|i| (rr + i) % lanes))
-            .collect();
-        for l in order {
+        for l in router.spill_order() {
             match lane_txs[l].try_send(job) {
                 Ok(()) => {
-                    lane_key[l] = Some(key);
-                    pending[l] += 1;
-                    rr = (l + 1) % lanes;
+                    router.committed(l, key);
                     continue 'jobs;
                 }
                 Err(TrySendError::Full(j)) => job = j,
                 Err(TrySendError::Disconnected(_)) => return,
             }
         }
-        // Every queue is full: block on the affinity lane (keeps the
-        // cache warm) or, keyless, on the next round-robin lane.
-        let l = affinity.unwrap_or(rr);
-        lane_key[l] = Some(key);
-        rr = (l + 1) % lanes;
+        // Every queue is full: drain any fresh completions, then block
+        // on the best lane. Routing state is committed only once the
+        // send actually lands.
+        while let Ok(l) = done_rx.try_recv() {
+            router.completed(l);
+        }
+        let l = router.blocking_choice(key);
         if lane_txs[l].send(job).is_err() {
             return;
         }
-        pending[l] += 1;
+        router.committed(l, key);
     }
 }
 
 /// Run a pool of `lanes` worker lanes, each with its own bounded queue,
-/// fed by a target-affinity dispatcher (see [`dispatch_by_affinity`]).
+/// fed by a target-affinity dispatcher (see `dispatch_by_affinity`).
 ///
 /// * `make_backend(lane)` is called **on** each lane thread, so backends
 ///   never cross threads and need not be `Send`;
@@ -651,21 +794,28 @@ where
     let (out_tx, out_rx) = channel::<RegistrationOutcome>();
     let (lane_tx, lane_rx) = channel::<LaneStats>();
     let (done_tx, done_rx) = channel::<usize>();
+    let (slots_tx, slots_rx) = channel::<usize>();
     let t0 = Instant::now();
 
     std::thread::scope(|scope| -> Result<()> {
         let producer = scope.spawn(move || produce(job_tx));
-        let dispatcher = scope.spawn(move || dispatch_by_affinity(job_rx, lane_txs, done_rx));
+        let dispatcher =
+            scope.spawn(move || dispatch_by_affinity(job_rx, lane_txs, done_rx, slots_rx));
         let mut workers = Vec::with_capacity(lanes);
         for (lane, job_rx) in lane_rxs.into_iter().enumerate() {
             let out_tx = out_tx.clone();
             let lane_tx = lane_tx.clone();
             let done_tx = done_tx.clone();
+            let slots_tx = slots_tx.clone();
             let make_backend = &make_backend;
             workers.push(scope.spawn(move || -> Result<()> {
                 let backend = make_backend(lane)
                     .with_context(|| format!("create backend for lane {lane}"))?;
                 let mut icp = FppsIcp::with_backend(backend);
+                // Tell the dispatcher how much residency this lane
+                // really has, so its warm-set mirror matches the device.
+                slots_tx.send(icp.backend().residency_slots()).ok();
+                drop(slots_tx);
                 icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
                     .set_max_iteration_count(icp_cfg.max_iteration_count)
                     .set_transformation_epsilon(icp_cfg.transformation_epsilon);
@@ -676,45 +826,65 @@ where
                 // Own queue, no lock: the dispatcher already routed.
                 for job in job_rx.iter() {
                     let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    let (id, stream, initial) = (job.id, job.stream, job.initial);
                     icp.set_input_source(job.source);
                     icp.set_input_target(job.target);
-                    icp.set_transformation_matrix(job.initial);
+                    icp.set_transformation_matrix(initial);
                     let t_align = Instant::now();
-                    let res = icp
-                        .align()
-                        .with_context(|| format!("job {} on lane {lane}", job.id))?;
-                    let service_ms = t_align.elapsed().as_secs_f64() * 1e3;
-                    stats.jobs += 1;
-                    stats.service.record_ms(service_ms);
-                    stats.queue_wait.record_ms(queue_wait_ms);
-                    out_tx
-                        .send(RegistrationOutcome {
-                            id: job.id,
-                            stream: job.stream,
+                    // A failing job must not take its lane (and with it
+                    // the whole pool) down: contain the error in the
+                    // outcome and keep draining the queue.
+                    let outcome = match icp.align() {
+                        Ok(res) => RegistrationOutcome {
+                            id,
+                            stream,
                             lane,
                             transform: res.transformation,
                             rmse: res.rmse,
                             iterations: res.iterations,
                             stop: res.stop,
                             queue_wait_ms,
-                            service_ms,
-                        })
-                        .ok();
+                            service_ms: t_align.elapsed().as_secs_f64() * 1e3,
+                            error: None,
+                        },
+                        Err(e) => {
+                            stats.failed += 1;
+                            RegistrationOutcome {
+                                id,
+                                stream,
+                                lane,
+                                transform: initial,
+                                rmse: f64::NAN,
+                                iterations: 0,
+                                stop: StopReason::Failed,
+                                queue_wait_ms,
+                                service_ms: t_align.elapsed().as_secs_f64() * 1e3,
+                                error: Some(format!("job {id} on lane {lane}: {e:#}")),
+                            }
+                        }
+                    };
+                    stats.jobs += 1;
+                    stats.service.record_ms(outcome.service_ms);
+                    stats.queue_wait.record_ms(queue_wait_ms);
+                    out_tx.send(outcome).ok();
                     done_tx.send(lane).ok();
                 }
                 stats.device_ms = icp.backend().device_time().as_secs_f64() * 1e3;
                 let (uploads, hits) = icp.target_cache_stats();
                 stats.target_uploads = uploads as usize;
                 stats.target_hits = hits as usize;
+                stats.resident_targets = icp.backend().resident_epochs().len();
                 lane_tx.send(stats).ok();
                 Ok(())
             }));
         }
         // Drop the originals so the collection channels close when the
-        // last lane finishes.
+        // last lane finishes (and the dispatcher's slot wait cannot hang
+        // on lanes that never started).
         drop(out_tx);
         drop(lane_tx);
         drop(done_tx);
+        drop(slots_tx);
 
         match producer.join() {
             Ok(r) => r.context("job producer")?,
@@ -884,26 +1054,67 @@ pub fn localization_jobs(
     Ok(LocalizationWorkload { map, jobs, truth })
 }
 
+/// Per-scan translation error vs. `truth` (m), in job order (the job id
+/// indexes `truth`). Contained failures ([`RegistrationOutcome::error`])
+/// score NaN so a failed job can never masquerade as an accurate
+/// localization; [`mean_finite`] / [`max_finite`] skip them.
+fn translation_errors_vs_truth(report: &LaneReport, truth: &[Mat4]) -> Vec<f64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| {
+            if o.is_failed() {
+                f64::NAN
+            } else {
+                let gt = truth[o.id as usize];
+                (o.transform.translation() - gt.translation()).norm()
+            }
+        })
+        .collect()
+}
+
+/// Mean over the finite entries (NaN marks contained failures); NaN when
+/// nothing finite remains.
+fn mean_finite(vals: &[f64]) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for v in vals.iter().copied().filter(|v| v.is_finite()) {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Max over the finite entries; NaN when nothing finite remains (an
+/// all-failure run must not report a perfect 0.0 max error).
+fn max_finite(vals: &[f64]) -> f64 {
+    let mut max = f64::NAN;
+    for v in vals.iter().copied().filter(|v| v.is_finite()) {
+        max = if max.is_nan() { v } else { max.max(v) };
+    }
+    max
+}
+
 /// Result of a [`run_localization`] run.
 #[derive(Debug)]
 pub struct LocalizationResult {
     pub report: LaneReport,
     pub map_points: usize,
-    /// Per-scan translation error vs. ground truth (m), in job order.
+    /// Per-scan translation error vs. ground truth (m), in job order;
+    /// NaN for contained failures.
     pub translation_errors: Vec<f64>,
 }
 
 impl LocalizationResult {
     pub fn mean_translation_error(&self) -> f64 {
-        if self.translation_errors.is_empty() {
-            f64::NAN
-        } else {
-            self.translation_errors.iter().sum::<f64>() / self.translation_errors.len() as f64
-        }
+        mean_finite(&self.translation_errors)
     }
 
     pub fn max_translation_error(&self) -> f64 {
-        self.translation_errors.iter().fold(0.0f64, |a, &b| a.max(b))
+        max_finite(&self.translation_errors)
     }
 }
 
@@ -928,15 +1139,154 @@ where
     let workload = localization_jobs(seq, scans, cfg)?;
     let map_points = workload.map.len();
     let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
-    let translation_errors = report
-        .outcomes
-        .iter()
-        .map(|o| {
-            let gt = workload.truth[o.id as usize];
-            (o.transform.translation() - gt.translation()).norm()
-        })
-        .collect();
+    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
     Ok(LocalizationResult {
+        report,
+        map_points,
+        translation_errors,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tile-crossing localization (multi-target residency scenario)
+// ---------------------------------------------------------------------------
+
+/// Prebuilt tile-crossing localization workload: the trajectory is cut
+/// into `tiles` contiguous submaps and the job stream *interleaves*
+/// them — the submap ping-pong of a vehicle tracking along a tile
+/// boundary. On a single-slot backend every job re-uploads (and, on the
+/// kd-tree backend, rebuilds); with ≥ `tiles` residency slots each
+/// submap uploads once per serving lane and every further job is a
+/// cache hit (see `benches/tile_residency.rs`).
+pub struct TiledLocalizationWorkload {
+    /// One submap per tile (frame-0 coordinates), shared by its jobs.
+    pub maps: Vec<Arc<PointCloud>>,
+    /// Tile index of each job, in job-id order.
+    pub tile_of_job: Vec<usize>,
+    pub jobs: Vec<RegistrationJob>,
+    /// Ground-truth map←sensor poses, indexed by job id.
+    pub truth: Vec<Mat4>,
+}
+
+/// Build a tile-crossing workload from a synthetic sequence: scans are
+/// assigned to `tiles` contiguous trajectory segments, each segment's
+/// union (placed into frame-0 coordinates by ground truth, then
+/// capacity-bounded) becomes one submap, and jobs are emitted
+/// round-robin across the tiles so consecutive jobs alternate submaps.
+pub fn tiled_localization_jobs(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+) -> Result<TiledLocalizationWorkload> {
+    let scans = scans.min(seq.len());
+    if scans == 0 {
+        bail!("localization needs at least one scan");
+    }
+    let tiles = tiles.clamp(1, scans);
+    let tile_of_scan = |i: usize| (i * tiles) / scans;
+    let origin = seq.ground_truth[0].inverse_rigid();
+    let mut tile_clouds: Vec<PointCloud> = (0..tiles).map(|_| PointCloud::new()).collect();
+    let mut sources: Vec<Option<PointCloud>> = Vec::with_capacity(scans);
+    let mut poses = Vec::with_capacity(scans);
+    for i in 0..scans {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
+        let world = cloud.transformed(&pose);
+        tile_clouds[tile_of_scan(i)].xyz.extend_from_slice(&world.xyz);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        sources.push(Some(cloud.random_sample(cfg.source_sample, &mut rng)));
+        poses.push(pose);
+    }
+    let maps: Vec<Arc<PointCloud>> = tile_clouds
+        .into_iter()
+        .map(|c| Arc::new(fit_to_capacity(c, cfg.target_capacity, cfg.seed)))
+        .collect();
+    // Hash each shared submap once, not per job.
+    let keys: Vec<u64> = maps.iter().map(|m| m.fingerprint()).collect();
+
+    // Emission order: round-robin over the tiles (A,B,…,A,B,…), the
+    // maximal-ping-pong stress an LRU residency set exists for.
+    let mut by_tile: Vec<Vec<usize>> = vec![Vec::new(); tiles];
+    for i in 0..scans {
+        by_tile[tile_of_scan(i)].push(i);
+    }
+    let deepest = by_tile.iter().map(Vec::len).max().unwrap_or(0);
+    let mut jobs = Vec::with_capacity(scans);
+    let mut truth = Vec::with_capacity(scans);
+    let mut tile_of_job = Vec::with_capacity(scans);
+    for r in 0..deepest {
+        for (t, scans_of_tile) in by_tile.iter().enumerate() {
+            let Some(&i) = scans_of_tile.get(r) else {
+                continue;
+            };
+            // "Last known pose" prior, as in [`localization_jobs`].
+            let prior = if i == 0 { Mat4::IDENTITY } else { poses[i - 1] };
+            jobs.push(RegistrationJob::new_keyed(
+                jobs.len() as u64,
+                t,
+                sources[i].take().expect("each scan emitted once"),
+                Arc::clone(&maps[t]),
+                keys[t],
+                prior,
+            ));
+            truth.push(poses[i]);
+            tile_of_job.push(t);
+        }
+    }
+    Ok(TiledLocalizationWorkload {
+        maps,
+        tile_of_job,
+        jobs,
+        truth,
+    })
+}
+
+/// Result of a [`run_tiled_localization`] run.
+#[derive(Debug)]
+pub struct TiledLocalizationResult {
+    pub report: LaneReport,
+    /// Points per submap, tile order.
+    pub map_points: Vec<usize>,
+    /// Per-scan translation error vs. ground truth (m), in job order;
+    /// NaN for contained failures.
+    pub translation_errors: Vec<f64>,
+}
+
+impl TiledLocalizationResult {
+    pub fn mean_translation_error(&self) -> f64 {
+        mean_finite(&self.translation_errors)
+    }
+
+    pub fn max_translation_error(&self) -> f64 {
+        max_finite(&self.translation_errors)
+    }
+}
+
+/// Tile-crossing localization over the lane pool: `scans` frames of
+/// `seq` against `tiles` alternating submaps. With multi-target
+/// residency the per-lane upload count is bounded by the tile count —
+/// not the scan count — which `fpps localize --tiles` prints.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_localization<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<TiledLocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    let workload = tiled_localization_jobs(seq, scans, tiles, cfg)?;
+    let map_points = workload.maps.iter().map(|m| m.len()).collect();
+    let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
+    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
+    Ok(TiledLocalizationResult {
         report,
         map_points,
         translation_errors,
@@ -1099,5 +1449,148 @@ mod tests {
         let res = run_odometry(&seq, 1, PipelineConfig::default(), &mut icp).unwrap();
         assert!(res.records.is_empty());
         assert_eq!(res.poses.len(), 1);
+    }
+
+    // --- AffinityRouter: deterministic scheduling-policy harness ---
+
+    #[test]
+    fn router_reuses_every_warm_lane_after_a_steal() {
+        let mut r = AffinityRouter::new(2, 2);
+        // Cold key A spills somewhere; say lane 0 takes it.
+        assert_eq!(r.first_choice(0xA), None);
+        r.committed(0, 0xA);
+        // Lane 0 is busy with A, lane 1 idle → steal to lane 1.
+        assert_eq!(r.first_choice(0xA), Some(1));
+        r.committed(1, 0xA);
+        // Both lanes are now warm for A. Lane 1 drains first: the
+        // dispatcher must see it as a warm candidate — the old
+        // `position()` scan only ever found lane 0.
+        r.completed(1);
+        assert_eq!(r.warm_lanes(0xA), vec![1, 0]);
+        assert_eq!(r.first_choice(0xA), Some(1), "least-loaded warm lane");
+        // Nobody idle: still route to the least-loaded *warm* lane
+        // rather than blocking round-robin.
+        r.committed(1, 0xA);
+        r.completed(1);
+        r.committed(1, 0xA); // pending: lane0=1, lane1=1
+        r.committed(0, 0xA); // pending: lane0=2, lane1=1
+        assert_eq!(r.first_choice(0xA), Some(1));
+    }
+
+    #[test]
+    fn router_warm_sets_are_lru_bounded_like_the_backend() {
+        let mut r = AffinityRouter::new(1, 2);
+        r.committed(0, 0xA);
+        r.committed(0, 0xB);
+        assert_eq!(r.warm_lanes(0xA), vec![0]);
+        // A third key evicts the LRU key (A), not the MRU one.
+        r.committed(0, 0xC);
+        assert!(r.warm_lanes(0xA).is_empty(), "A evicted");
+        assert_eq!(r.warm_lanes(0xB), vec![0]);
+        assert_eq!(r.warm_lanes(0xC), vec![0]);
+        // Re-touching B keeps it MRU: D evicts C.
+        r.committed(0, 0xB);
+        r.committed(0, 0xD);
+        assert!(r.warm_lanes(0xC).is_empty());
+        assert_eq!(r.warm_lanes(0xB), vec![0]);
+    }
+
+    #[test]
+    fn router_blocking_choice_prefers_warmth_then_shortest_queue() {
+        let mut r = AffinityRouter::new(3, 2);
+        r.committed(0, 0xA);
+        r.committed(0, 0xA);
+        r.committed(1, 0xB);
+        // Key A: lane 0 is warm, so block there even though it is the
+        // longest queue (the cache hit outweighs one queue slot).
+        assert_eq!(r.blocking_choice(0xA), 0);
+        // Cold key: shortest queue wins (lane 2 is empty) — the old
+        // fall-through blocked on the round-robin cursor regardless.
+        assert_eq!(r.blocking_choice(0xF), 2);
+        // And among equals the rotation cursor breaks the tie.
+        r.committed(2, 0xC); // pending now [2, 1, 1], rr = 0
+        assert_eq!(r.blocking_choice(0xF), 1);
+    }
+
+    #[test]
+    fn router_spill_prefers_fresh_lanes() {
+        let mut r = AffinityRouter::new(3, 2);
+        r.committed(1, 0xA);
+        let order = r.spill_order();
+        assert_eq!(order.len(), 3);
+        // Fresh (cache-empty) lanes 0 and 2 come before warm lane 1.
+        assert_eq!(&order[..2], &[0, 2]);
+        assert_eq!(order[2], 1);
+    }
+
+    // --- Tile-crossing workload ---
+
+    #[test]
+    fn tiled_workload_interleaves_tiles_and_shares_submaps() {
+        let seq = tiny_sequence(6);
+        let cfg = PipelineConfig {
+            source_sample: 256,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let w = tiled_localization_jobs(&seq, 6, 2, &cfg).unwrap();
+        assert_eq!(w.maps.len(), 2);
+        assert_eq!(w.jobs.len(), 6);
+        assert_eq!(w.truth.len(), 6);
+        // Round-robin emission: consecutive jobs alternate tiles.
+        assert_eq!(w.tile_of_job, vec![0, 1, 0, 1, 0, 1]);
+        for (job, &t) in w.jobs.iter().zip(&w.tile_of_job) {
+            assert_eq!(job.stream, t);
+            assert!(Arc::ptr_eq(&job.target, &w.maps[t]), "submaps are shared");
+            assert_eq!(job.target_key, w.maps[t].fingerprint());
+        }
+        // Ids are the emission order (deterministic outcome order).
+        for (k, job) in w.jobs.iter().enumerate() {
+            assert_eq!(job.id, k as u64);
+        }
+        // Two tiles → two distinct keys.
+        assert_ne!(w.jobs[0].target_key, w.jobs[1].target_key);
+        // Degenerate tile counts clamp instead of failing.
+        assert_eq!(tiled_localization_jobs(&seq, 6, 0, &cfg).unwrap().maps.len(), 1);
+        assert_eq!(tiled_localization_jobs(&seq, 6, 99, &cfg).unwrap().maps.len(), 6);
+    }
+
+    #[test]
+    fn tiled_localization_tracks_ground_truth_with_bounded_uploads() {
+        let seq = tiny_sequence(6);
+        let cfg = PipelineConfig {
+            source_sample: 512,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let res = run_tiled_localization(
+            &seq,
+            6,
+            2,
+            &cfg,
+            1,
+            4,
+            LaneIcpConfig {
+                max_iteration_count: 30,
+                ..Default::default()
+            },
+            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(res.report.outcomes.len(), 6);
+        assert_eq!(res.map_points.len(), 2);
+        assert!(
+            res.mean_translation_error() < 0.3,
+            "mean tile-localization error {}",
+            res.mean_translation_error()
+        );
+        // One lane, two submaps, A,B,A,B,… order: the LRU residency set
+        // absorbs the ping-pong — exactly one upload per submap.
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        assert_eq!(uploads, 2, "one upload per tile, not per scan");
+        assert_eq!(uploads + hits, 6);
+        assert_eq!(res.report.lanes[0].resident_targets, 2);
+        assert_eq!(res.report.failed_jobs(), 0);
     }
 }

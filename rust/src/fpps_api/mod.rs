@@ -33,6 +33,24 @@
 //! selectable at *runtime* through [`BackendHandle`] / [`BackendKind`]
 //! (the multi-lane coordinator instantiates one backend per lane), so
 //! nothing above this layer is monomorphised to a single device.
+//!
+//! # Residency protocol
+//!
+//! Uploads are split the way a target-resident device behaves: the
+//! reference cloud ships once via [`KernelBackend::upload_target_keyed`]
+//! and stays on the card; only the per-alignment source re-ships. Each
+//! backend keeps an **LRU set of N resident targets** (N from the
+//! `hwmodel` HBM residency budget, see
+//! [`crate::hwmodel::AcceleratorConfig::resident_target_slots`]) keyed
+//! by the caller's target key, so workloads that alternate between maps
+//! — tile-crossing localization above all — re-activate a still-resident
+//! target ([`KernelBackend::activate_target`]) instead of paying the DMA
+//! and, on the kd-tree backend, the index rebuild. Every actual upload
+//! mints a fresh [`TargetEpoch`]; [`FppsIcp`] stages padded targets
+//! per key and skips the upload whenever the epoch it staged under is
+//! still resident. Uploading past capacity evicts the least-recently
+//! used slot. Residency is a pure caching layer: hit or miss, the
+//! alignment numerics are bit-identical.
 
 use crate::icp::StopReason;
 use crate::kdtree::OwnedKdTree;
@@ -46,13 +64,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Identity of the target currently resident on a backend. Every actual
-/// [`KernelBackend::upload_target`] mints a fresh epoch, so a caller
-/// that remembers the epoch it uploaded can later check
-/// [`KernelBackend::target_epoch`] to learn whether its target is still
-/// the resident one — if so, the re-upload (and, for the kd-tree
-/// backend, the index rebuild) is skipped entirely. Epochs are scoped to
-/// one backend instance and never reused within it.
+/// Identity of one resident-target upload. Every actual
+/// [`KernelBackend::upload_target_keyed`] mints a fresh epoch, so a
+/// caller that remembers the epoch it uploaded under can later compare
+/// it against [`KernelBackend::activate_target`]'s answer to learn
+/// whether its target is still resident — if so, the re-upload (and,
+/// for the kd-tree backend, the index rebuild) is skipped entirely.
+/// Epochs are scoped to one backend instance and never reused within
+/// it, across all of its residency slots.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TargetEpoch(u64);
 
@@ -63,14 +82,99 @@ impl TargetEpoch {
     }
 }
 
+/// Residency key used by the unkeyed [`KernelBackend::upload_target`]
+/// convenience: all anonymous uploads share one slot, reproducing the
+/// pre-LRU single-slot semantics without spilling into the keyed set.
+pub const ANONYMOUS_TARGET_KEY: u64 = 0x414E_4F4E_5F54_4754; // "ANON_TGT"
+
+/// Bounded LRU set of resident targets shared by every backend: each
+/// entry pairs a caller key with the backend's device-side payload (raw
+/// buffers, a kd-tree, PJRT buffers) and the epoch it was uploaded
+/// under. The most-recently-used entry is the *active* target that
+/// [`KernelBackend::step`] runs against.
+struct ResidentSlots<T> {
+    /// (key, payload, epoch); LRU first, MRU (= active) last.
+    entries: Vec<(u64, T, TargetEpoch)>,
+    slots: usize,
+    epochs: u64,
+}
+
+impl<T> ResidentSlots<T> {
+    fn new(slots: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            slots: Self::clamp_slots(slots),
+            epochs: 0,
+        }
+    }
+
+    /// Slot counts are bounded by the hwmodel's physical cap: modelling
+    /// more residency than the device's activation crossbar supports
+    /// would produce upload/hit numbers no hardware could reproduce.
+    fn clamp_slots(slots: usize) -> usize {
+        slots.clamp(1, crate::hwmodel::MAX_RESIDENT_TARGETS)
+    }
+
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Shrink/grow the slot count, evicting LRU entries that no longer fit.
+    fn set_slots(&mut self, slots: usize) {
+        self.slots = Self::clamp_slots(slots);
+        while self.entries.len() > self.slots {
+            self.entries.remove(0);
+        }
+    }
+
+    /// Upload: (re)place `key`'s payload, make it active, mint an epoch,
+    /// evict the LRU entry on capacity pressure.
+    fn insert(&mut self, key: u64, payload: T) -> TargetEpoch {
+        self.entries.retain(|(k, ..)| *k != key);
+        let epoch = TargetEpoch::mint(&mut self.epochs);
+        self.entries.push((key, payload, epoch));
+        while self.entries.len() > self.slots {
+            self.entries.remove(0);
+        }
+        epoch
+    }
+
+    /// Make `key`'s entry active (MRU) if resident; `None` leaves the
+    /// active target unchanged.
+    fn activate(&mut self, key: u64) -> Option<TargetEpoch> {
+        let i = self.entries.iter().position(|(k, ..)| *k == key)?;
+        let entry = self.entries.remove(i);
+        let epoch = entry.2;
+        self.entries.push(entry);
+        Some(epoch)
+    }
+
+    /// Payload of the active (MRU) entry.
+    fn active(&self) -> Option<&T> {
+        self.entries.last().map(|(_, p, _)| p)
+    }
+
+    fn active_epoch(&self) -> Option<TargetEpoch> {
+        self.entries.last().map(|(.., e)| *e)
+    }
+
+    /// (key, epoch) of every resident entry, MRU first.
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        self.entries.iter().rev().map(|(k, _, e)| (*k, *e)).collect()
+    }
+}
+
 /// Device abstraction: one ICP step (transform → NN → accumulate) on
 /// padded, fixed-capacity buffers.
 ///
 /// The upload path is split the way the paper's Fig. 2 DMA actually
-/// behaves on a target-resident device: [`Self::upload_target`] ships
-/// the reference cloud once and keeps it resident (scan-to-map callers
-/// reuse it across thousands of alignments), while
-/// [`Self::upload_source`] ships the per-alignment query cloud.
+/// behaves on a target-resident device: [`Self::upload_target_keyed`]
+/// ships the reference cloud once into one of
+/// [`Self::residency_slots`] LRU slots and keeps it resident
+/// (scan-to-map callers reuse it across thousands of alignments,
+/// tile-crossing callers ping-pong between slots via
+/// [`Self::activate_target`]), while [`Self::upload_source`] ships the
+/// per-alignment query cloud.
 pub trait KernelBackend {
     /// Human-readable backend name (for logs / benches).
     fn name(&self) -> &'static str;
@@ -80,14 +184,49 @@ pub trait KernelBackend {
     fn select_capacity(&self, n_source: usize, n_target: usize)
         -> Result<(usize, usize, usize, usize)>;
 
-    /// Upload the padded target cloud + mask — the target half of the
-    /// host→HBM DMA. The target stays resident across any number of
-    /// [`Self::upload_source`] / [`Self::step`] cycles until the next
-    /// `upload_target`. Returns the new resident epoch.
-    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch>;
+    /// Number of target residency slots this backend keeps (≥ 1); the
+    /// default comes from the `hwmodel` HBM residency budget.
+    fn residency_slots(&self) -> usize;
 
-    /// Epoch of the currently resident target, if any.
+    /// Change the residency slot count at runtime; shrinking evicts
+    /// least-recently-used targets until the new capacity holds. The
+    /// count is clamped to `1..=hwmodel::MAX_RESIDENT_TARGETS` — no
+    /// backend may model residency the hardware budget rules out.
+    fn set_residency_slots(&mut self, slots: usize);
+
+    /// Upload the padded target cloud + mask into the residency slot
+    /// keyed by `key` — the target half of the host→HBM DMA — and make
+    /// it the *active* target that [`Self::step`] runs against. It stays
+    /// resident (surviving uploads of *other* keys, up to
+    /// [`Self::residency_slots`] of them, LRU-evicted under capacity
+    /// pressure) across any number of [`Self::upload_source`] /
+    /// [`Self::step`] cycles. Returns the freshly minted resident epoch.
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch>;
+
+    /// Unkeyed upload — single-slot convenience for one-shot callers;
+    /// every anonymous upload replaces the [`ANONYMOUS_TARGET_KEY`] slot.
+    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+        self.upload_target_keyed(ANONYMOUS_TARGET_KEY, tgt, tgt_mask)
+    }
+
+    /// Make the resident target with `key` active for subsequent
+    /// [`Self::step`] calls, returning its epoch — the cache-hit path:
+    /// no DMA, no index rebuild. `None` means the key is not resident
+    /// (never uploaded, or LRU-evicted); the active target is then left
+    /// unchanged and the caller must re-upload.
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch>;
+
+    /// Epoch of the currently *active* target, if any.
     fn target_epoch(&self) -> Option<TargetEpoch>;
+
+    /// `(key, epoch)` of every resident target, most recently used
+    /// first — the driver-visible residency table.
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)>;
 
     /// Upload the padded source cloud + mask — the per-alignment half of
     /// the DMA. Buffer sizes must match a capacity from
@@ -130,12 +269,14 @@ pub trait KernelBackend {
     fn device_time(&self) -> Duration;
 }
 
-/// Production backend: AOT artifact on the PJRT CPU client.
+/// Production backend: AOT artifact on the PJRT CPU client. Keeps an
+/// LRU cache of [`crate::runtime::PreparedTarget`]s — device-resident
+/// reference-cloud buffers — so alternating-map workloads re-activate
+/// instead of re-shipping.
 pub struct XlaBackend {
     engine: Engine,
-    target: Option<(crate::runtime::PreparedTarget, TargetEpoch)>,
+    targets: ResidentSlots<crate::runtime::PreparedTarget>,
     source: Option<crate::runtime::PreparedSource>,
-    epochs: u64,
     device_time: Duration,
 }
 
@@ -156,9 +297,8 @@ impl XlaBackend {
                     artifacts_dir.display()
                 )
             })?,
-            target: None,
+            targets: ResidentSlots::new(crate::hwmodel::default_residency_slots()),
             source: None,
-            epochs: 0,
             device_time: Duration::ZERO,
         })
     }
@@ -188,17 +328,36 @@ impl KernelBackend for XlaBackend {
         Ok((v.n, v.m, v.block_n, v.block_m))
     }
 
-    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+    fn residency_slots(&self) -> usize {
+        self.targets.slots()
+    }
+
+    fn set_residency_slots(&mut self, slots: usize) {
+        self.targets.set_slots(slots);
+    }
+
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch> {
         // DMA the reference cloud into device-resident buffers; it stays
-        // there across alignments until the next upload_target.
+        // there across alignments until LRU-evicted.
         let prep = self.engine.prepare_target(tgt, tgt_mask)?;
-        let epoch = TargetEpoch::mint(&mut self.epochs);
-        self.target = Some((prep, epoch));
-        Ok(epoch)
+        Ok(self.targets.insert(key, prep))
+    }
+
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+        self.targets.activate(key)
     }
 
     fn target_epoch(&self) -> Option<TargetEpoch> {
-        self.target.as_ref().map(|(_, e)| *e)
+        self.targets.active_epoch()
+    }
+
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        self.targets.resident_epochs()
     }
 
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
@@ -207,9 +366,9 @@ impl KernelBackend for XlaBackend {
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let (tgt, _) = self
-            .target
-            .as_ref()
+        let tgt = self
+            .targets
+            .active()
             .context("step() before upload_target(): no target on device")?;
         let src = self
             .source
@@ -232,17 +391,15 @@ impl KernelBackend for XlaBackend {
 pub struct NativeSimBackend {
     cfg: KernelConfig,
     device_time: Duration,
-    /// Resident target (the mirror of the HBM reference-cloud buffers).
-    target: Option<SimTarget>,
+    /// Resident targets (the mirror of the HBM reference-cloud slots).
+    targets: ResidentSlots<SimTarget>,
     /// Per-alignment source (the mirror of the query-cloud buffers).
     source: Option<SimSource>,
-    epochs: u64,
 }
 
 struct SimTarget {
     tgt: Vec<f32>,
     tgt_mask: Vec<f32>,
-    epoch: TargetEpoch,
 }
 
 struct SimSource {
@@ -255,20 +412,24 @@ impl NativeSimBackend {
         Self {
             cfg: KernelConfig::default(),
             device_time: Duration::ZERO,
-            target: None,
+            targets: ResidentSlots::new(crate::hwmodel::default_residency_slots()),
             source: None,
-            epochs: 0,
         }
     }
 
     pub fn with_blocks(block_n: usize, block_m: usize) -> Self {
         Self {
             cfg: KernelConfig { block_n, block_m },
-            device_time: Duration::ZERO,
-            target: None,
-            source: None,
-            epochs: 0,
+            ..Self::new()
         }
+    }
+
+    /// Like [`Self::new`] with an explicit residency slot count
+    /// (`1` reproduces the pre-LRU single-slot device).
+    pub fn with_residency_slots(slots: usize) -> Self {
+        let mut b = Self::new();
+        b.targets.set_slots(slots);
+        b
     }
 }
 
@@ -293,22 +454,43 @@ impl KernelBackend for NativeSimBackend {
         Ok((n, m, self.cfg.block_n, self.cfg.block_m))
     }
 
-    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+    fn residency_slots(&self) -> usize {
+        self.targets.slots()
+    }
+
+    fn set_residency_slots(&mut self, slots: usize) {
+        self.targets.set_slots(slots);
+    }
+
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch> {
         let m = tgt.len() / 3;
         if tgt_mask.len() != m {
             bail!("target mask has {} entries for {m} points", tgt_mask.len());
         }
-        let epoch = TargetEpoch::mint(&mut self.epochs);
-        self.target = Some(SimTarget {
-            tgt: tgt.to_vec(),
-            tgt_mask: tgt_mask.to_vec(),
-            epoch,
-        });
-        Ok(epoch)
+        Ok(self.targets.insert(
+            key,
+            SimTarget {
+                tgt: tgt.to_vec(),
+                tgt_mask: tgt_mask.to_vec(),
+            },
+        ))
+    }
+
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+        self.targets.activate(key)
     }
 
     fn target_epoch(&self) -> Option<TargetEpoch> {
-        self.target.as_ref().map(|t| t.epoch)
+        self.targets.active_epoch()
+    }
+
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        self.targets.resident_epochs()
     }
 
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
@@ -325,8 +507,8 @@ impl KernelBackend for NativeSimBackend {
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
         let target = self
-            .target
-            .as_ref()
+            .targets
+            .active()
             .context("step() before upload_target(): no target uploaded")?;
         let source = self
             .source
@@ -397,21 +579,15 @@ impl KernelBackend for NativeSimBackend {
 /// the FPGA wire format; Table III shows the two agree to < 0.01 m.
 pub struct KdTreeCpuBackend {
     device_time: Duration,
-    target: Option<KdTarget>,
+    /// Resident kd-trees, one per target key: built once per upload,
+    /// queried every step of every alignment that reuses the target —
+    /// and *kept* across alternating targets up to the slot count.
+    targets: ResidentSlots<OwnedKdTree>,
     source: Option<KdSource>,
-    epochs: u64,
     builds: u64,
     /// Optional cross-instance build counter (lane-pool tests sum the
     /// builds of every lane's backend through one shared counter).
     shared_builds: Option<Arc<AtomicU64>>,
-}
-
-struct KdTarget {
-    /// Index over the unmasked target points only (masked padding is
-    /// dropped at upload); built once per `upload_target()`, queried
-    /// every step of every alignment that reuses this target.
-    tree: OwnedKdTree,
-    epoch: TargetEpoch,
 }
 
 struct KdSource {
@@ -423,12 +599,19 @@ impl KdTreeCpuBackend {
     pub fn new() -> Self {
         Self {
             device_time: Duration::ZERO,
-            target: None,
+            targets: ResidentSlots::new(crate::hwmodel::default_residency_slots()),
             source: None,
-            epochs: 0,
             builds: 0,
             shared_builds: None,
         }
+    }
+
+    /// Like [`Self::new`] with an explicit residency slot count
+    /// (`1` reproduces the pre-LRU single-slot device).
+    pub fn with_residency_slots(slots: usize) -> Self {
+        let mut b = Self::new();
+        b.targets.set_slots(slots);
+        b
     }
 
     /// Like [`Self::new`], but every kd-tree build also increments
@@ -443,7 +626,8 @@ impl KdTreeCpuBackend {
 
     /// How many times this instance has built its kd-tree — with target
     /// caching, K alignments against one unchanged target build exactly
-    /// once.
+    /// once, and with N residency slots an N-map ping-pong builds once
+    /// *per map*.
     pub fn tree_builds(&self) -> u64 {
         self.builds
     }
@@ -469,11 +653,26 @@ impl KernelBackend for KdTreeCpuBackend {
         Ok((n_source.max(1), n_target.max(1), 1, 1))
     }
 
-    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+    fn residency_slots(&self) -> usize {
+        self.targets.slots()
+    }
+
+    fn set_residency_slots(&mut self, slots: usize) {
+        self.targets.set_slots(slots);
+    }
+
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch> {
         let m = tgt.len() / 3;
         if tgt_mask.len() != m {
             bail!("target mask has {} entries for {m} points", tgt_mask.len());
         }
+        // Index over the unmasked target points only (masked padding is
+        // dropped at upload).
         let mut kept = PointCloud::with_capacity(m);
         for j in 0..m {
             if tgt_mask[j] > 0.0 {
@@ -484,16 +683,19 @@ impl KernelBackend for KdTreeCpuBackend {
         if let Some(c) = &self.shared_builds {
             c.fetch_add(1, Ordering::Relaxed);
         }
-        let epoch = TargetEpoch::mint(&mut self.epochs);
-        self.target = Some(KdTarget {
-            tree: OwnedKdTree::build(kept),
-            epoch,
-        });
-        Ok(epoch)
+        Ok(self.targets.insert(key, OwnedKdTree::build(kept)))
+    }
+
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+        self.targets.activate(key)
     }
 
     fn target_epoch(&self) -> Option<TargetEpoch> {
-        self.target.as_ref().map(|t| t.epoch)
+        self.targets.active_epoch()
+    }
+
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        self.targets.resident_epochs()
     }
 
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
@@ -509,9 +711,9 @@ impl KernelBackend for KdTreeCpuBackend {
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let target = self
-            .target
-            .as_ref()
+        let tree = self
+            .targets
+            .active()
             .context("step() before upload_target(): no target uploaded")?;
         let state = self
             .source
@@ -538,10 +740,10 @@ impl KernelBackend for KdTreeCpuBackend {
             ];
             // Bounded search: the threshold prunes the descent, and the
             // strict bound matches the `icp` CPU baseline's rejection.
-            let Some(nb) = target.tree.nearest_within_sq(p, max_dist_sq) else {
+            let Some(nb) = tree.nearest_within_sq(p, max_dist_sq) else {
                 continue;
             };
-            let q = target.tree.cloud().get(nb.index as usize);
+            let q = tree.cloud().get(nb.index as usize);
             let pv = Vec3::from_f32(p);
             let qv = Vec3::from_f32(q);
             acc.count += 1.0;
@@ -650,11 +852,40 @@ impl KernelBackend for BackendHandle {
         }
     }
 
-    fn upload_target(&mut self, tgt: &[f32], tgt_mask: &[f32]) -> Result<TargetEpoch> {
+    fn residency_slots(&self) -> usize {
         match self {
-            BackendHandle::Xla(b) => b.upload_target(tgt, tgt_mask),
-            BackendHandle::NativeSim(b) => b.upload_target(tgt, tgt_mask),
-            BackendHandle::KdTreeCpu(b) => b.upload_target(tgt, tgt_mask),
+            BackendHandle::Xla(b) => b.residency_slots(),
+            BackendHandle::NativeSim(b) => b.residency_slots(),
+            BackendHandle::KdTreeCpu(b) => b.residency_slots(),
+        }
+    }
+
+    fn set_residency_slots(&mut self, slots: usize) {
+        match self {
+            BackendHandle::Xla(b) => b.set_residency_slots(slots),
+            BackendHandle::NativeSim(b) => b.set_residency_slots(slots),
+            BackendHandle::KdTreeCpu(b) => b.set_residency_slots(slots),
+        }
+    }
+
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch> {
+        match self {
+            BackendHandle::Xla(b) => b.upload_target_keyed(key, tgt, tgt_mask),
+            BackendHandle::NativeSim(b) => b.upload_target_keyed(key, tgt, tgt_mask),
+            BackendHandle::KdTreeCpu(b) => b.upload_target_keyed(key, tgt, tgt_mask),
+        }
+    }
+
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+        match self {
+            BackendHandle::Xla(b) => b.activate_target(key),
+            BackendHandle::NativeSim(b) => b.activate_target(key),
+            BackendHandle::KdTreeCpu(b) => b.activate_target(key),
         }
     }
 
@@ -663,6 +894,14 @@ impl KernelBackend for BackendHandle {
             BackendHandle::Xla(b) => b.target_epoch(),
             BackendHandle::NativeSim(b) => b.target_epoch(),
             BackendHandle::KdTreeCpu(b) => b.target_epoch(),
+        }
+    }
+
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        match self {
+            BackendHandle::Xla(b) => b.resident_epochs(),
+            BackendHandle::NativeSim(b) => b.resident_epochs(),
+            BackendHandle::KdTreeCpu(b) => b.resident_epochs(),
         }
     }
 
@@ -730,14 +969,21 @@ pub struct FppsIcp<B: KernelBackend> {
     max_correspondence_distance: f32,
     max_iteration_count: u32,
     transformation_epsilon: f64,
-    /// Padded target + mask staged for the device, kept (with the epoch
-    /// it was uploaded under) while the target cloud stays unchanged.
-    staged_target: Option<StagedTarget>,
+    /// Per-key padded targets staged for the device, LRU order (MRU
+    /// last), bounded by the backend's residency slot count — the
+    /// host-side mirror of the device's resident-target set.
+    staged_targets: Vec<StagedTarget>,
     target_uploads: u64,
     target_cache_hits: u64,
 }
 
 struct StagedTarget {
+    /// The cloud this staging was built from — its identity for the
+    /// unchanged-target check (`Arc` pointer first, exact content
+    /// second; a fingerprint alone could collide and corrupt results).
+    cloud: Arc<PointCloud>,
+    /// Residency key handed to the backend (content fingerprint).
+    key: u64,
     tgt: Vec<f32>,
     tgt_mask: Vec<f32>,
     /// Target capacity the padding was built for (re-padded if capacity
@@ -789,7 +1035,7 @@ impl<B: KernelBackend> FppsIcp<B> {
             max_correspondence_distance: 1.0,
             max_iteration_count: 50,
             transformation_epsilon: 1e-5,
-            staged_target: None,
+            staged_targets: Vec::new(),
             target_uploads: 0,
             target_cache_hits: 0,
         }
@@ -820,23 +1066,14 @@ impl<B: KernelBackend> FppsIcp<B> {
     }
 
     /// `setInputTarget()`. Accepts an owned cloud or a shared
-    /// `Arc<PointCloud>` (map reuse). Setting a target whose content is
-    /// unchanged keeps the staged upload — and the device-resident
-    /// target — alive, so the next `align()` skips the re-upload.
+    /// `Arc<PointCloud>` (map reuse). Targets are staged per key: as
+    /// long as a cloud (by `Arc` pointer or exact content) was seen
+    /// within the last [`KernelBackend::residency_slots`] distinct
+    /// targets, the next `align()` against it skips the re-upload —
+    /// including after *other* targets were aligned in between (the
+    /// tile ping-pong case the single-slot cache thrashed on).
     pub fn set_input_target(&mut self, cloud: impl Into<Arc<PointCloud>>) -> &mut Self {
-        let cloud = cloud.into();
-        let unchanged = match &self.target {
-            // Pointer equality first (free for shared maps), full content
-            // compare otherwise — a false "changed" only costs a
-            // re-upload, but a false "unchanged" would corrupt results,
-            // so content equality is exact, not a fingerprint.
-            Some(t) => Arc::ptr_eq(t, &cloud) || **t == *cloud,
-            None => false,
-        };
-        if !unchanged {
-            self.staged_target = None;
-        }
-        self.target = Some(cloud);
+        self.target = Some(cloud.into());
         self
     }
 
@@ -876,30 +1113,68 @@ impl<B: KernelBackend> FppsIcp<B> {
         }
 
         // Capacity selection is per-workload (the artifact variant can
-        // change with the source size), but the staged target only
-        // depends on the target capacity — an unchanged (target, cap_m)
-        // pair survives across alignments with different sources.
+        // change with the source size), but a staged target only depends
+        // on the target capacity — an unchanged (target, cap_m) pair
+        // survives across alignments with different sources.
         let (cap_n, cap_m, ..) = self.backend.select_capacity(source.len(), target.len())?;
-        if !matches!(&self.staged_target, Some(s) if s.cap_m == cap_m) {
+
+        // Find (or build) the staged entry for this target cloud.
+        // Pointer equality first (free for shared maps), full content
+        // compare otherwise — a false "changed" only costs a re-upload,
+        // but a false "unchanged" would corrupt results, so content
+        // equality is exact; the fingerprint is only the residency key.
+        let pos = self
+            .staged_targets
+            .iter()
+            .position(|s| Arc::ptr_eq(&s.cloud, target) || *s.cloud == **target);
+        let mut entry = match pos {
+            Some(i) => self.staged_targets.remove(i),
+            None => {
+                let (tgt, tgt_mask) = pad_to(&target.xyz, cap_m);
+                StagedTarget {
+                    cloud: Arc::clone(target),
+                    key: target.fingerprint(),
+                    tgt,
+                    tgt_mask,
+                    cap_m,
+                    epoch: None,
+                }
+            }
+        };
+        if entry.cap_m != cap_m {
             let (tgt, tgt_mask) = pad_to(&target.xyz, cap_m);
-            self.staged_target = Some(StagedTarget {
-                tgt,
-                tgt_mask,
-                cap_m,
-                epoch: None,
-            });
+            entry.tgt = tgt;
+            entry.tgt_mask = tgt_mask;
+            entry.cap_m = cap_m;
+            entry.epoch = None;
         }
 
-        // Target half of the Fig. 2 DMA: only if the device does not
-        // already hold this exact target (cross-frame target cache —
-        // scan-to-map localization uploads its map once, and the kd-tree
-        // backend builds its index once).
-        let staged = self.staged_target.as_mut().unwrap();
-        if staged.epoch.is_some() && staged.epoch == self.backend.target_epoch() {
-            self.target_cache_hits += 1;
-        } else {
-            staged.epoch = Some(self.backend.upload_target(&staged.tgt, &staged.tgt_mask)?);
-            self.target_uploads += 1;
+        // Target half of the Fig. 2 DMA: skipped when the device still
+        // holds this exact (key, epoch) resident — re-activating a
+        // cached slot costs nothing. Scan-to-map localization uploads
+        // its map once; a tile ping-pong uploads once per tile (up to
+        // the backend's slot count) instead of once per alignment.
+        match entry.epoch {
+            Some(e) if self.backend.activate_target(entry.key) == Some(e) => {
+                self.target_cache_hits += 1;
+            }
+            _ => {
+                entry.epoch = Some(self.backend.upload_target_keyed(
+                    entry.key,
+                    &entry.tgt,
+                    &entry.tgt_mask,
+                )?);
+                self.target_uploads += 1;
+            }
+        }
+
+        // MRU staging order mirrors the backend's LRU set; staged
+        // paddings past the slot count can never hit again, so drop them.
+        self.staged_targets.push(entry);
+        let slots = self.backend.residency_slots().max(1);
+        if self.staged_targets.len() > slots {
+            let excess = self.staged_targets.len() - slots;
+            self.staged_targets.drain(0..excess);
         }
 
         // Source half: once per alignment; iterations then only ship the
@@ -1199,22 +1474,100 @@ mod tests {
             &Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.05, 0.0, 0.0)).inverse_rigid(),
         );
         let mut icp = FppsIcp::kdtree_cpu();
+        assert!(
+            icp.backend().residency_slots() >= 2,
+            "hwmodel budget grants multi-target residency by default"
+        );
         for _ in 0..3 {
             icp.set_input_source(source.clone());
             icp.set_input_target(target_a.clone());
             icp.align().unwrap();
         }
         assert_eq!(icp.backend().tree_builds(), 1, "built once");
-        // A genuinely different target invalidates the epoch.
+        // A genuinely different target builds its own resident tree.
         icp.set_input_source(source.clone());
         icp.set_input_target(target_b.clone());
         icp.align().unwrap();
         assert_eq!(icp.backend().tree_builds(), 2);
-        // Returning to A is a *content* change again (no LRU, one slot).
-        icp.set_input_source(source);
-        icp.set_input_target(target_a);
+        // Returning to A re-activates the still-resident slot — no
+        // rebuild (the pre-LRU single-slot backend paid a third build).
+        icp.set_input_source(source.clone());
+        icp.set_input_target(target_a.clone());
         icp.align().unwrap();
-        assert_eq!(icp.backend().tree_builds(), 3);
+        assert_eq!(icp.backend().tree_builds(), 2, "LRU keeps A resident");
+
+        // A single-slot backend reproduces the old thrash exactly.
+        let mut single = FppsIcp::with_backend(KdTreeCpuBackend::with_residency_slots(1));
+        for tgt in [&target_a, &target_b, &target_a] {
+            single.set_input_source(source.clone());
+            single.set_input_target(tgt.clone());
+            single.align().unwrap();
+        }
+        assert_eq!(single.backend().tree_builds(), 3, "one slot: every switch rebuilds");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_target() {
+        // Three targets through a two-slot backend: uploading C evicts A
+        // (LRU), so returning to A re-uploads while B and C stay hits.
+        let targets: Vec<PointCloud> =
+            (0..3).map(|k| structured_cloud(400, 34 + k)).collect();
+        let source = targets[0].transformed(
+            &Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.05, 0.0, 0.0)).inverse_rigid(),
+        );
+        let mut icp = FppsIcp::with_backend(NativeSimBackend::with_residency_slots(2));
+        let run = |icp: &mut FppsIcp<NativeSimBackend>, t: &PointCloud| {
+            icp.set_input_source(source.clone());
+            icp.set_input_target(t.clone());
+            icp.align().unwrap();
+        };
+        run(&mut icp, &targets[0]); // upload A          resident {A}
+        run(&mut icp, &targets[1]); // upload B          resident {A,B}
+        run(&mut icp, &targets[1]); // hit B             resident {A,B}
+        run(&mut icp, &targets[2]); // upload C, evict A resident {B,C}
+        run(&mut icp, &targets[1]); // hit B             resident {C,B}
+        run(&mut icp, &targets[0]); // A was evicted → re-upload, evict C
+        let (uploads, hits) = icp.target_cache_stats();
+        assert_eq!((uploads, hits), (4, 2));
+        let resident: Vec<u64> = icp
+            .backend()
+            .resident_epochs()
+            .iter()
+            .map(|(k, _)| *k)
+            .collect();
+        assert_eq!(resident.len(), 2);
+        assert_eq!(resident[0], targets[0].fingerprint(), "A is MRU");
+        assert_eq!(resident[1], targets[1].fingerprint(), "B still resident");
+    }
+
+    #[test]
+    fn resident_set_is_keyed_and_bounded() {
+        let mut b = NativeSimBackend::with_residency_slots(2);
+        assert_eq!(b.residency_slots(), 2);
+        assert!(b.resident_epochs().is_empty());
+        let tgt = vec![0.25f32; 4 * 3];
+        let mask = vec![1f32; 4];
+        let ea = b.upload_target_keyed(1, &tgt, &mask).unwrap();
+        let eb = b.upload_target_keyed(2, &tgt, &mask).unwrap();
+        assert_eq!(b.target_epoch(), Some(eb), "upload activates its key");
+        // Re-activating key 1 is free and makes it MRU again.
+        assert_eq!(b.activate_target(1), Some(ea));
+        assert_eq!(b.target_epoch(), Some(ea));
+        // Capacity pressure evicts the LRU key (2, not 1).
+        let _ec = b.upload_target_keyed(3, &tgt, &mask).unwrap();
+        assert_eq!(b.activate_target(2), None, "evicted");
+        assert_eq!(b.activate_target(1), Some(ea), "survivor");
+        assert_eq!(
+            b.resident_epochs().iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        // Unknown key leaves the active target untouched.
+        assert_eq!(b.activate_target(99), None);
+        assert_eq!(b.target_epoch(), Some(ea));
+        // Shrinking to one slot keeps only the MRU entry.
+        b.set_residency_slots(1);
+        assert_eq!(b.activate_target(3), None);
+        assert_eq!(b.target_epoch(), Some(ea));
     }
 
     #[test]

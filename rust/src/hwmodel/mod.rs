@@ -42,6 +42,15 @@ pub struct AcceleratorConfig {
     pub hbm_gbps: f64,
     /// PCIe host→card effective bandwidth (GB/s), Gen3 x16 ≈ 12 GB/s.
     pub pcie_gbps: f64,
+    /// HBM slice (MiB) reserved for *resident* reference clouds — the
+    /// target half of the Fig. 2 DMA stays on the card between
+    /// alignments, and this pool bounds how many distinct targets can
+    /// stay resident at once (see [`AcceleratorConfig::resident_target_slots`]).
+    /// The U50 has 8 GiB of HBM, but the pool is kept small: every
+    /// resident target also needs its BRAM-partitioned copy streamed in
+    /// on activation, so a large pool only helps as far as the driver's
+    /// slot bookkeeping can exploit it.
+    pub hbm_residency_mib: f64,
 }
 
 impl Default for AcceleratorConfig {
@@ -54,9 +63,16 @@ impl Default for AcceleratorConfig {
             source_capacity: 4096,
             hbm_gbps: 60.0,
             pcie_gbps: 12.0,
+            hbm_residency_mib: 8.0,
         }
     }
 }
+
+/// Upper bound on simultaneously resident reference clouds, regardless
+/// of how much HBM the residency pool would fit. Each slot adds a way
+/// to the activation crossbar and a row of driver bookkeeping, so the
+/// count is capped the way set-associative caches cap associativity.
+pub const MAX_RESIDENT_TARGETS: usize = 8;
 
 impl AcceleratorConfig {
     /// Total parallel distance lanes.
@@ -68,6 +84,30 @@ impl AcceleratorConfig {
     pub fn cycle_s(&self) -> f64 {
         1.0 / (self.clock_mhz * 1e6)
     }
+
+    /// HBM bytes one resident target occupies at `points` capacity:
+    /// xyz as 3 × f32 plus one f32 validity-mask word per point.
+    pub fn resident_target_bytes(points: usize) -> u64 {
+        points as u64 * 16
+    }
+
+    /// How many reference clouds of `target_capacity` points fit in the
+    /// HBM residency pool — the physically grounded default for the
+    /// backends' LRU target slots. Always ≥ 1 (the active target must
+    /// fit) and capped at [`MAX_RESIDENT_TARGETS`].
+    pub fn resident_target_slots(&self, target_capacity: usize) -> usize {
+        let budget = (self.hbm_residency_mib * (1u64 << 20) as f64) as u64;
+        let per = Self::resident_target_bytes(target_capacity.max(1));
+        ((budget / per.max(1)).max(1) as usize).min(MAX_RESIDENT_TARGETS)
+    }
+}
+
+/// Residency slot count of the default accelerator instance at its own
+/// target capacity — what backends use when the caller does not pick a
+/// slot count explicitly.
+pub fn default_residency_slots() -> usize {
+    let c = AcceleratorConfig::default();
+    c.resident_target_slots(c.target_capacity)
 }
 
 #[cfg(test)]
@@ -82,5 +122,25 @@ mod tests {
         assert!(c.target_capacity >= 130_000);
         assert_eq!(c.source_capacity, 4096);
         assert!((c.cycle_s() - 1.0 / 300e6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn residency_slots_follow_the_hbm_budget() {
+        let c = AcceleratorConfig::default();
+        // 8 MiB pool / (131072 pts × 16 B) = 4 slots at the default
+        // capacity — enough for tile ping-pong, far below the cap.
+        assert_eq!(c.resident_target_slots(c.target_capacity), 4);
+        assert_eq!(default_residency_slots(), 4);
+        // Smaller targets fit more, up to the crossbar cap…
+        assert_eq!(c.resident_target_slots(4096), MAX_RESIDENT_TARGETS);
+        // …and a target bigger than the pool still gets its one slot.
+        assert_eq!(c.resident_target_slots(10_000_000), 1);
+        assert_eq!(c.resident_target_slots(0), MAX_RESIDENT_TARGETS);
+        // The budget scales: half the pool at default capacity → 2 slots.
+        let half = AcceleratorConfig {
+            hbm_residency_mib: 4.0,
+            ..Default::default()
+        };
+        assert_eq!(half.resident_target_slots(half.target_capacity), 2);
     }
 }

@@ -60,6 +60,12 @@ pub enum StopReason {
     Converged,
     MaxIterations,
     TooFewCorrespondences,
+    /// The alignment itself errored (backend/infrastructure failure) and
+    /// was contained by the caller. Only the lane pool constructs this —
+    /// `align()` returns `Err` instead — so a data-quality signal like
+    /// [`StopReason::TooFewCorrespondences`] is never conflated with an
+    /// infrastructure error.
+    Failed,
 }
 
 /// Per-iteration diagnostics (consumed by benches and EXPERIMENTS.md).

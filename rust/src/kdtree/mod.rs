@@ -360,7 +360,10 @@ fn nearest_rec_impl(
 /// A kd-tree that owns its cloud — for callers that must persist the
 /// index across calls (the borrow-based [`KdTree`] cannot be stored next
 /// to the cloud it borrows). Built once per target upload by the
-/// `KdTreeCpuBackend`, queried every ICP iteration.
+/// `KdTreeCpuBackend`, queried every ICP iteration — and *kept*: the
+/// backend holds a bounded LRU set of these (one per resident target
+/// key), so an alternating-map workload builds each map's index once
+/// instead of once per switch.
 pub struct OwnedKdTree {
     cloud: PointCloud,
     nodes: Vec<Node>,

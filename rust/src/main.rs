@@ -5,7 +5,8 @@
 //! * `align`     — register two point cloud files (KITTI .bin)
 //! * `odometry`  — run scan-to-scan odometry on a synthetic sequence
 //! * `batch`     — multi-lane batched registration over frame pairs
-//! * `localize`  — scan-to-map localization against one resident map
+//! * `localize`  — scan-to-map localization against one resident map,
+//!   or `--tiles N` submaps ping-ponging across the LRU residency slots
 //! * `resources` — print the Table II resource report
 //! * `power`     — print the §IV.D power/efficiency report
 //! * `pipesim`   — run the Fig. 3 cycle-level pipeline simulation
@@ -20,8 +21,8 @@ use anyhow::{bail, Context, Result};
 use fpps::cli::{backend_selection, Parser};
 use fpps::config::{KvConfig, RunConfig};
 use fpps::coordinator::{
-    run_localization, run_odometry, run_registration_batch, sequence_pair_jobs, LaneIcpConfig,
-    PipelineConfig,
+    run_localization, run_odometry, run_registration_batch, run_tiled_localization,
+    sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
 use fpps::fpps_api::{FppsIcp, KernelBackend};
@@ -67,12 +68,30 @@ fn print_usage() {
          \x20 align      register two KITTI .bin clouds (--source, --target)\n\
          \x20 odometry   scan-to-scan odometry over a synthetic sequence\n\
          \x20 batch      multi-lane batched registration (--lanes, --pairs)\n\
-         \x20 localize   scan-to-map localization on a resident map (--scans)\n\
+         \x20 localize   scan-to-map localization on resident maps (--scans, --tiles)\n\
          \x20 resources  Table II resource utilisation report\n\
          \x20 power      power / energy-efficiency report (§IV.D)\n\
          \x20 pipesim    Fig. 3 NN-pipeline cycle simulation\n\
          \x20 info       artifact manifest + PJRT platform\n\n\
          Run `fpps <subcommand> --help` for options."
+    );
+}
+
+/// Per-job failures are contained by the lane pool (the rest of the
+/// batch still completes and is reported above); at the CLI boundary
+/// they must still fail the run loudly, like the pre-containment
+/// behavior did.
+fn fail_on_contained_errors(report: &fpps::coordinator::LaneReport) -> Result<()> {
+    if report.failed_jobs() == 0 {
+        return Ok(());
+    }
+    for o in report.outcomes.iter().filter(|o| o.is_failed()) {
+        eprintln!("failed: {}", o.error.as_deref().unwrap_or("unknown error"));
+    }
+    bail!(
+        "{} of {} jobs failed (remaining jobs completed; see above)",
+        report.failed_jobs(),
+        report.outcomes.len()
     );
 }
 
@@ -254,7 +273,7 @@ fn cmd_batch() -> Result<()> {
         report.service.percentile_ms(99.0),
         report.queue_wait.mean_ms(),
     );
-    Ok(())
+    fail_on_contained_errors(&report)
 }
 
 fn cmd_localize() -> Result<()> {
@@ -270,6 +289,7 @@ fn cmd_localize() -> Result<()> {
     .opt("seed", "dataset seed (default: config `seed`)", None)
     .opt("lanes", "worker lanes (default: config `lanes`)", None)
     .opt("queue-depth", "bounded job-queue depth", Some("4"))
+    .residency_opts()
     .backend_opts();
     let a = p.parse_env(2)?;
     let name = a.get("sequence").unwrap().to_string();
@@ -286,6 +306,8 @@ fn cmd_localize() -> Result<()> {
     let seed: u64 = a.get_or("seed", rc.seed)?;
     let lanes: usize = a.get_or("lanes", rc.lanes)?;
     let queue_depth: usize = a.get_or("queue-depth", 4)?;
+    let tiles: usize = a.get_or("tiles", rc.tiles)?;
+    let slots: usize = a.get_or("slots", rc.residency_slots)?;
     let (kind, artifacts) = backend_selection(&a)?;
 
     let seq = Sequence::synthetic(
@@ -311,9 +333,50 @@ fn cmd_localize() -> Result<()> {
     };
 
     let artifacts = artifacts.as_path();
-    let res = run_localization(&seq, scans, &cfg, lanes, queue_depth, icp_cfg, |_lane| {
-        fpps::fpps_api::BackendHandle::create(kind, artifacts)
-    })?;
+    // Per-lane backends; `--slots` overrides the hwmodel-derived
+    // residency slot count (0 keeps the default).
+    let make_backend = |_lane: usize| -> anyhow::Result<fpps::fpps_api::BackendHandle> {
+        let mut b = fpps::fpps_api::BackendHandle::create(kind, artifacts)?;
+        if slots > 0 {
+            b.set_residency_slots(slots);
+        }
+        Ok(b)
+    };
+
+    if tiles > 1 {
+        // Tile-crossing scenario: submaps interleave A,B,…,A,B,… so a
+        // single-slot backend re-uploads every job while the LRU
+        // residency set uploads each submap once per serving lane.
+        let res = run_tiled_localization(
+            &seq, scans, tiles, &cfg, lanes, queue_depth, icp_cfg, make_backend,
+        )?;
+        println!(
+            "localized {} scans across {} interleaved submap tiles ({} pts) over {lanes} lane(s)",
+            res.report.outcomes.len(),
+            res.map_points.len(),
+            res.map_points
+                .iter()
+                .map(usize::to_string)
+                .collect::<Vec<_>>()
+                .join("+"),
+        );
+        res.report.lane_table("Per-lane summary").print();
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        println!(
+            "tile residency: {uploads} upload(s), {hits} cache hit(s) for {} boundary-\
+             crossing scans — uploads bounded by tiles x lanes, not by scans",
+            res.report.outcomes.len()
+        );
+        println!(
+            "localization error: mean {:.3} m, max {:.3} m",
+            res.mean_translation_error(),
+            res.max_translation_error()
+        );
+        return fail_on_contained_errors(&res.report);
+    }
+
+    let res = run_localization(&seq, scans, &cfg, lanes, queue_depth, icp_cfg, make_backend)?;
 
     println!(
         "localized {} scans against a {}-point resident map over {lanes} lane(s)",
@@ -339,7 +402,7 @@ fn cmd_localize() -> Result<()> {
         res.mean_translation_error(),
         res.max_translation_error()
     );
-    Ok(())
+    fail_on_contained_errors(&res.report)
 }
 
 fn cmd_resources() -> Result<()> {

@@ -171,7 +171,10 @@ mod engine {
     /// Target half of the device-resident cloud buffers — the paper's
     /// HBM-uploaded reference cloud. Uploaded once per *target*, not per
     /// alignment: scan-to-map callers keep one of these alive across
-    /// thousands of queries (the cross-frame target cache).
+    /// thousands of queries, and `fpps_api::XlaBackend` holds an LRU
+    /// *set* of them (one per target key, sized by the hwmodel HBM
+    /// residency budget) so alternating-map workloads swap between
+    /// still-resident buffers instead of re-shipping.
     pub struct PreparedTarget {
         m: usize,
         tgt: xla::PjRtBuffer,

@@ -1,0 +1,219 @@
+//! Integration tests for the lane-pool dispatcher: failed jobs must be
+//! contained (one bad job cannot kill its lane, let alone the pool),
+//! multi-target (tile ping-pong) workloads must stay bit-identical
+//! across `lanes = 1` vs `lanes = K`, and warm-lane accounting must
+//! conserve work. The deterministic routing-policy harness (warm-lane
+//! reuse after steals, LRU warm sets, blocking choice) lives next to
+//! `AffinityRouter` in `coordinator::tests`.
+
+use fpps::coordinator::{
+    run_registration_batch, tiled_localization_jobs, LaneIcpConfig, PipelineConfig,
+    RegistrationJob,
+};
+use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+use fpps::fpps_api::{KdTreeCpuBackend, NativeSimBackend};
+use fpps::icp::StopReason;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::rng::Pcg32;
+use std::sync::Arc;
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+fn tiny_sequence(frames: usize) -> Sequence {
+    let spec = sequence_specs()[3].clone(); // residential: gentle
+    Sequence::synthetic(spec, frames, 11, LidarConfig::tiny())
+}
+
+/// Jobs alternating between two shared maps, plus one poison job with an
+/// empty source cloud that makes `align()` error.
+fn jobs_with_one_poison(n: usize) -> Vec<RegistrationJob> {
+    let map_a = Arc::new(structured_cloud(600, 300));
+    let map_b = Arc::new(structured_cloud(600, 301));
+    let gt = Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.08, -0.02, 0.0));
+    (0..n as u64)
+        .map(|k| {
+            let map = if k % 2 == 0 { &map_a } else { &map_b };
+            let source = if k == 2 {
+                PointCloud::new() // align() bails: "source/target cloud is empty"
+            } else {
+                let mut rng = Pcg32::new(310 + k);
+                let mut s = map.transformed(&gt.inverse_rigid());
+                s.add_noise(0.005, &mut rng);
+                s.random_sample(300, &mut rng)
+            };
+            RegistrationJob::new(k, 0, source, Arc::clone(map), Mat4::IDENTITY)
+        })
+        .collect()
+}
+
+/// A single failing job is contained in its outcome; its lane keeps
+/// draining and every other job of the batch completes normally.
+#[test]
+fn failed_job_does_not_kill_its_lane() {
+    for lanes in [1usize, 2] {
+        let report = run_registration_batch(
+            jobs_with_one_poison(8),
+            lanes,
+            4,
+            LaneIcpConfig::default(),
+            |_| Ok(NativeSimBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(report.outcomes.len(), 8, "{lanes} lanes: all jobs drained");
+        assert_eq!(report.failed_jobs(), 1);
+        for o in &report.outcomes {
+            if o.id == 2 {
+                assert!(o.is_failed());
+                // Infrastructure failures get their own stop reason —
+                // never conflated with a data-quality signal.
+                assert_eq!(o.stop, StopReason::Failed);
+                let msg = o.error.as_deref().unwrap();
+                assert!(msg.contains("empty"), "contextful error, got {msg:?}");
+                assert!(o.rmse.is_nan());
+                assert_eq!(o.iterations, 0);
+                // The failed outcome hands back the job's prior.
+                assert_eq!(o.transform.m, Mat4::IDENTITY.m);
+            } else {
+                assert_ne!(o.stop, StopReason::Failed);
+                assert!(!o.is_failed(), "job {} poisoned by neighbour", o.id);
+                assert!(o.rmse.is_finite());
+                assert!(o.iterations >= 1);
+            }
+        }
+        // The per-lane failure tally matches the outcomes.
+        let failed_by_lane: usize = report.lanes.iter().map(|l| l.failed).sum();
+        assert_eq!(failed_by_lane, 1);
+        let served: usize = report.lanes.iter().map(|l| l.jobs).sum();
+        assert_eq!(served, 8);
+    }
+}
+
+/// Failure containment is deterministic: the same poisoned batch yields
+/// bit-identical outcomes (including the failure) on 1 vs K lanes.
+#[test]
+fn poisoned_batch_is_bit_identical_across_lane_counts() {
+    let one = run_registration_batch(
+        jobs_with_one_poison(8),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        |_| Ok(NativeSimBackend::new()),
+    )
+    .unwrap();
+    let many = run_registration_batch(
+        jobs_with_one_poison(8),
+        3,
+        2,
+        LaneIcpConfig::default(),
+        |_| Ok(NativeSimBackend::new()),
+    )
+    .unwrap();
+    for (a, b) in one.outcomes.iter().zip(many.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.is_failed(), b.is_failed(), "job {}", a.id);
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+/// Tile ping-pong over the pool: `lanes = 1` vs `lanes = K` produce
+/// bit-identical transforms on a seeded tiled workload, and the
+/// multi-slot residency keeps pool-wide uploads bounded by
+/// tiles × lanes (never one per scan).
+#[test]
+fn tiled_workload_bit_identical_across_lane_counts() {
+    let seq = tiny_sequence(8);
+    let cfg = PipelineConfig {
+        source_sample: 512,
+        target_capacity: 4096,
+        ..Default::default()
+    };
+    let icp_cfg = LaneIcpConfig {
+        max_iteration_count: 30,
+        ..Default::default()
+    };
+    let tiles = 2;
+
+    let one = run_registration_batch(
+        tiled_localization_jobs(&seq, 8, tiles, &cfg).unwrap().jobs,
+        1,
+        4,
+        icp_cfg,
+        |_| Ok(KdTreeCpuBackend::new()),
+    )
+    .unwrap();
+    let two = run_registration_batch(
+        tiled_localization_jobs(&seq, 8, tiles, &cfg).unwrap().jobs,
+        2,
+        8,
+        icp_cfg,
+        |_| Ok(KdTreeCpuBackend::new()),
+    )
+    .unwrap();
+
+    assert_eq!(one.outcomes.len(), 8);
+    assert_eq!(two.outcomes.len(), 8);
+    for (a, b) in one.outcomes.iter().zip(two.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    // One lane sees both submaps exactly once: 2 uploads, 6 hits.
+    let uploads1: usize = one.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits1: usize = one.lanes.iter().map(|l| l.target_hits).sum();
+    assert_eq!(uploads1, tiles, "single lane: one upload per tile");
+    assert_eq!(uploads1 + hits1, 8);
+
+    // K lanes: at most tiles × lanes uploads, still never per scan.
+    let uploads2: usize = two.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits2: usize = two.lanes.iter().map(|l| l.target_hits).sum();
+    assert!(
+        (tiles..=tiles * 2).contains(&uploads2),
+        "uploads {uploads2} outside [tiles, tiles x lanes]"
+    );
+    assert_eq!(uploads2 + hits2, 8);
+}
+
+/// The pool honors backend-configured slot counts end to end: lanes
+/// report their real residency to the dispatcher, and with one slot the
+/// ping-pong thrashes by design — every tile switch re-uploads, exactly
+/// the behavior `--slots 1` exists to demonstrate.
+#[test]
+fn single_slot_backends_thrash_on_tile_ping_pong() {
+    let seq = tiny_sequence(6);
+    let cfg = PipelineConfig {
+        source_sample: 512,
+        target_capacity: 4096,
+        ..Default::default()
+    };
+    let report = run_registration_batch(
+        tiled_localization_jobs(&seq, 6, 2, &cfg).unwrap().jobs,
+        1,
+        4,
+        LaneIcpConfig {
+            max_iteration_count: 30,
+            ..Default::default()
+        },
+        |_| Ok(KdTreeCpuBackend::with_residency_slots(1)),
+    )
+    .unwrap();
+    assert_eq!(report.outcomes.len(), 6);
+    let uploads: usize = report.lanes.iter().map(|l| l.target_uploads).sum();
+    assert_eq!(uploads, 6, "one slot: A,B,A,B,… re-uploads every switch");
+    assert_eq!(report.lanes[0].resident_targets, 1);
+}
