@@ -14,7 +14,7 @@
 use anyhow::{Context, Result};
 use fpps::cli::{backend_selection, Parser};
 use fpps::coordinator::{
-    run_localization, run_tiled_localization, LaneIcpConfig, PipelineConfig,
+    run_localization, run_tiled_localization, AdmissionPolicy, LaneIcpConfig, PipelineConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
 use fpps::fpps_api::{BackendHandle, KernelBackend};
@@ -56,6 +56,7 @@ fn main() -> Result<()> {
         source_sample: a.get_or("sample", 1024)?,
         target_capacity: a.get_or("capacity", 8192)?,
         seed,
+        admission: a.get_or("admission", AdmissionPolicy::DownsampleToFit)?,
         ..Default::default()
     };
     let tiles: usize = a.get_or("tiles", 1)?;
@@ -113,6 +114,15 @@ fn main() -> Result<()> {
         make_backend,
     )?;
 
+    if res.admission.downsampled() {
+        println!(
+            "admission ({}): map {} pts -> {} pts to fit the {}-pt residency slot",
+            res.admission.policy,
+            res.admission.original_points,
+            res.admission.admitted_points,
+            res.admission.slot_capacity
+        );
+    }
     println!(
         "map: {} points resident; {} scans localized in {:.1} ms ({:.2} jobs/s)",
         res.map_points,

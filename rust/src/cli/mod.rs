@@ -189,9 +189,11 @@ impl Parser {
     }
 
     /// Attach the target-residency options shared by the localization
-    /// subcommand/example: `--tiles` (submap ping-pong scenario) and
+    /// subcommand/example: `--tiles` (submap ping-pong scenario),
     /// `--slots` (resident-target slots per backend, 0 = hwmodel
-    /// default).
+    /// default), and `--admission` (policy for maps whose footprint
+    /// exceeds one residency slot; no parser default so a config file
+    /// can supply it).
     pub fn residency_opts(self) -> Self {
         self.opt(
             "tiles",
@@ -201,6 +203,11 @@ impl Parser {
         .opt(
             "slots",
             "resident-target slots per backend (0 = hwmodel budget)",
+            None,
+        )
+        .opt(
+            "admission",
+            "oversized-map policy: reject | downsample (default)",
             None,
         )
     }
@@ -254,13 +261,29 @@ mod tests {
 
     #[test]
     fn residency_opts_parse() {
+        use crate::coordinator::AdmissionPolicy;
         let p = Parser::new("demo", "test").residency_opts();
         let a = p.parse(&toks(&[])).unwrap();
         assert_eq!(a.get_or::<usize>("tiles", 1).unwrap(), 1);
         assert_eq!(a.get_or::<usize>("slots", 0).unwrap(), 0);
-        let a = p.parse(&toks(&["--tiles", "3", "--slots=2"])).unwrap();
+        // No parser default: the config-file value wins when the flag is
+        // absent.
+        assert_eq!(
+            a.get_or("admission", AdmissionPolicy::Reject).unwrap(),
+            AdmissionPolicy::Reject
+        );
+        let a = p
+            .parse(&toks(&["--tiles", "3", "--slots=2", "--admission", "reject"]))
+            .unwrap();
         assert_eq!(a.get_or::<usize>("tiles", 1).unwrap(), 3);
         assert_eq!(a.get_or::<usize>("slots", 0).unwrap(), 2);
+        assert_eq!(
+            a.get_or("admission", AdmissionPolicy::DownsampleToFit)
+                .unwrap(),
+            AdmissionPolicy::Reject
+        );
+        let a = p.parse(&toks(&["--admission", "shrinkwrap"])).unwrap();
+        assert!(a.get_parsed::<AdmissionPolicy>("admission").is_err());
     }
 
     #[test]

@@ -123,6 +123,11 @@ pub struct RunConfig {
     /// Resident-target slots per backend; 0 = derive from the `hwmodel`
     /// HBM residency budget (the default).
     pub residency_slots: usize,
+    /// How maps whose padded footprint exceeds one residency slot are
+    /// admitted: `reject` (structured error) or `downsample` (explicit
+    /// downsample-to-fit, the default). See
+    /// [`crate::coordinator::admit_map`].
+    pub admission: crate::coordinator::AdmissionPolicy,
 }
 
 impl Default for RunConfig {
@@ -140,6 +145,7 @@ impl Default for RunConfig {
             scans: 16,
             tiles: 1,
             residency_slots: 0,
+            admission: crate::coordinator::AdmissionPolicy::DownsampleToFit,
         }
     }
 }
@@ -165,6 +171,7 @@ impl RunConfig {
             scans: kv.get_or("scans", d.scans)?,
             tiles: kv.get_or("tiles", d.tiles)?,
             residency_slots: kv.get_or("residency_slots", d.residency_slots)?,
+            admission: kv.get_or("admission", d.admission)?,
         })
     }
 
@@ -219,8 +226,10 @@ mod tests {
 
     #[test]
     fn run_config_defaults_and_overrides() {
+        use crate::coordinator::AdmissionPolicy;
         let kv = KvConfig::parse(
-            "max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\ntiles=3\nresidency_slots=2\n",
+            "max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\ntiles=3\n\
+             residency_slots=2\nadmission=reject\n",
         )
         .unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
@@ -230,6 +239,15 @@ mod tests {
         assert_eq!(rc.scans, 8);
         assert_eq!(rc.tiles, 3);
         assert_eq!(rc.residency_slots, 2);
+        assert_eq!(rc.admission, AdmissionPolicy::Reject);
+        // Both spellings parse; garbage errors loudly.
+        let kv = KvConfig::parse("admission=downsample-to-fit\n").unwrap();
+        assert_eq!(
+            RunConfig::from_kv(&kv).unwrap().admission,
+            AdmissionPolicy::DownsampleToFit
+        );
+        let kv = KvConfig::parse("admission=shrinkwrap\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
         assert_eq!(RunConfig::from_kv(&KvConfig::default()).unwrap().scans, 16);
         // Untouched fields keep paper defaults.
         assert_eq!(rc.max_correspondence_distance, 1.0);
@@ -238,6 +256,11 @@ mod tests {
         assert_eq!(defaults.lanes, 1);
         assert_eq!(defaults.tiles, 1, "single shared map by default");
         assert_eq!(defaults.residency_slots, 0, "0 = hwmodel-derived");
+        assert_eq!(
+            defaults.admission,
+            AdmissionPolicy::DownsampleToFit,
+            "pre-admission behavior stays the default, now explicit"
+        );
         let p = rc.icp_params();
         assert_eq!(p.max_iterations, 10);
     }

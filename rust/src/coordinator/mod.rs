@@ -12,13 +12,24 @@
 //! On top of the single-stream odometry pipeline sits the **multi-lane
 //! registration engine** ([`run_lane_pool`] / [`run_registration_batch`]):
 //! K worker lanes, each owning its own [`KernelBackend`] instance, are
-//! fed by a **target-affinity dispatcher** — jobs sharing a target key
-//! route to a lane whose backend already holds that target resident
-//! (no re-upload, no kd-tree rebuild), spilling to other lanes when the
-//! warm lanes saturate. Each backend keeps an LRU *set* of resident
-//! targets (sized by the `hwmodel` HBM residency budget) and the
-//! dispatcher mirrors that set per lane, so alternating-map workloads
-//! stay warm too. Per-job failures are contained in their
+//! fed by a **pool-wide residency coordinator** ([`AffinityRouter`]) —
+//! jobs sharing a target key route to a lane whose backend already
+//! holds that target resident (no re-upload, no kd-tree rebuild), a
+//! *cold* key routes to a lane with a **free residency slot** before any
+//! warm lane is made to evict, and warm lanes are only stolen from once
+//! they have a real backlog ([`STEAL_BACKLOG`] jobs deep) with another
+//! lane idle. The coordinator mirrors each lane backend's LRU resident
+//! set, and the mirror is **corrected, not guessed**: every job
+//! completion reports [`JobFeedback`] `(lane, key, uploaded, hit, ok)`
+//! back to the dispatcher, which replays actual uploads and cache hits
+//! onto a confirmed resident mirror (including the device's own LRU
+//! eviction) and *un-warms* a key whose job failed before ever touching
+//! residency — so a poisoned job can never leave a phantom warm entry
+//! steering later jobs to a cache that does not exist. Maps that
+//! cannot fit a residency slot at all are handled up front by
+//! residency-aware admission ([`AdmissionPolicy`]: reject with a
+//! structured [`AdmissionError`], or downsample-to-fit) instead of
+//! silent shrinking. Per-job failures are contained in their
 //! [`RegistrationOutcome`] instead of killing the lane. Per-lane
 //! [`TimingStats`] merge into an aggregate [`LaneReport`]. This is how
 //! related FPGA registration stacks treat the accelerator — a shared,
@@ -84,6 +95,9 @@ pub struct PipelineConfig {
     pub bootstrap_seeds: usize,
     /// Spacing between bootstrap seeds along +x (m).
     pub bootstrap_step: f32,
+    /// How maps whose footprint exceeds one residency slot
+    /// (`target_capacity` points) are admitted (see [`admit_map`]).
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for PipelineConfig {
@@ -98,6 +112,7 @@ impl Default for PipelineConfig {
             voxel_leaf: 0.15,
             bootstrap_seeds: 9,
             bootstrap_step: 0.3,
+            admission: AdmissionPolicy::DownsampleToFit,
         }
     }
 }
@@ -200,6 +215,157 @@ pub fn fit_to_capacity(cloud: PointCloud, capacity: usize, seed: u64) -> PointCl
     // it independent of the per-frame source-sampling streams).
     let mut rng = Pcg32::substream(seed, 0xF17);
     cloud.random_sample(capacity, &mut rng)
+}
+
+// ---------------------------------------------------------------------------
+// Residency-aware admission
+// ---------------------------------------------------------------------------
+
+/// What to do with a candidate resident map whose footprint exceeds one
+/// residency slot (`target_capacity` points). Parsed from the
+/// `admission=` config key and `--admission` CLI option.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Fail the run with a structured [`AdmissionError`] carrying the
+    /// `hwmodel` footprint — for serving setups where a silently
+    /// degraded map is worse than a loud rejection.
+    Reject,
+    /// Voxel-downsample (growing leaf, random-sample fallback) until the
+    /// map fits the slot, and record the decision — the pre-admission
+    /// behavior, made explicit and visible.
+    #[default]
+    DownsampleToFit,
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "reject" => AdmissionPolicy::Reject,
+            "downsample" | "downsample-to-fit" => AdmissionPolicy::DownsampleToFit,
+            other => bail!("unknown admission policy {other:?} (expected reject | downsample)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::DownsampleToFit => "downsample-to-fit",
+        })
+    }
+}
+
+/// Structured rejection of a map that does not fit one residency slot —
+/// returned (through `anyhow`, downcastable) by [`admit_map`] under
+/// [`AdmissionPolicy::Reject`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionError {
+    /// Raw point count of the offending map.
+    pub points: usize,
+    /// Points after padding to the kernel target block.
+    pub padded_points: usize,
+    /// HBM bytes the padded map would occupy.
+    pub footprint_bytes: u64,
+    /// Point capacity of one residency slot (`target_capacity`).
+    pub slot_capacity: usize,
+    /// HBM bytes one slot provides at that capacity.
+    pub slot_bytes: u64,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "map of {} points (padded {} = {} B HBM) exceeds the {}-point residency slot \
+             ({} B); rerun with `--admission downsample` or raise target_capacity",
+            self.points,
+            self.padded_points,
+            self.footprint_bytes,
+            self.slot_capacity,
+            self.slot_bytes
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// What admission decided for one candidate map (recorded on the
+/// localization workloads so the decision is reportable, never silent).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionDecision {
+    pub policy: AdmissionPolicy,
+    /// Point count before admission.
+    pub original_points: usize,
+    /// Point count actually admitted to the slot.
+    pub admitted_points: usize,
+    /// `hwmodel` footprint of the *original* cloud — what was asked of
+    /// the slot.
+    pub footprint: crate::hwmodel::TargetFootprint,
+    /// Point capacity of one residency slot at admission time.
+    pub slot_capacity: usize,
+}
+
+impl AdmissionDecision {
+    /// Did admission have to shrink the map to fit?
+    pub fn downsampled(&self) -> bool {
+        self.admitted_points < self.original_points
+    }
+}
+
+/// Residency-aware admission for one candidate resident map: estimate
+/// its padded HBM footprint via
+/// [`crate::hwmodel::AcceleratorConfig::target_footprint`], admit it
+/// unchanged when it fits a `cfg.target_capacity`-point slot, and
+/// otherwise apply `cfg.admission` — a structured rejection or an
+/// explicit downsample-to-fit — instead of the old silent shrink.
+pub fn admit_map(
+    cloud: PointCloud,
+    cfg: &PipelineConfig,
+) -> Result<(PointCloud, AdmissionDecision)> {
+    let hw = crate::hwmodel::AcceleratorConfig::default();
+    let block_m = crate::nn::KernelConfig::default().block_m;
+    let footprint = hw.target_footprint(cloud.len(), block_m);
+    let original_points = cloud.len();
+    let slot_capacity = cfg.target_capacity;
+    if footprint.fits_slot(slot_capacity) {
+        return Ok((
+            cloud,
+            AdmissionDecision {
+                policy: cfg.admission,
+                original_points,
+                admitted_points: original_points,
+                footprint,
+                slot_capacity,
+            },
+        ));
+    }
+    match cfg.admission {
+        AdmissionPolicy::Reject => Err(AdmissionError {
+            points: original_points,
+            padded_points: footprint.padded_points,
+            footprint_bytes: footprint.bytes,
+            slot_capacity,
+            slot_bytes: crate::hwmodel::AcceleratorConfig::resident_target_bytes(slot_capacity),
+        }
+        .into()),
+        AdmissionPolicy::DownsampleToFit => {
+            let fitted = fit_to_capacity(cloud, slot_capacity, cfg.seed);
+            let admitted_points = fitted.len();
+            Ok((
+                fitted,
+                AdmissionDecision {
+                    policy: cfg.admission,
+                    original_points,
+                    admitted_points,
+                    footprint,
+                    slot_capacity,
+                },
+            ))
+        }
+    }
 }
 
 /// Acquisition stage: generates/loads frames, samples the source, and
@@ -497,6 +663,10 @@ pub struct LaneStats {
     /// Alignments that found their target already resident (affinity
     /// scheduling + unchanged target = cache hit).
     pub target_hits: usize,
+    /// Resident targets this lane's backend LRU-evicted — with pool-wide
+    /// residency coordination this stays 0 while any lane has free
+    /// slots.
+    pub target_evictions: usize,
 }
 
 /// Aggregate report of one lane-pool run.
@@ -537,7 +707,7 @@ impl LaneReport {
             "p99 (ms)",
             "wait (ms)",
             "jobs/s",
-            "tgt up/hit",
+            "tgt up/hit/ev",
             "resident",
             "device (ms)",
         ]);
@@ -555,7 +725,10 @@ impl LaneReport {
                 format!("{:.1}", l.service.percentile_ms(99.0)),
                 format!("{:.1}", l.queue_wait.mean_ms()),
                 format!("{jobs_per_s:.2}"),
-                format!("{}/{}", l.target_uploads, l.target_hits),
+                format!(
+                    "{}/{}/{}",
+                    l.target_uploads, l.target_hits, l.target_evictions
+                ),
                 l.resident_targets.to_string(),
                 format!("{:.1}", l.device_ms),
             ]);
@@ -569,20 +742,66 @@ impl LaneReport {
     }
 }
 
-/// Routing core of [`dispatch_by_affinity`]: a pure, deterministic
-/// state machine over per-lane **warm key sets** — the dispatcher-side
-/// mirror of each lane backend's LRU resident-target set — plus a
-/// pending-job load estimate. Separated from the channel plumbing so
-/// the scheduling policy is unit-testable without threads.
+/// Steal threshold: a warm lane keeps its key's jobs until it has this
+/// many in flight *and* another lane sits idle. One in-flight job is
+/// not a backlog — it drains sooner than a redundant target upload
+/// pays off — so stealing starts at a queue two deep.
+pub const STEAL_BACKLOG: usize = 2;
+
+/// Per-job completion feedback a lane reports to the dispatcher — the
+/// ground truth that corrects the [`AffinityRouter`]'s warm-set mirror
+/// (see [`AffinityRouter::completed`]).
+#[derive(Clone, Copy, Debug)]
+pub struct JobFeedback {
+    /// Lane that served the job.
+    pub lane: usize,
+    /// The job's target key.
+    pub key: u64,
+    /// The backend actually uploaded the target during this job (the
+    /// lane diffs its upload counter around `align()`), so the lane now
+    /// genuinely holds the key — even if the alignment later errored.
+    pub uploaded: bool,
+    /// The job re-activated an already-resident target (the cache-hit
+    /// counter advanced): the key is device-resident and was just
+    /// MRU-touched there — even if a later stage of the alignment
+    /// failed, which is why this cannot be inferred from `ok` alone.
+    pub hit: bool,
+    /// The alignment returned `Ok`.
+    pub ok: bool,
+}
+
+/// Pool-wide residency coordinator — the routing core of
+/// [`dispatch_by_affinity`]: a pure, deterministic state machine over
+/// per-lane **warm key sets** (the dispatcher-side mirror of each lane
+/// backend's LRU resident-target set) plus a pending-job load estimate
+/// and per-lane **slot occupancy** (free vs. warm). Separated from the
+/// channel plumbing so the scheduling policy is unit-testable without
+/// threads, and public so the property suite can drive it against real
+/// backends.
 ///
-/// Two invariants the channel loop must uphold:
+/// Invariants the channel loop must uphold:
 /// * routing state is committed via [`Self::committed`] only **after** a
 ///   send succeeds (a failed `try_send` must not poison the warm sets);
-/// * completions arrive via [`Self::completed`].
-struct AffinityRouter {
+/// * every served job reports [`JobFeedback`] through
+///   [`Self::completed`], which *corrects* the optimistically committed
+///   mirror — replaying uploads and cache hits onto the confirmed
+///   resident mirror, and un-warming a key whose job failed before
+///   touching residency. The corrected warm sets stay a subset of each
+///   backend's [`KernelBackend::resident_epochs`] keys
+///   (property-tested).
+pub struct AffinityRouter {
     /// Per-lane warm target keys, LRU first / MRU last, each bounded by
     /// `slots` — uploads past capacity evict exactly like the backend.
     warm: Vec<Vec<u64>>,
+    /// Keys *confirmed* device-resident per lane (LRU first), updated
+    /// only by [`JobFeedback`] — the exact mirror of each backend's
+    /// resident set as of its last processed completion. Distinct from
+    /// the warm set: `warm` also carries optimistic, not-yet-completed
+    /// commits (and drops keys conservatively on failure), while this
+    /// list replays the device's own upload/activate transitions, so a
+    /// device slot filled by a key the warm mirror later forgot still
+    /// counts as occupied.
+    resident: Vec<Vec<u64>>,
     /// Jobs sent to each lane minus completions seen.
     pending: Vec<usize>,
     /// Residency slots mirrored per lane.
@@ -592,22 +811,42 @@ struct AffinityRouter {
 }
 
 impl AffinityRouter {
-    fn new(lanes: usize, slots: usize) -> Self {
+    pub fn new(lanes: usize, slots: usize) -> Self {
         Self {
             warm: vec![Vec::new(); lanes],
+            resident: vec![Vec::new(); lanes],
             pending: vec![0; lanes],
             slots: slots.max(1),
             rr: 0,
         }
     }
 
-    fn lanes(&self) -> usize {
+    pub fn lanes(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Jobs routed to `lane` and not yet completed.
+    pub fn pending(&self, lane: usize) -> usize {
+        self.pending[lane]
+    }
+
+    /// The mirror's warm keys of `lane`, LRU first / MRU last.
+    pub fn warm_keys(&self, lane: usize) -> &[u64] {
+        &self.warm[lane]
+    }
+
+    /// Does the mirror say `lane` has an unoccupied residency slot — a
+    /// place a cold target can land without evicting anything? Uses the
+    /// larger of the optimistic warm count (committed, not yet
+    /// completed) and the confirmed resident count (a slot filled by a
+    /// key the warm mirror later forgot is still filled).
+    pub fn has_free_slot(&self, lane: usize) -> bool {
+        self.warm[lane].len().max(self.resident[lane].len()) < self.slots
     }
 
     /// Every lane warm for `key` — after a steal there can be several —
     /// least-loaded first (ties by lane index).
-    fn warm_lanes(&self, key: u64) -> Vec<usize> {
+    pub fn warm_lanes(&self, key: u64) -> Vec<usize> {
         let mut v: Vec<usize> = (0..self.lanes())
             .filter(|&l| self.warm[l].contains(&key))
             .collect();
@@ -615,57 +854,71 @@ impl AffinityRouter {
         v
     }
 
-    /// Warmth vs. parallelism: the least-loaded warm lane if it keeps
-    /// up, an idle lane (steal — one extra upload, bounded by the lane
-    /// count) when every warm lane lags, the least-loaded warm lane when
-    /// nobody is idle, `None` when the key is cold everywhere.
-    fn first_choice(&self, key: u64) -> Option<usize> {
+    /// Routing decision, in priority order:
+    /// 1. **warm hit** — the least-loaded warm lane, as long as its
+    ///    backlog stays under [`STEAL_BACKLOG`];
+    /// 2. **steal** — every warm lane is backlogged and a lane sits
+    ///    idle: the idle lane (free-slot lanes preferred) pays one extra
+    ///    upload rather than serializing a same-target batch;
+    /// 3. the least-loaded warm lane when nobody is idle;
+    /// 4. **free slot** — a cold key goes to the least-loaded lane with
+    ///    an unoccupied residency slot: filling free pool capacity
+    ///    always beats evicting a warm lane's LRU key;
+    /// 5. `None` — cold key, every slot on every lane occupied: the
+    ///    caller spills by load (an eviction is inevitable).
+    pub fn first_choice(&self, key: u64) -> Option<usize> {
         let warm = self.warm_lanes(key);
-        let &best = warm.first()?;
-        if self.pending[best] == 0 {
+        if let Some(&best) = warm.first() {
+            if self.pending[best] < STEAL_BACKLOG {
+                return Some(best);
+            }
+            let idle = (0..self.lanes())
+                .filter(|&l| self.pending[l] == 0)
+                .min_by_key(|&l| !self.has_free_slot(l));
+            if let Some(idle) = idle {
+                return Some(idle);
+            }
             return Some(best);
         }
-        if let Some(idle) = (0..self.lanes()).find(|&l| self.pending[l] == 0) {
-            return Some(idle);
-        }
-        Some(best)
+        (0..self.lanes())
+            .filter(|&l| self.has_free_slot(l))
+            .min_by_key(|&l| self.pending[l])
     }
 
-    /// Spill order for non-blocking attempts: fresh lanes first (their
-    /// cache is empty anyway), then everyone by load (ties in
-    /// round-robin rotation order).
-    fn spill_order(&self) -> Vec<usize> {
+    /// Spill order for non-blocking attempts after [`Self::first_choice`]
+    /// found its queue full: everyone except the already-tried lane,
+    /// least-loaded first (a cold key must not queue behind a deep
+    /// backlog just because a lane's cache is fresh), free-slot lanes
+    /// before evicting ones at equal load, rotation order breaking the
+    /// remaining ties.
+    pub fn spill_order(&self, exclude: Option<usize>) -> Vec<usize> {
         let lanes = self.lanes();
-        let mut order: Vec<usize> = (0..lanes).filter(|&l| self.warm[l].is_empty()).collect();
-        let mut rest: Vec<usize> = (0..lanes)
+        let mut order: Vec<usize> = (0..lanes)
             .map(|i| (self.rr + i) % lanes)
-            .filter(|l| !order.contains(l))
+            .filter(|&l| Some(l) != exclude)
             .collect();
-        rest.sort_by_key(|&l| self.pending[l]);
-        order.extend(rest);
+        order.sort_by_key(|&l| (self.pending[l], !self.has_free_slot(l)));
         order
     }
 
     /// Lane to block on when every queue is full: the least-loaded warm
-    /// lane (keeps the cache hot), else the shortest queue (rotation
-    /// order on ties) — never a blind round-robin pick past a shorter
-    /// queue.
-    fn blocking_choice(&self, key: u64) -> usize {
+    /// lane (keeps the cache hot), else the shortest queue — free-slot
+    /// lanes first at equal load, rotation order on remaining ties —
+    /// never a blind round-robin pick past a shorter queue.
+    pub fn blocking_choice(&self, key: u64) -> usize {
         if let Some(&l) = self.warm_lanes(key).first() {
             return l;
         }
         let lanes = self.lanes();
         (0..lanes)
             .map(|i| (self.rr + i) % lanes)
-            .min_by_key(|&l| self.pending[l])
+            .min_by_key(|&l| (self.pending[l], !self.has_free_slot(l)))
             .unwrap_or(0)
     }
 
-    /// A job with `key` was *successfully* sent to `lane`: bump its
-    /// load, mark the key warm (MRU), evict the lane's LRU key past the
-    /// slot count, advance the round-robin cursor.
-    fn committed(&mut self, lane: usize, key: u64) {
-        self.pending[lane] += 1;
+    /// Touch `key` MRU on `lane`'s mirror, evicting past the slot count
+    /// exactly like the backend's LRU set.
+    fn touch_warm(&mut self, lane: usize, key: u64) {
         let w = &mut self.warm[lane];
         if let Some(i) = w.iter().position(|&k| k == key) {
             w.remove(i);
@@ -674,33 +927,80 @@ impl AffinityRouter {
         while w.len() > self.slots {
             w.remove(0);
         }
+    }
+
+    /// A job with `key` was *successfully* sent to `lane`: bump its
+    /// load, optimistically mark the key warm (MRU — so back-to-back
+    /// same-key jobs keep their affinity before the first completes),
+    /// advance the round-robin cursor. The optimism is corrected by
+    /// [`Self::completed`] once the job's real outcome is known.
+    pub fn committed(&mut self, lane: usize, key: u64) {
+        self.pending[lane] += 1;
+        self.touch_warm(lane, key);
         self.rr = (lane + 1) % self.lanes();
     }
 
-    /// `lane` finished one job.
-    fn completed(&mut self, lane: usize) {
-        self.pending[lane] = self.pending[lane].saturating_sub(1);
+    /// Replay a confirmed device transition for `key` on `lane`'s
+    /// resident mirror — insert/touch MRU, and on capacity pressure
+    /// evict the resident LRU exactly like the device did, dropping the
+    /// evicted key from the warm mirror too (it is no longer on the
+    /// card, whatever the optimistic commits said).
+    fn confirm_resident(&mut self, lane: usize, key: u64) {
+        let r = &mut self.resident[lane];
+        if let Some(i) = r.iter().position(|&k| k == key) {
+            r.remove(i);
+        }
+        r.push(key);
+        while self.resident[lane].len() > self.slots {
+            let evicted = self.resident[lane].remove(0);
+            self.warm[lane].retain(|&k| k != evicted);
+        }
+        self.touch_warm(lane, key);
+    }
+
+    /// Apply one job's [`JobFeedback`]: drop the lane's load estimate,
+    /// then correct the mirror from the ground truth instead of keeping
+    /// the commit-time guess:
+    ///
+    /// * **uploaded** (even on a failed alignment — the device holds
+    ///   the target regardless) or **cache hit** (the key was resident
+    ///   and just MRU-touched, even if a later stage of the job
+    ///   failed): replay the transition on the confirmed resident
+    ///   mirror, including the device's own LRU eviction when an
+    ///   upload ran at capacity — so the mirror never retains a key
+    ///   the device dropped.
+    /// * **failed without touching residency** (neither uploaded nor
+    ///   hit): un-warm the key the optimistic commit guessed — the
+    ///   backend never gained it — while leaving the confirmed
+    ///   resident set untouched (failure changes no device slot).
+    pub fn completed(&mut self, fb: JobFeedback) {
+        if fb.lane >= self.lanes() {
+            return;
+        }
+        self.pending[fb.lane] = self.pending[fb.lane].saturating_sub(1);
+        if fb.uploaded || fb.hit {
+            self.confirm_resident(fb.lane, fb.key);
+        } else if !fb.ok {
+            self.warm[fb.lane].retain(|&k| k != fb.key);
+        }
     }
 }
 
-/// Route jobs from the shared intake queue to per-lane queues by
-/// **target affinity**: a job goes to a lane whose backend already
-/// holds its target resident (cache hit — no re-upload, no kd-tree
-/// rebuild) — but only while that lane keeps up. Once every warm lane
-/// has a backlog and another lane sits idle, parallelism wins: the idle
-/// lane takes the job and pays one extra target upload (bounded by the
-/// lane count), instead of a whole same-target batch serializing on one
-/// lane. The router tracks each lane's full warm *set* (`slots` keys,
-/// mirroring the backends' LRU residency), so after a steal both warm
-/// lanes stay candidates and the least-loaded one is picked. `done_rx`
-/// carries lane-completion events, giving the dispatcher its per-lane
-/// load estimate without locking. Routing can never change numerics:
-/// every job is an independent alignment, so `lanes = 1` and
-/// `lanes = K` stay bit-identical regardless of placement.
+/// Route jobs from the shared intake queue to per-lane queues through
+/// the pool-wide residency coordinator ([`AffinityRouter`]): warm keys
+/// keep their lane while it keeps up, cold keys fill **free residency
+/// slots** anywhere in the pool before any warm lane is made to evict,
+/// and only when every slot is occupied does a cold key spill by load.
+/// `done_rx` carries per-job [`JobFeedback`], giving the dispatcher
+/// both its per-lane load estimate and the ground truth that corrects
+/// the warm-set mirror (failed uploads un-warm) without locking.
+/// Routing can never change numerics: every job is an independent
+/// alignment, so `lanes = 1` and `lanes = K` stay bit-identical
+/// regardless of placement.
 fn dispatch_by_affinity(
     rx: Receiver<RegistrationJob>,
     lane_txs: Vec<SyncSender<RegistrationJob>>,
-    done_rx: Receiver<usize>,
+    done_rx: Receiver<JobFeedback>,
     slots_rx: Receiver<usize>,
 ) {
     let lanes = lane_txs.len();
@@ -718,21 +1018,25 @@ fn dispatch_by_affinity(
     }
     let mut router = AffinityRouter::new(lanes, slots.unwrap_or(1));
     'jobs: for mut job in rx.iter() {
-        while let Ok(l) = done_rx.try_recv() {
-            router.completed(l);
+        while let Ok(fb) = done_rx.try_recv() {
+            router.completed(fb);
         }
         let key = job.target_key;
+        let mut tried = None;
         if let Some(l) = router.first_choice(key) {
             match lane_txs[l].try_send(job) {
                 Ok(()) => {
                     router.committed(l, key);
                     continue 'jobs;
                 }
-                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Full(j)) => {
+                    job = j;
+                    tried = Some(l); // don't re-attempt the full queue
+                }
                 Err(TrySendError::Disconnected(_)) => return, // pool shutting down
             }
         }
-        for l in router.spill_order() {
+        for l in router.spill_order(tried) {
             match lane_txs[l].try_send(job) {
                 Ok(()) => {
                     router.committed(l, key);
@@ -745,8 +1049,8 @@ fn dispatch_by_affinity(
         // Every queue is full: drain any fresh completions, then block
         // on the best lane. Routing state is committed only once the
         // send actually lands.
-        while let Ok(l) = done_rx.try_recv() {
-            router.completed(l);
+        while let Ok(fb) = done_rx.try_recv() {
+            router.completed(fb);
         }
         let l = router.blocking_choice(key);
         if lane_txs[l].send(job).is_err() {
@@ -793,7 +1097,7 @@ where
     }
     let (out_tx, out_rx) = channel::<RegistrationOutcome>();
     let (lane_tx, lane_rx) = channel::<LaneStats>();
-    let (done_tx, done_rx) = channel::<usize>();
+    let (done_tx, done_rx) = channel::<JobFeedback>();
     let (slots_tx, slots_rx) = channel::<usize>();
     let t0 = Instant::now();
 
@@ -826,7 +1130,13 @@ where
                 // Own queue, no lock: the dispatcher already routed.
                 for job in job_rx.iter() {
                     let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
-                    let (id, stream, initial) = (job.id, job.stream, job.initial);
+                    let (id, stream, initial, key) =
+                        (job.id, job.stream, job.initial, job.target_key);
+                    // Diffing the upload/hit counters around align()
+                    // tells the dispatcher what THIS job did to the
+                    // backend's residency — the ground truth of the
+                    // mirror-correcting feedback protocol.
+                    let (uploads_before, hits_before) = icp.target_cache_stats();
                     icp.set_input_source(job.source);
                     icp.set_input_target(job.target);
                     icp.set_transformation_matrix(initial);
@@ -866,14 +1176,25 @@ where
                     stats.jobs += 1;
                     stats.service.record_ms(outcome.service_ms);
                     stats.queue_wait.record_ms(queue_wait_ms);
+                    let ok = !outcome.is_failed();
+                    let (uploads_after, hits_after) = icp.target_cache_stats();
                     out_tx.send(outcome).ok();
-                    done_tx.send(lane).ok();
+                    done_tx
+                        .send(JobFeedback {
+                            lane,
+                            key,
+                            uploaded: uploads_after > uploads_before,
+                            hit: hits_after > hits_before,
+                            ok,
+                        })
+                        .ok();
                 }
                 stats.device_ms = icp.backend().device_time().as_secs_f64() * 1e3;
                 let (uploads, hits) = icp.target_cache_stats();
                 stats.target_uploads = uploads as usize;
                 stats.target_hits = hits as usize;
                 stats.resident_targets = icp.backend().resident_epochs().len();
+                stats.target_evictions = icp.backend().target_evictions() as usize;
                 lane_tx.send(stats).ok();
                 Ok(())
             }));
@@ -1004,6 +1325,8 @@ pub struct LocalizationWorkload {
     pub jobs: Vec<RegistrationJob>,
     /// Ground-truth map←sensor poses, indexed like `jobs`.
     pub truth: Vec<Mat4>,
+    /// What admission decided for the map (see [`admit_map`]).
+    pub admission: AdmissionDecision,
 }
 
 /// Build a localization workload from a synthetic sequence: the map is
@@ -1033,7 +1356,10 @@ pub fn localization_jobs(
         sources.push(cloud.random_sample(cfg.source_sample, &mut rng));
         truth.push(pose);
     }
-    let map = Arc::new(fit_to_capacity(map, cfg.target_capacity, cfg.seed));
+    // Residency-aware admission replaces the old silent shrink: an
+    // oversized map is rejected or explicitly downsampled per policy.
+    let (map, admission) = admit_map(map, cfg)?;
+    let map = Arc::new(map);
     let key = map.fingerprint(); // hash the shared map once, not per job
 
     let mut jobs = Vec::with_capacity(scans);
@@ -1051,7 +1377,12 @@ pub fn localization_jobs(
             prior,
         ));
     }
-    Ok(LocalizationWorkload { map, jobs, truth })
+    Ok(LocalizationWorkload {
+        map,
+        jobs,
+        truth,
+        admission,
+    })
 }
 
 /// Per-scan translation error vs. `truth` (m), in job order (the job id
@@ -1106,6 +1437,8 @@ pub struct LocalizationResult {
     /// Per-scan translation error vs. ground truth (m), in job order;
     /// NaN for contained failures.
     pub translation_errors: Vec<f64>,
+    /// What admission decided for the map (see [`admit_map`]).
+    pub admission: AdmissionDecision,
 }
 
 impl LocalizationResult {
@@ -1138,12 +1471,14 @@ where
 {
     let workload = localization_jobs(seq, scans, cfg)?;
     let map_points = workload.map.len();
+    let admission = workload.admission;
     let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
     let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
     Ok(LocalizationResult {
         report,
         map_points,
         translation_errors,
+        admission,
     })
 }
 
@@ -1166,6 +1501,8 @@ pub struct TiledLocalizationWorkload {
     pub jobs: Vec<RegistrationJob>,
     /// Ground-truth map←sensor poses, indexed by job id.
     pub truth: Vec<Mat4>,
+    /// Per-tile admission decisions, tile order (see [`admit_map`]).
+    pub admissions: Vec<AdmissionDecision>,
 }
 
 /// Build a tile-crossing workload from a synthetic sequence: scans are
@@ -1198,10 +1535,14 @@ pub fn tiled_localization_jobs(
         sources.push(Some(cloud.random_sample(cfg.source_sample, &mut rng)));
         poses.push(pose);
     }
-    let maps: Vec<Arc<PointCloud>> = tile_clouds
-        .into_iter()
-        .map(|c| Arc::new(fit_to_capacity(c, cfg.target_capacity, cfg.seed)))
-        .collect();
+    // Each submap passes residency-aware admission on its own.
+    let mut maps = Vec::with_capacity(tiles);
+    let mut admissions = Vec::with_capacity(tiles);
+    for c in tile_clouds {
+        let (m, a) = admit_map(c, cfg)?;
+        maps.push(Arc::new(m));
+        admissions.push(a);
+    }
     // Hash each shared submap once, not per job.
     let keys: Vec<u64> = maps.iter().map(|m| m.fingerprint()).collect();
 
@@ -1239,6 +1580,7 @@ pub fn tiled_localization_jobs(
         tile_of_job,
         jobs,
         truth,
+        admissions,
     })
 }
 
@@ -1251,6 +1593,8 @@ pub struct TiledLocalizationResult {
     /// Per-scan translation error vs. ground truth (m), in job order;
     /// NaN for contained failures.
     pub translation_errors: Vec<f64>,
+    /// Per-tile admission decisions, tile order (see [`admit_map`]).
+    pub admissions: Vec<AdmissionDecision>,
 }
 
 impl TiledLocalizationResult {
@@ -1284,12 +1628,14 @@ where
 {
     let workload = tiled_localization_jobs(seq, scans, tiles, cfg)?;
     let map_points = workload.maps.iter().map(|m| m.len()).collect();
+    let admissions = workload.admissions.clone();
     let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
     let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
     Ok(TiledLocalizationResult {
         report,
         map_points,
         translation_errors,
+        admissions,
     })
 }
 
@@ -1453,28 +1799,108 @@ mod tests {
 
     // --- AffinityRouter: deterministic scheduling-policy harness ---
 
+    /// Shorthand for completion feedback in the router tests.
+    fn fb(lane: usize, key: u64, uploaded: bool, hit: bool, ok: bool) -> JobFeedback {
+        JobFeedback {
+            lane,
+            key,
+            uploaded,
+            hit,
+            ok,
+        }
+    }
+
+    #[test]
+    fn admission_policy_parses_and_displays() {
+        assert_eq!("reject".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Reject);
+        assert_eq!(
+            "downsample".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::DownsampleToFit
+        );
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::DownsampleToFit);
+        assert!("silent".parse::<AdmissionPolicy>().is_err());
+        assert_eq!(AdmissionPolicy::Reject.to_string(), "reject");
+        assert_eq!(
+            AdmissionPolicy::DownsampleToFit.to_string(),
+            "downsample-to-fit"
+        );
+    }
+
     #[test]
     fn router_reuses_every_warm_lane_after_a_steal() {
         let mut r = AffinityRouter::new(2, 2);
-        // Cold key A spills somewhere; say lane 0 takes it.
-        assert_eq!(r.first_choice(0xA), None);
+        // Cold key A: both lanes have free slots — least-loaded wins
+        // (tie → lane 0), no spill needed.
+        assert_eq!(r.first_choice(0xA), Some(0));
         r.committed(0, 0xA);
-        // Lane 0 is busy with A, lane 1 idle → steal to lane 1.
+        r.committed(0, 0xA); // backlog of 2 on the warm lane
+        // Real backlog + idle lane 1 → steal to lane 1.
         assert_eq!(r.first_choice(0xA), Some(1));
         r.committed(1, 0xA);
         // Both lanes are now warm for A. Lane 1 drains first: the
         // dispatcher must see it as a warm candidate — the old
         // `position()` scan only ever found lane 0.
-        r.completed(1);
+        r.completed(fb(1, 0xA, true, false, true));
         assert_eq!(r.warm_lanes(0xA), vec![1, 0]);
         assert_eq!(r.first_choice(0xA), Some(1), "least-loaded warm lane");
         // Nobody idle: still route to the least-loaded *warm* lane
         // rather than blocking round-robin.
-        r.committed(1, 0xA);
-        r.completed(1);
-        r.committed(1, 0xA); // pending: lane0=1, lane1=1
-        r.committed(0, 0xA); // pending: lane0=2, lane1=1
+        r.committed(1, 0xA); // pending: lane0=2, lane1=1
         assert_eq!(r.first_choice(0xA), Some(1));
+    }
+
+    #[test]
+    fn router_steals_only_on_real_backlog() {
+        let mut r = AffinityRouter::new(2, 2);
+        r.committed(0, 0xA);
+        // One in-flight job is NOT a backlog: the old router stole to
+        // the idle lane here, paying a redundant target upload.
+        assert_eq!(r.first_choice(0xA), Some(0), "no steal at pending 1");
+        r.committed(0, 0xA);
+        // Two deep with an idle lane → steal.
+        assert_eq!(r.first_choice(0xA), Some(1));
+        // No idle lane → stay on the least-loaded warm lane.
+        r.committed(1, 0xB);
+        assert_eq!(r.first_choice(0xA), Some(0));
+    }
+
+    #[test]
+    fn router_routes_cold_keys_to_free_slots_before_evicting() {
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        r.completed(fb(0, 0xA, true, false, true));
+        // Cold key B: lane 0 is idle but its only slot is warm; lane 1
+        // has the free slot — filling it beats evicting A.
+        assert!(!r.has_free_slot(0));
+        assert!(r.has_free_slot(1));
+        assert_eq!(r.first_choice(0xB), Some(1));
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, true, false, true));
+        // Every slot occupied → None: the channel loop spills by load
+        // (an eviction is now inevitable).
+        assert_eq!(r.first_choice(0xC), None);
+        assert_eq!(r.warm_lanes(0xA), vec![0], "A untouched on its lane");
+    }
+
+    #[test]
+    fn failed_upload_feedback_unwarms_the_mirror() {
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        assert_eq!(r.warm_lanes(0xA), vec![0], "optimistic commit");
+        // The job failed before its target upload: the backend never
+        // gained A, so the mirror must not keep claiming it.
+        r.completed(fb(0, 0xA, false, false, false));
+        assert!(r.warm_lanes(0xA).is_empty(), "failed upload un-warms");
+        assert!(r.has_free_slot(0), "slot freed for the next cold key");
+        // A failed alignment whose upload DID land keeps the key warm —
+        // the device holds the target regardless of the ICP error.
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, true, false, false));
+        assert_eq!(r.warm_lanes(0xB), vec![1]);
+        // A cache-hit completion confirms warmth.
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, false, true, true));
+        assert_eq!(r.warm_lanes(0xB), vec![1]);
     }
 
     #[test]
@@ -1513,14 +1939,26 @@ mod tests {
     }
 
     #[test]
-    fn router_spill_prefers_fresh_lanes() {
+    fn router_spill_orders_by_load_and_skips_the_tried_lane() {
         let mut r = AffinityRouter::new(3, 2);
-        r.committed(1, 0xA);
-        let order = r.spill_order();
-        assert_eq!(order.len(), 3);
-        // Fresh (cache-empty) lanes 0 and 2 come before warm lane 1.
-        assert_eq!(&order[..2], &[0, 2]);
-        assert_eq!(order[2], 1);
+        r.committed(1, 0xA); // pending [0,1,0]
+        r.committed(2, 0xB);
+        r.committed(2, 0xC); // pending [0,1,2]
+        // Load first: a fresh (cache-empty) lane does not excuse a deep
+        // backlog — the old order let a cold key queue behind lane 2
+        // just because its cache was empty.
+        assert_eq!(r.spill_order(None), vec![0, 1, 2]);
+        // The lane whose queue already returned Full is skipped, not
+        // re-attempted.
+        assert_eq!(r.spill_order(Some(0)), vec![1, 2]);
+        // At equal load, a free residency slot breaks the tie: spilling
+        // where nothing needs evicting beats spilling onto a warm slot.
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        r.committed(1, 0xB);
+        r.completed(fb(0, 0xA, true, false, true)); // lane 0: idle, slot warm
+        r.completed(fb(1, 0xB, false, false, false)); // lane 1: idle, slot free
+        assert_eq!(r.spill_order(None), vec![1, 0]);
     }
 
     // --- Tile-crossing workload ---

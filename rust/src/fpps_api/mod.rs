@@ -97,6 +97,10 @@ struct ResidentSlots<T> {
     entries: Vec<(u64, T, TargetEpoch)>,
     slots: usize,
     epochs: u64,
+    /// LRU entries dropped under capacity pressure (upload past the slot
+    /// count, or a shrinking [`Self::set_slots`]) — the eviction tally
+    /// the pool residency coordinator reads back per lane.
+    evictions: u64,
 }
 
 impl<T> ResidentSlots<T> {
@@ -105,6 +109,7 @@ impl<T> ResidentSlots<T> {
             entries: Vec::new(),
             slots: Self::clamp_slots(slots),
             epochs: 0,
+            evictions: 0,
         }
     }
 
@@ -124,19 +129,27 @@ impl<T> ResidentSlots<T> {
         self.slots = Self::clamp_slots(slots);
         while self.entries.len() > self.slots {
             self.entries.remove(0);
+            self.evictions += 1;
         }
     }
 
     /// Upload: (re)place `key`'s payload, make it active, mint an epoch,
-    /// evict the LRU entry on capacity pressure.
+    /// evict the LRU entry on capacity pressure. Re-uploading a resident
+    /// key replaces in place and is not an eviction.
     fn insert(&mut self, key: u64, payload: T) -> TargetEpoch {
         self.entries.retain(|(k, ..)| *k != key);
         let epoch = TargetEpoch::mint(&mut self.epochs);
         self.entries.push((key, payload, epoch));
         while self.entries.len() > self.slots {
             self.entries.remove(0);
+            self.evictions += 1;
         }
         epoch
+    }
+
+    /// Evictions performed so far (capacity pressure + slot shrinks).
+    fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Make `key`'s entry active (MRU) if resident; `None` leaves the
@@ -227,6 +240,19 @@ pub trait KernelBackend {
     /// `(key, epoch)` of every resident target, most recently used
     /// first — the driver-visible residency table.
     fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)>;
+
+    /// How many resident targets this backend has LRU-evicted under
+    /// capacity pressure so far — the eviction half of the
+    /// slot-occupancy telemetry the pool residency coordinator uses to
+    /// verify its routing avoided avoidable evictions.
+    fn target_evictions(&self) -> u64;
+
+    /// Residency slots currently unoccupied — free capacity a pool-wide
+    /// coordinator can fill with a cold target without evicting anything.
+    fn free_slots(&self) -> usize {
+        self.residency_slots()
+            .saturating_sub(self.resident_epochs().len())
+    }
 
     /// Upload the padded source cloud + mask — the per-alignment half of
     /// the DMA. Buffer sizes must match a capacity from
@@ -360,6 +386,10 @@ impl KernelBackend for XlaBackend {
         self.targets.resident_epochs()
     }
 
+    fn target_evictions(&self) -> u64 {
+        self.targets.evictions()
+    }
+
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
         self.source = Some(self.engine.prepare_source(src, src_mask)?);
         Ok(())
@@ -491,6 +521,10 @@ impl KernelBackend for NativeSimBackend {
 
     fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
         self.targets.resident_epochs()
+    }
+
+    fn target_evictions(&self) -> u64 {
+        self.targets.evictions()
     }
 
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
@@ -698,6 +732,10 @@ impl KernelBackend for KdTreeCpuBackend {
         self.targets.resident_epochs()
     }
 
+    fn target_evictions(&self) -> u64 {
+        self.targets.evictions()
+    }
+
     fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
         let n = src.len() / 3;
         if src_mask.len() != n {
@@ -902,6 +940,14 @@ impl KernelBackend for BackendHandle {
             BackendHandle::Xla(b) => b.resident_epochs(),
             BackendHandle::NativeSim(b) => b.resident_epochs(),
             BackendHandle::KdTreeCpu(b) => b.resident_epochs(),
+        }
+    }
+
+    fn target_evictions(&self) -> u64 {
+        match self {
+            BackendHandle::Xla(b) => b.target_evictions(),
+            BackendHandle::NativeSim(b) => b.target_evictions(),
+            BackendHandle::KdTreeCpu(b) => b.target_evictions(),
         }
     }
 
@@ -1568,6 +1614,28 @@ mod tests {
         b.set_residency_slots(1);
         assert_eq!(b.activate_target(3), None);
         assert_eq!(b.target_epoch(), Some(ea));
+    }
+
+    #[test]
+    fn eviction_and_free_slot_telemetry() {
+        let mut b = NativeSimBackend::with_residency_slots(2);
+        assert_eq!(b.free_slots(), 2);
+        assert_eq!(b.target_evictions(), 0);
+        let tgt = vec![0.25f32; 4 * 3];
+        let mask = vec![1f32; 4];
+        b.upload_target_keyed(1, &tgt, &mask).unwrap();
+        assert_eq!(b.free_slots(), 1);
+        b.upload_target_keyed(2, &tgt, &mask).unwrap();
+        assert_eq!((b.free_slots(), b.target_evictions()), (0, 0));
+        // Capacity pressure evicts and counts.
+        b.upload_target_keyed(3, &tgt, &mask).unwrap();
+        assert_eq!((b.free_slots(), b.target_evictions()), (0, 1));
+        // Re-uploading a resident key replaces in place — no eviction.
+        b.upload_target_keyed(3, &tgt, &mask).unwrap();
+        assert_eq!(b.target_evictions(), 1);
+        // Shrinking the slot count evicts (and counts) the overflow.
+        b.set_residency_slots(1);
+        assert_eq!((b.free_slots(), b.target_evictions()), (0, 2));
     }
 
     #[test]

@@ -68,6 +68,34 @@ impl Default for AcceleratorConfig {
     }
 }
 
+/// Padded HBM footprint of one candidate resident target cloud — the
+/// per-map cost model behind residency-aware admission: a map whose
+/// footprint exceeds one residency slot is rejected or
+/// downsampled-to-fit by an explicit policy
+/// (see `coordinator::AdmissionPolicy`) instead of being silently
+/// shrunk on upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TargetFootprint {
+    /// Raw point count of the candidate cloud.
+    pub points: usize,
+    /// Points after padding to the kernel's target block size — what the
+    /// device buffers (and the HBM slot) actually hold.
+    pub padded_points: usize,
+    /// HBM bytes of the padded cloud at 16 B/point (xyz f32 + mask).
+    pub bytes: u64,
+}
+
+impl TargetFootprint {
+    /// Does this target fit one residency slot of `slot_capacity`
+    /// points? The admission bound is the slot's *point* capacity (slot
+    /// capacities are block-aligned, so the padded cloud fits the
+    /// slot's padded buffer exactly when the raw count fits); the
+    /// padded byte figure reports what admitting it would cost in HBM.
+    pub fn fits_slot(&self, slot_capacity: usize) -> bool {
+        self.points <= slot_capacity
+    }
+}
+
 /// Upper bound on simultaneously resident reference clouds, regardless
 /// of how much HBM the residency pool would fit. Each slot adds a way
 /// to the activation crossbar and a row of driver bookkeeping, so the
@@ -89,6 +117,19 @@ impl AcceleratorConfig {
     /// xyz as 3 × f32 plus one f32 validity-mask word per point.
     pub fn resident_target_bytes(points: usize) -> u64 {
         points as u64 * 16
+    }
+
+    /// Footprint of a `points`-point reference cloud padded to the
+    /// kernel target block `block_m` (an empty cloud still occupies one
+    /// block: the slot is allocated, not packed).
+    pub fn target_footprint(&self, points: usize, block_m: usize) -> TargetFootprint {
+        let block = block_m.max(1);
+        let padded_points = points.div_ceil(block).max(1) * block;
+        TargetFootprint {
+            points,
+            padded_points,
+            bytes: Self::resident_target_bytes(padded_points),
+        }
     }
 
     /// How many reference clouds of `target_capacity` points fit in the
@@ -122,6 +163,24 @@ mod tests {
         assert!(c.target_capacity >= 130_000);
         assert_eq!(c.source_capacity, 4096);
         assert!((c.cycle_s() - 1.0 / 300e6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn target_footprint_pads_to_the_block() {
+        let c = AcceleratorConfig::default();
+        let f = c.target_footprint(5000, 2048);
+        assert_eq!(f.points, 5000);
+        assert_eq!(f.padded_points, 6144);
+        assert_eq!(f.bytes, 6144 * 16);
+        assert!(f.fits_slot(16_384));
+        assert!(!c.target_footprint(20_000, 2048).fits_slot(16_384));
+        // Boundary: exactly the slot capacity still fits.
+        assert!(c.target_footprint(16_384, 2048).fits_slot(16_384));
+        assert!(!c.target_footprint(16_385, 2048).fits_slot(16_384));
+        // An empty cloud still occupies one block.
+        assert_eq!(c.target_footprint(0, 2048).padded_points, 2048);
+        // Degenerate block never divides by zero.
+        assert_eq!(c.target_footprint(7, 0).padded_points, 7);
     }
 
     #[test]

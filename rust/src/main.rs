@@ -95,6 +95,23 @@ fn fail_on_contained_errors(report: &fpps::coordinator::LaneReport) -> Result<()
     );
 }
 
+/// Surface an admission decision — silent shrinking was the old
+/// behavior; a map that had to be downsampled to fit its residency slot
+/// is now reported, with the hwmodel footprint that forced it.
+fn print_admission(label: &str, adm: &fpps::coordinator::AdmissionDecision) {
+    if adm.downsampled() {
+        println!(
+            "admission ({}): {label} of {} pts exceeded the {}-pt residency slot \
+             (padded footprint {} KiB) — downsampled to {} pts",
+            adm.policy,
+            adm.original_points,
+            adm.slot_capacity,
+            adm.footprint.bytes / 1024,
+            adm.admitted_points,
+        );
+    }
+}
+
 fn cmd_align() -> Result<()> {
     let p = Parser::new("fpps align", "register source onto target")
         .opt("source", "source cloud (.bin)", None)
@@ -308,6 +325,9 @@ fn cmd_localize() -> Result<()> {
     let queue_depth: usize = a.get_or("queue-depth", 4)?;
     let tiles: usize = a.get_or("tiles", rc.tiles)?;
     let slots: usize = a.get_or("slots", rc.residency_slots)?;
+    // Oversized-map policy: CLI flag > config `admission=` > default
+    // (explicit downsample-to-fit).
+    let admission = a.get_or("admission", rc.admission)?;
     let (kind, artifacts) = backend_selection(&a)?;
 
     let seq = Sequence::synthetic(
@@ -324,6 +344,7 @@ fn cmd_localize() -> Result<()> {
         source_sample: a.get_or("sample", rc.source_sample)?,
         target_capacity: a.get_or("capacity", rc.target_capacity)?,
         seed,
+        admission,
         ..Default::default()
     };
     let icp_cfg = LaneIcpConfig {
@@ -350,6 +371,9 @@ fn cmd_localize() -> Result<()> {
         let res = run_tiled_localization(
             &seq, scans, tiles, &cfg, lanes, queue_depth, icp_cfg, make_backend,
         )?;
+        for (t, adm) in res.admissions.iter().enumerate() {
+            print_admission(&format!("tile {t} submap"), adm);
+        }
         println!(
             "localized {} scans across {} interleaved submap tiles ({} pts) over {lanes} lane(s)",
             res.report.outcomes.len(),
@@ -378,6 +402,7 @@ fn cmd_localize() -> Result<()> {
 
     let res = run_localization(&seq, scans, &cfg, lanes, queue_depth, icp_cfg, make_backend)?;
 
+    print_admission("map", &res.admission);
     println!(
         "localized {} scans against a {}-point resident map over {lanes} lane(s)",
         res.report.outcomes.len(),

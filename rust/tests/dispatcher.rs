@@ -1,13 +1,17 @@
 //! Integration tests for the lane-pool dispatcher: failed jobs must be
 //! contained (one bad job cannot kill its lane, let alone the pool),
 //! multi-target (tile ping-pong) workloads must stay bit-identical
-//! across `lanes = 1` vs `lanes = K`, and warm-lane accounting must
-//! conserve work. The deterministic routing-policy harness (warm-lane
-//! reuse after steals, LRU warm sets, blocking choice) lives next to
-//! `AffinityRouter` in `coordinator::tests`.
+//! across `lanes = 1` vs `lanes = K`, warm-lane accounting must
+//! conserve work, cold keys must fill free residency slots before any
+//! warm lane evicts, the router mirror must un-warm keys whose upload
+//! failed, and oversized maps must hit the configured admission policy
+//! instead of silent behavior. The deterministic routing-policy harness
+//! (steal thresholds, LRU warm sets, spill/blocking order) lives next
+//! to `AffinityRouter` in `coordinator::tests`.
 
 use fpps::coordinator::{
-    run_registration_batch, tiled_localization_jobs, LaneIcpConfig, PipelineConfig,
+    localization_jobs, run_registration_batch, tiled_localization_jobs, AdmissionError,
+    AdmissionPolicy, AffinityRouter, JobFeedback, LaneIcpConfig, PipelineConfig,
     RegistrationJob,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
@@ -187,6 +191,231 @@ fn tiled_workload_bit_identical_across_lane_counts() {
         "uploads {uploads2} outside [tiles, tiles x lanes]"
     );
     assert_eq!(uploads2 + hits2, 8);
+}
+
+/// Acceptance criterion of the residency coordinator: a cold-key job is
+/// routed to a lane with a free residency slot whenever one exists. Four
+/// distinct single-job keys over 2 lanes × 2 slots exactly fill the
+/// pool, so — regardless of completion timing — coordinated routing
+/// uploads each key once and never evicts, while the same workload on
+/// one lane (2 slots) must evict twice. Both are bit-identical.
+#[test]
+fn cold_keys_fill_free_slots_before_evicting() {
+    let maps: Vec<Arc<PointCloud>> = (0..4)
+        .map(|k| Arc::new(structured_cloud(500, 400 + k)))
+        .collect();
+    let gt = Mat4::from_rt(Mat3::rot_z(0.015), Vec3::new(0.06, -0.03, 0.0));
+    let build = |maps: &[Arc<PointCloud>]| -> Vec<RegistrationJob> {
+        maps.iter()
+            .enumerate()
+            .map(|(k, map)| {
+                let mut rng = Pcg32::new(420 + k as u64);
+                let mut s = map.transformed(&gt.inverse_rigid());
+                s.add_noise(0.005, &mut rng);
+                RegistrationJob::new(
+                    k as u64,
+                    0,
+                    s.random_sample(250, &mut rng),
+                    Arc::clone(map),
+                    Mat4::IDENTITY,
+                )
+            })
+            .collect()
+    };
+
+    let pool = run_registration_batch(
+        build(&maps),
+        2,
+        8,
+        LaneIcpConfig::default(),
+        |_| Ok(KdTreeCpuBackend::with_residency_slots(2)),
+    )
+    .unwrap();
+    let uploads: usize = pool.lanes.iter().map(|l| l.target_uploads).sum();
+    let hits: usize = pool.lanes.iter().map(|l| l.target_hits).sum();
+    let evictions: usize = pool.lanes.iter().map(|l| l.target_evictions).sum();
+    let resident: usize = pool.lanes.iter().map(|l| l.resident_targets).sum();
+    assert_eq!(uploads, 4, "each cold key uploads exactly once");
+    assert_eq!(hits, 0);
+    assert_eq!(
+        evictions, 0,
+        "no eviction while the pool had free residency slots"
+    );
+    assert_eq!(resident, 4, "all four keys end resident across the pool");
+
+    // One lane with the same per-backend capacity cannot avoid evicting.
+    let single = run_registration_batch(
+        build(&maps),
+        1,
+        8,
+        LaneIcpConfig::default(),
+        |_| Ok(KdTreeCpuBackend::with_residency_slots(2)),
+    )
+    .unwrap();
+    let s_evictions: usize = single.lanes.iter().map(|l| l.target_evictions).sum();
+    assert_eq!(s_evictions, 2, "4 keys through 2 slots evict twice");
+    // Placement is invisible to numerics: bit-identical either way.
+    for (a, b) in single.outcomes.iter().zip(pool.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+/// Satellite regression (through the public router API): `committed()`
+/// marks a key warm optimistically, so a job that fails *before* its
+/// target upload must be un-warmed by its completion feedback — the old
+/// mirror kept claiming warmth the backend never gained, occupying a
+/// phantom slot and steering later same-key jobs to a cache that did
+/// not exist.
+#[test]
+fn failed_upload_unwarms_the_router_mirror() {
+    let mut r = AffinityRouter::new(2, 1);
+    assert_eq!(r.first_choice(0xA), Some(0), "cold key fills a free slot");
+    r.committed(0, 0xA);
+    assert_eq!(r.warm_lanes(0xA), vec![0], "optimistic until feedback");
+    // Upload never happened (e.g. empty-source bail before the DMA).
+    r.completed(JobFeedback {
+        lane: 0,
+        key: 0xA,
+        uploaded: false,
+        hit: false,
+        ok: false,
+    });
+    assert!(r.warm_lanes(0xA).is_empty(), "mirror corrected");
+    assert!(r.has_free_slot(0), "the slot is free again");
+    // The next cold key takes that freed slot instead of lane 1's.
+    assert_eq!(r.first_choice(0xB), Some(0));
+    // An upload that landed keeps the key warm even on a failed job.
+    r.committed(1, 0xC);
+    r.completed(JobFeedback {
+        lane: 1,
+        key: 0xC,
+        uploaded: true,
+        hit: false,
+        ok: false,
+    });
+    assert_eq!(r.warm_lanes(0xC), vec![1], "device holds it regardless");
+    // So is a key whose job *hit* the cache and then failed — the
+    // device still holds (and just MRU-touched) it.
+    r.committed(1, 0xC);
+    r.completed(JobFeedback {
+        lane: 1,
+        key: 0xC,
+        uploaded: false,
+        hit: true,
+        ok: false,
+    });
+    assert_eq!(r.warm_lanes(0xC), vec![1], "hit-then-fail stays warm");
+    // And the next same-key job is a warm hit on that lane, not a
+    // re-upload elsewhere.
+    assert_eq!(r.first_choice(0xC), Some(1));
+}
+
+/// Bit-identity under the full mix: `lanes = 3` with free-slot fills,
+/// warm hits, steals, pool-capacity evictions and one poisoned job
+/// matches `lanes = 1` bit for bit, and upload/hit accounting conserves
+/// jobs (the poisoned job — which fails before its upload — counts in
+/// neither).
+#[test]
+fn coordinated_pool_is_bit_identical_to_single_lane_under_mixed_routing() {
+    let maps: Vec<Arc<PointCloud>> = (0..8)
+        .map(|k| Arc::new(structured_cloud(500, 500 + k)))
+        .collect();
+    let gt = Mat4::from_rt(Mat3::rot_z(0.01), Vec3::new(0.08, -0.02, 0.0));
+    let build = |maps: &[Arc<PointCloud>]| -> Vec<RegistrationJob> {
+        (0..17u64)
+            .map(|k| {
+                let map = &maps[(k % 8) as usize];
+                let source = if k == 5 {
+                    PointCloud::new() // poison: align() bails pre-upload
+                } else {
+                    let mut rng = Pcg32::new(530 + k);
+                    let mut s = map.transformed(&gt.inverse_rigid());
+                    s.add_noise(0.005, &mut rng);
+                    s.random_sample(250, &mut rng)
+                };
+                RegistrationJob::new(k, 0, source, Arc::clone(map), Mat4::IDENTITY)
+            })
+            .collect()
+    };
+    let run = |jobs, lanes| {
+        run_registration_batch(jobs, lanes, 4, LaneIcpConfig::default(), |_| {
+            Ok(KdTreeCpuBackend::with_residency_slots(2))
+        })
+        .unwrap()
+    };
+    let one = run(build(&maps), 1);
+    let many = run(build(&maps), 3);
+    assert_eq!(one.outcomes.len(), 17);
+    assert_eq!(many.outcomes.len(), 17);
+    assert_eq!(one.failed_jobs(), 1);
+    assert_eq!(many.failed_jobs(), 1);
+    for report in [&one, &many] {
+        let uploads: usize = report.lanes.iter().map(|l| l.target_uploads).sum();
+        let hits: usize = report.lanes.iter().map(|l| l.target_hits).sum();
+        assert_eq!(
+            uploads + hits,
+            16,
+            "every non-poisoned job either uploads or hits"
+        );
+    }
+    for (a, b) in one.outcomes.iter().zip(many.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.is_failed(), b.is_failed(), "job {}", a.id);
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+/// Acceptance criterion of residency-aware admission: an oversized map
+/// triggers the configured policy — a structured, downcastable
+/// rejection or an explicit, recorded downsample — never the old silent
+/// shrink.
+#[test]
+fn oversized_map_triggers_the_admission_policy() {
+    let seq = tiny_sequence(4);
+    let base = PipelineConfig {
+        source_sample: 128,
+        target_capacity: 100, // far below the 4-scan union
+        ..Default::default()
+    };
+    // Default policy: downsample-to-fit, with the decision recorded.
+    let w = localization_jobs(&seq, 4, &base).unwrap();
+    assert!(w.map.len() <= 100);
+    assert_eq!(w.admission.policy, AdmissionPolicy::DownsampleToFit);
+    assert!(w.admission.downsampled());
+    assert!(w.admission.original_points > 100);
+    assert_eq!(w.admission.admitted_points, w.map.len());
+    assert_eq!(w.admission.slot_capacity, 100);
+    assert!(w.admission.footprint.bytes >= w.admission.footprint.padded_points as u64 * 16);
+
+    // Reject: a structured error carrying the hwmodel footprint.
+    let reject = PipelineConfig {
+        admission: AdmissionPolicy::Reject,
+        ..base
+    };
+    let err = localization_jobs(&seq, 4, &reject).unwrap_err();
+    let adm = err
+        .downcast_ref::<AdmissionError>()
+        .expect("structured AdmissionError, downcastable through anyhow");
+    assert!(adm.points > adm.slot_capacity);
+    assert_eq!(adm.slot_capacity, 100);
+    assert!(adm.padded_points >= adm.points);
+    assert_eq!(adm.footprint_bytes, adm.padded_points as u64 * 16);
+    let msg = format!("{err:#}");
+    assert!(msg.contains("residency slot"), "{msg}");
+
+    // The tiled workload admits per submap and rejects the same way.
+    assert!(tiled_localization_jobs(&seq, 4, 2, &reject).is_err());
+    let tiled = tiled_localization_jobs(&seq, 4, 2, &base).unwrap();
+    assert_eq!(tiled.admissions.len(), 2);
+    for (m, adm) in tiled.maps.iter().zip(&tiled.admissions) {
+        assert_eq!(adm.admitted_points, m.len());
+        assert!(m.len() <= 100);
+    }
 }
 
 /// The pool honors backend-configured slot counts end to end: lanes

@@ -2,7 +2,7 @@
 //! substrates together (complementing the per-module unit tests and the
 //! artifact-backed integration suite).
 
-use fpps::coordinator::{preprocess, PipelineConfig};
+use fpps::coordinator::{preprocess, AffinityRouter, JobFeedback, PipelineConfig};
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
 use fpps::fpps_api::{FppsIcp, KernelBackend, NativeSimBackend};
 use fpps::icp::{IcpParams, SearchStrategy};
@@ -250,6 +250,71 @@ fn preprocess_voxel_bounds_density() {
         );
         assert!(seen.insert(key), "two centroids in one voxel");
     }
+}
+
+// ---------- residency coordinator vs real backend residency ----------
+
+#[test]
+fn router_mirror_is_always_a_subset_of_backend_residency() {
+    // Drive the pool residency coordinator against one real
+    // NativeSimBackend per lane, mimicking exactly what a lane worker
+    // does per job (activate → hit, else upload; poisoned jobs fail
+    // before touching residency) and feeding the completion back. After
+    // every completion, each lane's mirrored warm set must be a subset
+    // of its backend's `resident_epochs()` keys — the mirror may forget
+    // warmth (conservative, costs a re-upload) but must never claim
+    // warmth the device does not have.
+    forall(default_cases(25), |g| {
+        let lanes = g.usize_range(1, 3);
+        let slots = g.usize_range(1, 3);
+        let distinct_keys = g.usize_range(1, 6) as u64;
+        let mut router = AffinityRouter::new(lanes, slots);
+        let mut backends: Vec<NativeSimBackend> = (0..lanes)
+            .map(|_| NativeSimBackend::with_residency_slots(slots))
+            .collect();
+        let tgt = vec![0.5f32; 4 * 3];
+        let mask = vec![1f32; 4];
+        for step in 0..40 {
+            let key = 1 + g.usize_range(0, distinct_keys as usize - 1) as u64;
+            let poisoned = g.usize_range(0, 4) == 0;
+            // A job can also fail *after* touching residency (bad
+            // source, step error): the upload/hit still happened.
+            let late_failure = g.usize_range(0, 5) == 0;
+            // Route exactly like the channel loop (queues never fill in
+            // this synchronous harness).
+            let lane = router
+                .first_choice(key)
+                .unwrap_or_else(|| router.spill_order(None)[0]);
+            router.committed(lane, key);
+            let (uploaded, hit) = if poisoned {
+                (false, false) // failed before the target upload
+            } else if backends[lane].activate_target(key).is_some() {
+                (false, true) // cache hit
+            } else {
+                backends[lane].upload_target_keyed(key, &tgt, &mask).unwrap();
+                (true, false)
+            };
+            router.completed(JobFeedback {
+                lane,
+                key,
+                uploaded,
+                hit,
+                ok: !poisoned && !late_failure,
+            });
+            for (l, backend) in backends.iter().enumerate() {
+                let resident: Vec<u64> =
+                    backend.resident_epochs().iter().map(|(k, _)| *k).collect();
+                for &w in router.warm_keys(l) {
+                    assert!(
+                        resident.contains(&w),
+                        "case {} step {step}: lane {l} mirror claims key {w:#x} \
+                         but backend holds {resident:?}",
+                        g.case
+                    );
+                }
+            }
+        }
+    });
 }
 
 // ---------- NativeSim begin/step protocol ----------
