@@ -11,13 +11,15 @@
 //!   cargo run --release --example registration_server -- \
 //!       [--streams 4] [--lanes 2] [--frames 10] [--backend native-sim]
 
+use std::time::Duration;
+
 use anyhow::{Context, Result};
 use fpps::cli::{backend_selection, Parser};
 use fpps::coordinator::{
-    run_lane_pool, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+    run_supervised_lane_pool, sequence_pair_jobs, LaneIcpConfig, PipelineConfig, SupervisorConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::BackendHandle;
+use fpps::fpps_api::{BackendHandle, FailoverChain};
 use fpps::report::Table;
 
 fn main() -> Result<()> {
@@ -27,7 +29,8 @@ fn main() -> Result<()> {
         .opt("sample", "source sample size", Some("1024"))
         .opt("capacity", "target buffer capacity", Some("8192"))
         .lane_opts("2")
-        .backend_opts();
+        .backend_opts()
+        .supervision_opts();
     let a = p.parse_env(1)?;
     let streams: usize = a.get_or("streams", 4)?;
     let frames: usize = a.get_or("frames", 10)?;
@@ -37,6 +40,18 @@ fn main() -> Result<()> {
     let capacity: usize = a.get_or("capacity", 8192)?;
     let (kind, artifacts) = backend_selection(&a)?;
     let artifacts = artifacts.as_path();
+    // Fault-tolerance knobs: a service puts an SLO on every job and
+    // survives a flaky device (see README "Fault tolerance").
+    let deadline_ms: u64 = a.get_or("deadline-ms", 0)?;
+    let retries: u32 = a.get_or("retries", 0)?;
+    let failover: FailoverChain = a
+        .get_parsed("failover")?
+        .unwrap_or_else(|| FailoverChain::single(kind));
+    let sup = SupervisorConfig {
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        max_retries: retries,
+        ..Default::default()
+    };
 
     // One synthetic sequence per client, cycling through the paper's
     // sequence characters so the streams are genuinely heterogeneous.
@@ -64,11 +79,13 @@ fn main() -> Result<()> {
     // sample + downsample) runs concurrently with alignment on the lanes,
     // and the bounded queue applies backpressure to fast clients.
     let sequences_ref = &sequences;
-    let report = run_lane_pool(
+    let failover_ref = &failover;
+    let report = run_supervised_lane_pool(
         lanes,
         queue_depth,
         LaneIcpConfig::default(),
-        |_lane| BackendHandle::create(kind, artifacts),
+        sup,
+        |_lane, tier| BackendHandle::create(failover_ref.kind_for_tier(tier), artifacts),
         move |tx| {
             std::thread::scope(|scope| -> Result<()> {
                 let mut handles = Vec::new();
@@ -96,10 +113,20 @@ fn main() -> Result<()> {
                     }));
                 }
                 drop(tx);
-                for h in handles {
+                // A panicked client thread must surface as a nonzero
+                // exit naming the stream — not vanish into a generic
+                // producer error (or worse, a truncated-but-zero run).
+                for (stream, h) in handles.into_iter().enumerate() {
                     match h.join() {
                         Ok(r) => r?,
-                        Err(_) => anyhow::bail!("stream producer panicked"),
+                        Err(payload) => {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| (*s).to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "non-string panic payload".to_string());
+                            anyhow::bail!("client stream {stream} producer panicked: {msg}");
+                        }
                     }
                 }
                 Ok(())

@@ -146,5 +146,21 @@ fn main() {
         "coordinated pool ({pu} uploads) must beat the thrashing lane ({su})"
     );
     assert_eq!(pu + ph, scans, "every job either uploads or hits");
+
+    // Machine-readable results for CI trend tracking: one JSON object,
+    // written to the path named by FPPS_BENCH_JSON (hand-rolled — the
+    // crate deliberately has no serde dependency).
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"residency_coordination\",\n  \"scans\": {scans},\n  \
+             \"maps\": {MAPS},\n  \"slots_per_backend\": {SLOTS},\n  \"pool_lanes\": {lanes},\n  \
+             \"single\": {{\"uploads\": {su}, \"hits\": {sh}, \"evictions\": {se}, \
+             \"wall_ms\": {single_ms:.3}}},\n  \
+             \"pool\": {{\"uploads\": {pu}, \"hits\": {ph}, \"evictions\": {pe}, \
+             \"wall_ms\": {pool_ms:.3}}}\n}}\n"
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
+    }
     println!("residency_coordination bench complete");
 }

@@ -211,6 +211,30 @@ impl Parser {
             None,
         )
     }
+
+    /// Attach the lane-supervision options shared by the multi-lane
+    /// subcommands/examples: `--deadline-ms` (per-job deadline from
+    /// submission, 0 = off), `--retries` (transient-failure retry
+    /// budget), and `--failover` (comma-separated backend chain walked
+    /// on repeated lane restarts, e.g. `xla,native-sim,kdtree`). No
+    /// parser defaults so a config file can supply them.
+    pub fn supervision_opts(self) -> Self {
+        self.opt(
+            "deadline-ms",
+            "per-job deadline in ms from submission (0 = no deadline)",
+            None,
+        )
+        .opt(
+            "retries",
+            "retry budget per job for transient failures",
+            None,
+        )
+        .opt(
+            "failover",
+            "backend failover chain, e.g. xla,native-sim,kdtree",
+            None,
+        )
+    }
 }
 
 /// Resolve the backend selection added by [`Parser::backend_opts`].
@@ -284,6 +308,33 @@ mod tests {
         );
         let a = p.parse(&toks(&["--admission", "shrinkwrap"])).unwrap();
         assert!(a.get_parsed::<AdmissionPolicy>("admission").is_err());
+    }
+
+    #[test]
+    fn supervision_opts_parse() {
+        use crate::fpps_api::FailoverChain;
+        let p = Parser::new("demo", "test").supervision_opts();
+        // No parser defaults: config-file values win when flags are absent.
+        let a = p.parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_or::<u64>("deadline-ms", 0).unwrap(), 0);
+        assert!(a.get("retries").is_none());
+        assert!(a.get("failover").is_none());
+        let a = p
+            .parse(&toks(&[
+                "--deadline-ms",
+                "250",
+                "--retries=2",
+                "--failover",
+                "native-sim,kdtree",
+            ]))
+            .unwrap();
+        assert_eq!(a.get_or::<u64>("deadline-ms", 0).unwrap(), 250);
+        assert_eq!(a.get_or::<u32>("retries", 0).unwrap(), 2);
+        let chain: FailoverChain = a.get_parsed("failover").unwrap().unwrap();
+        assert_eq!(chain.tiers(), 2);
+        // A garbage chain errors instead of silently falling back.
+        let a = p.parse(&toks(&["--failover", "fpga,asic"])).unwrap();
+        assert!(a.get_parsed::<FailoverChain>("failover").is_err());
     }
 
     #[test]

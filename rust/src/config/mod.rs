@@ -128,6 +128,18 @@ pub struct RunConfig {
     /// downsample-to-fit, the default). See
     /// [`crate::coordinator::admit_map`].
     pub admission: crate::coordinator::AdmissionPolicy,
+    /// Per-job deadline in milliseconds, measured from submission;
+    /// 0 disables deadline enforcement (the default — no behavior
+    /// change unless a run opts into an SLO). See
+    /// [`crate::coordinator::SupervisorConfig`].
+    pub deadline_ms: u64,
+    /// Transient-failure retry budget per job (errors and lane panics;
+    /// 0 = first failure is final, the historical behavior).
+    pub retries: u32,
+    /// Backend failover chain walked as a lane accumulates restarts
+    /// (e.g. `xla,native-sim,kdtree`); `None` = respawn the configured
+    /// backend kind forever. See [`crate::fpps_api::FailoverChain`].
+    pub failover: Option<crate::fpps_api::FailoverChain>,
 }
 
 impl Default for RunConfig {
@@ -146,6 +158,9 @@ impl Default for RunConfig {
             tiles: 1,
             residency_slots: 0,
             admission: crate::coordinator::AdmissionPolicy::DownsampleToFit,
+            deadline_ms: 0,
+            retries: 0,
+            failover: None,
         }
     }
 }
@@ -172,7 +187,21 @@ impl RunConfig {
             tiles: kv.get_or("tiles", d.tiles)?,
             residency_slots: kv.get_or("residency_slots", d.residency_slots)?,
             admission: kv.get_or("admission", d.admission)?,
+            deadline_ms: kv.get_or("deadline_ms", d.deadline_ms)?,
+            retries: kv.get_or("retries", d.retries)?,
+            failover: kv.get_parsed("failover")?,
         })
+    }
+
+    /// The lane-pool supervision policy this config describes
+    /// (`deadline_ms`/`retries` over the inert defaults).
+    pub fn supervisor(&self) -> crate::coordinator::SupervisorConfig {
+        crate::coordinator::SupervisorConfig {
+            deadline: (self.deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(self.deadline_ms)),
+            max_retries: self.retries,
+            ..Default::default()
+        }
     }
 
     pub fn icp_params(&self) -> crate::icp::IcpParams {
@@ -263,5 +292,46 @@ mod tests {
         );
         let p = rc.icp_params();
         assert_eq!(p.max_iterations, 10);
+    }
+
+    #[test]
+    fn supervision_keys_parse_and_default_inert() {
+        use crate::fpps_api::{BackendKind, FailoverChain};
+        // Defaults: supervision off — no deadline, no retries, no chain.
+        let d = RunConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(d.deadline_ms, 0);
+        assert_eq!(d.retries, 0);
+        assert!(d.failover.is_none());
+        assert!(d.supervisor().deadline.is_none());
+        assert_eq!(d.supervisor().max_retries, 0);
+
+        let kv = KvConfig::parse(
+            "deadline_ms=250\nretries=2\nfailover=xla, native-sim ,kdtree\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.deadline_ms, 250);
+        assert_eq!(rc.retries, 2);
+        let chain = rc.failover.expect("chain parsed");
+        assert_eq!(chain.tiers(), 3);
+        assert_eq!(chain.kind_for_tier(0), BackendKind::Xla);
+        assert_eq!(chain.kind_for_tier(1), BackendKind::NativeSim);
+        // Tiers past the end clamp to the most conservative entry.
+        assert_eq!(chain.kind_for_tier(99), BackendKind::KdTreeCpu);
+        let sup = rc.supervisor();
+        assert_eq!(sup.deadline, Some(std::time::Duration::from_millis(250)));
+        assert_eq!(sup.max_retries, 2);
+        // Chains render/parse round-trip through the config format.
+        let mut kv = KvConfig::default();
+        kv.set("failover", &chain);
+        let reparsed: FailoverChain = KvConfig::parse(&kv.render())
+            .unwrap()
+            .get_parsed("failover")
+            .unwrap()
+            .unwrap();
+        assert_eq!(reparsed, chain);
+        // Garbage chains error loudly instead of silently degrading.
+        let kv = KvConfig::parse("failover=fpga\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
     }
 }

@@ -25,7 +25,19 @@
 //! onto a confirmed resident mirror (including the device's own LRU
 //! eviction) and *un-warms* a key whose job failed before ever touching
 //! residency — so a poisoned job can never leave a phantom warm entry
-//! steering later jobs to a cache that does not exist. Maps that
+//! steering later jobs to a cache that does not exist. The feedback
+//! protocol extends across **lane restarts**: every [`JobFeedback`]
+//! carries the lane's *generation* (bumped each time the lane's backend
+//! is respawned), and when the dispatcher learns of a restart it bumps
+//! its own generation counter and clears both the warm and the
+//! confirmed-resident mirror for that lane — a freshly built backend
+//! holds nothing, whatever earlier feedback confirmed. Feedback still
+//! in flight from the previous backend (a *stale generation*) then only
+//! settles the lane's load estimate; it must never resurrect warm keys
+//! the restart just invalidated. A lane the watchdog declared wedged is
+//! marked *down* (routing avoids it until it reports recovery) and its
+//! queued jobs are drained back to the dispatcher and re-routed. Maps
+//! that
 //! cannot fit a residency slot at all are handled up front by
 //! residency-aware admission ([`AdmissionPolicy`]: reject with a
 //! structured [`AdmissionError`], or downsample-to-fit) instead of
@@ -39,18 +51,33 @@
 //! [`run_localization`] scenario (M scans against one resident map) and
 //! the tile-crossing [`run_tiled_localization`] scenario (submap
 //! ping-pong across an LRU residency set).
+//!
+//! The pool is **supervised** ([`run_supervised_lane_pool`]): each job
+//! may carry its own deadline and retry budget (with pool-wide defaults
+//! from [`SupervisorConfig`]), transient align errors retry with
+//! bounded exponential backoff, a watchdog thread cuts off jobs whose
+//! deadline passes mid-flight — containing them as
+//! [`StopReason::DeadlineExceeded`] outcomes and re-routing the wedged
+//! lane's queued jobs — a panicked lane respawns its backend from the
+//! factory (advancing down a failover tier ladder after repeated
+//! restarts, see [`crate::fpps_api::FailoverChain`]), and the
+//! restart/un-warm rules above keep the router's mirror truthful
+//! through all of it.
 
 use crate::dataset::Sequence;
-use crate::fpps_api::{FppsIcp, KernelBackend};
+use crate::fpps_api::{CancelToken, FppsIcp, KernelBackend};
 use crate::icp::StopReason;
 use crate::math::Mat4;
 use crate::metrics::TimingStats;
 use crate::pointcloud::PointCloud;
 use crate::rng::Pcg32;
 use anyhow::{anyhow, bail, Context, Result};
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Preprocessed frame ready for alignment.
 pub struct PreparedFrame {
@@ -538,6 +565,16 @@ pub struct RegistrationJob {
     pub target: Arc<PointCloud>,
     /// Initial transform (`setTransformationMatrix`).
     pub initial: Mat4,
+    /// Per-job deadline override, measured from submission; `None`
+    /// falls back to the pool-wide [`SupervisorConfig::deadline`]. A
+    /// job past its deadline — queued, between retries, or mid-flight
+    /// (cut off cooperatively between ICP iterations, or by the
+    /// watchdog when the lane is wedged) — is contained as a
+    /// [`StopReason::DeadlineExceeded`] outcome.
+    pub deadline: Option<Duration>,
+    /// Per-job retry-budget override for transient failures (errors,
+    /// panics); `None` falls back to [`SupervisorConfig::max_retries`].
+    pub max_retries: Option<u32>,
     submitted: Instant,
 }
 
@@ -557,6 +594,8 @@ impl RegistrationJob {
             source,
             target,
             initial,
+            deadline: None,
+            max_retries: None,
             submitted: Instant::now(),
         }
     }
@@ -579,8 +618,22 @@ impl RegistrationJob {
             source,
             target: target.into(),
             initial,
+            deadline: None,
+            max_retries: None,
             submitted: Instant::now(),
         }
+    }
+
+    /// Builder: per-job deadline (see the `deadline` field).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: per-job retry budget (see the `max_retries` field).
+    pub fn with_max_retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = Some(max_retries);
+        self
     }
 
     /// Reset the submission timestamp — call immediately before sending
@@ -607,11 +660,14 @@ pub struct RegistrationOutcome {
     pub queue_wait_ms: f64,
     /// Time inside `align()` on the lane.
     pub service_ms: f64,
-    /// `Some(message)` when the alignment itself errored. A failed job
-    /// is *contained*: its lane keeps draining, the outcome carries the
-    /// job's initial transform and NaN rmse, and the rest of the batch
-    /// is unaffected.
+    /// `Some(message)` when the alignment itself errored (or its
+    /// deadline expired). A failed job is *contained*: its lane keeps
+    /// draining, the outcome carries the job's initial transform and
+    /// NaN rmse, and the rest of the batch is unaffected.
     pub error: Option<String>,
+    /// Align attempts the job consumed (1 = served first try; larger
+    /// values mean transient failures were retried).
+    pub attempts: u32,
 }
 
 impl RegistrationOutcome {
@@ -667,6 +723,22 @@ pub struct LaneStats {
     /// residency coordination this stays 0 while any lane has free
     /// slots.
     pub target_evictions: usize,
+    /// Transient-failure retries this lane performed (extra align
+    /// attempts beyond each job's first).
+    pub retries: usize,
+    /// Times this lane's backend was respawned from the factory after a
+    /// panic.
+    pub restarts: usize,
+    /// Jobs on this lane contained as [`StopReason::DeadlineExceeded`]
+    /// (cooperatively, pre-service, or cut off by the watchdog);
+    /// included in `failed`.
+    pub deadline_missed: usize,
+    /// Failover tier the lane's backend ended the run on (0 = primary;
+    /// higher tiers were engaged after repeated restarts, see
+    /// [`SupervisorConfig::restarts_per_tier`]).
+    pub backend_tier: usize,
+    /// Name of the backend serving the lane at the end of the run.
+    pub backend: String,
 }
 
 /// Aggregate report of one lane-pool run.
@@ -683,14 +755,22 @@ pub struct LaneReport {
     pub wall_ms: f64,
 }
 
+/// Throughput over a wall-clock window, `None` when the window is too
+/// small (or non-finite) to yield a meaningful finite rate — an empty
+/// or instantaneous batch has no throughput, not an infinite one.
+fn rate_per_s(count: usize, wall_ms: f64) -> Option<f64> {
+    if !wall_ms.is_finite() || wall_ms <= f64::EPSILON {
+        return None;
+    }
+    let rate = count as f64 / (wall_ms / 1e3);
+    rate.is_finite().then_some(rate)
+}
+
 impl LaneReport {
-    /// Aggregate throughput over the whole run.
+    /// Aggregate throughput over the whole run; 0.0 (never NaN/inf)
+    /// when the wall-clock window is degenerate.
     pub fn jobs_per_s(&self) -> f64 {
-        if self.wall_ms <= 0.0 {
-            0.0
-        } else {
-            self.outcomes.len() as f64 / (self.wall_ms / 1e3)
-        }
+        rate_per_s(self.outcomes.len(), self.wall_ms).unwrap_or(0.0)
     }
 
     /// Render the per-lane breakdown — shared by the `fpps batch` /
@@ -708,14 +788,15 @@ impl LaneReport {
             "wait (ms)",
             "jobs/s",
             "tgt up/hit/ev",
+            "rt/rs/ddl",
             "resident",
             "device (ms)",
+            "backend",
         ]);
         for l in &self.lanes {
-            let jobs_per_s = if self.wall_ms > 0.0 {
-                l.jobs as f64 / (self.wall_ms / 1e3)
-            } else {
-                0.0
+            let jobs_per_s = match rate_per_s(l.jobs, self.wall_ms) {
+                Some(rate) => format!("{rate:.2}"),
+                None => "-".to_string(), // degenerate window: no rate
             };
             t.row(vec![
                 l.lane.to_string(),
@@ -724,13 +805,15 @@ impl LaneReport {
                 format!("{:.1}", l.service.mean_ms()),
                 format!("{:.1}", l.service.percentile_ms(99.0)),
                 format!("{:.1}", l.queue_wait.mean_ms()),
-                format!("{jobs_per_s:.2}"),
+                jobs_per_s,
                 format!(
                     "{}/{}/{}",
                     l.target_uploads, l.target_hits, l.target_evictions
                 ),
+                format!("{}/{}/{}", l.retries, l.restarts, l.deadline_missed),
                 l.resident_targets.to_string(),
                 format!("{:.1}", l.device_ms),
+                format!("{} (tier {})", l.backend, l.backend_tier),
             ]);
         }
         t
@@ -768,10 +851,17 @@ pub struct JobFeedback {
     pub hit: bool,
     /// The alignment returned `Ok`.
     pub ok: bool,
+    /// The lane's backend generation the job ran under (0 until the
+    /// first restart). Feedback whose generation trails the router's
+    /// ([`AffinityRouter::generation`]) is *stale*: the backend it
+    /// describes is gone, so it settles only the load estimate and
+    /// never touches the warm/resident mirrors (see
+    /// [`AffinityRouter::lane_restarted`]).
+    pub generation: u64,
 }
 
-/// Pool-wide residency coordinator — the routing core of
-/// [`dispatch_by_affinity`]: a pure, deterministic state machine over
+/// Pool-wide residency coordinator — the routing core of the supervised
+/// dispatcher: a pure, deterministic state machine over
 /// per-lane **warm key sets** (the dispatcher-side mirror of each lane
 /// backend's LRU resident-target set) plus a pending-job load estimate
 /// and per-lane **slot occupancy** (free vs. warm). Separated from the
@@ -808,6 +898,12 @@ pub struct AffinityRouter {
     slots: usize,
     /// Round-robin cursor for tie-breaking and spill.
     rr: usize,
+    /// Per-lane backend generation: bumped by [`Self::lane_restarted`]
+    /// so feedback from a pre-restart backend is recognizably stale.
+    gen: Vec<u64>,
+    /// Lanes the supervisor declared wedged; routing avoids them until
+    /// they recover (unless every lane is down).
+    down: Vec<bool>,
 }
 
 impl AffinityRouter {
@@ -818,6 +914,8 @@ impl AffinityRouter {
             pending: vec![0; lanes],
             slots: slots.max(1),
             rr: 0,
+            gen: vec![0; lanes],
+            down: vec![false; lanes],
         }
     }
 
@@ -835,6 +933,52 @@ impl AffinityRouter {
         &self.warm[lane]
     }
 
+    /// Backend generation the router currently expects from `lane`.
+    pub fn generation(&self, lane: usize) -> u64 {
+        self.gen[lane]
+    }
+
+    /// Is `lane` marked wedged/down for routing purposes?
+    pub fn is_down(&self, lane: usize) -> bool {
+        self.down[lane]
+    }
+
+    /// The supervisor respawned `lane`'s backend: the fresh instance
+    /// holds *nothing*, so clear both the warm and confirmed-resident
+    /// mirrors and bump the generation — feedback still in flight from
+    /// the old backend must not resurrect the keys this wipe dropped
+    /// (see [`Self::completed`]).
+    pub fn lane_restarted(&mut self, lane: usize) {
+        if lane >= self.lanes() {
+            return;
+        }
+        self.warm[lane].clear();
+        self.resident[lane].clear();
+        self.gen[lane] += 1;
+    }
+
+    /// Mark `lane` wedged (`down = true`) or recovered: routing skips
+    /// down lanes while any lane is still up.
+    pub fn set_down(&mut self, lane: usize, down: bool) {
+        if lane < self.lanes() {
+            self.down[lane] = down;
+        }
+    }
+
+    /// The supervisor drained `n` queued jobs off a wedged `lane` for
+    /// re-routing: they will never feed back from there, so settle the
+    /// load estimate now.
+    pub fn requeued(&mut self, lane: usize, n: usize) {
+        if lane < self.lanes() {
+            self.pending[lane] = self.pending[lane].saturating_sub(n);
+        }
+    }
+
+    /// Total jobs routed and not yet fed back, across all lanes.
+    pub fn total_pending(&self) -> usize {
+        self.pending.iter().sum()
+    }
+
     /// Does the mirror say `lane` has an unoccupied residency slot — a
     /// place a cold target can land without evicting anything? Uses the
     /// larger of the optimistic warm count (committed, not yet
@@ -844,11 +988,12 @@ impl AffinityRouter {
         self.warm[lane].len().max(self.resident[lane].len()) < self.slots
     }
 
-    /// Every lane warm for `key` — after a steal there can be several —
-    /// least-loaded first (ties by lane index).
+    /// Every *up* lane warm for `key` — after a steal there can be
+    /// several — least-loaded first (ties by lane index). Down lanes
+    /// are never warm candidates: their queue is not draining.
     pub fn warm_lanes(&self, key: u64) -> Vec<usize> {
         let mut v: Vec<usize> = (0..self.lanes())
-            .filter(|&l| self.warm[l].contains(&key))
+            .filter(|&l| !self.down[l] && self.warm[l].contains(&key))
             .collect();
         v.sort_by_key(|&l| self.pending[l]); // stable sort keeps index order on ties
         v
@@ -873,7 +1018,7 @@ impl AffinityRouter {
                 return Some(best);
             }
             let idle = (0..self.lanes())
-                .filter(|&l| self.pending[l] == 0)
+                .filter(|&l| !self.down[l] && self.pending[l] == 0)
                 .min_by_key(|&l| !self.has_free_slot(l));
             if let Some(idle) = idle {
                 return Some(idle);
@@ -881,7 +1026,7 @@ impl AffinityRouter {
             return Some(best);
         }
         (0..self.lanes())
-            .filter(|&l| self.has_free_slot(l))
+            .filter(|&l| !self.down[l] && self.has_free_slot(l))
             .min_by_key(|&l| self.pending[l])
     }
 
@@ -895,8 +1040,16 @@ impl AffinityRouter {
         let lanes = self.lanes();
         let mut order: Vec<usize> = (0..lanes)
             .map(|i| (self.rr + i) % lanes)
-            .filter(|&l| Some(l) != exclude)
+            .filter(|&l| Some(l) != exclude && !self.down[l])
             .collect();
+        if order.is_empty() {
+            // Every other lane is down: spill anywhere rather than
+            // nowhere — jobs queue up and drain once a lane recovers.
+            order = (0..lanes)
+                .map(|i| (self.rr + i) % lanes)
+                .filter(|&l| Some(l) != exclude)
+                .collect();
+        }
         order.sort_by_key(|&l| (self.pending[l], !self.has_free_slot(l)));
         order
     }
@@ -912,7 +1065,7 @@ impl AffinityRouter {
         let lanes = self.lanes();
         (0..lanes)
             .map(|i| (self.rr + i) % lanes)
-            .min_by_key(|&l| (self.pending[l], !self.has_free_slot(l)))
+            .min_by_key(|&l| (self.down[l], self.pending[l], !self.has_free_slot(l)))
             .unwrap_or(0)
     }
 
@@ -973,11 +1126,20 @@ impl AffinityRouter {
     ///   hit): un-warm the key the optimistic commit guessed — the
     ///   backend never gained it — while leaving the confirmed
     ///   resident set untouched (failure changes no device slot).
+    ///
+    /// Feedback from a *stale generation* (the lane's backend was
+    /// respawned since the job ran, see [`Self::lane_restarted`])
+    /// settles the load estimate only: the backend it describes is
+    /// gone, so replaying it onto the mirror would resurrect keys the
+    /// restart wiped.
     pub fn completed(&mut self, fb: JobFeedback) {
         if fb.lane >= self.lanes() {
             return;
         }
         self.pending[fb.lane] = self.pending[fb.lane].saturating_sub(1);
+        if fb.generation != self.gen[fb.lane] {
+            return;
+        }
         if fb.uploaded || fb.hit {
             self.confirm_resident(fb.lane, fb.key);
         } else if !fb.ok {
@@ -986,24 +1148,213 @@ impl AffinityRouter {
     }
 }
 
+/// Pool-wide fault-tolerance policy of [`run_supervised_lane_pool`].
+/// The defaults are deliberately inert (no deadline, no retries):
+/// [`run_lane_pool`] keeps its historical semantics unless a caller
+/// opts into supervision.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Default per-job deadline, measured from submission; `None`
+    /// disables deadline enforcement (jobs may still opt in via
+    /// [`RegistrationJob::with_deadline`]).
+    pub deadline: Option<Duration>,
+    /// Default transient-failure retry budget per job (0 = first error
+    /// is final, matching the historical contained-failure behavior).
+    pub max_retries: u32,
+    /// First retry backoff; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    /// Upper bound on the exponential backoff between retries.
+    pub backoff_cap: Duration,
+    /// Backend restarts a lane absorbs before advancing one failover
+    /// tier (the factory's second argument): `tier = restarts /
+    /// restarts_per_tier`, so a backend that keeps panicking walks down
+    /// a [`crate::fpps_api::FailoverChain`] instead of thrashing.
+    pub restarts_per_tier: u32,
+    /// Deadline-watchdog poll interval.
+    pub watchdog_poll: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            max_retries: 0,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(50),
+            restarts_per_tier: 2,
+            watchdog_poll: Duration::from_millis(2),
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// Bounded exponential backoff before retry `attempt` (1-based).
+    fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u32 << attempt.min(16);
+        self.backoff_base.saturating_mul(factor).min(self.backoff_cap)
+    }
+}
+
+/// Bounded per-lane job queue. Unlike a `sync_channel`, a third party
+/// (the deadline watchdog) can *drain* it when the lane wedges, so
+/// queued jobs are re-routed instead of starving behind a stalled
+/// alignment.
+struct LaneQueue {
+    inner: Mutex<(VecDeque<RegistrationJob>, bool)>, // (jobs, closed)
+    cv: Condvar,
+    cap: usize,
+}
+
+impl LaneQueue {
+    fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Non-blocking push; hands the job back when full or closed.
+    fn try_push(&self, job: RegistrationJob) -> std::result::Result<(), RegistrationJob> {
+        let mut g = self.inner.lock().unwrap();
+        if g.1 || g.0.len() >= self.cap {
+            return Err(job);
+        }
+        g.0.push_back(job);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* empty.
+    fn pop(&self) -> Option<RegistrationJob> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = g.0.pop_front() {
+                self.cv.notify_all();
+                return Some(job);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Take every queued job (watchdog re-route of a wedged lane).
+    fn drain(&self) -> Vec<RegistrationJob> {
+        let mut g = self.inner.lock().unwrap();
+        let jobs = g.0.drain(..).collect();
+        self.cv.notify_all();
+        jobs
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The lane's currently-served job, published for the deadline
+/// watchdog. The `claimed` flag is the exactly-once arbiter between the
+/// lane and the watchdog: whoever flips it first (under the heartbeat
+/// mutex) owns the job's outcome and feedback.
+#[derive(Clone)]
+struct ActiveJob {
+    id: u64,
+    stream: usize,
+    key: u64,
+    initial: Mat4,
+    queue_wait_ms: f64,
+    started: Instant,
+    deadline_at: Option<Instant>,
+    attempt: u32,
+    generation: u64,
+    claimed: bool,
+}
+
+/// Shared lane↔watchdog state: the active-job heartbeat plus the
+/// cancellation token installed into the lane's backend.
+struct Heartbeat {
+    active: Mutex<Option<ActiveJob>>,
+    cancel: CancelToken,
+}
+
+/// Supervision traffic from lanes and the watchdog to the dispatcher.
+enum LaneEvent {
+    /// Per-job completion feedback (the mirror-correction protocol).
+    Feedback(JobFeedback),
+    /// The lane's backend was respawned: un-warm it and bump its
+    /// feedback generation.
+    Restarted { lane: usize },
+    /// The watchdog cut off a wedged lane: route around it.
+    Wedged { lane: usize },
+    /// A wedged lane came back: it may take new jobs again.
+    Recovered { lane: usize },
+    /// Jobs drained off a wedged lane's queue, to be re-routed.
+    Requeue { lane: usize, jobs: Vec<RegistrationJob> },
+    /// The lane failed to start and will never serve: route around it
+    /// permanently (its worker error fails the pool after the drain).
+    Dead { lane: usize },
+}
+
+/// Try to place `job` via the router (first choice, then spill order);
+/// hands the job back when every candidate queue is full. Routing state
+/// is committed only after a push lands.
+fn route_job(
+    router: &mut AffinityRouter,
+    queues: &[Arc<LaneQueue>],
+    mut job: RegistrationJob,
+) -> Option<RegistrationJob> {
+    let key = job.target_key;
+    let mut tried = None;
+    if let Some(l) = router.first_choice(key) {
+        match queues[l].try_push(job) {
+            Ok(()) => {
+                router.committed(l, key);
+                return None;
+            }
+            Err(j) => {
+                job = j;
+                tried = Some(l); // don't re-attempt the full queue
+            }
+        }
+    }
+    for l in router.spill_order(tried) {
+        match queues[l].try_push(job) {
+            Ok(()) => {
+                router.committed(l, key);
+                return None;
+            }
+            Err(j) => job = j,
+        }
+    }
+    Some(job)
+}
+
 /// Route jobs from the shared intake queue to per-lane queues through
 /// the pool-wide residency coordinator ([`AffinityRouter`]): warm keys
 /// keep their lane while it keeps up, cold keys fill **free residency
 /// slots** anywhere in the pool before any warm lane is made to evict,
 /// and only when every slot is occupied does a cold key spill by load.
-/// `done_rx` carries per-job [`JobFeedback`], giving the dispatcher
-/// both its per-lane load estimate and the ground truth that corrects
-/// the warm-set mirror (failed uploads un-warm) without locking.
-/// Routing can never change numerics: every job is an independent
+/// `ev_rx` carries per-job [`JobFeedback`] plus the supervision events
+/// (restarts, wedges, re-queues), giving the dispatcher its load
+/// estimate, the ground truth that corrects the warm-set mirror, and
+/// the restart/un-warm signals — all without locking. Jobs that find
+/// every queue full are parked in a deferred list (never blocking the
+/// event loop) and placed as soon as feedback frees a slot; intake is
+/// only pulled while the deferred list is empty, so producer
+/// backpressure is preserved. The dispatcher exits — closing every lane
+/// queue — once intake has disconnected and every routed job has fed
+/// back. Routing can never change numerics: every job is an independent
 /// alignment, so `lanes = 1` and `lanes = K` stay bit-identical
 /// regardless of placement.
-fn dispatch_by_affinity(
+fn dispatch_supervised(
     rx: Receiver<RegistrationJob>,
-    lane_txs: Vec<SyncSender<RegistrationJob>>,
-    done_rx: Receiver<JobFeedback>,
+    queues: Vec<Arc<LaneQueue>>,
+    ev_rx: Receiver<LaneEvent>,
     slots_rx: Receiver<usize>,
 ) {
-    let lanes = lane_txs.len();
+    let lanes = queues.len();
     // Mirror the *actual* backends, not an assumed default: every lane
     // reports its backend's residency slot count once it exists (a lane
     // that fails to start just drops its sender). The most conservative
@@ -1017,184 +1368,585 @@ fn dispatch_by_affinity(
         }
     }
     let mut router = AffinityRouter::new(lanes, slots.unwrap_or(1));
-    'jobs: for mut job in rx.iter() {
-        while let Ok(fb) = done_rx.try_recv() {
-            router.completed(fb);
-        }
-        let key = job.target_key;
-        let mut tried = None;
-        if let Some(l) = router.first_choice(key) {
-            match lane_txs[l].try_send(job) {
-                Ok(()) => {
-                    router.committed(l, key);
-                    continue 'jobs;
-                }
-                Err(TrySendError::Full(j)) => {
-                    job = j;
-                    tried = Some(l); // don't re-attempt the full queue
-                }
-                Err(TrySendError::Disconnected(_)) => return, // pool shutting down
+    let mut deferred: VecDeque<RegistrationJob> = VecDeque::new();
+    let mut dead = vec![false; lanes];
+    let mut intake_open = true;
+
+    fn handle_event(
+        router: &mut AffinityRouter,
+        deferred: &mut VecDeque<RegistrationJob>,
+        dead: &mut [bool],
+        ev: LaneEvent,
+    ) {
+        match ev {
+            LaneEvent::Feedback(fb) => router.completed(fb),
+            LaneEvent::Restarted { lane } => router.lane_restarted(lane),
+            LaneEvent::Wedged { lane } => router.set_down(lane, true),
+            LaneEvent::Recovered { lane } => router.set_down(lane, false),
+            LaneEvent::Requeue { lane, jobs } => {
+                router.requeued(lane, jobs.len());
+                deferred.extend(jobs);
+            }
+            LaneEvent::Dead { lane } => {
+                dead[lane] = true;
+                router.set_down(lane, true);
             }
         }
-        for l in router.spill_order(tried) {
-            match lane_txs[l].try_send(job) {
-                Ok(()) => {
-                    router.committed(l, key);
-                    continue 'jobs;
-                }
-                Err(TrySendError::Full(j)) => job = j,
-                Err(TrySendError::Disconnected(_)) => return,
+    }
+
+    loop {
+        while let Ok(ev) = ev_rx.try_recv() {
+            handle_event(&mut router, &mut deferred, &mut dead, ev);
+        }
+        if dead.iter().all(|&d| d) {
+            // No lane will ever serve again; stop routing so the pool
+            // can unwind and report the lane errors.
+            break;
+        }
+        // Place deferred jobs (watchdog re-queues and earlier overflow)
+        // before pulling new intake.
+        while let Some(job) = deferred.pop_front() {
+            if let Some(job) = route_job(&mut router, &queues, job) {
+                deferred.push_front(job); // still no room anywhere
+                break;
             }
         }
-        // Every queue is full: drain any fresh completions, then block
-        // on the best lane. Routing state is committed only once the
-        // send actually lands.
-        while let Ok(fb) = done_rx.try_recv() {
-            router.completed(fb);
+        if intake_open && deferred.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(job) => {
+                    if let Some(job) = route_job(&mut router, &queues, job) {
+                        deferred.push_back(job);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => intake_open = false,
+            }
+        } else if !intake_open && deferred.is_empty() && router.total_pending() == 0 {
+            break; // every job routed and fed back: drain complete
+        } else if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(2)) {
+            handle_event(&mut router, &mut deferred, &mut dead, ev);
         }
-        let l = router.blocking_choice(key);
-        if lane_txs[l].send(job).is_err() {
-            return;
-        }
-        router.committed(l, key);
+    }
+    for q in &queues {
+        q.close();
     }
 }
 
-/// Run a pool of `lanes` worker lanes, each with its own bounded queue,
-/// fed by a target-affinity dispatcher (see `dispatch_by_affinity`).
+/// Deadline watchdog: polls every lane's heartbeat and, when a job's
+/// deadline has passed unclaimed, *claims* it — emitting the contained
+/// [`StopReason::DeadlineExceeded`] outcome and its feedback itself (so
+/// the pool's accounting completes even if the lane never returns),
+/// raising the lane's [`CancelToken`] so a cooperative backend abandons
+/// the wedged call, marking the lane down, and draining its queue back
+/// to the dispatcher for re-routing.
+#[allow(clippy::too_many_arguments)]
+fn watchdog_loop(
+    heartbeats: &[Arc<Heartbeat>],
+    queues: &[Arc<LaneQueue>],
+    out_tx: Sender<RegistrationOutcome>,
+    ev_tx: Sender<LaneEvent>,
+    poll: Duration,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        for (lane, hb) in heartbeats.iter().enumerate() {
+            let claim = {
+                let mut g = hb.active.lock().unwrap();
+                let expired = g.as_ref().is_some_and(|a| {
+                    !a.claimed && a.deadline_at.is_some_and(|d| Instant::now() >= d)
+                });
+                if expired {
+                    let a = g.as_mut().expect("checked above");
+                    a.claimed = true;
+                    Some(a.clone())
+                } else {
+                    None
+                }
+            };
+            let Some(a) = claim else { continue };
+            // Cut the wedged call off, then take over the job's
+            // bookkeeping: one outcome, one feedback, queue re-routed.
+            hb.cancel.cancel();
+            out_tx
+                .send(RegistrationOutcome {
+                    id: a.id,
+                    stream: a.stream,
+                    lane,
+                    transform: a.initial,
+                    rmse: f64::NAN,
+                    iterations: 0,
+                    stop: StopReason::DeadlineExceeded,
+                    queue_wait_ms: a.queue_wait_ms,
+                    service_ms: a.started.elapsed().as_secs_f64() * 1e3,
+                    error: Some(format!(
+                        "job {} on lane {lane}: deadline exceeded (cut off by watchdog)",
+                        a.id
+                    )),
+                    attempts: a.attempt + 1,
+                })
+                .ok();
+            ev_tx
+                .send(LaneEvent::Feedback(JobFeedback {
+                    lane,
+                    key: a.key,
+                    uploaded: false, // conservative: un-warm, never claim
+                    hit: false,
+                    ok: false,
+                    generation: a.generation,
+                }))
+                .ok();
+            ev_tx.send(LaneEvent::Wedged { lane }).ok();
+            let drained = queues[lane].drain();
+            if !drained.is_empty() {
+                ev_tx
+                    .send(LaneEvent::Requeue {
+                        lane,
+                        jobs: drained,
+                    })
+                    .ok();
+            }
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// How one align attempt on a lane resolved.
+enum Attempt {
+    Done(crate::fpps_api::FppsResult, bool, bool), // (result, uploaded, hit)
+    Failed(String),
+    Panicked(String),
+}
+
+/// Human-readable panic payload (what `panic!` carried, if a string).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a pool of `lanes` supervised worker lanes, each with its own
+/// bounded queue, fed by a target-affinity dispatcher (see
+/// [`dispatch_supervised`]) and overseen by a deadline watchdog (see
+/// [`watchdog_loop`]).
 ///
-/// * `make_backend(lane)` is called **on** each lane thread, so backends
-///   never cross threads and need not be `Send`;
+/// * `make_backend(lane, tier)` is called **on** each lane thread, so
+///   backends never cross threads and need not be `Send`. `tier` is the
+///   failover rung: 0 on startup, advancing by one per
+///   [`SupervisorConfig::restarts_per_tier`] backend restarts, so the
+///   factory can hand out progressively more conservative backends
+///   (e.g. along a [`crate::fpps_api::FailoverChain`]). A tier-0
+///   failure at startup is a pool-level error; a factory failure during
+///   a mid-run respawn is contained per job instead.
 /// * `produce(tx)` runs on its own thread and feeds the intake queue —
 ///   it may clone the sender and fan out to per-client producer threads
 ///   (see `examples/registration_server.rs`). A `send` error means the
 ///   pool is shutting down; treat it as a stop signal, not a failure.
 ///
+/// Fault containment on a lane, per job: transient align errors (and
+/// panics, which additionally respawn the backend from the factory)
+/// retry with bounded exponential backoff up to the job's retry budget;
+/// a job past its deadline is contained as
+/// [`StopReason::DeadlineExceeded`] — cooperatively between ICP
+/// iterations when the backend is healthy, or by the watchdog when it
+/// is wedged. Every submitted job yields **exactly one** outcome and
+/// exactly one feedback, whoever emits them.
+///
 /// Each job is an independent alignment, so the mapping of jobs to lanes
 /// cannot change any transform: `lanes = 1` and `lanes = K` produce
 /// bit-identical outcomes for a deterministic backend.
-pub fn run_lane_pool<B, F, P>(
+pub fn run_supervised_lane_pool<B, F, P>(
     lanes: usize,
     queue_depth: usize,
     icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
     make_backend: F,
     produce: P,
 ) -> Result<LaneReport>
 where
     B: KernelBackend,
-    F: Fn(usize) -> Result<B> + Sync,
+    F: Fn(usize, usize) -> Result<B> + Sync,
     P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
 {
     let lanes = lanes.max(1);
     let depth = queue_depth.max(1);
     let (job_tx, job_rx) = sync_channel::<RegistrationJob>(depth);
-    let mut lane_txs = Vec::with_capacity(lanes);
-    let mut lane_rxs = Vec::with_capacity(lanes);
-    for _ in 0..lanes {
-        let (tx, rx) = sync_channel::<RegistrationJob>(depth);
-        lane_txs.push(tx);
-        lane_rxs.push(rx);
-    }
+    let queues: Vec<Arc<LaneQueue>> = (0..lanes).map(|_| Arc::new(LaneQueue::new(depth))).collect();
+    let heartbeats: Vec<Arc<Heartbeat>> = (0..lanes)
+        .map(|_| {
+            Arc::new(Heartbeat {
+                active: Mutex::new(None),
+                cancel: CancelToken::new(),
+            })
+        })
+        .collect();
     let (out_tx, out_rx) = channel::<RegistrationOutcome>();
     let (lane_tx, lane_rx) = channel::<LaneStats>();
-    let (done_tx, done_rx) = channel::<JobFeedback>();
+    let (ev_tx, ev_rx) = channel::<LaneEvent>();
     let (slots_tx, slots_rx) = channel::<usize>();
+    let watchdog_stop = AtomicBool::new(false);
     let t0 = Instant::now();
 
     std::thread::scope(|scope| -> Result<()> {
         let producer = scope.spawn(move || produce(job_tx));
+        let disp_queues = queues.clone();
         let dispatcher =
-            scope.spawn(move || dispatch_by_affinity(job_rx, lane_txs, done_rx, slots_rx));
+            scope.spawn(move || dispatch_supervised(job_rx, disp_queues, ev_rx, slots_rx));
+        let wd_heartbeats = heartbeats.clone();
+        let wd_queues = queues.clone();
+        let wd_out = out_tx.clone();
+        let wd_ev = ev_tx.clone();
+        let wd_stop = &watchdog_stop;
+        let watchdog = scope.spawn(move || {
+            watchdog_loop(
+                &wd_heartbeats,
+                &wd_queues,
+                wd_out,
+                wd_ev,
+                sup.watchdog_poll,
+                wd_stop,
+            )
+        });
         let mut workers = Vec::with_capacity(lanes);
-        for (lane, job_rx) in lane_rxs.into_iter().enumerate() {
+        for lane in 0..lanes {
+            let queue = Arc::clone(&queues[lane]);
+            let hb = Arc::clone(&heartbeats[lane]);
             let out_tx = out_tx.clone();
             let lane_tx = lane_tx.clone();
-            let done_tx = done_tx.clone();
+            let ev_tx = ev_tx.clone();
             let slots_tx = slots_tx.clone();
             let make_backend = &make_backend;
             workers.push(scope.spawn(move || -> Result<()> {
-                let backend = make_backend(lane)
-                    .with_context(|| format!("create backend for lane {lane}"))?;
-                let mut icp = FppsIcp::with_backend(backend);
+                let make_icp = |tier: usize| -> Result<FppsIcp<B>> {
+                    let mut backend = make_backend(lane, tier).with_context(|| {
+                        format!("create backend for lane {lane} (failover tier {tier})")
+                    })?;
+                    backend.set_cancel_token(hb.cancel.clone());
+                    let mut icp = FppsIcp::with_backend(backend);
+                    icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
+                        .set_max_iteration_count(icp_cfg.max_iteration_count)
+                        .set_transformation_epsilon(icp_cfg.transformation_epsilon);
+                    Ok(icp)
+                };
+                // Tier-0 creation failure is a configuration error that
+                // fails the pool, exactly as before supervision existed —
+                // but the lane must still hand its queue back so the
+                // dispatcher can drain and the pool can unwind.
+                let mut icp: Option<FppsIcp<B>> = match make_icp(0) {
+                    Ok(engine) => Some(engine),
+                    Err(e) => {
+                        queue.close();
+                        let jobs = queue.drain();
+                        ev_tx.send(LaneEvent::Dead { lane }).ok();
+                        if !jobs.is_empty() {
+                            ev_tx.send(LaneEvent::Requeue { lane, jobs }).ok();
+                        }
+                        return Err(e);
+                    }
+                };
                 // Tell the dispatcher how much residency this lane
                 // really has, so its warm-set mirror matches the device.
-                slots_tx.send(icp.backend().residency_slots()).ok();
+                let engine0 = icp.as_ref().expect("created above");
+                slots_tx.send(engine0.backend().residency_slots()).ok();
                 drop(slots_tx);
-                icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
-                    .set_max_iteration_count(icp_cfg.max_iteration_count)
-                    .set_transformation_epsilon(icp_cfg.transformation_epsilon);
                 let mut stats = LaneStats {
                     lane,
+                    backend: engine0.backend().name().to_string(),
                     ..Default::default()
                 };
-                // Own queue, no lock: the dispatcher already routed.
-                for job in job_rx.iter() {
+                let mut generation: u64 = 0;
+                // Telemetry of backends retired by restarts, folded into
+                // the final stats: (device_ms, uploads, hits, evictions).
+                let mut retired = (0.0f64, 0u64, 0u64, 0u64);
+                let retire = |icp: &mut Option<FppsIcp<B>>, retired: &mut (f64, u64, u64, u64)| {
+                    if let Some(old) = icp.take() {
+                        retired.0 += old.backend().device_time().as_secs_f64() * 1e3;
+                        let (u, h) = old.target_cache_stats();
+                        retired.1 += u;
+                        retired.2 += h;
+                        retired.3 += old.backend().target_evictions();
+                    }
+                };
+
+                // Own queue, no lock contention with other lanes: the
+                // dispatcher already routed.
+                while let Some(job) = queue.pop() {
                     let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
                     let (id, stream, initial, key) =
                         (job.id, job.stream, job.initial, job.target_key);
-                    // Diffing the upload/hit counters around align()
-                    // tells the dispatcher what THIS job did to the
-                    // backend's residency — the ground truth of the
-                    // mirror-correcting feedback protocol.
-                    let (uploads_before, hits_before) = icp.target_cache_stats();
-                    icp.set_input_source(job.source);
-                    icp.set_input_target(job.target);
-                    icp.set_transformation_matrix(initial);
-                    let t_align = Instant::now();
-                    // A failing job must not take its lane (and with it
-                    // the whole pool) down: contain the error in the
-                    // outcome and keep draining the queue.
-                    let outcome = match icp.align() {
-                        Ok(res) => RegistrationOutcome {
-                            id,
-                            stream,
-                            lane,
-                            transform: res.transformation,
-                            rmse: res.rmse,
-                            iterations: res.iterations,
-                            stop: res.stop,
-                            queue_wait_ms,
-                            service_ms: t_align.elapsed().as_secs_f64() * 1e3,
-                            error: None,
-                        },
-                        Err(e) => {
-                            stats.failed += 1;
-                            RegistrationOutcome {
-                                id,
-                                stream,
-                                lane,
-                                transform: initial,
-                                rmse: f64::NAN,
-                                iterations: 0,
-                                stop: StopReason::Failed,
-                                queue_wait_ms,
-                                service_ms: t_align.elapsed().as_secs_f64() * 1e3,
-                                error: Some(format!("job {id} on lane {lane}: {e:#}")),
+                    let deadline_at =
+                        job.deadline.or(sup.deadline).map(|d| job.submitted + d);
+                    let max_retries = job.max_retries.unwrap_or(sup.max_retries);
+                    let mut source = Some(job.source);
+                    let t_serve = Instant::now();
+                    let mut attempt: u32 = 0;
+                    // `None` = the watchdog claimed the job (outcome and
+                    // feedback already emitted over there).
+                    let mut resolution: Option<(RegistrationOutcome, JobFeedback)> = None;
+                    let mut recovered_from_claim = false;
+                    loop {
+                        // A job past its deadline — expired in the
+                        // queue, or between retries — is contained
+                        // without touching the backend.
+                        if deadline_at.is_some_and(|d| Instant::now() >= d) {
+                            stats.deadline_missed += 1;
+                            resolution = Some((
+                                RegistrationOutcome {
+                                    id,
+                                    stream,
+                                    lane,
+                                    transform: initial,
+                                    rmse: f64::NAN,
+                                    iterations: 0,
+                                    stop: StopReason::DeadlineExceeded,
+                                    queue_wait_ms,
+                                    service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                    error: Some(format!(
+                                        "job {id} on lane {lane}: deadline exceeded"
+                                    )),
+                                    attempts: attempt + 1,
+                                },
+                                JobFeedback {
+                                    lane,
+                                    key,
+                                    uploaded: false,
+                                    hit: false,
+                                    ok: false,
+                                    generation,
+                                },
+                            ));
+                            break;
+                        }
+                        // Respawn the backend if a panic retired it (or
+                        // an earlier respawn failed). A factory failure
+                        // here is contained in the job, not the pool.
+                        if icp.is_none() {
+                            let tier = stats.restarts / sup.restarts_per_tier.max(1) as usize;
+                            match make_icp(tier) {
+                                Ok(engine) => {
+                                    stats.backend_tier = tier;
+                                    stats.backend = engine.backend().name().to_string();
+                                    icp = Some(engine);
+                                }
+                                Err(e) => {
+                                    resolution = Some((
+                                        RegistrationOutcome {
+                                            id,
+                                            stream,
+                                            lane,
+                                            transform: initial,
+                                            rmse: f64::NAN,
+                                            iterations: 0,
+                                            stop: StopReason::Failed,
+                                            queue_wait_ms,
+                                            service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                            error: Some(format!("job {id} on lane {lane}: {e:#}")),
+                                            attempts: attempt + 1,
+                                        },
+                                        JobFeedback {
+                                            lane,
+                                            key,
+                                            uploaded: false,
+                                            hit: false,
+                                            ok: false,
+                                            generation,
+                                        },
+                                    ));
+                                    break;
+                                }
                             }
                         }
-                    };
+                        // Publish the attempt for the watchdog. If the
+                        // watchdog already claimed this job (stall cut
+                        // off between our checks), stop touching it.
+                        let claimed_already = {
+                            let mut g = hb.active.lock().unwrap();
+                            if g.as_ref().is_some_and(|a| a.claimed) {
+                                true
+                            } else {
+                                hb.cancel.reset();
+                                *g = Some(ActiveJob {
+                                    id,
+                                    stream,
+                                    key,
+                                    initial,
+                                    queue_wait_ms,
+                                    started: t_serve,
+                                    deadline_at,
+                                    attempt,
+                                    generation,
+                                    claimed: false,
+                                });
+                                false
+                            }
+                        };
+                        if claimed_already {
+                            recovered_from_claim = true;
+                            break;
+                        }
+                        let engine = icp.as_mut().expect("respawned above");
+                        let (uploads_before, hits_before) = engine.target_cache_stats();
+                        // Retries re-stage the inputs, so keep the
+                        // source around only when a retry is possible.
+                        let src = if max_retries == 0 {
+                            source.take().expect("single attempt")
+                        } else {
+                            source.as_ref().expect("retryable").clone()
+                        };
+                        engine.set_input_source(src);
+                        engine.set_input_target(Arc::clone(&job.target));
+                        engine.set_transformation_matrix(initial);
+                        engine.set_deadline(deadline_at);
+                        // A panicking backend must not take the lane
+                        // (and with it the whole pool) down: contain the
+                        // unwind, respawn, retry.
+                        let served = match catch_unwind(AssertUnwindSafe(|| engine.align())) {
+                            Ok(Ok(res)) => {
+                                let (u1, h1) = engine.target_cache_stats();
+                                Attempt::Done(res, u1 > uploads_before, h1 > hits_before)
+                            }
+                            Ok(Err(e)) => Attempt::Failed(format!("{e:#}")),
+                            Err(payload) => Attempt::Panicked(panic_message(payload)),
+                        };
+                        // Resolve the claim race: whoever holds the
+                        // heartbeat lock first owns the job's outcome.
+                        let claimed = {
+                            let mut g = hb.active.lock().unwrap();
+                            let claimed = g.as_ref().is_some_and(|a| a.claimed);
+                            if !claimed {
+                                *g = None;
+                            }
+                            claimed
+                        };
+                        if matches!(served, Attempt::Panicked(_)) {
+                            // The engine (and its backend) is toast:
+                            // retire its telemetry, respawn next loop,
+                            // and tell the dispatcher to un-warm us.
+                            retire(&mut icp, &mut retired);
+                            stats.restarts += 1;
+                            generation += 1;
+                            ev_tx.send(LaneEvent::Restarted { lane }).ok();
+                        }
+                        if claimed {
+                            recovered_from_claim = true;
+                            break;
+                        }
+                        match served {
+                            Attempt::Done(res, uploaded, hit) => {
+                                let deadline_hit = res.stop == StopReason::DeadlineExceeded;
+                                if deadline_hit {
+                                    stats.deadline_missed += 1;
+                                }
+                                resolution = Some((
+                                    RegistrationOutcome {
+                                        id,
+                                        stream,
+                                        lane,
+                                        // A deadline cut mid-alignment
+                                        // hands back the initial
+                                        // transform: partial progress is
+                                        // not a usable pose.
+                                        transform: if deadline_hit {
+                                            initial
+                                        } else {
+                                            res.transformation
+                                        },
+                                        rmse: if deadline_hit { f64::NAN } else { res.rmse },
+                                        iterations: res.iterations,
+                                        stop: res.stop,
+                                        queue_wait_ms,
+                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                        error: deadline_hit.then(|| {
+                                            format!("job {id} on lane {lane}: deadline exceeded")
+                                        }),
+                                        attempts: attempt + 1,
+                                    },
+                                    JobFeedback {
+                                        lane,
+                                        key,
+                                        uploaded,
+                                        hit,
+                                        ok: !deadline_hit,
+                                        generation,
+                                    },
+                                ));
+                                break;
+                            }
+                            Attempt::Failed(msg) | Attempt::Panicked(msg) => {
+                                if attempt < max_retries {
+                                    attempt += 1;
+                                    stats.retries += 1;
+                                    std::thread::sleep(sup.backoff(attempt));
+                                    continue;
+                                }
+                                resolution = Some((
+                                    RegistrationOutcome {
+                                        id,
+                                        stream,
+                                        lane,
+                                        transform: initial,
+                                        rmse: f64::NAN,
+                                        iterations: 0,
+                                        stop: StopReason::Failed,
+                                        queue_wait_ms,
+                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                        error: Some(format!("job {id} on lane {lane}: {msg}")),
+                                        attempts: attempt + 1,
+                                    },
+                                    JobFeedback {
+                                        lane,
+                                        key,
+                                        uploaded: false,
+                                        hit: false,
+                                        ok: false,
+                                        generation,
+                                    },
+                                ));
+                                break;
+                            }
+                        }
+                    }
                     stats.jobs += 1;
-                    stats.service.record_ms(outcome.service_ms);
                     stats.queue_wait.record_ms(queue_wait_ms);
-                    let ok = !outcome.is_failed();
-                    let (uploads_after, hits_after) = icp.target_cache_stats();
+                    stats.service.record_ms(t_serve.elapsed().as_secs_f64() * 1e3);
+                    if recovered_from_claim {
+                        // The watchdog already emitted this job's
+                        // outcome and feedback; just account it and
+                        // report the lane back up.
+                        stats.failed += 1;
+                        stats.deadline_missed += 1;
+                        {
+                            let mut g = hb.active.lock().unwrap();
+                            *g = None;
+                        }
+                        ev_tx.send(LaneEvent::Recovered { lane }).ok();
+                        continue;
+                    }
+                    let (outcome, feedback) = resolution.expect("every unclaimed job resolves");
+                    if outcome.is_failed() {
+                        stats.failed += 1;
+                    }
                     out_tx.send(outcome).ok();
-                    done_tx
-                        .send(JobFeedback {
-                            lane,
-                            key,
-                            uploaded: uploads_after > uploads_before,
-                            hit: hits_after > hits_before,
-                            ok,
-                        })
-                        .ok();
+                    ev_tx.send(LaneEvent::Feedback(feedback)).ok();
                 }
-                stats.device_ms = icp.backend().device_time().as_secs_f64() * 1e3;
-                let (uploads, hits) = icp.target_cache_stats();
-                stats.target_uploads = uploads as usize;
-                stats.target_hits = hits as usize;
-                stats.resident_targets = icp.backend().resident_epochs().len();
-                stats.target_evictions = icp.backend().target_evictions() as usize;
+                if let Some(engine) = icp.as_ref() {
+                    stats.resident_targets = engine.backend().resident_epochs().len();
+                    stats.device_ms =
+                        retired.0 + engine.backend().device_time().as_secs_f64() * 1e3;
+                    let (u, h) = engine.target_cache_stats();
+                    stats.target_uploads = (retired.1 + u) as usize;
+                    stats.target_hits = (retired.2 + h) as usize;
+                    stats.target_evictions =
+                        (retired.3 + engine.backend().target_evictions()) as usize;
+                } else {
+                    stats.device_ms = retired.0;
+                    stats.target_uploads = retired.1 as usize;
+                    stats.target_hits = retired.2 as usize;
+                    stats.target_evictions = retired.3 as usize;
+                }
                 lane_tx.send(stats).ok();
                 Ok(())
             }));
@@ -1204,7 +1956,7 @@ where
         // on lanes that never started).
         drop(out_tx);
         drop(lane_tx);
-        drop(done_tx);
+        drop(ev_tx);
         drop(slots_tx);
 
         match producer.join() {
@@ -1214,13 +1966,26 @@ where
         if dispatcher.join().is_err() {
             bail!("affinity dispatcher panicked");
         }
+        let mut worker_err = None;
         for w in workers {
             match w.join() {
-                Ok(r) => r?,
-                Err(_) => bail!("lane worker panicked"),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err.get_or_insert(anyhow!("lane worker panicked"));
+                }
             }
         }
-        Ok(())
+        watchdog_stop.store(true, Ordering::SeqCst);
+        if watchdog.join().is_err() {
+            bail!("deadline watchdog panicked");
+        }
+        match worker_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     })?;
 
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -1248,6 +2013,74 @@ where
     })
 }
 
+/// Run a pool of `lanes` worker lanes with the inert default
+/// supervision policy (no deadlines, no retries) and a tier-blind
+/// backend factory — the historical entry point; see
+/// [`run_supervised_lane_pool`] for the full fault-tolerant form.
+pub fn run_lane_pool<B, F, P>(
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+    produce: P,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
+{
+    run_supervised_lane_pool(
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+        produce,
+    )
+}
+
+/// Convenience wrapper: push a prebuilt batch of jobs through a
+/// supervised pool with an explicit fault-tolerance policy and a
+/// tier-aware backend factory.
+pub fn run_registration_batch_supervised<B, F>(
+    jobs: Vec<RegistrationJob>,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
+    let expected = jobs.len();
+    let report = run_supervised_lane_pool(
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+        move |tx| {
+            for mut job in jobs {
+                job.mark_submitted(); // queue wait starts at send, not build
+                if tx.send(job).is_err() {
+                    break; // pool shut down early
+                }
+            }
+            Ok(())
+        },
+    )?;
+    if report.outcomes.len() != expected {
+        return Err(anyhow!(
+            "lane pool returned {} outcomes for {} jobs",
+            report.outcomes.len(),
+            expected
+        ));
+    }
+    Ok(report)
+}
+
 /// Convenience wrapper: push a prebuilt batch of jobs through the pool.
 pub fn run_registration_batch<B, F>(
     jobs: Vec<RegistrationJob>,
@@ -1260,24 +2093,14 @@ where
     B: KernelBackend,
     F: Fn(usize) -> Result<B> + Sync,
 {
-    let expected = jobs.len();
-    let report = run_lane_pool(lanes, queue_depth, icp_cfg, make_backend, move |tx| {
-        for mut job in jobs {
-            job.mark_submitted(); // queue wait starts at send, not build
-            if tx.send(job).is_err() {
-                break; // pool shut down early
-            }
-        }
-        Ok(())
-    })?;
-    if report.outcomes.len() != expected {
-        return Err(anyhow!(
-            "lane pool returned {} outcomes for {} jobs",
-            report.outcomes.len(),
-            expected
-        ));
-    }
-    Ok(report)
+    run_registration_batch_supervised(
+        jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
 }
 
 /// Build frame-pair jobs (frame i aligned onto frame i−1) from a
@@ -1469,10 +2292,46 @@ where
     B: KernelBackend,
     F: Fn(usize) -> Result<B> + Sync,
 {
+    run_localization_supervised(
+        seq,
+        scans,
+        cfg,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
+}
+
+/// [`run_localization`] with an explicit fault-tolerance policy and a
+/// tier-aware backend factory (see [`run_supervised_lane_pool`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_localization_supervised<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<LocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
     let workload = localization_jobs(seq, scans, cfg)?;
     let map_points = workload.map.len();
     let admission = workload.admission;
-    let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
+    let report = run_registration_batch_supervised(
+        workload.jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+    )?;
     let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
     Ok(LocalizationResult {
         report,
@@ -1626,10 +2485,48 @@ where
     B: KernelBackend,
     F: Fn(usize) -> Result<B> + Sync,
 {
+    run_tiled_localization_supervised(
+        seq,
+        scans,
+        tiles,
+        cfg,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
+}
+
+/// [`run_tiled_localization`] with an explicit fault-tolerance policy
+/// and a tier-aware backend factory (see [`run_supervised_lane_pool`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_localization_supervised<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<TiledLocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
     let workload = tiled_localization_jobs(seq, scans, tiles, cfg)?;
     let map_points = workload.maps.iter().map(|m| m.len()).collect();
     let admissions = workload.admissions.clone();
-    let report = run_registration_batch(workload.jobs, lanes, queue_depth, icp_cfg, make_backend)?;
+    let report = run_registration_batch_supervised(
+        workload.jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+    )?;
     let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
     Ok(TiledLocalizationResult {
         report,
@@ -1807,7 +2704,60 @@ mod tests {
             uploaded,
             hit,
             ok,
+            generation: 0,
         }
+    }
+
+    #[test]
+    fn stale_generation_feedback_does_not_resurrect_warm_keys() {
+        let mut r = AffinityRouter::new(2, 2);
+        // Lane 0 serves key 7 and the feedback confirms residency.
+        r.committed(0, 7);
+        r.completed(fb(0, 7, true, false, true));
+        assert_eq!(r.warm_keys(0), &[7]);
+        // Two more jobs for the key are in flight when the lane's
+        // backend is respawned: the restart clears the mirror and bumps
+        // the generation...
+        r.committed(0, 7);
+        r.committed(0, 7);
+        r.lane_restarted(0);
+        assert_eq!(r.generation(0), 1);
+        assert!(r.warm_keys(0).is_empty(), "restart must clear warm keys");
+        assert_eq!(r.pending(0), 2);
+        // ...so feedback from the old backend (generation 0) settles the
+        // load estimate but must NOT mark the key warm — the new backend
+        // holds nothing.
+        r.completed(fb(0, 7, true, true, true));
+        assert_eq!(r.pending(0), 1);
+        assert!(
+            r.warm_keys(0).is_empty(),
+            "stale-generation feedback resurrected a warm key"
+        );
+        // Current-generation feedback is trusted again.
+        let mut current = fb(0, 7, true, false, true);
+        current.generation = 1;
+        r.completed(current);
+        assert_eq!(r.pending(0), 0);
+        assert_eq!(r.warm_keys(0), &[7]);
+    }
+
+    #[test]
+    fn down_lanes_are_routed_around_until_recovery() {
+        let mut r = AffinityRouter::new(2, 1);
+        // Key 9 is warm on lane 1, which then gets marked down.
+        r.committed(1, 9);
+        r.completed(fb(1, 9, true, false, true));
+        r.set_down(1, true);
+        assert!(r.is_down(1));
+        // Warm affinity must not route to a down lane...
+        let choice = r.first_choice(9);
+        assert_ne!(choice, Some(1), "routed a job to a down lane");
+        // ...and the spill order skips it while any other lane is up.
+        assert!(!r.spill_order(None).contains(&1));
+        // Recovery restores warm affinity (the backend kept its cache:
+        // down ≠ restarted).
+        r.set_down(1, false);
+        assert_eq!(r.first_choice(9), Some(1));
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Deterministic fault injection for chaos-testing the lane pool.
+//!
+//! [`FaultInjectingBackend`] wraps any [`KernelBackend`] and injects
+//! failures on a fixed schedule — a [`FaultPlan`] mapping *align-attempt
+//! ordinals* (one `upload_source` call per alignment attempt) to
+//! [`FaultKind`]s. Plans are either scripted by hand or derived from a
+//! seed via the crate's own [`Pcg32`], so a chaos run is exactly
+//! reproducible: same seed, same faults, same recovery sequence.
+//!
+//! The four injected failure modes mirror the real-world hazards the
+//! supervision layer must contain:
+//!
+//! * [`FaultKind::TransientError`] — the upload returns `Err` once; a
+//!   retry succeeds. Models a recoverable DMA/transport hiccup.
+//! * [`FaultKind::StallMs`] — the upload blocks for the given duration,
+//!   polling its [`CancelToken`] so a watchdog can cut it off. Models a
+//!   wedged device call (the silent multi-minute blocking NN query).
+//! * [`FaultKind::CorruptTransform`] — the *next* [`KernelBackend::step`]
+//!   returns NaN-poisoned accumulators. Models bit-rot on the result
+//!   path; `FppsIcp::align` must detect it and fail the attempt rather
+//!   than misreport it as a correspondence-count stop.
+//! * [`FaultKind::Panic`] — the upload panics, killing the lane thread.
+//!   Models a driver crash; the supervisor must respawn the lane.
+//!
+//! Injection happens strictly *around* the wrapped backend: a fault
+//! either prevents the inner call or poisons its output, so an attempt
+//! with no scheduled fault is bit-identical to running the inner
+//! backend directly.
+
+use crate::fpps_api::{CancelToken, KernelBackend, TargetEpoch};
+use crate::math::Mat4;
+use crate::rng::Pcg32;
+use crate::runtime::StepAccumulators;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// One scheduled failure mode. See the module docs for what each models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The align attempt's `upload_source` fails with a retryable error.
+    TransientError,
+    /// The align attempt's `upload_source` blocks for this many
+    /// milliseconds (cooperatively cancellable via [`CancelToken`]).
+    StallMs(u64),
+    /// The attempt's next `step` returns NaN-poisoned accumulators.
+    CorruptTransform,
+    /// The align attempt's `upload_source` panics, killing the lane.
+    Panic,
+}
+
+/// A deterministic schedule of faults, keyed by align-attempt ordinal
+/// (0-based count of `upload_source` calls on the wrapped backend).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, FaultKind>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the wrapper becomes a transparent
+    /// pass-through (useful as the non-faulted arm of a chaos test).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A hand-written schedule: `(attempt ordinal, fault)` pairs.
+    pub fn scripted(faults: impl IntoIterator<Item = (u64, FaultKind)>) -> Self {
+        Self {
+            faults: faults.into_iter().collect(),
+        }
+    }
+
+    /// A seeded pseudo-random schedule over the first `attempts` align
+    /// attempts: each attempt independently faults with probability
+    /// `rate`, drawing uniformly among the four kinds (stalls use
+    /// `stall_ms`). `lane` selects a decorrelated [`Pcg32`] substream so
+    /// every lane of a pool gets its own schedule from one pool seed.
+    pub fn seeded(seed: u64, lane: usize, attempts: u64, rate: f64, stall_ms: u64) -> Self {
+        let mut rng = Pcg32::substream(seed, lane as u64);
+        let mut faults = BTreeMap::new();
+        for ordinal in 0..attempts {
+            if rng.uniform_f64() < rate {
+                let kind = match rng.below(4) {
+                    0 => FaultKind::TransientError,
+                    1 => FaultKind::StallMs(stall_ms),
+                    2 => FaultKind::CorruptTransform,
+                    _ => FaultKind::Panic,
+                };
+                faults.insert(ordinal, kind);
+            }
+        }
+        Self { faults }
+    }
+
+    /// The fault scheduled for `ordinal`, if any.
+    pub fn fault_for(&self, ordinal: u64) -> Option<FaultKind> {
+        self.faults.get(&ordinal).copied()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// Granularity of the cancellable stall sleep — short enough that a
+/// watchdog cancellation is honoured promptly, long enough not to spin.
+const STALL_SLICE: Duration = Duration::from_millis(2);
+
+/// A [`KernelBackend`] decorator that injects the faults of a
+/// [`FaultPlan`] around an inner backend. See the module docs.
+pub struct FaultInjectingBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    /// Count of align attempts (`upload_source` calls) so far.
+    attempts: u64,
+    /// Set when a [`FaultKind::CorruptTransform`] fault fired on the
+    /// current attempt; poisons the next `step`'s accumulators.
+    armed_corrupt: bool,
+    cancel: CancelToken,
+}
+
+impl<B: KernelBackend> FaultInjectingBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            attempts: 0,
+            armed_corrupt: false,
+            cancel: CancelToken::new(),
+        }
+    }
+
+    /// Align attempts observed so far (fault-plan ordinals consumed).
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Block for `ms`, polling the cancel token; `Err` when cancelled.
+    fn cancellable_stall(&self, ms: u64) -> Result<()> {
+        let deadline = std::time::Instant::now() + Duration::from_millis(ms);
+        while std::time::Instant::now() < deadline {
+            if self.cancel.is_cancelled() {
+                bail!("injected stall cut off by cancellation");
+            }
+            std::thread::sleep(STALL_SLICE.min(deadline - std::time::Instant::now()));
+        }
+        Ok(())
+    }
+}
+
+impl<B: KernelBackend> KernelBackend for FaultInjectingBackend<B> {
+    fn name(&self) -> &'static str {
+        "fault-injecting"
+    }
+
+    fn select_capacity(
+        &self,
+        n_source: usize,
+        n_target: usize,
+    ) -> Result<(usize, usize, usize, usize)> {
+        self.inner.select_capacity(n_source, n_target)
+    }
+
+    fn residency_slots(&self) -> usize {
+        self.inner.residency_slots()
+    }
+
+    fn set_residency_slots(&mut self, slots: usize) {
+        self.inner.set_residency_slots(slots);
+    }
+
+    fn upload_target_keyed(
+        &mut self,
+        key: u64,
+        tgt: &[f32],
+        tgt_mask: &[f32],
+    ) -> Result<TargetEpoch> {
+        self.inner.upload_target_keyed(key, tgt, tgt_mask)
+    }
+
+    fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+        self.inner.activate_target(key)
+    }
+
+    fn target_epoch(&self) -> Option<TargetEpoch> {
+        self.inner.target_epoch()
+    }
+
+    fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+        self.inner.resident_epochs()
+    }
+
+    fn target_evictions(&self) -> u64 {
+        self.inner.target_evictions()
+    }
+
+    fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+        let ordinal = self.attempts;
+        self.attempts += 1;
+        self.armed_corrupt = false;
+        match self.plan.fault_for(ordinal) {
+            Some(FaultKind::TransientError) => {
+                bail!("injected transient upload error (attempt {ordinal})")
+            }
+            Some(FaultKind::StallMs(ms)) => self.cancellable_stall(ms)?,
+            Some(FaultKind::CorruptTransform) => self.armed_corrupt = true,
+            Some(FaultKind::Panic) => panic!("injected lane panic (attempt {ordinal})"),
+            None => {}
+        }
+        self.inner.upload_source(src, src_mask)
+    }
+
+    fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+        let mut acc = self.inner.step(transform, max_dist_sq)?;
+        if self.armed_corrupt {
+            self.armed_corrupt = false;
+            acc.count = f64::NAN;
+            acc.sum_sq_dist = f64::NAN;
+            acc.sum_pq.m[0][0] = f64::NAN;
+        }
+        Ok(acc)
+    }
+
+    fn device_time(&self) -> Duration {
+        self.inner.device_time()
+    }
+
+    fn set_cancel_token(&mut self, token: CancelToken) {
+        self.cancel = token.clone();
+        self.inner.set_cancel_token(token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpps_api::NativeSimBackend;
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_lane_decorrelated() {
+        let a = FaultPlan::seeded(42, 0, 64, 0.25, 10);
+        let b = FaultPlan::seeded(42, 0, 64, 0.25, 10);
+        let c = FaultPlan::seeded(42, 1, 64, 0.25, 10);
+        assert!(!a.is_empty(), "rate 0.25 over 64 attempts must fault");
+        for ord in 0..64 {
+            assert_eq!(a.fault_for(ord), b.fault_for(ord), "ordinal {ord}");
+        }
+        let differs = (0..64).any(|o| a.fault_for(o) != c.fault_for(o));
+        assert!(differs, "lane substreams must decorrelate");
+    }
+
+    #[test]
+    fn unfaulted_attempts_pass_through() {
+        let plan = FaultPlan::scripted([(1, FaultKind::TransientError)]);
+        let mut b = FaultInjectingBackend::new(NativeSimBackend::new(), plan);
+        let src = vec![0.0f32; 3 * 8];
+        let mask = vec![1.0f32; 8];
+        b.upload_target(&src, &mask).unwrap();
+        b.upload_source(&src, &mask).unwrap(); // attempt 0: clean
+        let err = b.upload_source(&src, &mask).unwrap_err(); // attempt 1
+        assert!(err.to_string().contains("injected transient"));
+        b.upload_source(&src, &mask).unwrap(); // attempt 2: clean again
+        assert_eq!(b.attempts(), 3);
+    }
+
+    #[test]
+    fn corruption_poisons_exactly_one_step() {
+        let plan = FaultPlan::scripted([(0, FaultKind::CorruptTransform)]);
+        let mut b = FaultInjectingBackend::new(NativeSimBackend::new(), plan);
+        let tgt: Vec<f32> = (0..24).map(|i| i as f32 * 0.1).collect();
+        let mask = vec![1.0f32; 8];
+        b.upload_target(&tgt, &mask).unwrap();
+        b.upload_source(&tgt, &mask).unwrap();
+        let poisoned = b.step(&Mat4::IDENTITY, 100.0).unwrap();
+        assert!(!poisoned.is_finite(), "armed corruption must poison step");
+        b.upload_source(&tgt, &mask).unwrap();
+        let clean = b.step(&Mat4::IDENTITY, 100.0).unwrap();
+        assert!(clean.is_finite(), "poison must not persist past one attempt");
+    }
+
+    #[test]
+    fn stall_is_cut_off_by_cancellation() {
+        let plan = FaultPlan::scripted([(0, FaultKind::StallMs(60_000))]);
+        let mut b = FaultInjectingBackend::new(NativeSimBackend::new(), plan);
+        let token = CancelToken::new();
+        b.set_cancel_token(token.clone());
+        token.cancel();
+        let start = std::time::Instant::now();
+        let err = b.upload_source(&[0.0; 24], &[1.0; 8]).unwrap_err();
+        assert!(err.to_string().contains("cut off by cancellation"));
+        assert!(start.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -177,6 +177,40 @@ impl<T> ResidentSlots<T> {
     }
 }
 
+/// Shared cancellation flag between a lane-pool watchdog and a backend:
+/// the watchdog raises it when a job's deadline expires mid-call, and a
+/// cooperative backend (one whose long operations poll
+/// [`CancelToken::is_cancelled`]) abandons the operation with an error
+/// instead of wedging its lane until the call returns on its own.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    cancelled: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the flag (idempotent).
+    pub fn cancel(&self) {
+        self.cancelled
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Lower the flag — the lane pool resets its per-lane token before
+    /// each job so a cancellation aimed at one job cannot leak into the
+    /// next.
+    pub fn reset(&self) {
+        self.cancelled
+            .store(false, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
 /// Device abstraction: one ICP step (transform → NN → accumulate) on
 /// padded, fixed-capacity buffers.
 ///
@@ -293,6 +327,12 @@ pub trait KernelBackend {
 
     /// Cumulative device-side execution time (telemetry).
     fn device_time(&self) -> Duration;
+
+    /// Install a [`CancelToken`] the backend should poll during long
+    /// operations (uploads, steps) so a supervising watchdog can abandon
+    /// a wedged call instead of waiting it out. Default: ignored — a
+    /// backend that never blocks for long needs no cancellation support.
+    fn set_cancel_token(&mut self, _token: CancelToken) {}
 }
 
 /// Production backend: AOT artifact on the PJRT CPU client. Keeps an
@@ -832,6 +872,69 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+/// Ordered backend degradation chain for the lane-pool supervisor
+/// (e.g. `xla → native-sim → kdtree-cpu`): a lane that keeps crashing on
+/// tier *t* is respawned on tier *t+1*, trading accelerator performance
+/// for availability instead of dying. Parsed from `--failover` /
+/// `failover=` as a comma-separated [`BackendKind`] list; tiers past
+/// the end of the chain clamp to the last (most conservative) entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FailoverChain(pub Vec<BackendKind>);
+
+impl FailoverChain {
+    /// A single-tier "chain": no degradation, every respawn recreates
+    /// the same backend kind.
+    pub fn single(kind: BackendKind) -> Self {
+        Self(vec![kind])
+    }
+
+    /// The backend kind to use at failover tier `tier` (0 = primary),
+    /// clamped to the last chain entry.
+    pub fn kind_for_tier(&self, tier: usize) -> BackendKind {
+        *self
+            .0
+            .get(tier.min(self.0.len().saturating_sub(1)))
+            .unwrap_or(&BackendKind::Auto)
+    }
+
+    pub fn tiers(&self) -> usize {
+        self.0.len().max(1)
+    }
+}
+
+impl std::str::FromStr for FailoverChain {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let kinds: Vec<BackendKind> = s
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(str::parse)
+            .collect::<Result<_>>()?;
+        if kinds.is_empty() {
+            bail!("empty failover chain (expected e.g. \"xla,native-sim,kdtree\")");
+        }
+        Ok(Self(kinds))
+    }
+}
+
+impl std::fmt::Display for FailoverChain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<&str> = self
+            .0
+            .iter()
+            .map(|k| match k {
+                BackendKind::Auto => "auto",
+                BackendKind::Xla => "xla",
+                BackendKind::NativeSim => "native-sim",
+                BackendKind::KdTreeCpu => "kdtree-cpu",
+            })
+            .collect();
+        write!(f, "{}", names.join(","))
+    }
+}
+
 /// Runtime-selectable backend: one enum over every [`KernelBackend`]
 /// implementation, so `FppsIcp<BackendHandle>` can switch devices per
 /// process — or per *lane* in the multi-lane coordinator — without
@@ -999,7 +1102,10 @@ pub struct FppsResult {
 
 impl FppsResult {
     pub fn has_converged(&self) -> bool {
-        !matches!(self.stop, StopReason::TooFewCorrespondences)
+        matches!(
+            self.stop,
+            StopReason::Converged | StopReason::MaxIterations
+        )
     }
 }
 
@@ -1021,6 +1127,11 @@ pub struct FppsIcp<B: KernelBackend> {
     staged_targets: Vec<StagedTarget>,
     target_uploads: u64,
     target_cache_hits: u64,
+    /// Cooperative deadline: [`Self::align`] checks it between
+    /// iterations and stops with [`StopReason::DeadlineExceeded`] once
+    /// passed (a hang *inside* one backend call is the lane-pool
+    /// watchdog's job; this bounds the many-iterations case).
+    deadline: Option<Instant>,
 }
 
 struct StagedTarget {
@@ -1084,6 +1195,7 @@ impl<B: KernelBackend> FppsIcp<B> {
             staged_targets: Vec::new(),
             target_uploads: 0,
             target_cache_hits: 0,
+            deadline: None,
         }
     }
 
@@ -1140,6 +1252,16 @@ impl<B: KernelBackend> FppsIcp<B> {
     pub fn set_transformation_epsilon(&mut self, eps: f64) -> &mut Self {
         assert!(eps >= 0.0);
         self.transformation_epsilon = eps;
+        self
+    }
+
+    /// Absolute deadline for the *next* [`Self::align`] call (`None`
+    /// disables). Checked between iterations: once passed, the loop
+    /// stops with [`StopReason::DeadlineExceeded`] rather than running
+    /// its remaining iteration budget. The lane pool sets this per job
+    /// from [`crate::coordinator::RegistrationJob`] deadlines.
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) -> &mut Self {
+        self.deadline = deadline;
         self
     }
 
@@ -1235,8 +1357,25 @@ impl<B: KernelBackend> FppsIcp<B> {
         let mut rmse = f64::NAN;
         let mut iterations = 0;
         for _ in 0..self.max_iteration_count {
+            if self.deadline.is_some_and(|d| Instant::now() >= d) {
+                stop = StopReason::DeadlineExceeded;
+                break;
+            }
             iterations += 1;
             let acc = self.backend.step(&cumulative, max_d2)?;
+            // A non-finite accumulator is device/transport corruption,
+            // never a data-quality signal: NaN sums would otherwise leak
+            // through as a bogus TooFewCorrespondences stop (the Kabsch
+            // guards reject NaN covariance), silently misclassifying an
+            // infrastructure fault. Fail the alignment so the caller can
+            // contain or retry it.
+            if !acc.is_finite() {
+                bail!(
+                    "backend {} returned non-finite step accumulators \
+                     (corrupted transform/reduction)",
+                    self.backend.name()
+                );
+            }
             if acc.count < 3.0 {
                 stop = StopReason::TooFewCorrespondences;
                 break;

@@ -66,6 +66,13 @@ pub enum StopReason {
     /// [`StopReason::TooFewCorrespondences`] is never conflated with an
     /// infrastructure error.
     Failed,
+    /// The job's deadline expired before the alignment finished: either
+    /// the cooperative check between ICP iterations fired (partial
+    /// progress discarded, the initial transform is handed back), or the
+    /// lane-pool watchdog cut off a wedged lane mid-step. A deadline is
+    /// an SLO signal, distinct from both data quality and
+    /// [`StopReason::Failed`] infrastructure errors.
+    DeadlineExceeded,
 }
 
 /// Per-iteration diagnostics (consumed by benches and EXPERIMENTS.md).
@@ -96,7 +103,10 @@ pub struct IcpResult {
 impl IcpResult {
     /// Did the alignment produce a usable transform?
     pub fn has_converged(&self) -> bool {
-        !matches!(self.stop, StopReason::TooFewCorrespondences)
+        matches!(
+            self.stop,
+            StopReason::Converged | StopReason::MaxIterations
+        )
     }
 }
 

@@ -25,6 +25,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;
+pub mod fault;
 pub mod fpps_api;
 pub mod hwmodel;
 pub mod icp;

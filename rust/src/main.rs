@@ -21,11 +21,12 @@ use anyhow::{bail, Context, Result};
 use fpps::cli::{backend_selection, Parser};
 use fpps::config::{KvConfig, RunConfig};
 use fpps::coordinator::{
-    run_localization, run_odometry, run_registration_batch, run_tiled_localization,
-    sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+    run_localization_supervised, run_odometry, run_registration_batch_supervised,
+    run_tiled_localization_supervised, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
+    SupervisorConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-use fpps::fpps_api::{FppsIcp, KernelBackend};
+use fpps::fpps_api::{BackendHandle, BackendKind, FailoverChain, FppsIcp, KernelBackend};
 use fpps::hwmodel::{latency, power, resources, AcceleratorConfig};
 use fpps::math::Mat4;
 use fpps::pointcloud::io;
@@ -92,6 +93,48 @@ fn fail_on_contained_errors(report: &fpps::coordinator::LaneReport) -> Result<()
         "{} of {} jobs failed (remaining jobs completed; see above)",
         report.failed_jobs(),
         report.outcomes.len()
+    );
+}
+
+/// Resolve the lane-supervision knobs: CLI flags override config-file
+/// values (`deadline_ms=`, `retries=`, `failover=`), which override the
+/// inert defaults. Without an explicit chain the failover degenerates to
+/// the selected backend alone (restarts retry the same tier).
+fn supervision_selection(
+    a: &fpps::cli::Args,
+    rc: &RunConfig,
+    kind: BackendKind,
+) -> Result<(SupervisorConfig, FailoverChain)> {
+    let deadline_ms: u64 = a.get_or("deadline-ms", rc.deadline_ms)?;
+    let retries: u32 = a.get_or("retries", rc.retries)?;
+    let failover = match a.get_parsed::<FailoverChain>("failover")? {
+        Some(chain) => chain,
+        None => rc
+            .failover
+            .clone()
+            .unwrap_or_else(|| FailoverChain::single(kind)),
+    };
+    let sup = SupervisorConfig {
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        max_retries: retries,
+        ..Default::default()
+    };
+    Ok((sup, failover))
+}
+
+/// One line of supervision context when any knob is engaged, so a run
+/// with deadlines/retries/failover is visibly different from a plain one.
+fn print_supervision(sup: &SupervisorConfig, failover: &FailoverChain) {
+    if sup.deadline.is_none() && sup.max_retries == 0 && failover.tiers() <= 1 {
+        return;
+    }
+    let deadline = match sup.deadline {
+        Some(d) => format!("{} ms", d.as_millis()),
+        None => "off".to_string(),
+    };
+    println!(
+        "supervision: deadline {deadline}, retries {}, failover {failover}",
+        sup.max_retries
     );
 }
 
@@ -235,7 +278,8 @@ fn cmd_batch() -> Result<()> {
     .opt("capacity", "target buffer capacity", Some("8192"))
     .opt("seed", "dataset seed", Some("2026"))
     .lane_opts("1")
-    .backend_opts();
+    .backend_opts()
+    .supervision_opts();
     let a = p.parse_env(2)?;
     let name = a.get("sequence").unwrap().to_string();
     let spec = sequence_specs()
@@ -247,6 +291,7 @@ fn cmd_batch() -> Result<()> {
     let lanes: usize = a.get_or("lanes", 1)?;
     let queue_depth: usize = a.get_or("queue-depth", 4)?;
     let (kind, artifacts) = backend_selection(&a)?;
+    let (sup, failover) = supervision_selection(&a, &RunConfig::default(), kind)?;
 
     let seq = Sequence::synthetic(
         spec,
@@ -269,14 +314,16 @@ fn cmd_batch() -> Result<()> {
         "registering {} frame pairs over {lanes} lane(s), queue depth {queue_depth}",
         jobs.len()
     );
+    print_supervision(&sup, &failover);
 
     let artifacts = artifacts.as_path();
-    let report = run_registration_batch(
+    let report = run_registration_batch_supervised(
         jobs,
         lanes,
         queue_depth,
         LaneIcpConfig::default(),
-        |_lane| fpps::fpps_api::BackendHandle::create(kind, artifacts),
+        sup,
+        |_lane, tier| BackendHandle::create(failover.kind_for_tier(tier), artifacts),
     )?;
 
     report.lane_table("Per-lane summary").print();
@@ -307,7 +354,8 @@ fn cmd_localize() -> Result<()> {
     .opt("lanes", "worker lanes (default: config `lanes`)", None)
     .opt("queue-depth", "bounded job-queue depth", Some("4"))
     .residency_opts()
-    .backend_opts();
+    .backend_opts()
+    .supervision_opts();
     let a = p.parse_env(2)?;
     let name = a.get("sequence").unwrap().to_string();
     let spec = sequence_specs()
@@ -329,6 +377,7 @@ fn cmd_localize() -> Result<()> {
     // (explicit downsample-to-fit).
     let admission = a.get_or("admission", rc.admission)?;
     let (kind, artifacts) = backend_selection(&a)?;
+    let (sup, failover) = supervision_selection(&a, &rc, kind)?;
 
     let seq = Sequence::synthetic(
         spec,
@@ -354,10 +403,13 @@ fn cmd_localize() -> Result<()> {
     };
 
     let artifacts = artifacts.as_path();
+    print_supervision(&sup, &failover);
     // Per-lane backends; `--slots` overrides the hwmodel-derived
-    // residency slot count (0 keeps the default).
-    let make_backend = |_lane: usize| -> anyhow::Result<fpps::fpps_api::BackendHandle> {
-        let mut b = fpps::fpps_api::BackendHandle::create(kind, artifacts)?;
+    // residency slot count (0 keeps the default) and the failover chain
+    // picks the backend kind for the lane's current degradation tier.
+    let failover_ref = &failover;
+    let make_backend = |_lane: usize, tier: usize| -> anyhow::Result<BackendHandle> {
+        let mut b = BackendHandle::create(failover_ref.kind_for_tier(tier), artifacts)?;
         if slots > 0 {
             b.set_residency_slots(slots);
         }
@@ -368,8 +420,8 @@ fn cmd_localize() -> Result<()> {
         // Tile-crossing scenario: submaps interleave A,B,…,A,B,… so a
         // single-slot backend re-uploads every job while the LRU
         // residency set uploads each submap once per serving lane.
-        let res = run_tiled_localization(
-            &seq, scans, tiles, &cfg, lanes, queue_depth, icp_cfg, make_backend,
+        let res = run_tiled_localization_supervised(
+            &seq, scans, tiles, &cfg, lanes, queue_depth, icp_cfg, sup, make_backend,
         )?;
         for (t, adm) in res.admissions.iter().enumerate() {
             print_admission(&format!("tile {t} submap"), adm);
@@ -400,7 +452,9 @@ fn cmd_localize() -> Result<()> {
         return fail_on_contained_errors(&res.report);
     }
 
-    let res = run_localization(&seq, scans, &cfg, lanes, queue_depth, icp_cfg, make_backend)?;
+    let res = run_localization_supervised(
+        &seq, scans, &cfg, lanes, queue_depth, icp_cfg, sup, make_backend,
+    )?;
 
     print_admission("map", &res.admission);
     println!(

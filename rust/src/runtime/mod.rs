@@ -84,6 +84,19 @@ impl StepAccumulators {
         })
     }
 
+    /// True when every accumulator component is finite. A NaN/inf here
+    /// means the device reduction (or its transport) is corrupted — the
+    /// host SVD must treat the step as an infrastructure failure, not as
+    /// a correspondence-count signal.
+    pub fn is_finite(&self) -> bool {
+        self.count.is_finite()
+            && self.sum_sq_dist.is_finite()
+            && [self.sum_p, self.sum_q]
+                .iter()
+                .all(|v| v.x.is_finite() && v.y.is_finite() && v.z.is_finite())
+            && self.sum_pq.m.iter().flatten().all(|v| v.is_finite())
+    }
+
     /// RMS correspondence distance (Table III metric, per iteration).
     pub fn rmse(&self) -> f64 {
         if self.count <= 0.0 {

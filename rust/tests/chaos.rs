@@ -1,0 +1,341 @@
+//! Chaos tests for the supervised lane pool: deterministic fault plans
+//! (transient errors, wedged uploads, NaN-corrupted transforms, lane
+//! panics) injected via [`FaultInjectingBackend`], with the supervision
+//! layer expected to contain every one of them — no deadlock, no lost
+//! or duplicated jobs, unfaulted results bit-identical to a clean
+//! sequential run, and hangs cut off by the deadline watchdog.
+
+use std::time::{Duration, Instant};
+
+use fpps::coordinator::{
+    run_registration_batch, run_registration_batch_supervised, LaneIcpConfig, LaneReport,
+    RegistrationJob, RegistrationOutcome, SupervisorConfig,
+};
+use fpps::fault::{FaultInjectingBackend, FaultKind, FaultPlan};
+use fpps::fpps_api::KdTreeCpuBackend;
+use fpps::icp::StopReason;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::rng::Pcg32;
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+/// Independent seeded frame-pair jobs spread over three logical streams.
+fn synthetic_jobs(n: usize) -> Vec<RegistrationJob> {
+    (0..n)
+        .map(|k| {
+            let target = structured_cloud(600, 100 + k as u64);
+            let gt = Mat4::from_rt(
+                Mat3::rot_z(0.01 * (k as f64 + 1.0)),
+                Vec3::new(0.1 + 0.02 * k as f64, -0.05, 0.01),
+            );
+            let source = target.transformed(&gt.inverse_rigid());
+            RegistrationJob::new(k as u64, k % 3, source, target, Mat4::IDENTITY)
+        })
+        .collect()
+}
+
+/// Clean single-lane reference run — the bit-identity baseline every
+/// recovered job must match (retries restart the whole alignment, so a
+/// successful attempt carries no trace of the faults before it).
+fn clean_baseline(n: usize) -> LaneReport {
+    run_registration_batch(synthetic_jobs(n), 1, 2, LaneIcpConfig::default(), |_| {
+        Ok(KdTreeCpuBackend::new())
+    })
+    .unwrap()
+}
+
+fn assert_bit_identical(a: &RegistrationOutcome, b: &RegistrationOutcome) {
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.transform.m, b.transform.m, "job {} transform", a.id);
+    assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {} rmse", a.id);
+    assert_eq!(a.iterations, b.iterations, "job {} iterations", a.id);
+}
+
+/// Every submitted id must come back exactly once — faults may fail a
+/// job, never lose or duplicate it.
+fn assert_exactly_once(report: &LaneReport, n: usize) {
+    let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "job accounting");
+}
+
+#[test]
+fn transient_errors_are_retried_to_bit_identical_results() {
+    let n = 6;
+    let baseline = clean_baseline(n);
+    // Single lane, so align-attempt ordinals are deterministic: the
+    // faults hit job 0's first attempt and job 2's first attempt.
+    let plan = FaultPlan::scripted([
+        (0, FaultKind::TransientError),
+        (3, FaultKind::TransientError),
+    ]);
+    let sup = SupervisorConfig {
+        max_retries: 2,
+        ..Default::default()
+    };
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        move |_lane, _tier| Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), plan.clone())),
+    )
+    .unwrap();
+
+    assert_exactly_once(&report, n);
+    for (a, b) in report.outcomes.iter().zip(baseline.outcomes.iter()) {
+        assert!(!a.is_failed(), "job {} must recover: {:?}", a.id, a.error);
+        assert_bit_identical(a, b);
+    }
+    assert!(report.outcomes.iter().any(|o| o.attempts >= 2));
+    assert!(report.lanes[0].retries >= 1, "retries must be accounted");
+}
+
+#[test]
+fn panicking_lane_is_respawned_and_failover_escalates() {
+    let n = 5;
+    let baseline = clean_baseline(n);
+    // Tier 0 panics on its first align attempt; one restart advances
+    // the lane to tier 1 where the chain hands out a clean backend.
+    let plan = FaultPlan::scripted([(0, FaultKind::Panic)]);
+    let sup = SupervisorConfig {
+        max_retries: 2,
+        restarts_per_tier: 1,
+        ..Default::default()
+    };
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        move |_lane, tier| {
+            let p = if tier == 0 { plan.clone() } else { FaultPlan::none() };
+            Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), p))
+        },
+    )
+    .unwrap();
+
+    assert_exactly_once(&report, n);
+    for (a, b) in report.outcomes.iter().zip(baseline.outcomes.iter()) {
+        assert!(!a.is_failed(), "job {} must recover: {:?}", a.id, a.error);
+        assert_bit_identical(a, b);
+    }
+    assert!(report.lanes[0].restarts >= 1, "panic must respawn the lane");
+    assert_eq!(report.lanes[0].backend_tier, 1, "failover must escalate");
+    assert!(report.outcomes[0].attempts >= 2);
+}
+
+#[test]
+fn wedged_lane_is_cut_off_by_the_watchdog() {
+    let n = 8;
+    let baseline = clean_baseline(n);
+    // Lane 0 wedges for 60 s on its first align attempt; the watchdog
+    // must claim the job at its ~400 ms deadline and cancel the stall.
+    // Jobs queued behind the wedge may legitimately miss their own
+    // deadlines too, so the assertions are about containment, not about
+    // which specific jobs survive.
+    let stall = FaultPlan::scripted([(0, FaultKind::StallMs(60_000))]);
+    let sup = SupervisorConfig {
+        deadline: Some(Duration::from_millis(400)),
+        ..Default::default()
+    };
+    let start = Instant::now();
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        2,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        move |lane, _tier| {
+            let p = if lane == 0 { stall.clone() } else { FaultPlan::none() };
+            Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), p))
+        },
+    )
+    .unwrap();
+    let elapsed = start.elapsed();
+
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "watchdog must cut the 60 s stall off, ran {elapsed:?}"
+    );
+    assert_exactly_once(&report, n);
+    let missed: Vec<&RegistrationOutcome> = report
+        .outcomes
+        .iter()
+        .filter(|o| o.stop == StopReason::DeadlineExceeded)
+        .collect();
+    assert!(!missed.is_empty(), "the wedged job must miss its deadline");
+    assert!(
+        missed.iter().all(|o| o.is_failed() && o.rmse.is_nan()),
+        "deadline outcomes are contained failures"
+    );
+    assert!(
+        missed
+            .iter()
+            .any(|o| o.error.as_deref().unwrap_or("").contains("watchdog")),
+        "at least the wedged job is claimed by the watchdog"
+    );
+    let deadline_missed: usize = report.lanes.iter().map(|l| l.deadline_missed).sum();
+    assert!(deadline_missed >= missed.len());
+    for o in report.outcomes.iter().filter(|o| !o.is_failed()) {
+        assert_bit_identical(o, &baseline.outcomes[o.id as usize]);
+    }
+}
+
+#[test]
+fn corrupted_transforms_are_contained_or_retried() {
+    let n = 3;
+    let baseline = clean_baseline(n);
+    let corrupt = FaultPlan::scripted([(0, FaultKind::CorruptTransform)]);
+
+    // Without a retry budget the NaN-poisoned attempt is final: the job
+    // fails contained, named as corruption rather than a data-quality
+    // stop, and the rest of the batch is untouched.
+    let plan = corrupt.clone();
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        SupervisorConfig::default(),
+        move |_lane, _tier| Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), plan.clone())),
+    )
+    .unwrap();
+    assert_exactly_once(&report, n);
+    let bad = &report.outcomes[0];
+    assert!(bad.is_failed());
+    assert!(
+        bad.error.as_deref().unwrap_or("").contains("non-finite"),
+        "corruption must surface as a non-finite failure: {:?}",
+        bad.error
+    );
+    assert!(bad.rmse.is_nan());
+    for o in &report.outcomes[1..] {
+        assert!(!o.is_failed());
+        assert_bit_identical(o, &baseline.outcomes[o.id as usize]);
+    }
+
+    // With one retry the corrupted attempt is re-run cleanly and the
+    // result is bit-identical to the never-faulted baseline.
+    let sup = SupervisorConfig {
+        max_retries: 1,
+        ..Default::default()
+    };
+    let plan = corrupt;
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        move |_lane, _tier| Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), plan.clone())),
+    )
+    .unwrap();
+    assert_exactly_once(&report, n);
+    for (a, b) in report.outcomes.iter().zip(baseline.outcomes.iter()) {
+        assert!(!a.is_failed(), "job {} must recover: {:?}", a.id, a.error);
+        assert_bit_identical(a, b);
+    }
+    assert_eq!(report.outcomes[0].attempts, 2);
+}
+
+#[test]
+fn seeded_fault_plans_conserve_jobs_and_preserve_clean_results() {
+    // The acceptance property, over five distinct seeded plans mixing
+    // all four fault kinds: every job accounted for exactly once, every
+    // failure carries an error, and every success is bit-identical to
+    // the clean sequential run — injection only ever prevents or poisons
+    // an attempt, never skews a surviving one.
+    let n = 10;
+    let baseline = clean_baseline(n);
+    for seed in 1..=5u64 {
+        let sup = SupervisorConfig {
+            deadline: Some(Duration::from_secs(5)),
+            max_retries: 6,
+            restarts_per_tier: 1,
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let report = run_registration_batch_supervised(
+            synthetic_jobs(n),
+            2,
+            2,
+            LaneIcpConfig::default(),
+            sup,
+            move |lane, tier| {
+                let p = if tier == 0 {
+                    FaultPlan::seeded(seed, lane, 64, 0.2, 150)
+                } else {
+                    FaultPlan::none()
+                };
+                Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), p))
+            },
+        )
+        .unwrap();
+        assert!(
+            start.elapsed() < Duration::from_secs(60),
+            "seed {seed}: pool must not wedge"
+        );
+        assert_exactly_once(&report, n);
+        for o in &report.outcomes {
+            if o.is_failed() {
+                assert!(o.error.is_some() && o.rmse.is_nan(), "seed {seed} job {}", o.id);
+            } else {
+                assert_bit_identical(o, &baseline.outcomes[o.id as usize]);
+            }
+        }
+        let jobs: usize = report.lanes.iter().map(|l| l.jobs).sum();
+        assert_eq!(jobs, n, "seed {seed}: per-lane counts must conserve work");
+    }
+}
+
+#[test]
+fn failover_chain_reaches_a_working_backend() {
+    let n = 4;
+    let baseline = clean_baseline(n);
+    // Tier 0 is hopeless — it panics on every align attempt — so only
+    // the failover escalation can make progress.
+    let sup = SupervisorConfig {
+        max_retries: 3,
+        restarts_per_tier: 1,
+        ..Default::default()
+    };
+    let report = run_registration_batch_supervised(
+        synthetic_jobs(n),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        move |_lane, tier| {
+            let p = if tier == 0 {
+                FaultPlan::scripted((0..64).map(|o| (o, FaultKind::Panic)))
+            } else {
+                FaultPlan::none()
+            };
+            Ok(FaultInjectingBackend::new(KdTreeCpuBackend::new(), p))
+        },
+    )
+    .unwrap();
+
+    assert_exactly_once(&report, n);
+    for (a, b) in report.outcomes.iter().zip(baseline.outcomes.iter()) {
+        assert!(!a.is_failed(), "job {} must recover: {:?}", a.id, a.error);
+        assert_bit_identical(a, b);
+    }
+    assert!(report.lanes[0].restarts >= 1);
+    assert!(report.lanes[0].backend_tier >= 1, "tier must advance off the panicking backend");
+}

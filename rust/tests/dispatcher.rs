@@ -282,6 +282,7 @@ fn failed_upload_unwarms_the_router_mirror() {
         uploaded: false,
         hit: false,
         ok: false,
+        generation: 0,
     });
     assert!(r.warm_lanes(0xA).is_empty(), "mirror corrected");
     assert!(r.has_free_slot(0), "the slot is free again");
@@ -295,6 +296,7 @@ fn failed_upload_unwarms_the_router_mirror() {
         uploaded: true,
         hit: false,
         ok: false,
+        generation: 0,
     });
     assert_eq!(r.warm_lanes(0xC), vec![1], "device holds it regardless");
     // So is a key whose job *hit* the cache and then failed — the
@@ -306,6 +308,7 @@ fn failed_upload_unwarms_the_router_mirror() {
         uploaded: false,
         hit: true,
         ok: false,
+        generation: 0,
     });
     assert_eq!(r.warm_lanes(0xC), vec![1], "hit-then-fail stays warm");
     // And the next same-key job is a warm hit on that lane, not a

@@ -300,6 +300,7 @@ fn router_mirror_is_always_a_subset_of_backend_residency() {
                 uploaded,
                 hit,
                 ok: !poisoned && !late_failure,
+                generation: 0,
             });
             for (l, backend) in backends.iter().enumerate() {
                 let resident: Vec<u64> =
