@@ -1,0 +1,198 @@
+//! Bench: zero-copy data plane — allocations per job and steady-state
+//! throughput. A counting global allocator measures two regions:
+//!
+//! * **engine hot path** — a warm [`FppsIcp`] serving repeated jobs
+//!   from pooled staging and recycled scratch. The tentpole invariant
+//!   is asserted, not just reported: **0 heap allocations per job**.
+//! * **end-to-end lane pool** — the same jobs through
+//!   [`run_registration_batch`]: SPSC rings + `Arc` payloads keep the
+//!   data plane allocation-free, so what remains is the mpsc *control
+//!   plane* (outcome/feedback events, a few small nodes per job),
+//!   reported as allocations/job next to throughput.
+//!
+//! Lane-count bit-identity is asserted along the way (the rings and
+//! the pool are plumbing, never numerics).
+//!
+//!   cargo bench --bench data_plane
+//!   FPPS_BENCH_SCANS=64 cargo bench --bench data_plane   # longer run
+//!   FPPS_BENCH_JSON=BENCH_data_plane.json cargo bench --bench data_plane
+
+use fpps::alloc_counter::{snapshot, CountingAlloc};
+use fpps::coordinator::{run_registration_batch, LaneIcpConfig, RegistrationJob};
+use fpps::fpps_api::{FppsIcp, KdTreeCpuBackend, KernelBackend};
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn map_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-20.0, 20.0), rng.range(-20.0, 20.0), 0.0]),
+            1 => c.push([rng.range(-20.0, 20.0), 20.0, rng.range(0.0, 6.0)]),
+            _ => c.push([-20.0, rng.range(-20.0, 20.0), rng.range(0.0, 6.0)]),
+        }
+    }
+    c
+}
+
+/// Warm engine serving `jobs` identical-target scans: returns
+/// (allocations over the measured span, wall ms).
+fn engine_span<B: KernelBackend>(
+    icp: &mut FppsIcp<B>,
+    source: &Arc<PointCloud>,
+    target: &Arc<PointCloud>,
+    jobs: usize,
+) -> (u64, f64) {
+    let run = |icp: &mut FppsIcp<B>| {
+        icp.set_input_source(Arc::clone(source));
+        icp.set_input_target(Arc::clone(target));
+        let mut res = icp.align().expect("align");
+        icp.recycle_stats(std::mem::take(&mut res.stats));
+    };
+    for _ in 0..3 {
+        run(icp); // warm the pool, scratch, mirrors, stat buffer
+    }
+    let before = snapshot();
+    let t0 = Instant::now();
+    for _ in 0..jobs {
+        run(icp);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    (before.delta(&snapshot()).allocations, wall_ms)
+}
+
+fn build_jobs(map: &Arc<PointCloud>, scans: usize) -> Vec<RegistrationJob> {
+    (0..scans as u64)
+        .map(|k| {
+            let mut rng = Pcg32::new(4000 + k);
+            let gt = Mat4::from_rt(
+                Mat3::rot_z(0.01 * (k as f64 + 1.0)),
+                Vec3::new(0.08 + 0.01 * k as f64, -0.04, 0.0),
+            );
+            let mut s = map.transformed(&gt.inverse_rigid());
+            s.add_noise(0.01, &mut rng);
+            RegistrationJob::new(
+                k,
+                0,
+                s.random_sample(512, &mut rng),
+                Arc::clone(map),
+                Mat4::IDENTITY,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let scans: usize = std::env::var("FPPS_BENCH_SCANS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+        .max(2);
+    let map = Arc::new(map_cloud(4096, 2040));
+    println!(
+        "data plane: engine hot path + lane pool over a {}-point map, \
+         {scans} pool scans\n",
+        map.len()
+    );
+
+    // Engine hot path: the zero-allocation claim, per backend.
+    let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, -0.05, 0.0));
+    let source = Arc::new(map.transformed(&gt.inverse_rigid()).random_sample(
+        512,
+        &mut Pcg32::new(2041),
+    ));
+    let engine_jobs = 100;
+    let mut sim = FppsIcp::native_sim();
+    let (sim_allocs, sim_ms) = engine_span(&mut sim, &source, &map, engine_jobs);
+    let mut kd = FppsIcp::kdtree_cpu();
+    let (kd_allocs, kd_ms) = engine_span(&mut kd, &source, &map, engine_jobs);
+    assert_eq!(
+        (sim_allocs, kd_allocs),
+        (0, 0),
+        "steady-state engine path must be allocation-free"
+    );
+
+    // End-to-end pool: one lane vs two, same jobs, bit-identical.
+    let lanes = 2;
+    let jobs_single = build_jobs(&map, scans);
+    let jobs_pool = build_jobs(&map, scans);
+    let before = snapshot();
+    let t0 = Instant::now();
+    let single = run_registration_batch(jobs_single, 1, 8, LaneIcpConfig::default(), |_| {
+        Ok(KdTreeCpuBackend::new())
+    })
+    .expect("single lane");
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let single_allocs = before.delta(&snapshot()).allocations;
+    let before = snapshot();
+    let t0 = Instant::now();
+    let pool = run_registration_batch(jobs_pool, lanes, 8, LaneIcpConfig::default(), |_| {
+        Ok(KdTreeCpuBackend::new())
+    })
+    .expect("lane pool");
+    let pool_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let pool_allocs = before.delta(&snapshot()).allocations;
+
+    // Rings and routing are plumbing, never numerics.
+    for (a, b) in single.outcomes.iter().zip(pool.outcomes.iter()) {
+        assert_eq!(a.transform.m, b.transform.m, "job {}", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {}", a.id);
+    }
+    let failed = single.failed_jobs() + pool.failed_jobs();
+    assert_eq!(failed, 0, "no contained failures in a clean bench run");
+
+    let per = |allocs: u64, jobs: usize| allocs as f64 / jobs as f64;
+    let rate = |jobs: usize, ms: f64| jobs as f64 / (ms / 1e3).max(1e-9);
+    let mut t = Table::new("allocations/job and throughput (steady state)")
+        .header(&["region", "allocs/job", "jobs/s"]);
+    for (region, a, j, ms) in [
+        ("engine hot path (native-sim)", sim_allocs, engine_jobs, sim_ms),
+        ("engine hot path (kdtree-cpu)", kd_allocs, engine_jobs, kd_ms),
+        ("pool end-to-end (1 lane)", single_allocs, scans, single_ms),
+        ("pool end-to-end (2 lanes)", pool_allocs, scans, pool_ms),
+    ] {
+        t.row(vec![
+            region.to_string(),
+            format!("{:.1}", per(a, j)),
+            format!("{:.1}", rate(j, ms)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nengine data plane: 0 allocations/job ({engine_jobs} jobs/backend); \
+         pool control plane: {:.1} allocations/job end-to-end",
+        per(pool_allocs, scans)
+    );
+
+    // Machine-readable results for CI trend tracking (hand-rolled JSON;
+    // the crate deliberately has no serde dependency).
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"data_plane\",\n  \"engine_jobs\": {engine_jobs},\n  \
+             \"pool_scans\": {scans},\n  \"pool_lanes\": {lanes},\n  \
+             \"engine_native_sim\": {{\"allocs_per_job\": {:.3}, \"jobs_per_s\": {:.1}}},\n  \
+             \"engine_kdtree\": {{\"allocs_per_job\": {:.3}, \"jobs_per_s\": {:.1}}},\n  \
+             \"pool_single\": {{\"allocs_per_job\": {:.3}, \"jobs_per_s\": {:.1}}},\n  \
+             \"pool\": {{\"allocs_per_job\": {:.3}, \"jobs_per_s\": {:.1}}}\n}}\n",
+            per(sim_allocs, engine_jobs),
+            rate(engine_jobs, sim_ms),
+            per(kd_allocs, engine_jobs),
+            rate(engine_jobs, kd_ms),
+            per(single_allocs, scans),
+            rate(scans, single_ms),
+            per(pool_allocs, scans),
+            rate(scans, pool_ms),
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
+    }
+    println!("data_plane bench complete");
+}

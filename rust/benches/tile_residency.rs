@@ -83,7 +83,7 @@ fn main() {
     }
     let single_ms = t0.elapsed().as_secs_f64() * 1e3;
     let single_builds = single.backend().tree_builds();
-    let (single_uploads, _) = single.target_cache_stats();
+    let (single_uploads, _, _) = single.target_cache_stats();
 
     // LRU residency (hwmodel default, ≥ 2 slots): both maps stay
     // resident, so the ping-pong costs two uploads total.
@@ -98,7 +98,7 @@ fn main() {
     }
     let multi_ms = t0.elapsed().as_secs_f64() * 1e3;
     let multi_builds = multi.backend().tree_builds();
-    let (multi_uploads, multi_hits) = multi.target_cache_stats();
+    let (multi_uploads, multi_hits, _) = multi.target_cache_stats();
 
     // Residency is a cache, not a numerics change: bit-identical.
     for (s, m) in single_results.iter().zip(multi_results.iter()) {

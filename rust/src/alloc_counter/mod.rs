@@ -1,0 +1,88 @@
+//! Counting global allocator for allocation-regression tests and the
+//! data-plane bench.
+//!
+//! [`CountingAlloc`] wraps [`std::alloc::System`] and counts every
+//! `alloc`/`realloc` (frees are not counted — the zero-copy invariant
+//! is about *new* heap traffic). It does nothing unless a test or bench
+//! crate installs it as its global allocator:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: fpps::alloc_counter::CountingAlloc = fpps::alloc_counter::CountingAlloc::new();
+//! ```
+//!
+//! The library itself never installs it, so the production binary pays
+//! nothing. `tests/alloc_regression.rs` and `benches/data_plane.rs` use
+//! it to assert the steady-state hot path performs **zero** heap
+//! allocations per job (see the README "Data plane" section).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Allocations observed since process start (only meaningful in a
+/// binary that installed [`CountingAlloc`]).
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+/// Bytes requested across those allocations.
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// `System`-backed allocator that counts allocation events.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// Safety: defers entirely to `System`; the counters are lock-free
+// atomics, safe inside the allocator.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Counter snapshot, taken via [`snapshot`] and differenced with
+/// [`AllocSnapshot::delta`] around the region under measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocations: u64,
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Allocation events and bytes since `self` (the earlier snapshot).
+    pub fn delta(&self, later: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocations: later.allocations - self.allocations,
+            bytes: later.bytes - self.bytes,
+        }
+    }
+}
+
+/// Snapshot the global counters (zeros unless [`CountingAlloc`] is
+/// installed in this binary).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocations: ALLOCATIONS.load(Ordering::Relaxed),
+        bytes: ALLOCATED_BYTES.load(Ordering::Relaxed),
+    }
+}

@@ -179,6 +179,8 @@ impl Parser {
     }
 
     /// Attach the lane-count options for multi-lane subcommands.
+    /// `--pool-capacity` has no parser default so a config file's
+    /// `pool_capacity=` can supply it.
     pub fn lane_opts(self, default_lanes: &'static str) -> Self {
         self.opt(
             "lanes",
@@ -186,6 +188,11 @@ impl Parser {
             Some(default_lanes),
         )
         .opt("queue-depth", "bounded job-queue depth", Some("4"))
+        .opt(
+            "pool-capacity",
+            "staging buffers retained per capacity class per lane",
+            None,
+        )
     }
 
     /// Attach the target-residency options shared by the localization

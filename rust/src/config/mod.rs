@@ -123,6 +123,11 @@ pub struct RunConfig {
     /// Resident-target slots per backend; 0 = derive from the `hwmodel`
     /// HBM residency budget (the default).
     pub residency_slots: usize,
+    /// Recycled staging buffers retained per capacity class in each
+    /// lane engine's [`crate::pool::BufferPool`] (the zero-copy data
+    /// plane). Also reachable as `--pool-capacity` on the lane
+    /// subcommands.
+    pub pool_capacity: usize,
     /// How maps whose padded footprint exceeds one residency slot are
     /// admitted: `reject` (structured error) or `downsample` (explicit
     /// downsample-to-fit, the default). See
@@ -157,6 +162,7 @@ impl Default for RunConfig {
             scans: 16,
             tiles: 1,
             residency_slots: 0,
+            pool_capacity: crate::pool::DEFAULT_RETAIN,
             admission: crate::coordinator::AdmissionPolicy::DownsampleToFit,
             deadline_ms: 0,
             retries: 0,
@@ -186,6 +192,7 @@ impl RunConfig {
             scans: kv.get_or("scans", d.scans)?,
             tiles: kv.get_or("tiles", d.tiles)?,
             residency_slots: kv.get_or("residency_slots", d.residency_slots)?,
+            pool_capacity: kv.get_or("pool_capacity", d.pool_capacity)?,
             admission: kv.get_or("admission", d.admission)?,
             deadline_ms: kv.get_or("deadline_ms", d.deadline_ms)?,
             retries: kv.get_or("retries", d.retries)?,
@@ -258,7 +265,7 @@ mod tests {
         use crate::coordinator::AdmissionPolicy;
         let kv = KvConfig::parse(
             "max_iterations=10\nsource_sample=1024\nlanes=4\nscans=8\ntiles=3\n\
-             residency_slots=2\nadmission=reject\n",
+             residency_slots=2\npool_capacity=4\nadmission=reject\n",
         )
         .unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
@@ -268,6 +275,7 @@ mod tests {
         assert_eq!(rc.scans, 8);
         assert_eq!(rc.tiles, 3);
         assert_eq!(rc.residency_slots, 2);
+        assert_eq!(rc.pool_capacity, 4);
         assert_eq!(rc.admission, AdmissionPolicy::Reject);
         // Both spellings parse; garbage errors loudly.
         let kv = KvConfig::parse("admission=downsample-to-fit\n").unwrap();
@@ -285,6 +293,11 @@ mod tests {
         assert_eq!(defaults.lanes, 1);
         assert_eq!(defaults.tiles, 1, "single shared map by default");
         assert_eq!(defaults.residency_slots, 0, "0 = hwmodel-derived");
+        assert_eq!(
+            defaults.pool_capacity,
+            crate::pool::DEFAULT_RETAIN,
+            "staging pool keeps the library default retention"
+        );
         assert_eq!(
             defaults.admission,
             AdmissionPolicy::DownsampleToFit,

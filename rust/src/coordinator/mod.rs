@@ -63,6 +63,16 @@
 //! restarts, see [`crate::fpps_api::FailoverChain`]), and the
 //! restart/un-warm rules above keep the router's mirror truthful
 //! through all of it.
+//!
+//! The lane **data plane is zero-copy** (see the README "Data plane"
+//! section): per-lane queues are lock-free single-producer rings
+//! ([`crate::pool::ring::SpscRing`]) carrying small job descriptors,
+//! clouds travel by `Arc` (submission and retries re-stage the same
+//! shared points), and each lane engine stages into recycled arena
+//! buffers ([`crate::pool::BufferPool`], retention set by
+//! [`LaneIcpConfig::pool_capacity`]) — so a warm lane serves a job
+//! without heap allocation on the alignment hot path (enforced by
+//! `tests/alloc_regression.rs`, measured by the `data_plane` bench).
 
 use crate::dataset::Sequence;
 use crate::fpps_api::{CancelToken, FppsIcp, KernelBackend};
@@ -76,7 +86,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Preprocessed frame ready for alignment.
@@ -559,7 +569,9 @@ pub struct RegistrationJob {
     /// it from the target's content fingerprint; [`Self::new_keyed`]
     /// takes it from the caller (e.g. one shared map, hashed once).
     pub target_key: u64,
-    pub source: PointCloud,
+    /// Shared (like `target`) so the retry path re-stages the same
+    /// points by `Arc` clone — a retry never deep-copies the cloud.
+    pub source: Arc<PointCloud>,
     /// Shared so map-reuse workloads submit M jobs against one cloud
     /// without M copies.
     pub target: Arc<PointCloud>,
@@ -582,7 +594,7 @@ impl RegistrationJob {
     pub fn new(
         id: u64,
         stream: usize,
-        source: PointCloud,
+        source: impl Into<Arc<PointCloud>>,
         target: impl Into<Arc<PointCloud>>,
         initial: Mat4,
     ) -> Self {
@@ -591,7 +603,7 @@ impl RegistrationJob {
             id,
             stream,
             target_key: target.fingerprint(),
-            source,
+            source: source.into(),
             target,
             initial,
             deadline: None,
@@ -606,7 +618,7 @@ impl RegistrationJob {
     pub fn new_keyed(
         id: u64,
         stream: usize,
-        source: PointCloud,
+        source: impl Into<Arc<PointCloud>>,
         target: impl Into<Arc<PointCloud>>,
         target_key: u64,
         initial: Mat4,
@@ -615,7 +627,7 @@ impl RegistrationJob {
             id,
             stream,
             target_key,
-            source,
+            source: source.into(),
             target: target.into(),
             initial,
             deadline: None,
@@ -684,6 +696,10 @@ pub struct LaneIcpConfig {
     pub max_correspondence_distance: f32,
     pub max_iteration_count: u32,
     pub transformation_epsilon: f64,
+    /// Per-class retention of each lane engine's staging-buffer arena
+    /// (see [`crate::pool::BufferPool`]); the CLI exposes it as
+    /// `--pool-capacity`, run configs as `pool_capacity=`.
+    pub pool_capacity: usize,
 }
 
 impl Default for LaneIcpConfig {
@@ -692,6 +708,7 @@ impl Default for LaneIcpConfig {
             max_correspondence_distance: 1.0,
             max_iteration_count: 50,
             transformation_epsilon: 1e-5,
+            pool_capacity: crate::pool::DEFAULT_RETAIN,
         }
     }
 }
@@ -1195,64 +1212,19 @@ impl SupervisorConfig {
     }
 }
 
-/// Bounded per-lane job queue. Unlike a `sync_channel`, a third party
-/// (the deadline watchdog) can *drain* it when the lane wedges, so
-/// queued jobs are re-routed instead of starving behind a stalled
-/// alignment.
-struct LaneQueue {
-    inner: Mutex<(VecDeque<RegistrationJob>, bool)>, // (jobs, closed)
-    cv: Condvar,
-    cap: usize,
-}
-
-impl LaneQueue {
-    fn new(cap: usize) -> Self {
-        Self {
-            inner: Mutex::new((VecDeque::new(), false)),
-            cv: Condvar::new(),
-            cap: cap.max(1),
-        }
-    }
-
-    /// Non-blocking push; hands the job back when full or closed.
-    fn try_push(&self, job: RegistrationJob) -> std::result::Result<(), RegistrationJob> {
-        let mut g = self.inner.lock().unwrap();
-        if g.1 || g.0.len() >= self.cap {
-            return Err(job);
-        }
-        g.0.push_back(job);
-        self.cv.notify_all();
-        Ok(())
-    }
-
-    /// Blocking pop; `None` once the queue is closed *and* empty.
-    fn pop(&self) -> Option<RegistrationJob> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(job) = g.0.pop_front() {
-                self.cv.notify_all();
-                return Some(job);
-            }
-            if g.1 {
-                return None;
-            }
-            g = self.cv.wait(g).unwrap();
-        }
-    }
-
-    /// Take every queued job (watchdog re-route of a wedged lane).
-    fn drain(&self) -> Vec<RegistrationJob> {
-        let mut g = self.inner.lock().unwrap();
-        let jobs = g.0.drain(..).collect();
-        self.cv.notify_all();
-        jobs
-    }
-
-    fn close(&self) {
-        self.inner.lock().unwrap().1 = true;
-        self.cv.notify_all();
-    }
-}
+/// Bounded per-lane job queue: a lock-free single-producer ring
+/// ([`crate::pool::ring::SpscRing`]) carrying small job descriptors —
+/// clouds travel by `Arc`, so enqueueing moves ~100 bytes and never
+/// copies points. The dispatcher is the only pusher; the lane worker
+/// and the deadline watchdog race pops on the CAS consumer side, so a
+/// third party can still *drain* a wedged lane's queue exactly-once
+/// without a lock (the mutex queue this replaces serialized every
+/// push/pop across the pool). One semantic difference is handled at
+/// the call sites: `close()` + `drain()` is no longer atomic against a
+/// concurrent push, so the dispatcher — the sole producer — re-drains
+/// a lane's ring when it learns the lane died (see
+/// [`dispatch_supervised`]).
+type LaneQueue = crate::pool::ring::SpscRing<RegistrationJob>;
 
 /// The lane's currently-served job, published for the deadline
 /// watchdog. The `claimed` flag is the exactly-once arbiter between the
@@ -1374,6 +1346,7 @@ fn dispatch_supervised(
 
     fn handle_event(
         router: &mut AffinityRouter,
+        queues: &[Arc<LaneQueue>],
         deferred: &mut VecDeque<RegistrationJob>,
         dead: &mut [bool],
         ev: LaneEvent,
@@ -1390,13 +1363,23 @@ fn dispatch_supervised(
             LaneEvent::Dead { lane } => {
                 dead[lane] = true;
                 router.set_down(lane, true);
+                // The ring's close+drain is not atomic against a push
+                // already in flight from this thread. As the sole
+                // producer we re-drain authoritatively here, so a job
+                // that landed after the dead lane's own drain is
+                // re-routed instead of rotting in a closed queue.
+                let jobs = queues[lane].drain();
+                if !jobs.is_empty() {
+                    router.requeued(lane, jobs.len());
+                    deferred.extend(jobs);
+                }
             }
         }
     }
 
     loop {
         while let Ok(ev) = ev_rx.try_recv() {
-            handle_event(&mut router, &mut deferred, &mut dead, ev);
+            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
         }
         if dead.iter().all(|&d| d) {
             // No lane will ever serve again; stop routing so the pool
@@ -1424,7 +1407,7 @@ fn dispatch_supervised(
         } else if !intake_open && deferred.is_empty() && router.total_pending() == 0 {
             break; // every job routed and fed back: drain complete
         } else if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(2)) {
-            handle_event(&mut router, &mut deferred, &mut dead, ev);
+            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
         }
     }
     for q in &queues {
@@ -1626,6 +1609,7 @@ where
                     })?;
                     backend.set_cancel_token(hb.cancel.clone());
                     let mut icp = FppsIcp::with_backend(backend);
+                    icp.set_buffer_pool(crate::pool::BufferPool::new(icp_cfg.pool_capacity));
                     icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
                         .set_max_iteration_count(icp_cfg.max_iteration_count)
                         .set_transformation_epsilon(icp_cfg.transformation_epsilon);
@@ -1664,7 +1648,7 @@ where
                 let retire = |icp: &mut Option<FppsIcp<B>>, retired: &mut (f64, u64, u64, u64)| {
                     if let Some(old) = icp.take() {
                         retired.0 += old.backend().device_time().as_secs_f64() * 1e3;
-                        let (u, h) = old.target_cache_stats();
+                        let (u, h, _) = old.target_cache_stats();
                         retired.1 += u;
                         retired.2 += h;
                         retired.3 += old.backend().target_evictions();
@@ -1680,7 +1664,6 @@ where
                     let deadline_at =
                         job.deadline.or(sup.deadline).map(|d| job.submitted + d);
                     let max_retries = job.max_retries.unwrap_or(sup.max_retries);
-                    let mut source = Some(job.source);
                     let t_serve = Instant::now();
                     let mut attempt: u32 = 0;
                     // `None` = the watchdog claimed the job (outcome and
@@ -1788,15 +1771,11 @@ where
                             break;
                         }
                         let engine = icp.as_mut().expect("respawned above");
-                        let (uploads_before, hits_before) = engine.target_cache_stats();
-                        // Retries re-stage the inputs, so keep the
-                        // source around only when a retry is possible.
-                        let src = if max_retries == 0 {
-                            source.take().expect("single attempt")
-                        } else {
-                            source.as_ref().expect("retryable").clone()
-                        };
-                        engine.set_input_source(src);
+                        let (uploads_before, hits_before, _) = engine.target_cache_stats();
+                        // Retries re-stage the same shared cloud: every
+                        // attempt costs one `Arc` refcount, never a
+                        // deep copy of the points.
+                        engine.set_input_source(Arc::clone(&job.source));
                         engine.set_input_target(Arc::clone(&job.target));
                         engine.set_transformation_matrix(initial);
                         engine.set_deadline(deadline_at);
@@ -1805,7 +1784,7 @@ where
                         // unwind, respawn, retry.
                         let served = match catch_unwind(AssertUnwindSafe(|| engine.align())) {
                             Ok(Ok(res)) => {
-                                let (u1, h1) = engine.target_cache_stats();
+                                let (u1, h1, _) = engine.target_cache_stats();
                                 Attempt::Done(res, u1 > uploads_before, h1 > hits_before)
                             }
                             Ok(Err(e)) => Attempt::Failed(format!("{e:#}")),
@@ -1835,7 +1814,13 @@ where
                             break;
                         }
                         match served {
-                            Attempt::Done(res, uploaded, hit) => {
+                            Attempt::Done(mut res, uploaded, hit) => {
+                                // Hand the iteration-stat buffer back to
+                                // the engine so the next align reuses its
+                                // capacity (part of the zero-alloc path).
+                                if let Some(engine) = icp.as_mut() {
+                                    engine.recycle_stats(std::mem::take(&mut res.stats));
+                                }
                                 let deadline_hit = res.stop == StopReason::DeadlineExceeded;
                                 if deadline_hit {
                                     stats.deadline_missed += 1;
@@ -1936,7 +1921,7 @@ where
                     stats.resident_targets = engine.backend().resident_epochs().len();
                     stats.device_ms =
                         retired.0 + engine.backend().device_time().as_secs_f64() * 1e3;
-                    let (u, h) = engine.target_cache_stats();
+                    let (u, h, _) = engine.target_cache_stats();
                     stats.target_uploads = (retired.1 + u) as usize;
                     stats.target_hits = (retired.2 + h) as usize;
                     stats.target_evictions =

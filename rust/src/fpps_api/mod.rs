@@ -56,7 +56,8 @@ use crate::icp::StopReason;
 use crate::kdtree::OwnedKdTree;
 use crate::math::{kabsch_from_sums, Mat4, Vec3};
 use crate::nn::{self, KernelConfig};
-use crate::pointcloud::PointCloud;
+use crate::pointcloud::{pad_into, PointCloud};
+use crate::pool::{BufferPool, PooledBuf};
 use crate::runtime::{Engine, StepAccumulators};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -465,6 +466,12 @@ pub struct NativeSimBackend {
     targets: ResidentSlots<SimTarget>,
     /// Per-alignment source (the mirror of the query-cloud buffers).
     source: Option<SimSource>,
+    /// Transformed-source scratch (stage 1 output), recycled per step.
+    scratch_p: Vec<f32>,
+    /// Hoisted-norm scratch for the NN mirror, recycled per step.
+    nn_scratch: nn::MirrorScratch,
+    /// NN result buffers, recycled per step.
+    nn_out: nn::NnResult,
 }
 
 struct SimTarget {
@@ -484,6 +491,9 @@ impl NativeSimBackend {
             device_time: Duration::ZERO,
             targets: ResidentSlots::new(crate::hwmodel::default_residency_slots()),
             source: None,
+            scratch_p: Vec::new(),
+            nn_scratch: nn::MirrorScratch::default(),
+            nn_out: nn::NnResult::default(),
         }
     }
 
@@ -572,10 +582,16 @@ impl KernelBackend for NativeSimBackend {
         if src_mask.len() != n {
             bail!("source mask has {} entries for {n} points", src_mask.len());
         }
-        self.source = Some(SimSource {
-            src: src.to_vec(),
-            src_mask: src_mask.to_vec(),
+        // Refill the existing mirror buffers in place: once warm, the
+        // per-alignment source DMA costs no heap traffic.
+        let s = self.source.get_or_insert_with(|| SimSource {
+            src: Vec::new(),
+            src_mask: Vec::new(),
         });
+        s.src.clear();
+        s.src.extend_from_slice(src);
+        s.src_mask.clear();
+        s.src_mask.extend_from_slice(src_mask);
         Ok(())
     }
 
@@ -596,17 +612,29 @@ impl KernelBackend for NativeSimBackend {
         );
         let t0 = Instant::now();
         let n = src.len() / 3;
-        // Stage 1: point cloud transformer (f32, like the device).
+        // Stage 1: point cloud transformer (f32, like the device),
+        // writing into the recycled scratch buffer.
         let tm = transform.to_f32_row_major();
-        let mut p = vec![0f32; src.len()];
+        self.scratch_p.clear();
+        self.scratch_p.resize(src.len(), 0.0);
+        let p = &mut self.scratch_p;
         for i in 0..n {
             let (x, y, z) = (src[3 * i], src[3 * i + 1], src[3 * i + 2]);
             p[3 * i] = tm[0] * x + tm[1] * y + tm[2] * z + tm[3];
             p[3 * i + 1] = tm[4] * x + tm[5] * y + tm[6] * z + tm[7];
             p[3 * i + 2] = tm[8] * x + tm[9] * y + tm[10] * z + tm[11];
         }
-        // Stage 2+3: NN search (blockwise mirror).
-        let res = nn::kernel_mirror(&p, tgt, tgt_mask, self.cfg);
+        let p = &self.scratch_p;
+        // Stage 2+3: NN search (blockwise mirror, recycled buffers).
+        nn::kernel_mirror_into(
+            p,
+            tgt,
+            tgt_mask,
+            self.cfg,
+            &mut self.nn_scratch,
+            &mut self.nn_out,
+        );
+        let res = &self.nn_out;
         // Stage 4: result accumulation (f32 partials like the jnp sums).
         let mut count = 0f32;
         let mut sum_p = [0f32; 3];
@@ -631,12 +659,14 @@ impl KernelBackend for NativeSimBackend {
             }
             sum_d += w * res.dist_sq[i];
         }
-        let mut wire = Vec::with_capacity(17);
-        wire.push(count);
-        wire.extend_from_slice(&sum_p);
-        wire.extend_from_slice(&sum_q);
-        wire.extend_from_slice(&sum_pq);
-        wire.push(sum_d);
+        // Fixed-size wire record (the 17-float DMA readback), on the
+        // stack like the device's result FIFO.
+        let mut wire = [0f32; 17];
+        wire[0] = count;
+        wire[1..4].copy_from_slice(&sum_p);
+        wire[4..7].copy_from_slice(&sum_q);
+        wire[7..16].copy_from_slice(&sum_pq);
+        wire[16] = sum_d;
         self.device_time += t0.elapsed();
         StepAccumulators::from_wire(&wire)
     }
@@ -781,10 +811,16 @@ impl KernelBackend for KdTreeCpuBackend {
         if src_mask.len() != n {
             bail!("source mask has {} entries for {n} points", src_mask.len());
         }
-        self.source = Some(KdSource {
-            src: src.to_vec(),
-            src_mask: src_mask.to_vec(),
+        // Refill the existing buffers in place (no per-alignment heap
+        // traffic once the capacity is warm).
+        let s = self.source.get_or_insert_with(|| KdSource {
+            src: Vec::new(),
+            src_mask: Vec::new(),
         });
+        s.src.clear();
+        s.src.extend_from_slice(src);
+        s.src_mask.clear();
+        s.src_mask.extend_from_slice(src_mask);
         Ok(())
     }
 
@@ -1112,7 +1148,9 @@ impl FppsResult {
 /// The FPPS ICP object (Table I).
 pub struct FppsIcp<B: KernelBackend> {
     backend: B,
-    source: Option<PointCloud>,
+    /// Shared (like the target) so the lane pool can hand one sampled
+    /// cloud to every retry attempt without cloning points.
+    source: Option<Arc<PointCloud>>,
     /// Shared so scan-to-map callers can hand the same map to thousands
     /// of alignments without cloning it (`Arc::ptr_eq` is also the fast
     /// path of the unchanged-target check).
@@ -1127,6 +1165,18 @@ pub struct FppsIcp<B: KernelBackend> {
     staged_targets: Vec<StagedTarget>,
     target_uploads: u64,
     target_cache_hits: u64,
+    /// Staged targets re-padded **in place** because only the selected
+    /// capacity changed (the buffer is recycled, not rebuilt).
+    target_repads: u64,
+    /// Arena the staging buffers are drawn from (and returned to, when
+    /// a staged target is evicted) — see [`crate::pool`].
+    pool: BufferPool,
+    /// Recycled per-alignment source staging `(padded, mask)`: refilled
+    /// in place by [`crate::pointcloud::pad_into`] every `align()`.
+    src_stage: Option<(PooledBuf, PooledBuf)>,
+    /// Recycled iteration-stat buffer: `align()` takes it, the result
+    /// hands it back through [`Self::recycle_stats`].
+    stats_scratch: Vec<FppsIterationStat>,
     /// Cooperative deadline: [`Self::align`] checks it between
     /// iterations and stops with [`StopReason::DeadlineExceeded`] once
     /// passed (a hang *inside* one backend call is the lane-pool
@@ -1141,10 +1191,13 @@ struct StagedTarget {
     cloud: Arc<PointCloud>,
     /// Residency key handed to the backend (content fingerprint).
     key: u64,
-    tgt: Vec<f32>,
-    tgt_mask: Vec<f32>,
-    /// Target capacity the padding was built for (re-padded if capacity
-    /// selection changes, e.g. a different artifact variant).
+    /// Padded wire buffers, pooled: evicting this staging returns them
+    /// to the arena for the next cold target of the same class.
+    tgt: PooledBuf,
+    tgt_mask: PooledBuf,
+    /// Target capacity the padding was built for (re-padded **in
+    /// place** if capacity selection changes, e.g. a different artifact
+    /// variant).
     cap_m: usize,
     /// Epoch this staging was uploaded under; `None` = not yet uploaded.
     epoch: Option<TargetEpoch>,
@@ -1195,6 +1248,10 @@ impl<B: KernelBackend> FppsIcp<B> {
             staged_targets: Vec::new(),
             target_uploads: 0,
             target_cache_hits: 0,
+            target_repads: 0,
+            pool: BufferPool::default(),
+            src_stage: None,
+            stats_scratch: Vec::new(),
             deadline: None,
         }
     }
@@ -1203,11 +1260,38 @@ impl<B: KernelBackend> FppsIcp<B> {
         &self.backend
     }
 
-    /// `(uploads, cache hits)` of the resident-target path: how many
-    /// `align()` calls actually shipped the target to the device vs.
-    /// found it already resident.
-    pub fn target_cache_stats(&self) -> (u64, u64) {
-        (self.target_uploads, self.target_cache_hits)
+    /// `(uploads, cache hits, re-pads)` of the resident-target path:
+    /// how many `align()` calls actually shipped the target to the
+    /// device vs. found it already resident, and how many reused a
+    /// staged buffer in place because only the selected capacity
+    /// changed (a re-pad costs a refill + re-upload, never a rebuild).
+    pub fn target_cache_stats(&self) -> (u64, u64, u64) {
+        (
+            self.target_uploads,
+            self.target_cache_hits,
+            self.target_repads,
+        )
+    }
+
+    /// Replace the staging-buffer arena (e.g. to share one pool across
+    /// engines, or to apply a `--pool-capacity` retention knob). Only
+    /// affects buffers staged after the call.
+    pub fn set_buffer_pool(&mut self, pool: BufferPool) -> &mut Self {
+        self.pool = pool;
+        self
+    }
+
+    /// The staging-buffer arena (stats are read through it).
+    pub fn buffer_pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Hand an iteration-stat buffer (from a consumed [`FppsResult`])
+    /// back for reuse by the next `align()` — the last allocation on
+    /// the per-job hot path once staging is warm.
+    pub fn recycle_stats(&mut self, mut stats: Vec<FppsIterationStat>) {
+        stats.clear();
+        self.stats_scratch = stats;
     }
 
     /// `setTransformationMatrix()`: initial transform applied before the
@@ -1217,9 +1301,11 @@ impl<B: KernelBackend> FppsIcp<B> {
         self
     }
 
-    /// `setInputSource()`.
-    pub fn set_input_source(&mut self, cloud: PointCloud) -> &mut Self {
-        self.source = Some(cloud);
+    /// `setInputSource()`. Accepts an owned cloud or a shared
+    /// `Arc<PointCloud>`; the lane pool passes the same `Arc` to every
+    /// retry attempt so resubmission never copies points.
+    pub fn set_input_source(&mut self, cloud: impl Into<Arc<PointCloud>>) -> &mut Self {
+        self.source = Some(cloud.into());
         self
     }
 
@@ -1274,8 +1360,10 @@ impl<B: KernelBackend> FppsIcp<B> {
     ///   T ← T_j·T.
     pub fn align(&mut self) -> Result<FppsResult> {
         let t_start = Instant::now();
-        let source = self.source.as_ref().context("setInputSource not called")?;
-        let target = self.target.as_ref().context("setInputTarget not called")?;
+        // Cheap `Arc` clones so the borrows don't pin `self` (staging
+        // below mutates other fields); no points are copied.
+        let source = Arc::clone(self.source.as_ref().context("setInputSource not called")?);
+        let target = Arc::clone(self.target.as_ref().context("setInputTarget not called")?);
         if source.is_empty() || target.is_empty() {
             bail!("source/target cloud is empty");
         }
@@ -1294,13 +1382,18 @@ impl<B: KernelBackend> FppsIcp<B> {
         let pos = self
             .staged_targets
             .iter()
-            .position(|s| Arc::ptr_eq(&s.cloud, target) || *s.cloud == **target);
+            .position(|s| Arc::ptr_eq(&s.cloud, &target) || *s.cloud == *target);
         let mut entry = match pos {
             Some(i) => self.staged_targets.remove(i),
             None => {
-                let (tgt, tgt_mask) = pad_to(&target.xyz, cap_m);
+                // Cold target: draw staging buffers from the arena (a
+                // buffer recycled from an evicted staging of the same
+                // class costs no allocation) and pad in place.
+                let mut tgt = self.pool.acquire(cap_m * 3);
+                let mut tgt_mask = self.pool.acquire(cap_m);
+                pad_into(&target.xyz, cap_m, &mut tgt, &mut tgt_mask);
                 StagedTarget {
-                    cloud: Arc::clone(target),
+                    cloud: Arc::clone(&target),
                     key: target.fingerprint(),
                     tgt,
                     tgt_mask,
@@ -1310,11 +1403,13 @@ impl<B: KernelBackend> FppsIcp<B> {
             }
         };
         if entry.cap_m != cap_m {
-            let (tgt, tgt_mask) = pad_to(&target.xyz, cap_m);
-            entry.tgt = tgt;
-            entry.tgt_mask = tgt_mask;
+            // Capacity selection changed (e.g. a different artifact
+            // variant): refill the staged buffers in place instead of
+            // dropping and rebuilding them.
+            pad_into(&target.xyz, cap_m, &mut entry.tgt, &mut entry.tgt_mask);
             entry.cap_m = cap_m;
             entry.epoch = None;
+            self.target_repads += 1;
         }
 
         // Target half of the Fig. 2 DMA: skipped when the device still
@@ -1346,13 +1441,23 @@ impl<B: KernelBackend> FppsIcp<B> {
         }
 
         // Source half: once per alignment; iterations then only ship the
-        // 4×4 transform + threshold.
-        let (src, src_mask) = pad_to(&source.xyz, cap_n);
-        self.backend.upload_source(&src, &src_mask)?;
+        // 4×4 transform + threshold. The staging pair persists across
+        // alignments and is refilled in place — zero heap traffic once
+        // its capacity class is warm.
+        if self.src_stage.is_none() {
+            self.src_stage = Some((self.pool.acquire(cap_n * 3), self.pool.acquire(cap_n)));
+        }
+        {
+            let (src, src_mask) = self.src_stage.as_mut().expect("staged above");
+            pad_into(&source.xyz, cap_n, src, src_mask);
+            self.backend.upload_source(src, src_mask)?;
+        }
 
         let max_d2 = self.max_correspondence_distance * self.max_correspondence_distance;
         let mut cumulative = self.initial_transform;
-        let mut stats = Vec::new();
+        // Recycled via `recycle_stats` by hot-loop callers; empty (but
+        // capacity-bearing) after `take`.
+        let mut stats = std::mem::take(&mut self.stats_scratch);
         let mut stop = StopReason::MaxIterations;
         let mut rmse = f64::NAN;
         let mut iterations = 0;
@@ -1410,17 +1515,6 @@ impl<B: KernelBackend> FppsIcp<B> {
             device_time: self.backend.device_time(),
         })
     }
-}
-
-fn pad_to(xyz: &[f32], capacity: usize) -> (Vec<f32>, Vec<f32>) {
-    let n = xyz.len() / 3;
-    assert!(n <= capacity, "cloud ({n}) exceeds capacity ({capacity})");
-    let mut out = Vec::with_capacity(capacity * 3);
-    out.extend_from_slice(xyz);
-    out.resize(capacity * 3, 0.0);
-    let mut mask = vec![1.0f32; n];
-    mask.resize(capacity, 0.0);
-    (out, mask)
 }
 
 #[cfg(test)]
@@ -1635,9 +1729,10 @@ mod tests {
             cached.set_input_target(target.clone());
             cached_results.push(cached.align().unwrap());
         }
-        let (uploads, hits) = cached.target_cache_stats();
+        let (uploads, hits, repads) = cached.target_cache_stats();
         assert_eq!(uploads, 1, "one upload for an unchanged target");
         assert_eq!(hits, 3);
+        assert_eq!(repads, 0);
 
         // Fresh: a new session per align (always re-uploads).
         for (s, c) in sources.iter().zip(&cached_results) {
@@ -1712,7 +1807,7 @@ mod tests {
         run(&mut icp, &targets[2]); // upload C, evict A resident {B,C}
         run(&mut icp, &targets[1]); // hit B             resident {C,B}
         run(&mut icp, &targets[0]); // A was evicted → re-upload, evict C
-        let (uploads, hits) = icp.target_cache_stats();
+        let (uploads, hits, _) = icp.target_cache_stats();
         assert_eq!((uploads, hits), (4, 2));
         let resident: Vec<u64> = icp
             .backend()
@@ -1787,8 +1882,114 @@ mod tests {
             icp.set_input_target(Arc::clone(&map));
             icp.align().unwrap();
         }
-        let (uploads, hits) = icp.target_cache_stats();
+        let (uploads, hits, _) = icp.target_cache_stats();
         assert_eq!((uploads, hits), (1, 2));
+    }
+
+    /// NativeSim wrapper whose `cap_m` depends on the *source* size —
+    /// modelling the XLA artifact-variant switch that changes capacity
+    /// selection for an unchanged target (the staged re-pad path).
+    struct VariantCapBackend(NativeSimBackend);
+
+    impl KernelBackend for VariantCapBackend {
+        fn name(&self) -> &'static str {
+            "variant-cap-sim"
+        }
+        fn select_capacity(
+            &self,
+            n_source: usize,
+            n_target: usize,
+        ) -> Result<(usize, usize, usize, usize)> {
+            let (cap_n, _, block_n, block_m) = self.0.select_capacity(n_source, n_target)?;
+            // Small sources pick a tighter target quantum than large
+            // ones, like per-variant padded shapes in the AOT manifest.
+            // Both quanta are multiples of the sim's block_m so the
+            // mirror's shape contract holds.
+            let quantum = if n_source <= 256 { 64 } else { 192 };
+            Ok((cap_n, n_target.div_ceil(quantum) * quantum, block_n, block_m))
+        }
+        fn residency_slots(&self) -> usize {
+            self.0.residency_slots()
+        }
+        fn set_residency_slots(&mut self, slots: usize) {
+            self.0.set_residency_slots(slots)
+        }
+        fn upload_target_keyed(
+            &mut self,
+            key: u64,
+            tgt: &[f32],
+            tgt_mask: &[f32],
+        ) -> Result<TargetEpoch> {
+            self.0.upload_target_keyed(key, tgt, tgt_mask)
+        }
+        fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
+            self.0.activate_target(key)
+        }
+        fn target_epoch(&self) -> Option<TargetEpoch> {
+            self.0.target_epoch()
+        }
+        fn resident_epochs(&self) -> Vec<(u64, TargetEpoch)> {
+            self.0.resident_epochs()
+        }
+        fn target_evictions(&self) -> u64 {
+            self.0.target_evictions()
+        }
+        fn upload_source(&mut self, src: &[f32], src_mask: &[f32]) -> Result<()> {
+            self.0.upload_source(src, src_mask)
+        }
+        fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
+            self.0.step(transform, max_dist_sq)
+        }
+        fn device_time(&self) -> Duration {
+            self.0.device_time()
+        }
+    }
+
+    #[test]
+    fn capacity_change_repads_staged_target_in_place() {
+        let target = Arc::new(structured_cloud(500, 60));
+        // 500 target points: quantum 64 → cap_m 512; quantum 192 → 576.
+        let small = target.random_sample(200, &mut Pcg32::new(61));
+        let big = target.random_sample(400, &mut Pcg32::new(62));
+
+        let mut icp =
+            FppsIcp::with_backend(VariantCapBackend(NativeSimBackend::with_blocks(64, 64)));
+        icp.set_input_source(small.clone());
+        icp.set_input_target(Arc::clone(&target));
+        icp.align().unwrap();
+        assert_eq!(icp.target_cache_stats(), (1, 0, 0));
+
+        // Same target, bigger source → different variant → new cap_m:
+        // the staged buffers are refilled in place (counted as a
+        // re-pad, not a rebuild), then re-uploaded under a fresh epoch.
+        icp.set_input_source(big.clone());
+        icp.set_input_target(Arc::clone(&target));
+        let repadded = icp.align().unwrap();
+        assert_eq!(icp.target_cache_stats(), (2, 0, 1));
+
+        // Ping back to the small variant: re-pad again.
+        icp.set_input_source(small);
+        icp.set_input_target(Arc::clone(&target));
+        icp.align().unwrap();
+        assert_eq!(icp.target_cache_stats(), (3, 0, 2));
+
+        // Re-pads preserve numerics: a fresh session at the same
+        // capacity produces bit-identical results.
+        let mut fresh =
+            FppsIcp::with_backend(VariantCapBackend(NativeSimBackend::with_blocks(64, 64)));
+        fresh.set_input_source(big);
+        fresh.set_input_target(Arc::clone(&target));
+        let f = fresh.align().unwrap();
+        assert_eq!(f.transformation.m, repadded.transformation.m);
+        assert_eq!(f.rmse.to_bits(), repadded.rmse.to_bits());
+
+        // In-place refills draw nothing new from the arena: the pool
+        // only ever served the four initial stagings (tgt + mask,
+        // src + mask) and never grew again across the variant flips.
+        let stats = icp.buffer_pool().stats();
+        assert_eq!(stats.acquires, 4);
+        assert_eq!(stats.grows, 4);
+        assert_eq!(stats.recycles, 0);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! §IV.D power-efficiency claim) and [`pipesim`] (a cycle-level simulator
 //! of the Fig. 3 four-stage streaming NN pipeline).
 
+pub mod alloc_counter;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -35,6 +36,7 @@ pub mod metrics;
 pub mod nn;
 pub mod pipesim;
 pub mod pointcloud;
+pub mod pool;
 pub mod prop;
 pub mod report;
 pub mod rng;

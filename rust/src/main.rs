@@ -315,13 +315,17 @@ fn cmd_batch() -> Result<()> {
         jobs.len()
     );
     print_supervision(&sup, &failover);
+    let icp_cfg = LaneIcpConfig {
+        pool_capacity: a.get_or("pool-capacity", fpps::pool::DEFAULT_RETAIN)?,
+        ..Default::default()
+    };
 
     let artifacts = artifacts.as_path();
     let report = run_registration_batch_supervised(
         jobs,
         lanes,
         queue_depth,
-        LaneIcpConfig::default(),
+        icp_cfg,
         sup,
         |_lane, tier| BackendHandle::create(failover.kind_for_tier(tier), artifacts),
     )?;
@@ -353,6 +357,11 @@ fn cmd_localize() -> Result<()> {
     .opt("seed", "dataset seed (default: config `seed`)", None)
     .opt("lanes", "worker lanes (default: config `lanes`)", None)
     .opt("queue-depth", "bounded job-queue depth", Some("4"))
+    .opt(
+        "pool-capacity",
+        "staging buffers retained per capacity class (default: config `pool_capacity`)",
+        None,
+    )
     .residency_opts()
     .backend_opts()
     .supervision_opts();
@@ -400,6 +409,7 @@ fn cmd_localize() -> Result<()> {
         max_correspondence_distance: rc.max_correspondence_distance,
         max_iteration_count: rc.max_iterations,
         transformation_epsilon: rc.transformation_epsilon,
+        pool_capacity: a.get_or("pool-capacity", rc.pool_capacity)?,
     };
 
     let artifacts = artifacts.as_path();

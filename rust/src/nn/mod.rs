@@ -100,6 +100,16 @@ pub struct NnResult {
     pub index: Vec<u32>,
 }
 
+/// Reusable intermediate buffers for [`kernel_mirror_into`]: the
+/// hoisted source norms and target norm+mask penalties. Grown on first
+/// use per capacity, then recycled — a warm scratch makes every
+/// subsequent mirror pass allocation-free.
+#[derive(Debug, Default)]
+pub struct MirrorScratch {
+    pn: Vec<f32>,
+    qn_pen: Vec<f32>,
+}
+
 /// Bit-faithful mirror of the device NN kernel: for each source point
 /// (padded to a multiple of `block_n`) find the masked argmin over
 /// targets (padded to a multiple of `block_m`).
@@ -115,6 +125,25 @@ pub fn kernel_mirror(
     tgt_mask: &[f32],
     cfg: KernelConfig,
 ) -> NnResult {
+    let mut scratch = MirrorScratch::default();
+    let mut out = NnResult::default();
+    kernel_mirror_into(src, tgt, tgt_mask, cfg, &mut scratch, &mut out);
+    out
+}
+
+/// [`kernel_mirror`] writing into caller-owned buffers: `out` and
+/// `scratch` are cleared and refilled, reusing their allocations. The
+/// zero-copy hot path ([`crate::fpps_api::NativeSimBackend`]) keeps one
+/// scratch/result pair per backend so every ICP iteration after the
+/// first runs heap-free. Results are bit-identical to [`kernel_mirror`].
+pub fn kernel_mirror_into(
+    src: &[f32],
+    tgt: &[f32],
+    tgt_mask: &[f32],
+    cfg: KernelConfig,
+    scratch: &mut MirrorScratch,
+    out: &mut NnResult,
+) {
     assert!(src.len() % 3 == 0 && tgt.len() % 3 == 0);
     let n = src.len() / 3;
     let m = tgt.len() / 3;
@@ -131,21 +160,22 @@ pub fn kernel_mirror(
     );
     // Precompute norms and mask penalties once — value-identical to the
     // per-pair computation (no accumulation-order change), just hoisted.
-    let pn: Vec<f32> = (0..n)
-        .map(|i| {
-            let p = &src[3 * i..3 * i + 3];
-            p[0] * p[0] + p[1] * p[1] + p[2] * p[2]
-        })
-        .collect();
-    let qn_pen: Vec<f32> = (0..m)
-        .map(|j| {
-            let q = &tgt[3 * j..3 * j + 3];
-            q[0] * q[0] + q[1] * q[1] + q[2] * q[2]
-                + (1.0 - tgt_mask[j]) * MASKED_DIST
-        })
-        .collect();
-    let mut dist = vec![f32::INFINITY; n];
-    let mut index = vec![0u32; n];
+    scratch.pn.clear();
+    scratch.pn.extend((0..n).map(|i| {
+        let p = &src[3 * i..3 * i + 3];
+        p[0] * p[0] + p[1] * p[1] + p[2] * p[2]
+    }));
+    scratch.qn_pen.clear();
+    scratch.qn_pen.extend((0..m).map(|j| {
+        let q = &tgt[3 * j..3 * j + 3];
+        q[0] * q[0] + q[1] * q[1] + q[2] * q[2] + (1.0 - tgt_mask[j]) * MASKED_DIST
+    }));
+    let (pn, qn_pen) = (&scratch.pn, &scratch.qn_pen);
+    out.dist_sq.clear();
+    out.dist_sq.resize(n, f32::INFINITY);
+    out.index.clear();
+    out.index.resize(n, 0u32);
+    let (dist, index) = (&mut out.dist_sq, &mut out.index);
     for ib in 0..n / cfg.block_n {
         for jb in 0..m / cfg.block_m {
             for ii in 0..cfg.block_n {
@@ -175,10 +205,6 @@ pub fn kernel_mirror(
                 }
             }
         }
-    }
-    NnResult {
-        dist_sq: dist,
-        index,
     }
 }
 
@@ -309,6 +335,36 @@ mod tests {
         mask[0] = 0.0;
         let res = kernel_mirror(&ps, &pt, &mask, cfg);
         assert!(res.dist_sq[0] >= MASKED_DIST * 0.5);
+    }
+
+    #[test]
+    fn kernel_mirror_into_is_bit_identical_and_reuses_buffers() {
+        let src = random_cloud(200, 41);
+        let tgt = random_cloud(500, 42);
+        let cfg = KernelConfig {
+            block_n: 64,
+            block_m: 128,
+        };
+        let (ps, _) = pad_cloud(&src.xyz, cfg.block_n);
+        let (pt, mask) = pad_cloud(&tgt.xyz, cfg.block_m);
+        let fresh = kernel_mirror(&ps, &pt, &mask, cfg);
+        let mut scratch = MirrorScratch::default();
+        let mut out = NnResult::default();
+        for _ in 0..2 {
+            kernel_mirror_into(&ps, &pt, &mask, cfg, &mut scratch, &mut out);
+            assert_eq!(out.index, fresh.index);
+            let same_bits = out
+                .dist_sq
+                .iter()
+                .zip(fresh.dist_sq.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same_bits, "into-variant must be bit-identical");
+        }
+        // Second pass reused the warm buffers.
+        let (pd, pi) = (out.dist_sq.as_ptr(), out.index.as_ptr());
+        kernel_mirror_into(&ps, &pt, &mask, cfg, &mut scratch, &mut out);
+        assert_eq!(out.dist_sq.as_ptr(), pd);
+        assert_eq!(out.index.as_ptr(), pi);
     }
 
     #[test]

@@ -196,6 +196,14 @@ impl PointCloud {
         }
     }
 
+    /// Copy this cloud's points into `out`, reusing `out`'s existing
+    /// heap allocation when its capacity suffices. The in-place sibling
+    /// of `clone()` for recycled buffers on the zero-copy data plane.
+    pub fn copy_into(&self, out: &mut PointCloud) {
+        out.xyz.clear();
+        out.xyz.extend_from_slice(&self.xyz);
+    }
+
     /// Root-mean-square distance between corresponding points of two
     /// equally-sized clouds (the paper's registration RMSE metric).
     pub fn rmse_to(&self, other: &PointCloud) -> f64 {
@@ -212,6 +220,29 @@ impl PointCloud {
         }
         (s / self.len() as f64).sqrt()
     }
+}
+
+/// Pad a flat xyz buffer to `capacity` points **in place**: `out`
+/// receives the points followed by zero padding (length `3·capacity`),
+/// `mask` receives `1.0` per real point and `0.0` per padding slot
+/// (length `capacity`). Both destinations are cleared and refilled, so
+/// a buffer recycled from [`crate::pool`] stages a new cloud without
+/// touching the heap once its capacity class is warm. Bit-identical to
+/// building fresh `(padded, mask)` vectors.
+///
+/// Panics if the cloud does not fit (`xyz.len()/3 > capacity`) — wire
+/// capacity is a hard device-side contract, not a hint.
+pub fn pad_into(xyz: &[f32], capacity: usize, out: &mut Vec<f32>, mask: &mut Vec<f32>) {
+    let n = xyz.len() / 3;
+    assert!(n <= capacity, "cloud ({n}) exceeds capacity ({capacity})");
+    out.clear();
+    out.reserve(capacity * 3);
+    out.extend_from_slice(xyz);
+    out.resize(capacity * 3, 0.0);
+    mask.clear();
+    mask.reserve(capacity);
+    mask.resize(n, 1.0);
+    mask.resize(capacity, 0.0);
 }
 
 #[cfg(test)]
@@ -357,6 +388,49 @@ mod tests {
     fn voxel_downsample_deterministic() {
         let c = cloud(500, 13);
         assert_eq!(c.voxel_downsample(0.7), c.voxel_downsample(0.7));
+    }
+
+    #[test]
+    fn pad_into_matches_fresh_padding_and_reuses_capacity() {
+        let c = cloud(100, 21);
+        let mut out = Vec::new();
+        let mut mask = Vec::new();
+        pad_into(&c.xyz, 128, &mut out, &mut mask);
+        assert_eq!(out.len(), 128 * 3);
+        assert_eq!(mask.len(), 128);
+        assert_eq!(&out[..c.xyz.len()], &c.xyz[..]);
+        assert!(out[c.xyz.len()..].iter().all(|&v| v == 0.0));
+        assert!(mask[..c.len()].iter().all(|&v| v == 1.0));
+        assert!(mask[c.len()..].iter().all(|&v| v == 0.0));
+
+        // Re-padding a different cloud into the same buffers reuses the
+        // allocation (no growth) and produces the same bits as fresh.
+        let (p_out, p_mask) = (out.as_ptr(), mask.as_ptr());
+        let d = cloud(64, 22);
+        pad_into(&d.xyz, 128, &mut out, &mut mask);
+        assert_eq!(out.as_ptr(), p_out);
+        assert_eq!(mask.as_ptr(), p_mask);
+        assert_eq!(&out[..d.xyz.len()], &d.xyz[..]);
+        assert!(out[d.xyz.len()..].iter().all(|&v| v == 0.0));
+        assert!(mask[..d.len()].iter().all(|&v| v == 1.0));
+        assert!(mask[d.len()..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn pad_into_rejects_oversized_cloud() {
+        let c = cloud(10, 23);
+        pad_into(&c.xyz, 4, &mut Vec::new(), &mut Vec::new());
+    }
+
+    #[test]
+    fn copy_into_reuses_destination_allocation() {
+        let a = cloud(50, 25);
+        let mut dst = cloud(80, 26);
+        let p = dst.xyz.as_ptr();
+        a.copy_into(&mut dst);
+        assert_eq!(a, dst);
+        assert_eq!(dst.xyz.as_ptr(), p);
     }
 
     #[test]

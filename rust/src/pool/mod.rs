@@ -1,0 +1,283 @@
+//! Zero-copy data plane: recycled staging buffers and lock-free lane
+//! rings.
+//!
+//! The paper's pipeline keeps point data resident on the device and
+//! streams it through **fixed, pre-allocated buffers** — the host never
+//! allocates per frame. This module is the software reproduction of
+//! that discipline:
+//!
+//! * [`BufferPool`] — an arena of recycled `Vec<f32>` staging buffers,
+//!   shelved by power-of-two capacity class. [`BufferPool::acquire`]
+//!   hands out a [`PooledBuf`] guard; dropping the guard returns the
+//!   buffer (cleared, allocation intact) to its shelf instead of the
+//!   heap. Once every capacity class in a workload is warm, staging a
+//!   cloud costs zero allocations: [`crate::pointcloud::pad_into`]
+//!   refills the recycled buffer in place.
+//! * [`ring::SpscRing`] — the bounded lock-free job ring each lane
+//!   worker consumes from (see its module docs for the supervision
+//!   drain protocol).
+//!
+//! The pool lock is only ever touched on **cold** paths — staging a
+//! target the engine has never seen, or evicting one past the residency
+//! slot count. The per-job hot path (source re-pad, resident-target
+//! hit, kernel iterations) runs entirely on buffers it already owns.
+//!
+//! [`PoolStats`] counts what the pool did: `acquires` (buffers handed
+//! out), `recycles` (served from a shelf — the steady-state case),
+//! `grows` (fresh heap allocations, because the shelf was empty), and
+//! `discards` (returned buffers dropped because the shelf was full,
+//! bounded by the retention knob — `--pool-capacity` / config
+//! `pool_capacity=`).
+
+pub mod ring;
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest capacity class (in `f32` elements). Tiny acquires all share
+/// one shelf instead of fragmenting across classes.
+const MIN_CLASS: usize = 64;
+
+/// Default number of buffers retained per capacity class.
+pub const DEFAULT_RETAIN: usize = 8;
+
+/// Cumulative pool activity counters (monotonic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out by [`BufferPool::acquire`].
+    pub acquires: u64,
+    /// Acquires served from a shelf (no heap traffic).
+    pub recycles: u64,
+    /// Acquires that had to allocate because the class shelf was empty.
+    pub grows: u64,
+    /// Returned buffers dropped because the class shelf was full.
+    pub discards: u64,
+}
+
+struct PoolInner {
+    /// Shelves of cleared, capacity-intact buffers keyed by class size.
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    /// Max buffers retained per class; extra returns are freed.
+    retain: AtomicUsize,
+    acquires: AtomicU64,
+    recycles: AtomicU64,
+    grows: AtomicU64,
+    discards: AtomicU64,
+}
+
+/// Cloneable handle to a shared arena of recycled `Vec<f32>` buffers,
+/// shelved by power-of-two capacity class (see the module docs).
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new(DEFAULT_RETAIN)
+    }
+}
+
+impl BufferPool {
+    /// A pool retaining at most `retain` buffers per capacity class
+    /// (`0` disables recycling entirely — every return is freed).
+    pub fn new(retain: usize) -> Self {
+        Self {
+            inner: Arc::new(PoolInner {
+                shelves: Mutex::new(HashMap::new()),
+                retain: AtomicUsize::new(retain),
+                acquires: AtomicU64::new(0),
+                recycles: AtomicU64::new(0),
+                grows: AtomicU64::new(0),
+                discards: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Round `capacity` up to its class size.
+    fn class_of(capacity: usize) -> usize {
+        capacity.max(MIN_CLASS).next_power_of_two()
+    }
+
+    /// Hand out an empty buffer with at least `capacity` elements of
+    /// spare room. Served from the class shelf when one is available
+    /// (zero heap traffic), freshly allocated otherwise.
+    pub fn acquire(&self, capacity: usize) -> PooledBuf {
+        let class = Self::class_of(capacity);
+        self.inner.acquires.fetch_add(1, Ordering::Relaxed);
+        let recycled = self
+            .inner
+            .shelves
+            .lock()
+            .unwrap()
+            .get_mut(&class)
+            .and_then(Vec::pop);
+        let buf = match recycled {
+            Some(b) => {
+                self.inner.recycles.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.inner.grows.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(class)
+            }
+        };
+        PooledBuf {
+            buf,
+            class,
+            pool: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Change how many buffers each class shelf retains. Shrinking does
+    /// not free already-shelved buffers eagerly; they are trimmed as
+    /// they cycle.
+    pub fn set_retain(&self, retain: usize) {
+        self.inner.retain.store(retain, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the cumulative activity counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            acquires: self.inner.acquires.load(Ordering::Relaxed),
+            recycles: self.inner.recycles.load(Ordering::Relaxed),
+            grows: self.inner.grows.load(Ordering::Relaxed),
+            discards: self.inner.discards.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A buffer checked out of a [`BufferPool`]. Dereferences to its
+/// `Vec<f32>`; dropping it clears the contents and returns the
+/// allocation to the pool shelf (or frees it when the shelf is full).
+pub struct PooledBuf {
+    buf: Vec<f32>,
+    class: usize,
+    pool: Arc<PoolInner>,
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("len", &self.buf.len())
+            .field("capacity", &self.buf.capacity())
+            .field("class", &self.class)
+            .finish()
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let mut buf = std::mem::take(&mut self.buf);
+        buf.clear();
+        let retain = self.pool.retain.load(Ordering::Relaxed);
+        if retain > 0 {
+            let mut shelves = self.pool.shelves.lock().unwrap();
+            let shelf = shelves.entry(self.class).or_default();
+            if shelf.len() < retain {
+                shelf.push(buf);
+                return;
+            }
+        }
+        self.pool.discards.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_recycles_the_same_allocation() {
+        let pool = BufferPool::new(4);
+        let ptr = {
+            let mut b = pool.acquire(100);
+            b.extend_from_slice(&[1.0, 2.0, 3.0]);
+            b.as_ptr()
+        }; // drop returns to shelf
+        let b = pool.acquire(100);
+        assert_eq!(b.as_ptr(), ptr, "same class must recycle the buffer");
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert!(b.capacity() >= 100);
+        let s = pool.stats();
+        assert_eq!(s.acquires, 2);
+        assert_eq!(s.grows, 1);
+        assert_eq!(s.recycles, 1);
+        assert_eq!(s.discards, 0);
+    }
+
+    #[test]
+    fn capacity_classes_are_power_of_two_and_shared() {
+        // 100 and 120 share the 128 class; 200 lands on 256.
+        let pool = BufferPool::new(4);
+        let p100 = {
+            let b = pool.acquire(100);
+            b.as_ptr()
+        };
+        assert_eq!(pool.acquire(120).as_ptr(), p100);
+        drop(pool.acquire(200));
+        assert_eq!(pool.stats().grows, 2, "two classes, two fresh allocations");
+        // Tiny acquires share the floor class.
+        let p1 = {
+            let b = pool.acquire(1);
+            b.as_ptr()
+        };
+        assert_eq!(pool.acquire(MIN_CLASS).as_ptr(), p1);
+    }
+
+    #[test]
+    fn retention_bounds_the_shelf() {
+        let pool = BufferPool::new(1);
+        let a = pool.acquire(64);
+        let b = pool.acquire(64);
+        drop(a); // shelved
+        drop(b); // shelf full -> freed
+        let s = pool.stats();
+        assert_eq!(s.discards, 1);
+        // retain = 0 disables recycling.
+        let none = BufferPool::new(0);
+        drop(none.acquire(64));
+        let s = none.stats();
+        assert_eq!(s.discards, 1);
+        drop(none.acquire(64));
+        assert_eq!(none.stats().grows, 2);
+    }
+
+    #[test]
+    fn steady_state_is_grow_free() {
+        let pool = BufferPool::new(8);
+        for _ in 0..100 {
+            let mut b = pool.acquire(1000);
+            b.resize(1000, 0.5);
+        }
+        let s = pool.stats();
+        assert_eq!(s.acquires, 100);
+        assert_eq!(s.grows, 1, "only the first acquire allocates");
+        assert_eq!(s.recycles, 99);
+    }
+
+    #[test]
+    fn pool_handle_is_shared_across_clones() {
+        let pool = BufferPool::new(4);
+        let clone = pool.clone();
+        drop(pool.acquire(64));
+        drop(clone.acquire(64));
+        assert_eq!(pool.stats(), clone.stats());
+        assert_eq!(pool.stats().recycles, 1);
+    }
+}

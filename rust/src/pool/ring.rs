@@ -1,0 +1,379 @@
+//! Bounded lock-free SPSC job ring for the lane data plane.
+//!
+//! Each lane's queue is a fixed array of sequence-numbered slots
+//! (Vyukov-style bounded ring): the producer writes a slot and
+//! publishes it by bumping the slot's sequence; a consumer claims the
+//! head slot by CAS on the dequeue cursor. No mutex is ever held around
+//! the job hand-off, and — because jobs carry their cloud payloads by
+//! `Arc` — pushing a job never copies or allocates.
+//!
+//! The protocol is **single-producer** (only the dispatcher routes jobs
+//! into a lane) but deliberately **multi-consumer**: the lane worker
+//! pops, while the deadline watchdog (and the lane itself on a fatal
+//! backend error) may [`SpscRing::drain`] the ring concurrently to
+//! re-route queued jobs off a wedged lane. The consumer-side CAS is
+//! what keeps that race exactly-once.
+//!
+//! Closing is a flag, not a lock, so `close()` + `drain()` is *not*
+//! atomic against a concurrent push: a job the producer was mid-push
+//! during the close can land after the closer's drain. The supervision
+//! protocol closes that window at the source — the dispatcher is the
+//! sole producer, so when it learns a lane is dead it performs the
+//! authoritative final drain itself, after which no further push can
+//! race (see `coordinator::dispatch_supervised`).
+//!
+//! Blocking [`SpscRing::pop`] parks on a condvar only when the ring is
+//! empty; the producer takes that (uncontended) lock only when a
+//! sleeper is registered, and sleepers re-arm with a bounded
+//! `wait_timeout` so a lost wakeup can cost milliseconds, never a
+//! deadlock.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// How long a sleeping consumer waits before re-checking the ring on
+/// its own (backstop against a theoretically lost wakeup).
+const PARK_BACKSTOP: Duration = Duration::from_millis(10);
+
+struct Slot<T> {
+    /// Vyukov sequence: `pos` ⇒ free for the push at `pos`;
+    /// `pos + 1` ⇒ holds the value pushed at `pos`;
+    /// `pos + ring_size` ⇒ consumed, free for the next lap.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free job ring (see the module docs for the protocol).
+pub struct SpscRing<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Logical capacity (may be below the power-of-two slot count).
+    cap: usize,
+    /// Enqueue cursor — written only by the single producer.
+    head: AtomicUsize,
+    /// Dequeue cursor — claimed by CAS (worker and watchdog may race).
+    tail: AtomicUsize,
+    closed: AtomicBool,
+    /// Consumers parked (or about to park) on the condvar. The producer
+    /// only touches the park mutex when this is non-zero, so the push
+    /// hot path stays lock-free while a busy lane keeps up.
+    sleeper_count: AtomicUsize,
+    /// Pairs with `wake`; held around the park re-check so a notify
+    /// cannot slip between a consumer's empty check and its wait.
+    park: Mutex<()>,
+    wake: Condvar,
+}
+
+// Safety: values move producer -> exactly one consumer; the sequence
+// protocol (Acquire/Release on `seq`) orders every slot access, and a
+// slot is never read and written concurrently.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// A ring holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        let size = cap.next_power_of_two();
+        let slots = (0..size)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Self {
+            slots,
+            mask: size - 1,
+            cap,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleeper_count: AtomicUsize::new(0),
+            park: Mutex::new(()),
+            wake: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push; hands the value back when full or closed.
+    /// Must only be called from the single producer thread.
+    pub fn try_push(&self, v: T) -> Result<(), T> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(v);
+        }
+        let pos = self.head.load(Ordering::Relaxed);
+        // Logical-capacity bound (tail only advances, so this check is
+        // conservative: at worst we report full a beat late).
+        if pos.wrapping_sub(self.tail.load(Ordering::Acquire)) >= self.cap {
+            return Err(v);
+        }
+        let slot = &self.slots[pos & self.mask];
+        // A consumer that claimed this slot a lap ago may still be
+        // reading it; its sequence bump is the all-clear.
+        if slot.seq.load(Ordering::Acquire) != pos {
+            return Err(v);
+        }
+        unsafe { (*slot.val.get()).write(v) };
+        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+        self.head.store(pos.wrapping_add(1), Ordering::Release);
+        // Dekker-style handshake with `pop`: publish-then-check against
+        // its register-then-recheck, so either we see the sleeper or it
+        // sees our item.
+        fence(Ordering::SeqCst);
+        if self.sleeper_count.load(Ordering::SeqCst) > 0 {
+            let _g = self.park.lock().unwrap();
+            self.wake.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Non-blocking pop. Safe to call from multiple threads.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let expect = pos.wrapping_add(1);
+            if seq == expect {
+                // Slot is readable: claim it or chase the winner.
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    expect,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        // Free the slot for the producer's next lap.
+                        slot.seq
+                            .store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if seq.wrapping_sub(expect) as isize > 0 {
+                // Another consumer already took this slot; re-read tail.
+                pos = self.tail.load(Ordering::Relaxed);
+            } else {
+                // seq == pos: empty at this cursor.
+                return None;
+            }
+        }
+    }
+
+    /// Blocking pop; `None` once the ring is closed *and* empty.
+    pub fn pop(&self) -> Option<T> {
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                // Sweep anything a racing push published before it could
+                // observe the close.
+                return self.try_pop();
+            }
+            let guard = self.park.lock().unwrap();
+            self.sleeper_count.fetch_add(1, Ordering::SeqCst);
+            // Re-check after registering (the producer's fence + sleeper
+            // check pairs with this) so its notify cannot slip between
+            // our empty check and the wait.
+            fence(Ordering::SeqCst);
+            if !self.is_empty() || self.closed.load(Ordering::SeqCst) {
+                self.sleeper_count.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let (guard, _) = self.wake.wait_timeout(guard, PARK_BACKSTOP).unwrap();
+            self.sleeper_count.fetch_sub(1, Ordering::SeqCst);
+            drop(guard);
+        }
+    }
+
+    /// Take every queued job in FIFO order (watchdog re-route of a
+    /// wedged lane). The ring stays usable afterwards.
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Some(v) = self.try_pop() {
+            out.push(v);
+        }
+        out
+    }
+
+    /// Close the ring: pushes start failing, blocked consumers wake,
+    /// and `pop` returns `None` once the backlog is consumed.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.park.lock().unwrap();
+        self.wake.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot emptiness (racy, advisory only).
+    pub fn is_empty(&self) -> bool {
+        let tail = self.tail.load(Ordering::Acquire);
+        self.head.load(Ordering::Acquire) == tail
+    }
+
+    /// Snapshot occupancy (racy, advisory only).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Acquire);
+        self.head.load(Ordering::Acquire).wrapping_sub(tail)
+    }
+}
+
+impl<T> Drop for SpscRing<T> {
+    fn drop(&mut self) {
+        while self.try_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_and_wraparound() {
+        // Capacity 4: push/pop far more items than slots so every slot
+        // is reused many laps with sequence numbers wrapping the ring.
+        let r = SpscRing::new(4);
+        let mut next_out = 0u64;
+        for i in 0..1000u64 {
+            r.try_push(i).unwrap();
+            if i % 3 == 0 {
+                while let Some(v) = r.try_pop() {
+                    assert_eq!(v, next_out);
+                    next_out += 1;
+                }
+            }
+        }
+        while let Some(v) = r.try_pop() {
+            assert_eq!(v, next_out);
+            next_out += 1;
+        }
+        assert_eq!(next_out, 1000);
+    }
+
+    #[test]
+    fn full_and_empty_bounds() {
+        let r = SpscRing::new(3); // non-power-of-two logical cap
+        assert!(r.try_pop().is_none(), "empty ring pops nothing");
+        assert!(r.is_empty());
+        for i in 0..3 {
+            r.try_push(i).unwrap();
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.try_push(99).unwrap_err(), 99, "full ring hands back");
+        assert_eq!(r.try_pop(), Some(0));
+        r.try_push(3).unwrap(); // slot freed -> push succeeds again
+        assert_eq!(r.drain(), vec![1, 2, 3]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn drain_then_restart() {
+        // A watchdog drain mid-stream must leave the ring fully usable:
+        // same capacity, FIFO order preserved for new pushes.
+        let r = SpscRing::new(4);
+        for i in 0..3 {
+            r.try_push(i).unwrap();
+        }
+        assert_eq!(r.drain(), vec![0, 1, 2]);
+        for i in 10..14 {
+            r.try_push(i).unwrap();
+        }
+        assert!(r.try_push(99).is_err(), "capacity intact after drain");
+        assert_eq!(r.drain(), vec![10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn close_semantics() {
+        let r = SpscRing::new(4);
+        r.try_push(1).unwrap();
+        r.close();
+        assert!(r.is_closed());
+        assert_eq!(r.try_push(2).unwrap_err(), 2, "closed ring rejects pushes");
+        assert_eq!(r.pop(), Some(1), "backlog still drains after close");
+        assert_eq!(r.pop(), None, "closed + empty -> None");
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push_and_close() {
+        let r = Arc::new(SpscRing::new(8));
+        let c = Arc::clone(&r);
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = c.pop() {
+                got.push(v);
+            }
+            got
+        });
+        for i in 0..100u64 {
+            while r.try_push(i).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        r.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_drain_races_are_exactly_once() {
+        // One producer, one popping worker, one draining "watchdog":
+        // every item is seen exactly once across both consumers.
+        let r = Arc::new(SpscRing::new(8));
+        let total = 10_000u64;
+        let worker = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = r.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        let watchdog = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while !r.is_closed() || !r.is_empty() {
+                    got.extend(r.drain());
+                    std::thread::yield_now();
+                }
+                got.extend(r.drain());
+                got
+            })
+        };
+        for i in 0..total {
+            while r.try_push(i).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        r.close();
+        let mut all = worker.join().unwrap();
+        all.extend(watchdog.join().unwrap());
+        assert_eq!(all.len() as u64, total, "no loss, no duplication");
+        all.sort_unstable();
+        for (i, v) in all.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn drop_releases_queued_items() {
+        // Arc strong counts prove queued items are dropped with the ring.
+        let payload = Arc::new(0u32);
+        let r = SpscRing::new(4);
+        r.try_push(Arc::clone(&payload)).unwrap();
+        r.try_push(Arc::clone(&payload)).unwrap();
+        assert_eq!(Arc::strong_count(&payload), 3);
+        drop(r);
+        assert_eq!(Arc::strong_count(&payload), 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Allocation-regression suite for the zero-copy data plane: once an
+//! engine (or a ring, or the buffer pool) is warm, the per-job hot path
+//! must perform **zero** heap allocations. A counting global allocator
+//! ([`fpps::alloc_counter::CountingAlloc`]) is installed for this test
+//! binary only; every measurement takes the process-wide `GATE` lock so
+//! concurrently scheduled tests cannot pollute the counters.
+
+use fpps::alloc_counter::{snapshot, CountingAlloc};
+use fpps::fpps_api::{FppsIcp, KernelBackend};
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::pool::ring::SpscRing;
+use fpps::pool::BufferPool;
+use fpps::rng::Pcg32;
+use std::sync::{Arc, Mutex};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Serializes the measured regions (the counters are process-global).
+static GATE: Mutex<()> = Mutex::new(());
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+fn workload() -> (Arc<PointCloud>, Arc<PointCloud>) {
+    let target = Arc::new(structured_cloud(600, 1));
+    let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, -0.05, 0.0));
+    let source = Arc::new(target.transformed(&gt.inverse_rigid()));
+    (source, target)
+}
+
+/// Warm the engine, then assert 20 further jobs allocate nothing: the
+/// pooled staging, the backend mirrors, and the recycled iteration-stat
+/// buffer must absorb every byte of per-job traffic.
+fn assert_steady_state_is_allocation_free<B: KernelBackend>(mut icp: FppsIcp<B>, label: &str) {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let (source, target) = workload();
+    let mut align = |icp: &mut FppsIcp<B>| {
+        icp.set_input_source(Arc::clone(&source));
+        icp.set_input_target(Arc::clone(&target));
+        let mut res = icp.align().expect("align");
+        assert!(res.rmse.is_finite(), "{label}: alignment degenerated");
+        icp.recycle_stats(std::mem::take(&mut res.stats));
+    };
+    for _ in 0..3 {
+        align(&mut icp);
+    }
+    let before = snapshot();
+    for _ in 0..20 {
+        align(&mut icp);
+    }
+    let delta = before.delta(&snapshot());
+    assert_eq!(
+        delta.allocations, 0,
+        "{label}: steady-state align must not allocate \
+         (saw {} allocations / {} bytes across 20 jobs)",
+        delta.allocations, delta.bytes
+    );
+}
+
+#[test]
+fn native_sim_steady_state_alignment_is_allocation_free() {
+    assert_steady_state_is_allocation_free(FppsIcp::native_sim(), "native-sim");
+}
+
+#[test]
+fn kdtree_steady_state_alignment_is_allocation_free() {
+    assert_steady_state_is_allocation_free(FppsIcp::kdtree_cpu(), "kdtree-cpu");
+}
+
+#[test]
+fn spsc_ring_hot_ops_are_allocation_free() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let ring: SpscRing<u64> = SpscRing::new(8);
+    // Warm one lap so every slot has been written once.
+    for i in 0..8 {
+        ring.try_push(i).unwrap();
+    }
+    while ring.try_pop().is_some() {}
+    let before = snapshot();
+    for i in 0..10_000u64 {
+        ring.try_push(i).unwrap();
+        assert_eq!(ring.try_pop(), Some(i));
+    }
+    assert!(ring.drain().is_empty(), "empty drain stays empty");
+    let delta = before.delta(&snapshot());
+    assert_eq!(
+        delta.allocations, 0,
+        "ring push/pop/empty-drain must not allocate \
+         (saw {} allocations / {} bytes)",
+        delta.allocations, delta.bytes
+    );
+}
+
+#[test]
+fn buffer_pool_steady_state_is_allocation_free() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = BufferPool::default();
+    // Warm the capacity classes (first acquire per class allocates).
+    for cap in [256usize, 1024, 4096] {
+        drop(pool.acquire(cap));
+    }
+    let before = snapshot();
+    for _ in 0..1000 {
+        for cap in [256usize, 1024, 4096] {
+            let buf = pool.acquire(cap);
+            assert!(buf.capacity() >= cap);
+            drop(buf); // recycles back onto the shelf
+        }
+    }
+    let delta = before.delta(&snapshot());
+    assert_eq!(
+        delta.allocations, 0,
+        "warm pool acquire/recycle must not allocate \
+         (saw {} allocations / {} bytes)",
+        delta.allocations, delta.bytes
+    );
+    let stats = pool.stats();
+    assert_eq!(stats.grows, 3, "one growth per capacity class");
+    assert_eq!(stats.recycles, 3000, "every warm acquire recycled");
+}

@@ -65,7 +65,7 @@ fn cached_target_is_bit_identical_to_fresh_upload() {
         1,
         "K scans against one unchanged map: the kd-tree is built exactly once"
     );
-    let (uploads, hits) = cached.target_cache_stats();
+    let (uploads, hits, _) = cached.target_cache_stats();
     assert_eq!(uploads, 1);
     assert_eq!(hits as usize, workload.jobs.len() - 1);
 
@@ -110,7 +110,7 @@ fn native_sim_cached_target_matches_fresh() {
         assert_eq!(f.transformation.m, c.transformation.m, "scan {k}");
         assert_eq!(f.rmse.to_bits(), c.rmse.to_bits(), "scan {k}");
     }
-    let (uploads, hits) = cached.target_cache_stats();
+    let (uploads, hits, _) = cached.target_cache_stats();
     assert_eq!((uploads, hits), (1, 3));
 }
 
@@ -144,7 +144,7 @@ fn target_change_invalidates_epoch() {
         assert_eq!(f.transformation.m, c.transformation.m, "round {round}");
         assert_eq!(f.rmse.to_bits(), c.rmse.to_bits(), "round {round}");
     }
-    let (uploads, hits) = icp.target_cache_stats();
+    let (uploads, hits, _) = icp.target_cache_stats();
     assert_eq!((uploads, hits), (4, 0), "alternating targets never hit");
 }
 
@@ -179,7 +179,7 @@ fn alternating_maps_upload_once_per_map_with_lru_residency() {
         multi.set_input_target(Arc::clone(map));
         multi_results.push(multi.align().unwrap());
     }
-    let (uploads, hits) = multi.target_cache_stats();
+    let (uploads, hits, _) = multi.target_cache_stats();
     assert_eq!(uploads, 2, "exactly one upload per map");
     assert_eq!(hits, 6, "every revisit is a cache hit");
     assert_eq!(
@@ -200,7 +200,7 @@ fn alternating_maps_upload_once_per_map_with_lru_residency() {
         assert_eq!(s.rmse.to_bits(), m.rmse.to_bits());
         assert_eq!(s.iterations, m.iterations);
     }
-    let (single_uploads, single_hits) = single.target_cache_stats();
+    let (single_uploads, single_hits, _) = single.target_cache_stats();
     assert_eq!((single_uploads, single_hits), (8, 0));
     assert_eq!(single.backend().tree_builds(), 8);
 }
