@@ -8,7 +8,10 @@
 //!   * projected TPU Pallas latency structure (tpu_estimate)
 //!
 //! plus a Pallas block-shape sweep showing where VMEM/MXU trade off —
-//! the L1 §Perf structural target.
+//! the L1 §Perf structural target — and a voxel-grid sweep (cell size ×
+//! ring budget) quantifying the ISSUE 8 approximate-NN backend against
+//! bounded kd-tree search: a covering budget is exact by construction,
+//! tighter budgets trade recall for throughput.
 //!
 //!   cargo run --release --example ablation_nn
 
@@ -18,6 +21,7 @@ use fpps::nn;
 use fpps::pointcloud::PointCloud;
 use fpps::report::Table;
 use fpps::rng::Pcg32;
+use fpps::voxelgrid::VoxelGrid;
 use std::time::Instant;
 
 fn random_cloud(n: usize, seed: u64) -> PointCloud {
@@ -116,6 +120,58 @@ fn main() {
     ]);
     t.print();
     println!("(checksum {checksum})\n");
+
+    // ---- Voxel-grid sweep: cell size x ring budget (ISSUE 8) ----
+    // Bounded correspondence search (r = 3 m), the shape ICP actually
+    // issues. The kd-tree bounded pass is the 1.00x baseline; a budget
+    // with cell*ring >= r answers every query identically.
+    let max_dist = 3.0f32;
+    let max_d2 = max_dist * max_dist;
+    let t0 = Instant::now();
+    let exact_bounded: Vec<_> = queries
+        .iter()
+        .map(|q| tree.nearest(q).filter(|nb| nb.dist_sq < max_d2))
+        .collect();
+    let kd_bounded_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut grid_sweep = Table::new(format!(
+        "voxel-grid sweep (bounded NN, r = {max_dist} m; kd-tree {kd_bounded_ms:.1} ms)"
+    ))
+    .header(&["cell (m)", "ring", "budget", "time (ms)", "vs kd-tree", "found", "exact"]);
+    for cell in [1.0f32, 2.0, 3.0] {
+        for ring in [1usize, 2, 3] {
+            let grid = VoxelGrid::build(&targets, cell, ring);
+            let t0 = Instant::now();
+            let mut found = 0usize;
+            let mut exact = 0usize;
+            for (q, base) in queries.iter().zip(&exact_bounded) {
+                let got = grid.nearest(&targets, q, max_d2);
+                if got.is_some() {
+                    found += 1;
+                }
+                match (got, base) {
+                    (Some(g), Some(b)) if g.dist_sq.to_bits() == b.dist_sq.to_bits() => exact += 1,
+                    (None, None) => exact += 1,
+                    _ => {}
+                }
+            }
+            let g_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let covering = cell * ring as f32 >= max_dist;
+            if covering {
+                assert_eq!(exact, n_src, "covering budget must answer exactly");
+            }
+            grid_sweep.row(vec![
+                format!("{cell:.1}"),
+                ring.to_string(),
+                if covering { "covering" } else { "tight" }.into(),
+                format!("{g_ms:.1}"),
+                format!("{:.2}x", kd_bounded_ms / g_ms),
+                format!("{:.1}%", 100.0 * found as f64 / n_src as f64),
+                format!("{:.1}%", 100.0 * exact as f64 / n_src as f64),
+            ]);
+        }
+    }
+    grid_sweep.print();
+    println!();
 
     // ---- Pallas block-shape sweep (L1 structural perf target) ----
     let core = tpu_estimate::TpuCore::default();

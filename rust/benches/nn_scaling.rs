@@ -1,0 +1,222 @@
+//! Bench: voxel-grid vs kd-tree bounded-NN throughput at city scale.
+//!
+//! Builds uniform-density synthetic maps at growing tiers (10k → 1M
+//! points by default), then answers the same bounded nearest-neighbour
+//! queries (`max_dist = 2 m`) through both indexes:
+//!
+//! * [`fpps::kdtree::OwnedKdTree::nearest_within_sq`] — the exact
+//!   baseline every backend used before ISSUE 8;
+//! * [`fpps::voxelgrid::VoxelGrid::nearest`] with a covering budget
+//!   (`cell = 1 m`, `max_ring = 2` ≥ the query radius), so both answer
+//!   every query identically — the speedup is pure data-structure
+//!   locality, not accuracy loss. Identity is asserted on a sample.
+//!
+//! The tentpole claim is asserted, not just reported: at the largest
+//! tier the grid must deliver **≥ 2×** the kd-tree query throughput.
+//!
+//!   cargo bench --bench nn_scaling
+//!   FPPS_BENCH_NN_MAX=100000 cargo bench --bench nn_scaling  # smaller cap
+//!   FPPS_BENCH_JSON=BENCH_nn_scaling.json cargo bench --bench nn_scaling
+
+use fpps::kdtree::OwnedKdTree;
+use fpps::pointcloud::PointCloud;
+use fpps::report::Table;
+use fpps::rng::Pcg32;
+use fpps::voxelgrid::VoxelGrid;
+use std::time::Instant;
+
+const MAX_DIST_SQ: f32 = 4.0; // 2 m correspondence radius
+const CELL_SIZE: f32 = 1.0;
+const MAX_RING: usize = 2; // 2 × 1 m ≥ 2 m: covering budget, exact answers
+const QUERIES: usize = 20_000;
+
+/// Uniform map at ~1 point/m³ — the extent grows with the point count,
+/// like a city map does, instead of packing a fixed box ever denser.
+fn city_cloud(n: usize, seed: u64) -> PointCloud {
+    let side = (n as f32).cbrt();
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for _ in 0..n {
+        c.push([
+            rng.range(0.0, side),
+            rng.range(0.0, side),
+            rng.range(0.0, side),
+        ]);
+    }
+    c
+}
+
+/// Scan-like queries: map points jittered by up to ±0.3 m, so a true
+/// neighbour exists within the radius for every query.
+fn queries_near(cloud: &PointCloud, count: usize, seed: u64) -> Vec<[f32; 3]> {
+    let mut rng = Pcg32::new(seed);
+    (0..count)
+        .map(|_| {
+            let i = (rng.range(0.0, cloud.len() as f32) as usize).min(cloud.len() - 1);
+            let p = cloud.get(i);
+            [
+                p[0] + rng.range(-0.3, 0.3),
+                p[1] + rng.range(-0.3, 0.3),
+                p[2] + rng.range(-0.3, 0.3),
+            ]
+        })
+        .collect()
+}
+
+struct TierResult {
+    points: usize,
+    kd_build_ms: f64,
+    kd_qps: f64,
+    grid_build_ms: f64,
+    grid_qps: f64,
+    grid_cells: usize,
+}
+
+fn run_tier(points: usize, seed: u64) -> TierResult {
+    let cloud = city_cloud(points, seed);
+    let queries = queries_near(&cloud, QUERIES, seed + 1);
+
+    let t0 = Instant::now();
+    let tree = OwnedKdTree::build(cloud);
+    let kd_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let grid = VoxelGrid::build(tree.cloud(), CELL_SIZE, MAX_RING);
+    let grid_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Covering budget ⇒ identical bounded-NN answers; spot-check before
+    // timing so the throughput numbers compare equal work.
+    for q in queries.iter().take(1000) {
+        let a = tree.nearest_within_sq(*q, MAX_DIST_SQ);
+        let b = grid.nearest(tree.cloud(), *q, MAX_DIST_SQ);
+        match (a, b) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(
+                    a.dist_sq.to_bits(),
+                    b.dist_sq.to_bits(),
+                    "covering-budget grid must answer exactly"
+                );
+            }
+            (a, b) => panic!("index disagreement: kd {a:?} vs grid {b:?}"),
+        }
+    }
+
+    // Checksums keep the query loops from being optimized away.
+    let time_qps = |f: &dyn Fn([f32; 3]) -> f32| {
+        let t0 = Instant::now();
+        let mut sum = 0.0f64;
+        for q in &queries {
+            sum += f(*q) as f64;
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        assert!(sum.is_finite());
+        queries.len() as f64 / secs
+    };
+    let kd_qps = time_qps(&|q| {
+        tree.nearest_within_sq(q, MAX_DIST_SQ)
+            .map_or(0.0, |n| n.dist_sq)
+    });
+    let grid_qps = time_qps(&|q| {
+        grid.nearest(tree.cloud(), q, MAX_DIST_SQ)
+            .map_or(0.0, |n| n.dist_sq)
+    });
+
+    TierResult {
+        points,
+        kd_build_ms,
+        kd_qps,
+        grid_build_ms,
+        grid_qps,
+        grid_cells: grid.occupied_cells(),
+    }
+}
+
+fn main() {
+    let max_points: usize = std::env::var("FPPS_BENCH_NN_MAX")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000)
+        .max(10_000);
+    let tiers: Vec<usize> = [10_000usize, 100_000, 1_000_000]
+        .into_iter()
+        .filter(|&n| n <= max_points)
+        .collect();
+    println!(
+        "nn scaling: bounded NN (r = {} m) through kd-tree vs voxel grid \
+         (cell {CELL_SIZE} m, ring {MAX_RING}), {QUERIES} queries/tier\n",
+        MAX_DIST_SQ.sqrt()
+    );
+
+    let results: Vec<TierResult> = tiers
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| run_tier(n, 9000 + i as u64))
+        .collect();
+
+    let mut t = Table::new("bounded-NN throughput by map size").header(&[
+        "points",
+        "kd build ms",
+        "kd kq/s",
+        "grid build ms",
+        "grid kq/s",
+        "speedup",
+        "cells",
+    ]);
+    for r in &results {
+        t.row(vec![
+            format!("{}", r.points),
+            format!("{:.1}", r.kd_build_ms),
+            format!("{:.1}", r.kd_qps / 1e3),
+            format!("{:.1}", r.grid_build_ms),
+            format!("{:.1}", r.grid_qps / 1e3),
+            format!("{:.2}x", r.grid_qps / r.kd_qps),
+            format!("{}", r.grid_cells),
+        ]);
+    }
+    t.print();
+
+    let top = results.last().expect("at least one tier");
+    let speedup = top.grid_qps / top.kd_qps;
+    println!(
+        "\nlargest tier ({} points): grid {:.2}x kd-tree query throughput",
+        top.points, speedup
+    );
+    if top.points >= 1_000_000 {
+        assert!(
+            speedup >= 2.0,
+            "acceptance: grid must be >= 2x kd-tree NN throughput at the \
+             1M tier, measured {speedup:.2}x"
+        );
+    }
+
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        let tier_objs: Vec<String> = results
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"points\": {}, \
+                     \"kdtree\": {{\"build_ms\": {:.1}, \"queries_per_s\": {:.0}}}, \
+                     \"grid\": {{\"build_ms\": {:.1}, \"queries_per_s\": {:.0}}}, \
+                     \"speedup\": {:.3}}}",
+                    r.points,
+                    r.kd_build_ms,
+                    r.kd_qps,
+                    r.grid_build_ms,
+                    r.grid_qps,
+                    r.grid_qps / r.kd_qps
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"nn_scaling\",\n  \"queries\": {QUERIES},\n  \
+             \"max_dist\": {:.1},\n  \"cell_size\": {CELL_SIZE},\n  \
+             \"max_ring\": {MAX_RING},\n  \"tiers\": [\n{}\n  ]\n}}\n",
+            MAX_DIST_SQ.sqrt(),
+            tier_objs.join(",\n")
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
+    }
+    println!("nn_scaling bench complete");
+}

@@ -1,0 +1,270 @@
+//! `bench_diff` — CI regression gate over bench JSON files.
+//!
+//! Compares every numeric leaf of a fresh bench run against the
+//! committed baseline and fails (exit 1) when a shared key drifts past
+//! the tolerance. Baselines deliberately commit only deterministic
+//! contract keys (counts, allocation rates); machine-dependent keys
+//! (wall times, throughput) are absent from the baseline or skipped via
+//! `--skip`, so the gate never flakes on runner speed.
+//!
+//!   bench_diff <baseline.json> <fresh.json> \
+//!       [--tolerance 0.15] [--skip SUBSTRING]...
+//!
+//! Rules, per dotted key present in **both** files:
+//! * baseline 0 ⇒ fresh must be exactly 0 (a zero contract, e.g.
+//!   allocations/job, has no meaningful relative tolerance);
+//! * otherwise |fresh − base| / |base| must be ≤ tolerance.
+//!
+//! A baseline key missing from the fresh run is itself a failure (the
+//! bench stopped reporting a contract); extra fresh keys are ignored.
+//! JSON parsing is hand-rolled like the benches' writer — the crate
+//! keeps its no-serde dependency posture.
+
+use anyhow::{bail, Context, Result};
+use std::process::ExitCode;
+
+/// Minimal JSON reader: collects `(dotted.path, value)` for every
+/// numeric leaf; strings/bools/nulls are consumed and dropped.
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { s: s.as_bytes(), i: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.s
+            .get(self.i)
+            .copied()
+            .context("unexpected end of JSON input")
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!(
+                "expected '{}' at byte {}, found '{}'",
+                b as char,
+                self.i,
+                got as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self, path: &str, out: &mut Vec<(String, f64)>) -> Result<()> {
+        match self.peek()? {
+            b'{' => self.object(path, out),
+            b'[' => self.array(path, out),
+            b'"' => self.string().map(|_| ()),
+            b't' | b'f' | b'n' => self.keyword(),
+            _ => {
+                let v = self.number()?;
+                out.push((path.to_string(), v));
+                Ok(())
+            }
+        }
+    }
+
+    fn object(&mut self, path: &str, out: &mut Vec<(String, f64)>) -> Result<()> {
+        self.expect(b'{')?;
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let child = if path.is_empty() {
+                key
+            } else {
+                format!("{path}.{key}")
+            };
+            self.value(&child, out)?;
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                c => bail!("expected ',' or '}}' in object, found '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self, path: &str, out: &mut Vec<(String, f64)>) -> Result<()> {
+        self.expect(b'[')?;
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(());
+        }
+        let mut idx = 0usize;
+        loop {
+            self.value(&format!("{path}[{idx}]"), out)?;
+            idx += 1;
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                c => bail!("expected ',' or ']' in array, found '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        while let Some(&b) = self.s.get(self.i) {
+            self.i += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    // The benches' writer only ever emits \", \\, \n:
+                    // decode those and pass anything else through.
+                    let esc = *self.s.get(self.i).context("dangling escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        other => s.push(other as char),
+                    }
+                }
+                other => s.push(other as char),
+            }
+        }
+        bail!("unterminated string")
+    }
+
+    fn keyword(&mut self) -> Result<()> {
+        for kw in ["true", "false", "null"] {
+            if self.s[self.i..].starts_with(kw.as_bytes()) {
+                self.i += kw.len();
+                return Ok(());
+            }
+        }
+        bail!("unknown keyword at byte {}", self.i)
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        while let Some(&b) = self.s.get(self.i) {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .with_context(|| format!("invalid number at byte {start}"))
+    }
+}
+
+fn numeric_leaves(path: &str) -> Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut out = Vec::new();
+    let mut p = Parser::new(&text);
+    p.value("", &mut out)
+        .with_context(|| format!("parsing {path}"))?;
+    Ok(out)
+}
+
+fn lookup(leaves: &[(String, f64)], key: &str) -> Option<f64> {
+    leaves.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+}
+
+fn run() -> Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut files = Vec::new();
+    let mut tolerance = 0.15f64;
+    let mut skips: Vec<String> = Vec::new();
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance" => {
+                tolerance = it
+                    .next()
+                    .context("--tolerance needs a value")?
+                    .parse()
+                    .context("--tolerance must be a number")?;
+            }
+            "--skip" => skips.push(it.next().context("--skip needs a substring")?),
+            _ => files.push(a),
+        }
+    }
+    let [baseline, fresh] = files.as_slice() else {
+        bail!("usage: bench_diff <baseline.json> <fresh.json> [--tolerance T] [--skip SUB]...");
+    };
+
+    let base = numeric_leaves(baseline)?;
+    let new = numeric_leaves(fresh)?;
+    let skipped = |key: &str| skips.iter().any(|s| key.contains(s.as_str()));
+
+    let mut failures = Vec::new();
+    let mut compared = 0usize;
+    for (key, b) in &base {
+        if skipped(key) {
+            continue;
+        }
+        let Some(n) = lookup(&new, key) else {
+            failures.push(format!("{key}: present in baseline, missing from fresh run"));
+            continue;
+        };
+        compared += 1;
+        if *b == 0.0 {
+            if n != 0.0 {
+                failures.push(format!("{key}: baseline 0, fresh {n} (zero contract broken)"));
+            }
+        } else {
+            let rel = (n - b).abs() / b.abs();
+            if rel > tolerance {
+                failures.push(format!(
+                    "{key}: baseline {b}, fresh {n} ({:+.1}% > ±{:.0}%)",
+                    (n / b - 1.0) * 100.0,
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+
+    println!(
+        "bench_diff: {baseline} vs {fresh} — {compared} keys compared \
+         (tolerance ±{:.0}%, {} skipped patterns)",
+        tolerance * 100.0,
+        skips.len()
+    );
+    if failures.is_empty() {
+        println!("bench_diff: OK, no regressions");
+        return Ok(true);
+    }
+    println!("bench_diff: {} regression(s):", failures.len());
+    for f in &failures {
+        println!("  FAIL {f}");
+    }
+    Ok(false)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench_diff error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -198,9 +198,10 @@ impl Parser {
     /// Attach the target-residency options shared by the localization
     /// subcommand/example: `--tiles` (submap ping-pong scenario),
     /// `--slots` (resident-target slots per backend, 0 = hwmodel
-    /// default), and `--admission` (policy for maps whose footprint
-    /// exceeds one residency slot; no parser default so a config file
-    /// can supply it).
+    /// default), `--admission` (policy for maps whose footprint exceeds
+    /// one residency slot), and `--nn-strategy` (exact kd-tree vs
+    /// voxel-grid NN per resident target). None have parser defaults so
+    /// a config file can supply them.
     pub fn residency_opts(self) -> Self {
         self.opt(
             "tiles",
@@ -215,6 +216,11 @@ impl Parser {
         .opt(
             "admission",
             "oversized-map policy: reject | downsample (default)",
+            None,
+        )
+        .opt(
+            "nn-strategy",
+            "NN index: exact | approx[:CELL,RING] | auto",
             None,
         )
     }
@@ -315,6 +321,29 @@ mod tests {
         );
         let a = p.parse(&toks(&["--admission", "shrinkwrap"])).unwrap();
         assert!(a.get_parsed::<AdmissionPolicy>("admission").is_err());
+    }
+
+    #[test]
+    fn nn_strategy_opt_parses() {
+        use crate::voxelgrid::NnStrategy;
+        let p = Parser::new("demo", "test").residency_opts();
+        // No parser default: the config-file value wins when absent.
+        let a = p.parse(&toks(&[])).unwrap();
+        assert!(a.get("nn-strategy").is_none());
+        assert_eq!(
+            a.get_or("nn-strategy", NnStrategy::Auto).unwrap(),
+            NnStrategy::Auto
+        );
+        let a = p.parse(&toks(&["--nn-strategy", "approx:0.5,2"])).unwrap();
+        assert_eq!(
+            a.get_or("nn-strategy", NnStrategy::Exact).unwrap(),
+            NnStrategy::Approx {
+                cell_size: 0.5,
+                max_ring: 2
+            }
+        );
+        let a = p.parse(&toks(&["--nn-strategy=grid"])).unwrap();
+        assert!(a.get_parsed::<NnStrategy>("nn-strategy").is_err());
     }
 
     #[test]

@@ -145,6 +145,11 @@ pub struct RunConfig {
     /// (e.g. `xla,native-sim,kdtree`); `None` = respawn the configured
     /// backend kind forever. See [`crate::fpps_api::FailoverChain`].
     pub failover: Option<crate::fpps_api::FailoverChain>,
+    /// Per-target NN index selection: `exact` (kd-tree, the historical
+    /// behavior), `approx[:CELL,RING]` (voxel grid), or `auto` (grid
+    /// for city-scale maps only). Reachable as `--nn-strategy` /
+    /// `nn_strategy=`. See [`crate::voxelgrid::NnStrategy`].
+    pub nn_strategy: crate::voxelgrid::NnStrategy,
 }
 
 impl Default for RunConfig {
@@ -167,6 +172,7 @@ impl Default for RunConfig {
             deadline_ms: 0,
             retries: 0,
             failover: None,
+            nn_strategy: crate::voxelgrid::NnStrategy::Exact,
         }
     }
 }
@@ -197,6 +203,7 @@ impl RunConfig {
             deadline_ms: kv.get_or("deadline_ms", d.deadline_ms)?,
             retries: kv.get_or("retries", d.retries)?,
             failover: kv.get_parsed("failover")?,
+            nn_strategy: kv.get_or("nn_strategy", d.nn_strategy)?,
         })
     }
 
@@ -345,6 +352,37 @@ mod tests {
         assert_eq!(reparsed, chain);
         // Garbage chains error loudly instead of silently degrading.
         let kv = KvConfig::parse("failover=fpga\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn nn_strategy_key_parses_and_defaults_exact() {
+        use crate::voxelgrid::NnStrategy;
+        // Default: the historical exact kd-tree path, bit for bit.
+        let d = RunConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(d.nn_strategy, NnStrategy::Exact);
+
+        let kv = KvConfig::parse("nn_strategy=approx:0.5,3\n").unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(
+            rc.nn_strategy,
+            NnStrategy::Approx {
+                cell_size: 0.5,
+                max_ring: 3
+            }
+        );
+        let kv = KvConfig::parse("nn_strategy=auto\n").unwrap();
+        assert_eq!(
+            RunConfig::from_kv(&kv).unwrap().nn_strategy,
+            NnStrategy::Auto
+        );
+        // Display round-trips through the config format.
+        let mut kv = KvConfig::default();
+        kv.set("nn_strategy", rc.nn_strategy);
+        let reparsed = RunConfig::from_kv(&KvConfig::parse(&kv.render()).unwrap()).unwrap();
+        assert_eq!(reparsed.nn_strategy, rc.nn_strategy);
+        // Garbage errors loudly.
+        let kv = KvConfig::parse("nn_strategy=grid\n").unwrap();
         assert!(RunConfig::from_kv(&kv).is_err());
     }
 }

@@ -240,6 +240,14 @@ impl<B: KernelBackend> KernelBackend for FaultInjectingBackend<B> {
         self.cancel = token.clone();
         self.inner.set_cancel_token(token);
     }
+
+    fn set_nn_strategy(&mut self, strategy: crate::voxelgrid::NnStrategy) {
+        self.inner.set_nn_strategy(strategy);
+    }
+
+    fn nn_strategy(&self) -> crate::voxelgrid::NnStrategy {
+        self.inner.nn_strategy()
+    }
 }
 
 #[cfg(test)]

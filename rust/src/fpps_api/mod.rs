@@ -59,6 +59,7 @@ use crate::nn::{self, KernelConfig};
 use crate::pointcloud::{pad_into, PointCloud};
 use crate::pool::{BufferPool, PooledBuf};
 use crate::runtime::{Engine, StepAccumulators};
+use crate::voxelgrid::{NnStrategy, VoxelGrid};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -82,6 +83,14 @@ impl TargetEpoch {
         TargetEpoch(*counter)
     }
 }
+
+/// Fixed query-block size for chunked NN scans: the CPU backends answer
+/// [`KernelBackend::step`]'s correspondence search in blocks of this
+/// many source points, checking the installed [`CancelToken`] between
+/// blocks — so the lane-pool watchdog can cut a city-scale step off
+/// mid-scan instead of waiting out the whole map (the one-shot scan's
+/// failure mode on million-point targets).
+pub const NN_QUERY_CHUNK: usize = 2048;
 
 /// Residency key used by the unkeyed [`KernelBackend::upload_target`]
 /// convenience: all anonymous uploads share one slot, reproducing the
@@ -334,6 +343,19 @@ pub trait KernelBackend {
     /// a wedged call instead of waiting it out. Default: ignored — a
     /// backend that never blocks for long needs no cancellation support.
     fn set_cancel_token(&mut self, _token: CancelToken) {}
+
+    /// Select which NN index answers [`Self::step`]'s correspondence
+    /// search for targets uploaded *after* this call (already-resident
+    /// targets keep the index they were built with, so set the strategy
+    /// before the first upload). Default: ignored — a backend with a
+    /// single NN path has no knob. See [`NnStrategy`].
+    fn set_nn_strategy(&mut self, _strategy: NnStrategy) {}
+
+    /// The currently selected NN strategy ([`NnStrategy::Exact`] for
+    /// backends without the knob).
+    fn nn_strategy(&self) -> NnStrategy {
+        NnStrategy::Exact
+    }
 }
 
 /// Production backend: AOT artifact on the PJRT CPU client. Keeps an
@@ -472,11 +494,23 @@ pub struct NativeSimBackend {
     nn_scratch: nn::MirrorScratch,
     /// NN result buffers, recycled per step.
     nn_out: nn::NnResult,
+    /// NN strategy applied to targets uploaded after it was set (see
+    /// [`KernelBackend::set_nn_strategy`]).
+    nn_strategy: NnStrategy,
+    /// Watchdog cancellation flag, polled between NN query chunks.
+    cancel: Option<CancelToken>,
+    /// Chunked-query progress: NN query blocks completed across all
+    /// steps (telemetry; see [`NN_QUERY_CHUNK`]).
+    nn_chunks: u64,
 }
 
 struct SimTarget {
     tgt: Vec<f32>,
     tgt_mask: Vec<f32>,
+    /// Voxel-grid sibling of the padded mirror buffers, present when
+    /// the NN strategy chose the approximate path for this target: the
+    /// unmasked points (grid indices refer to them) plus the grid.
+    grid: Option<(PointCloud, VoxelGrid)>,
 }
 
 struct SimSource {
@@ -494,7 +528,16 @@ impl NativeSimBackend {
             scratch_p: Vec::new(),
             nn_scratch: nn::MirrorScratch::default(),
             nn_out: nn::NnResult::default(),
+            nn_strategy: NnStrategy::default(),
+            cancel: None,
+            nn_chunks: 0,
         }
+    }
+
+    /// NN query blocks completed so far across all steps (the
+    /// chunked-scan progress counter).
+    pub fn nn_chunks_completed(&self) -> u64 {
+        self.nn_chunks
     }
 
     pub fn with_blocks(block_n: usize, block_m: usize) -> Self {
@@ -552,11 +595,29 @@ impl KernelBackend for NativeSimBackend {
         if tgt_mask.len() != m {
             bail!("target mask has {} entries for {m} points", tgt_mask.len());
         }
+        // Grid sibling (cold path): built over the unmasked points only,
+        // when the strategy picks the approximate index for a map of
+        // this size.
+        let kept_count = tgt_mask.iter().filter(|&&w| w > 0.0).count();
+        let grid = if self.nn_strategy.wants_grid(kept_count) {
+            let mut kept = PointCloud::with_capacity(kept_count);
+            for j in 0..m {
+                if tgt_mask[j] > 0.0 {
+                    kept.push([tgt[3 * j], tgt[3 * j + 1], tgt[3 * j + 2]]);
+                }
+            }
+            let (cell, ring) = self.nn_strategy.grid_params();
+            let g = VoxelGrid::build(&kept, cell, ring);
+            Some((kept, g))
+        } else {
+            None
+        };
         Ok(self.targets.insert(
             key,
             SimTarget {
                 tgt: tgt.to_vec(),
                 tgt_mask: tgt_mask.to_vec(),
+                grid,
             },
         ))
     }
@@ -625,6 +686,70 @@ impl KernelBackend for NativeSimBackend {
             p[3 * i + 2] = tm[8] * x + tm[9] * y + tm[10] * z + tm[11];
         }
         let p = &self.scratch_p;
+        let cancel = self.cancel.clone();
+        if let Some((kept, grid)) = &target.grid {
+            // Approximate stages 2–4: per-point voxel-grid probes
+            // instead of the blockwise mirror, in fixed-size query
+            // chunks with the cancellation flag checked between them
+            // (see [`NN_QUERY_CHUNK`]). Accumulation stays f32 partials
+            // like the wire format, so only the NN answers differ from
+            // the exact mirror — by the grid's bounded ring budget.
+            let mut count = 0f32;
+            let mut sum_p = [0f32; 3];
+            let mut sum_q = [0f32; 3];
+            let mut sum_pq = [0f32; 9];
+            let mut sum_d = 0f32;
+            let mut chunks = 0u64;
+            let mut start = 0usize;
+            while start < n {
+                if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                    self.nn_chunks += chunks;
+                    bail!(
+                        "native-sim step cancelled between NN query chunks \
+                         ({chunks} of {} blocks done)",
+                        n.div_ceil(NN_QUERY_CHUNK)
+                    );
+                }
+                let end = (start + NN_QUERY_CHUNK).min(n);
+                for i in start..end {
+                    let w = src_mask[i];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let pi = [p[3 * i], p[3 * i + 1], p[3 * i + 2]];
+                    let Some(nb) = grid.nearest(kept, pi, max_dist_sq) else {
+                        continue;
+                    };
+                    let qj = kept.get(nb.index as usize);
+                    count += w;
+                    for a in 0..3 {
+                        sum_p[a] += w * pi[a];
+                        sum_q[a] += w * qj[a];
+                        for b in 0..3 {
+                            sum_pq[a * 3 + b] += w * pi[a] * qj[b];
+                        }
+                    }
+                    sum_d += w * nb.dist_sq;
+                }
+                chunks += 1;
+                start = end;
+            }
+            self.nn_chunks += chunks;
+            let mut wire = [0f32; 17];
+            wire[0] = count;
+            wire[1..4].copy_from_slice(&sum_p);
+            wire[4..7].copy_from_slice(&sum_q);
+            wire[7..16].copy_from_slice(&sum_pq);
+            wire[16] = sum_d;
+            self.device_time += t0.elapsed();
+            return StepAccumulators::from_wire(&wire);
+        }
+        // The exact mirror is one blockwise call; honour a cancellation
+        // raised before it starts (a mid-mirror cut is the chunked grid
+        // path's job — the mirror's padded capacity bounds its runtime).
+        if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+            bail!("native-sim step cancelled before the NN mirror");
+        }
         // Stage 2+3: NN search (blockwise mirror, recycled buffers).
         nn::kernel_mirror_into(
             p,
@@ -674,6 +799,18 @@ impl KernelBackend for NativeSimBackend {
     fn device_time(&self) -> Duration {
         self.device_time
     }
+
+    fn set_cancel_token(&mut self, token: CancelToken) {
+        self.cancel = Some(token);
+    }
+
+    fn set_nn_strategy(&mut self, strategy: NnStrategy) {
+        self.nn_strategy = strategy;
+    }
+
+    fn nn_strategy(&self) -> NnStrategy {
+        self.nn_strategy
+    }
 }
 
 /// Exact kd-tree CPU path behind the [`KernelBackend`] interface — the
@@ -683,15 +820,34 @@ impl KernelBackend for NativeSimBackend {
 /// the FPGA wire format; Table III shows the two agree to < 0.01 m.
 pub struct KdTreeCpuBackend {
     device_time: Duration,
-    /// Resident kd-trees, one per target key: built once per upload,
-    /// queried every step of every alignment that reuses the target —
-    /// and *kept* across alternating targets up to the slot count.
-    targets: ResidentSlots<OwnedKdTree>,
+    /// Resident NN indexes, one [`KdSlot`] per target key: built once
+    /// per upload, queried every step of every alignment that reuses
+    /// the target — and *kept* across alternating targets up to the
+    /// slot count. Each slot carries the exact kd-tree and, when the
+    /// active [`NnStrategy`] asks for it, a [`VoxelGrid`] sibling over
+    /// the same kept points.
+    targets: ResidentSlots<KdSlot>,
     source: Option<KdSource>,
     builds: u64,
     /// Optional cross-instance build counter (lane-pool tests sum the
     /// builds of every lane's backend through one shared counter).
     shared_builds: Option<Arc<AtomicU64>>,
+    /// Exact / approximate NN selection applied at the *next* target
+    /// upload (resident slots keep the index they were built with).
+    nn_strategy: NnStrategy,
+    /// Watchdog cancellation flag, checked between NN query chunks.
+    cancel: Option<CancelToken>,
+    /// Completed [`NN_QUERY_CHUNK`]-sized query blocks across all steps.
+    nn_chunks: u64,
+    /// Steps cut off between chunks by a raised cancellation token.
+    nn_cancels: u64,
+}
+
+/// One resident target's NN indexes: the exact kd-tree always, plus the
+/// voxel grid when the upload-time [`NnStrategy`] selected it.
+struct KdSlot {
+    tree: OwnedKdTree,
+    grid: Option<VoxelGrid>,
 }
 
 struct KdSource {
@@ -707,6 +863,10 @@ impl KdTreeCpuBackend {
             source: None,
             builds: 0,
             shared_builds: None,
+            nn_strategy: NnStrategy::default(),
+            cancel: None,
+            nn_chunks: 0,
+            nn_cancels: 0,
         }
     }
 
@@ -734,6 +894,20 @@ impl KdTreeCpuBackend {
     /// *per map*.
     pub fn tree_builds(&self) -> u64 {
         self.builds
+    }
+
+    /// Chunked-query progress: `(completed chunks, cancelled steps)`.
+    /// Chunks advance once per [`NN_QUERY_CHUNK`] queries; a watchdog
+    /// cut-off between chunks bumps the cancel count, so a partial step
+    /// is visible as `chunks > 0 && cancels > 0`.
+    pub fn nn_progress(&self) -> (u64, u64) {
+        (self.nn_chunks, self.nn_cancels)
+    }
+
+    /// Whether the *active* resident target carries a voxel-grid index
+    /// (i.e. the strategy at its upload selected the approximate path).
+    pub fn active_target_uses_grid(&self) -> bool {
+        self.targets.active().is_some_and(|s| s.grid.is_some())
     }
 }
 
@@ -787,7 +961,14 @@ impl KernelBackend for KdTreeCpuBackend {
         if let Some(c) = &self.shared_builds {
             c.fetch_add(1, Ordering::Relaxed);
         }
-        Ok(self.targets.insert(key, OwnedKdTree::build(kept)))
+        let tree = OwnedKdTree::build(kept);
+        let grid = if self.nn_strategy.wants_grid(tree.cloud().len()) {
+            let (cell, ring) = self.nn_strategy.grid_params();
+            Some(VoxelGrid::build(tree.cloud(), cell, ring))
+        } else {
+            None
+        };
+        Ok(self.targets.insert(key, KdSlot { tree, grid }))
     }
 
     fn activate_target(&mut self, key: u64) -> Option<TargetEpoch> {
@@ -825,7 +1006,7 @@ impl KernelBackend for KdTreeCpuBackend {
     }
 
     fn step(&mut self, transform: &Mat4, max_dist_sq: f32) -> Result<StepAccumulators> {
-        let tree = self
+        let slot = self
             .targets
             .active()
             .context("step() before upload_target(): no target uploaded")?;
@@ -838,42 +1019,83 @@ impl KernelBackend for KdTreeCpuBackend {
         // Transform in f32, like the device's point cloud transformer.
         let tm = transform.to_f32_row_major();
         let mut acc = StepAccumulators::default();
-        for i in 0..n {
-            if state.src_mask[i] == 0.0 {
-                continue;
+        // Fixed-size query chunks with the cancellation flag checked
+        // between them: on city-scale maps the watchdog's deadline
+        // containment cuts a step off at a chunk boundary instead of
+        // waiting out the full one-shot scan. The per-point math is
+        // untouched by the restructuring, so chunking is bit-invisible.
+        let cancel = self.cancel.clone();
+        let mut chunks = 0u64;
+        let mut start = 0usize;
+        while start < n {
+            if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                self.nn_cancels += 1;
+                self.nn_chunks += chunks;
+                bail!(
+                    "kdtree-cpu step cancelled between NN query chunks \
+                     ({chunks} of {} blocks done)",
+                    n.div_ceil(NN_QUERY_CHUNK)
+                );
             }
-            let (x, y, z) = (
-                state.src[3 * i],
-                state.src[3 * i + 1],
-                state.src[3 * i + 2],
-            );
-            let p = [
-                tm[0] * x + tm[1] * y + tm[2] * z + tm[3],
-                tm[4] * x + tm[5] * y + tm[6] * z + tm[7],
-                tm[8] * x + tm[9] * y + tm[10] * z + tm[11],
-            ];
-            // Bounded search: the threshold prunes the descent, and the
-            // strict bound matches the `icp` CPU baseline's rejection.
-            let Some(nb) = tree.nearest_within_sq(p, max_dist_sq) else {
-                continue;
-            };
-            let q = tree.cloud().get(nb.index as usize);
-            let pv = Vec3::from_f32(p);
-            let qv = Vec3::from_f32(q);
-            acc.count += 1.0;
-            acc.sum_p = acc.sum_p + pv;
-            acc.sum_q = acc.sum_q + qv;
-            for a in 0..3 {
-                for b in 0..3 {
-                    let pa = [pv.x, pv.y, pv.z][a];
-                    let qb = [qv.x, qv.y, qv.z][b];
-                    acc.sum_pq.m[a][b] += pa * qb;
+            let end = (start + NN_QUERY_CHUNK).min(n);
+            for i in start..end {
+                if state.src_mask[i] == 0.0 {
+                    continue;
                 }
+                let (x, y, z) = (
+                    state.src[3 * i],
+                    state.src[3 * i + 1],
+                    state.src[3 * i + 2],
+                );
+                let p = [
+                    tm[0] * x + tm[1] * y + tm[2] * z + tm[3],
+                    tm[4] * x + tm[5] * y + tm[6] * z + tm[7],
+                    tm[8] * x + tm[9] * y + tm[10] * z + tm[11],
+                ];
+                // Bounded search: the threshold prunes the descent, and
+                // the strict bound matches the `icp` CPU baseline's
+                // rejection. The grid sibling (when built) answers the
+                // same bounded query within its ring budget.
+                let nb = match &slot.grid {
+                    Some(grid) => grid.nearest(slot.tree.cloud(), p, max_dist_sq),
+                    None => slot.tree.nearest_within_sq(p, max_dist_sq),
+                };
+                let Some(nb) = nb else {
+                    continue;
+                };
+                let q = slot.tree.cloud().get(nb.index as usize);
+                let pv = Vec3::from_f32(p);
+                let qv = Vec3::from_f32(q);
+                acc.count += 1.0;
+                acc.sum_p = acc.sum_p + pv;
+                acc.sum_q = acc.sum_q + qv;
+                for a in 0..3 {
+                    for b in 0..3 {
+                        let pa = [pv.x, pv.y, pv.z][a];
+                        let qb = [qv.x, qv.y, qv.z][b];
+                        acc.sum_pq.m[a][b] += pa * qb;
+                    }
+                }
+                acc.sum_sq_dist += nb.dist_sq as f64;
             }
-            acc.sum_sq_dist += nb.dist_sq as f64;
+            chunks += 1;
+            start = end;
         }
+        self.nn_chunks += chunks;
         self.device_time += t0.elapsed();
         Ok(acc)
+    }
+
+    fn set_cancel_token(&mut self, token: CancelToken) {
+        self.cancel = Some(token);
+    }
+
+    fn set_nn_strategy(&mut self, strategy: NnStrategy) {
+        self.nn_strategy = strategy;
+    }
+
+    fn nn_strategy(&self) -> NnStrategy {
+        self.nn_strategy
     }
 
     fn device_time(&self) -> Duration {
@@ -1111,6 +1333,32 @@ impl KernelBackend for BackendHandle {
             BackendHandle::Xla(b) => b.device_time(),
             BackendHandle::NativeSim(b) => b.device_time(),
             BackendHandle::KdTreeCpu(b) => b.device_time(),
+        }
+    }
+
+    fn set_cancel_token(&mut self, token: CancelToken) {
+        match self {
+            // XLA keeps the trait default (no cooperative cut-points in
+            // the AOT graph); the CPU paths honour it between chunks.
+            BackendHandle::Xla(b) => b.set_cancel_token(token),
+            BackendHandle::NativeSim(b) => b.set_cancel_token(token),
+            BackendHandle::KdTreeCpu(b) => b.set_cancel_token(token),
+        }
+    }
+
+    fn set_nn_strategy(&mut self, strategy: NnStrategy) {
+        match self {
+            BackendHandle::Xla(b) => b.set_nn_strategy(strategy),
+            BackendHandle::NativeSim(b) => b.set_nn_strategy(strategy),
+            BackendHandle::KdTreeCpu(b) => b.set_nn_strategy(strategy),
+        }
+    }
+
+    fn nn_strategy(&self) -> NnStrategy {
+        match self {
+            BackendHandle::Xla(b) => b.nn_strategy(),
+            BackendHandle::NativeSim(b) => b.nn_strategy(),
+            BackendHandle::KdTreeCpu(b) => b.nn_strategy(),
         }
     }
 }

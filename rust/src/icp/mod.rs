@@ -16,6 +16,7 @@ use crate::kdtree::{KdTree, OwnedKdTree};
 use crate::math::{kabsch_from_pairs, Mat4, Vec3};
 use crate::nn;
 use crate::pointcloud::PointCloud;
+use crate::voxelgrid::VoxelGrid;
 
 /// Correspondence search strategy for the baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,12 +158,39 @@ pub fn align_with_tree(
     )
 }
 
+/// Align `source` onto `target` through a caller-owned [`VoxelGrid`] —
+/// the approximate sibling of [`align_with_tree`]. The grid must have
+/// been built from `target`. With a ring budget covering the
+/// correspondence distance (`max_ring·cell_size ≥
+/// max_correspondence_distance`) the correspondences — and therefore
+/// the whole alignment — are bit-identical to the kd-tree path; with a
+/// tighter budget distant correspondences are dropped, trading a
+/// bounded RMSE delta for the grid's throughput (see
+/// `benches/nn_scaling.rs`).
+pub fn align_with_grid(
+    source: &PointCloud,
+    target: &PointCloud,
+    grid: &VoxelGrid,
+    initial_guess: &Mat4,
+    params: &IcpParams,
+) -> IcpResult {
+    align_impl(
+        source,
+        target,
+        &CorrSource::Grid(grid),
+        initial_guess,
+        params,
+    )
+}
+
 /// Where each iteration's correspondences come from: the per-call search
-/// strategy (over a tree built for this alignment, if any), or a
-/// caller-owned resident index (map reuse).
+/// strategy (over a tree built for this alignment, if any), a
+/// caller-owned resident index (map reuse), or a caller-owned voxel
+/// grid (approximate map reuse).
 enum CorrSource<'a> {
     PerCall(Option<&'a KdTree<'a>>),
     Resident(&'a OwnedKdTree),
+    Grid(&'a VoxelGrid),
 }
 
 /// The shared ICP outer loop — one implementation for the per-call and
@@ -265,6 +293,18 @@ fn find_correspondences(
             // SearchStrategy::KdTree exactly.
             for (i, p) in current.iter().enumerate() {
                 if let Some(n) = tree.nearest_within_sq(p, max_d2) {
+                    out.push((i as u32, n.index, n.dist_sq));
+                }
+            }
+            return out;
+        }
+        CorrSource::Grid(grid) => {
+            // Voxel grid: bounded NN inside the scanned ring
+            // neighborhood; same strictly-closer acceptance as the
+            // kd-tree, so a covering ring budget reproduces its pairs
+            // exactly.
+            for (i, p) in current.iter().enumerate() {
+                if let Some(n) = grid.nearest(target, p, max_d2) {
                     out.push((i as u32, n.index, n.dist_sq));
                 }
             }
@@ -432,6 +472,41 @@ mod tests {
         assert_eq!(a.rmse.to_bits(), b.rmse.to_bits());
         assert_eq!(a.iterations, b.iterations);
         assert_eq!(a.stop, b.stop);
+    }
+
+    #[test]
+    fn align_with_grid_covering_budget_matches_tree_bitwise() {
+        // Grid-backed map reuse with a ring budget covering the whole
+        // correspondence radius (2 rings × 1 m ≥ 1 m): identical
+        // bounded-NN answers → identical pairs → identical transforms.
+        let target = structured_cloud(900, 23);
+        let mut rng = Pcg32::new(24);
+        let gt = small_transform(&mut rng);
+        let source = target.transformed(&gt.inverse_rigid());
+        let tree = OwnedKdTree::build(target.clone());
+        let a = align_with_tree(&source, &tree, &Mat4::IDENTITY, &IcpParams::default());
+        let grid = crate::voxelgrid::VoxelGrid::build(&target, 1.0, 2);
+        let b = align_with_grid(&source, &target, &grid, &Mat4::IDENTITY, &IcpParams::default());
+        assert_eq!(a.transformation.m, b.transformation.m);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.stop, b.stop);
+    }
+
+    #[test]
+    fn align_with_grid_tight_budget_still_recovers() {
+        // A 1-ring budget at 0.5 m cells misses correspondences past
+        // ~1 m, yet the alignment must still land close to ground truth
+        // (the bounded-error regime the approx strategy promises).
+        let target = structured_cloud(1200, 25);
+        let mut rng = Pcg32::new(26);
+        let gt = small_transform(&mut rng);
+        let source = target.transformed(&gt.inverse_rigid());
+        let grid = crate::voxelgrid::VoxelGrid::build(&target, 0.5, 1);
+        let res = align_with_grid(&source, &target, &grid, &Mat4::IDENTITY, &IcpParams::default());
+        assert!(res.has_converged(), "stop={:?}", res.stop);
+        let terr = (res.transformation.translation() - gt.translation()).norm();
+        assert!(terr < 0.05, "translation err {terr}");
     }
 
     #[test]

@@ -41,4 +41,5 @@ pub mod prop;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod voxelgrid;
 pub mod bench_support;

@@ -385,6 +385,9 @@ fn cmd_localize() -> Result<()> {
     // Oversized-map policy: CLI flag > config `admission=` > default
     // (explicit downsample-to-fit).
     let admission = a.get_or("admission", rc.admission)?;
+    // NN index selection: CLI flag > config `nn_strategy=` > default
+    // (exact kd-tree, bit-identical to the pre-grid path).
+    let nn_strategy = a.get_or("nn-strategy", rc.nn_strategy)?;
     let (kind, artifacts) = backend_selection(&a)?;
     let (sup, failover) = supervision_selection(&a, &rc, kind)?;
 
@@ -414,15 +417,20 @@ fn cmd_localize() -> Result<()> {
 
     let artifacts = artifacts.as_path();
     print_supervision(&sup, &failover);
+    if nn_strategy != fpps::voxelgrid::NnStrategy::Exact {
+        println!("nn strategy: {nn_strategy}");
+    }
     // Per-lane backends; `--slots` overrides the hwmodel-derived
-    // residency slot count (0 keeps the default) and the failover chain
-    // picks the backend kind for the lane's current degradation tier.
+    // residency slot count (0 keeps the default), `--nn-strategy`
+    // selects the per-target NN index, and the failover chain picks the
+    // backend kind for the lane's current degradation tier.
     let failover_ref = &failover;
     let make_backend = |_lane: usize, tier: usize| -> anyhow::Result<BackendHandle> {
         let mut b = BackendHandle::create(failover_ref.kind_for_tier(tier), artifacts)?;
         if slots > 0 {
             b.set_residency_slots(slots);
         }
+        b.set_nn_strategy(nn_strategy);
         Ok(b)
     };
 

@@ -1,0 +1,593 @@
+//! Voxel-bucketed approximate nearest-neighbor index — the IVF-style
+//! coarse-quantization path for city-scale maps.
+//!
+//! [`VoxelGrid`] buckets the indexed points of a [`PointCloud`] into a
+//! **flat hash of fixed-size cells** (open addressing over packed
+//! integer cell coordinates, CSR-style point storage — two dense
+//! arrays, no per-cell allocation). [`VoxelGrid::nearest`] walks the
+//! query's cell neighborhood **ring by ring** outward (Chebyshev shells
+//! around the query's own cell) and stops early once the current best
+//! hit is provably closer than anything a farther ring could hold: a
+//! point in ring `r` is at least `(r-1)·cell_size` away from the query,
+//! so the scan terminates as soon as `best ≤ (r-1)·cell_size` — or when
+//! the ring budget [`VoxelGrid::max_ring`] runs out.
+//!
+//! The budget is what makes the index *approximate*: a true nearest
+//! neighbor farther than `max_ring` rings from the query cell is never
+//! visited, and the query reports the best point inside the scanned
+//! neighborhood instead (or `None` — a dropped correspondence, which
+//! ICP's correspondence-distance rejection treats exactly like an
+//! out-of-range match). With a ring budget that covers the search
+//! radius (`max_ring·cell_size ≥ max_dist`), results are exact over the
+//! bounded search: the same strictly-closer/first-found acceptance the
+//! kd-tree path uses.
+//!
+//! Queries are **allocation-free** (pure loops over the CSR arrays), so
+//! a resident grid can serve the warm engine path without breaking the
+//! data plane's 0-allocations/job invariant; building the grid is a
+//! cold-path (upload-time) cost, like the kd-tree build it sits next
+//! to.
+//!
+//! [`NnStrategy`] is the caller-facing knob: `exact` keeps the kd-tree,
+//! `approx(cell_size, max_ring)` forces the grid, and `auto` picks the
+//! grid only for maps of at least [`AUTO_GRID_MIN_POINTS`] points —
+//! below that the kd-tree is already fast enough that approximation
+//! buys nothing.
+
+use crate::kdtree::Neighbor;
+use crate::pointcloud::PointCloud;
+use anyhow::{bail, Context, Result};
+
+/// Map size (in points) at which [`NnStrategy::Auto`] switches from the
+/// exact kd-tree to the voxel grid. Below this the kd-tree answers a
+/// bounded NN query in a microsecond or less and the grid's bounded
+/// error buys nothing; above it the grid's O(points-per-neighborhood)
+/// probe wins by a growing margin (see `benches/nn_scaling.rs`).
+pub const AUTO_GRID_MIN_POINTS: usize = 200_000;
+
+/// Default grid cell edge (meters) when the strategy does not name one.
+/// Matches the engine's default max correspondence distance, so a
+/// single ring already covers the default search radius.
+pub const DEFAULT_CELL_SIZE: f32 = 1.0;
+
+/// Default ring budget when the strategy does not name one.
+pub const DEFAULT_MAX_RING: usize = 2;
+
+/// Per-resident-target NN strategy: which index answers the
+/// correspondence search of [`crate::fpps_api::KernelBackend::step`].
+///
+/// Parsed from `--nn-strategy` / the `nn_strategy=` config key:
+/// `exact`, `auto`, `approx` (defaults), or `approx:CELL,RING`
+/// (e.g. `approx:0.5,2`). `Display` round-trips the parse.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum NnStrategy {
+    /// Always the exact kd-tree — bit-identical to the pre-grid path.
+    #[default]
+    Exact,
+    /// Always the voxel grid, with an explicit cell edge (meters) and
+    /// ring budget.
+    Approx { cell_size: f32, max_ring: usize },
+    /// Per-target choice by map size: grid for maps of at least
+    /// [`AUTO_GRID_MIN_POINTS`] points (with the default cell/ring),
+    /// exact kd-tree below.
+    Auto,
+}
+
+impl NnStrategy {
+    /// Whether a target of `n_points` should get a grid under this
+    /// strategy (the per-residency-slot decision backends make at
+    /// upload time).
+    pub fn wants_grid(&self, n_points: usize) -> bool {
+        match self {
+            NnStrategy::Exact => false,
+            NnStrategy::Approx { .. } => true,
+            NnStrategy::Auto => n_points >= AUTO_GRID_MIN_POINTS,
+        }
+    }
+
+    /// `(cell_size, max_ring)` to build the grid with (defaults unless
+    /// the strategy names its own).
+    pub fn grid_params(&self) -> (f32, usize) {
+        match self {
+            NnStrategy::Approx {
+                cell_size,
+                max_ring,
+            } => (*cell_size, *max_ring),
+            _ => (DEFAULT_CELL_SIZE, DEFAULT_MAX_RING),
+        }
+    }
+}
+
+impl std::str::FromStr for NnStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let t = s.trim();
+        match t {
+            "exact" => return Ok(NnStrategy::Exact),
+            "auto" => return Ok(NnStrategy::Auto),
+            "approx" => {
+                return Ok(NnStrategy::Approx {
+                    cell_size: DEFAULT_CELL_SIZE,
+                    max_ring: DEFAULT_MAX_RING,
+                })
+            }
+            _ => {}
+        }
+        // approx:CELL,RING (accepting approx(CELL,RING) as well).
+        let body = t
+            .strip_prefix("approx:")
+            .or_else(|| t.strip_prefix("approx(").and_then(|r| r.strip_suffix(')')));
+        let Some(body) = body else {
+            bail!(
+                "unknown NN strategy {t:?} \
+                 (expected exact | auto | approx[:CELL,RING])"
+            );
+        };
+        let (cell, ring) = body.split_once(',').with_context(|| {
+            format!("NN strategy {t:?} needs two parameters: approx:CELL,RING")
+        })?;
+        let cell_size: f32 = cell
+            .trim()
+            .parse()
+            .with_context(|| format!("bad cell size {:?} in NN strategy {t:?}", cell.trim()))?;
+        if !cell_size.is_finite() || cell_size <= 0.0 {
+            bail!("cell size must be positive and finite, got {cell_size}");
+        }
+        let max_ring: usize = ring
+            .trim()
+            .parse()
+            .with_context(|| format!("bad ring budget {:?} in NN strategy {t:?}", ring.trim()))?;
+        Ok(NnStrategy::Approx {
+            cell_size,
+            max_ring,
+        })
+    }
+}
+
+impl std::fmt::Display for NnStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NnStrategy::Exact => write!(f, "exact"),
+            NnStrategy::Auto => write!(f, "auto"),
+            NnStrategy::Approx {
+                cell_size,
+                max_ring,
+            } => write!(f, "approx:{cell_size},{max_ring}"),
+        }
+    }
+}
+
+/// Hash-table sentinel: packed cell keys use 63 bits, so `u64::MAX`
+/// can never collide with a real key.
+const EMPTY: u64 = u64::MAX;
+
+/// Cell coordinates are biased into 21 bits each before packing;
+/// coordinates outside ±2²⁰ cells clamp (build and query clamp the same
+/// way, so far-out outliers degrade gracefully instead of aliasing).
+const COORD_BIAS: i64 = 1 << 20;
+
+fn pack_cell(cx: i32, cy: i32, cz: i32) -> u64 {
+    let clamp = |c: i32| ((c as i64).clamp(-COORD_BIAS, COORD_BIAS - 1) + COORD_BIAS) as u64;
+    clamp(cx) | (clamp(cy) << 21) | (clamp(cz) << 42)
+}
+
+/// SplitMix64 finalizer — the probe-sequence scrambler for the flat
+/// hash (packed neighbor cells differ in few bits; a plain modulo would
+/// cluster them).
+fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Voxel-bucketed NN index over one [`PointCloud`] (see the module
+/// docs). The grid stores **indices only** — queries take the cloud it
+/// was built from, so a backend can keep the grid next to the kd-tree
+/// that owns the points without duplicating them.
+pub struct VoxelGrid {
+    cell_size: f32,
+    inv_cell: f32,
+    max_ring: usize,
+    /// Number of indexed points (must match the query-time cloud).
+    len: usize,
+    /// Open-addressed table: packed cell key per slot ([`EMPTY`] = free).
+    keys: Vec<u64>,
+    /// Per-slot CSR range `(start, count)` into [`Self::order`].
+    ranges: Vec<(u32, u32)>,
+    /// Point indices grouped by cell, ascending within each cell (the
+    /// deterministic first-found tie-break order).
+    order: Vec<u32>,
+    /// Table capacity − 1 (power-of-two probing).
+    mask: usize,
+}
+
+impl VoxelGrid {
+    /// Bucket `cloud` into cells of edge `cell_size`, with queries
+    /// allowed to scan up to `max_ring` Chebyshev rings outward.
+    pub fn build(cloud: &PointCloud, cell_size: f32, max_ring: usize) -> Self {
+        assert!(
+            cell_size.is_finite() && cell_size > 0.0,
+            "cell size must be positive and finite, got {cell_size}"
+        );
+        let n = cloud.len();
+        assert!(n < u32::MAX as usize, "voxel grid indexes at most 2^32-1 points");
+        let mut g = Self {
+            cell_size,
+            inv_cell: 1.0 / cell_size,
+            max_ring,
+            len: n,
+            keys: Vec::new(),
+            ranges: Vec::new(),
+            order: Vec::new(),
+            mask: 0,
+        };
+        if n == 0 {
+            return g;
+        }
+        // Sized for the worst case of one distinct cell per point, at
+        // ≤ 50% load so probe chains stay short.
+        let cap = (2 * n).next_power_of_two();
+        g.mask = cap - 1;
+        g.keys = vec![EMPTY; cap];
+        g.ranges = vec![(0u32, 0u32); cap];
+        // Pass 1: count points per distinct cell (memoizing each
+        // point's slot so pass 3 probes nothing).
+        let mut slot_of = vec![0u32; n];
+        for i in 0..n {
+            let slot = g.find_or_insert(g.key_of(cloud.get(i)));
+            g.ranges[slot].1 += 1;
+            slot_of[i] = slot as u32;
+        }
+        // Pass 2: prefix-sum the counts into CSR starts (count resets
+        // to 0 and doubles as the pass-3 write cursor).
+        let mut start = 0u32;
+        for slot in 0..cap {
+            if g.keys[slot] != EMPTY {
+                let count = g.ranges[slot].1;
+                g.ranges[slot] = (start, 0);
+                start += count;
+            }
+        }
+        // Pass 3: place point indices — ascending within each cell
+        // because `i` ascends.
+        g.order = vec![0u32; n];
+        for (i, &slot) in slot_of.iter().enumerate() {
+            let (st, cur) = g.ranges[slot as usize];
+            g.order[(st + cur) as usize] = i as u32;
+            g.ranges[slot as usize].1 = cur + 1;
+        }
+        g
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Cell edge length (meters).
+    pub fn cell_size(&self) -> f32 {
+        self.cell_size
+    }
+
+    /// Ring budget queries may scan.
+    pub fn max_ring(&self) -> usize {
+        self.max_ring
+    }
+
+    /// Number of occupied cells (telemetry / ablation reporting).
+    pub fn occupied_cells(&self) -> usize {
+        self.keys.iter().filter(|&&k| k != EMPTY).count()
+    }
+
+    fn key_of(&self, p: [f32; 3]) -> u64 {
+        pack_cell(
+            (p[0] * self.inv_cell).floor() as i32,
+            (p[1] * self.inv_cell).floor() as i32,
+            (p[2] * self.inv_cell).floor() as i32,
+        )
+    }
+
+    /// Probe for `key`; claim a free slot if absent (build-time only).
+    fn find_or_insert(&mut self, key: u64) -> usize {
+        let mut slot = (hash64(key) as usize) & self.mask;
+        loop {
+            if self.keys[slot] == key {
+                return slot;
+            }
+            if self.keys[slot] == EMPTY {
+                self.keys[slot] = key;
+                return slot;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    fn lookup(&self, key: u64) -> Option<(u32, u32)> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let mut slot = (hash64(key) as usize) & self.mask;
+        loop {
+            let k = self.keys[slot];
+            if k == key {
+                return Some(self.ranges[slot]);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Best point within `max_dist_sq` of `q` inside the scanned ring
+    /// neighborhood — allocation-free, strictly-closer acceptance (the
+    /// kd-tree's bounded-search semantics). `cloud` must be the cloud
+    /// the grid was built from. `None` = nothing in range within the
+    /// ring budget (a dropped correspondence in approx mode).
+    pub fn nearest(&self, cloud: &PointCloud, q: [f32; 3], max_dist_sq: f32) -> Option<Neighbor> {
+        debug_assert_eq!(cloud.len(), self.len, "grid queried against a different cloud");
+        if self.len == 0 {
+            return None;
+        }
+        let cx = (q[0] * self.inv_cell).floor() as i32;
+        let cy = (q[1] * self.inv_cell).floor() as i32;
+        let cz = (q[2] * self.inv_cell).floor() as i32;
+        let mut best = Neighbor {
+            index: 0,
+            dist_sq: max_dist_sq,
+        };
+        let mut found = false;
+        for r in 0..=(self.max_ring as i32) {
+            if r >= 1 {
+                // Everything in ring r (and beyond) is at least
+                // (r-1)·cell away: q sits somewhere inside its own
+                // cell, and ring-r cells start r-1 whole cells past its
+                // boundary. Once the current bound can't be beaten,
+                // farther rings are pointless.
+                let lower = (r - 1) as f32 * self.cell_size;
+                if best.dist_sq <= lower * lower {
+                    break;
+                }
+            }
+            // Hollow-shell walk of ring r, fixed order (z, y, x
+            // ascending) for determinism; interior cells were scanned
+            // by earlier rings.
+            for dz in -r..=r {
+                for dy in -r..=r {
+                    let on_face = dz.abs() == r || dy.abs() == r;
+                    let step = if on_face || r == 0 { 1 } else { 2 * r };
+                    let mut dx = -r;
+                    while dx <= r {
+                        let cell = [cx + dx, cy + dy, cz + dz];
+                        self.scan_cell(cloud, cell, q, &mut best, &mut found);
+                        dx += step;
+                    }
+                }
+            }
+        }
+        found.then_some(best)
+    }
+
+    fn scan_cell(
+        &self,
+        cloud: &PointCloud,
+        cell: [i32; 3],
+        q: [f32; 3],
+        best: &mut Neighbor,
+        found: &mut bool,
+    ) {
+        let Some((start, count)) = self.lookup(pack_cell(cell[0], cell[1], cell[2])) else {
+            return;
+        };
+        for k in start..start + count {
+            let i = self.order[k as usize];
+            let p = cloud.get(i as usize);
+            let dx = p[0] - q[0];
+            let dy = p[1] - q[1];
+            let dz = p[2] - q[2];
+            let d2 = dx * dx + dy * dy + dz * dz;
+            if d2 < best.dist_sq {
+                *best = Neighbor { index: i, dist_sq: d2 };
+                *found = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn random_cloud(n: usize, extent: f32, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let mut c = PointCloud::with_capacity(n);
+        for _ in 0..n {
+            c.push([
+                rng.range(-extent, extent),
+                rng.range(-extent, extent),
+                rng.range(-extent, extent),
+            ]);
+        }
+        c
+    }
+
+    fn brute(cloud: &PointCloud, q: [f32; 3], max_dist_sq: f32) -> Option<Neighbor> {
+        let mut best = Neighbor {
+            index: 0,
+            dist_sq: max_dist_sq,
+        };
+        let mut found = false;
+        for i in 0..cloud.len() {
+            let p = cloud.get(i);
+            let (dx, dy, dz) = (p[0] - q[0], p[1] - q[1], p[2] - q[2]);
+            let d2 = dx * dx + dy * dy + dz * dz;
+            if d2 < best.dist_sq {
+                best = Neighbor {
+                    index: i as u32,
+                    dist_sq: d2,
+                };
+                found = true;
+            }
+        }
+        found.then_some(best)
+    }
+
+    #[test]
+    fn covering_ring_budget_matches_brute_force() {
+        // With max_ring·cell ≥ max_dist the scanned neighborhood covers
+        // the whole search ball, so the grid is exact over the bounded
+        // query — same distance, and (ties aside) the same index.
+        let cloud = random_cloud(600, 5.0, 11);
+        let grid = VoxelGrid::build(&cloud, 1.0, 3);
+        let max_d2 = 4.0; // radius 2: any in-range point sits within ring ⌊2/1⌋+1 = 3
+        let mut rng = Pcg32::new(12);
+        let mut hits = 0;
+        for _ in 0..500 {
+            let q = [
+                rng.range(-6.0, 6.0),
+                rng.range(-6.0, 6.0),
+                rng.range(-6.0, 6.0),
+            ];
+            let a = grid.nearest(&cloud, q, max_d2);
+            let b = brute(&cloud, q, max_d2);
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.dist_sq.to_bits(), y.dist_sq.to_bits(), "query {q:?}");
+                    assert_eq!(x.index, y.index, "query {q:?}");
+                    hits += 1;
+                }
+                (a, b) => panic!("grid {a:?} vs brute {b:?} for query {q:?}"),
+            }
+        }
+        assert!(hits > 100, "workload too sparse to be meaningful: {hits}");
+    }
+
+    #[test]
+    fn bounded_ring_returns_true_distances_and_respects_the_bound() {
+        // A tight ring budget may miss the global nearest, but whatever
+        // it returns must be a real in-range point, never closer than
+        // the true nearest.
+        let cloud = random_cloud(400, 8.0, 21);
+        let grid = VoxelGrid::build(&cloud, 0.5, 1);
+        let mut rng = Pcg32::new(22);
+        for _ in 0..300 {
+            let q = [
+                rng.range(-9.0, 9.0),
+                rng.range(-9.0, 9.0),
+                rng.range(-9.0, 9.0),
+            ];
+            let max_d2 = 2.25;
+            if let Some(nb) = grid.nearest(&cloud, q, max_d2) {
+                assert!(nb.dist_sq < max_d2);
+                let p = cloud.get(nb.index as usize);
+                let d2 = (p[0] - q[0]).powi(2) + (p[1] - q[1]).powi(2) + (p[2] - q[2]).powi(2);
+                assert_eq!(d2.to_bits(), nb.dist_sq.to_bits(), "reported distance is real");
+                let truth = brute(&cloud, q, max_d2).expect("brute sees at least the grid's hit");
+                assert!(truth.dist_sq <= nb.dist_sq, "grid can't beat the true nearest");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_out_of_range_queries_return_none() {
+        let grid = VoxelGrid::build(&PointCloud::new(), 1.0, 4);
+        assert!(grid.is_empty());
+        assert!(grid.nearest(&PointCloud::new(), [0.0; 3], 1e9).is_none());
+
+        let mut c = PointCloud::new();
+        c.push([100.0, 100.0, 100.0]);
+        let grid = VoxelGrid::build(&c, 1.0, 64);
+        assert!(grid.nearest(&c, [0.0; 3], 1.0).is_none(), "out of range");
+        let nb = grid.nearest(&c, [0.0; 3], 1e9).expect("big budget reaches it");
+        assert_eq!(nb.index, 0);
+    }
+
+    #[test]
+    fn ascending_index_tie_break_is_deterministic() {
+        // Two coincident points: the lower index wins (same rule as the
+        // brute-force and kd-tree first-found acceptance).
+        let mut c = PointCloud::new();
+        c.push([0.5, 0.5, 0.5]);
+        c.push([0.25, 0.25, 0.25]);
+        c.push([0.25, 0.25, 0.25]);
+        let grid = VoxelGrid::build(&c, 1.0, 1);
+        let nb = grid.nearest(&c, [0.25, 0.25, 0.25], 1.0).unwrap();
+        assert_eq!(nb.index, 1, "lowest index wins exact ties");
+        assert_eq!(nb.dist_sq, 0.0);
+    }
+
+    #[test]
+    fn occupancy_telemetry_counts_cells() {
+        let mut c = PointCloud::new();
+        c.push([0.1, 0.1, 0.1]);
+        c.push([0.9, 0.9, 0.9]); // same cell at cell_size 1
+        c.push([5.5, 0.0, 0.0]); // different cell
+        let grid = VoxelGrid::build(&c, 1.0, 1);
+        assert_eq!(grid.len(), 3);
+        assert_eq!(grid.occupied_cells(), 2);
+        assert_eq!(grid.cell_size(), 1.0);
+        assert_eq!(grid.max_ring(), 1);
+    }
+
+    #[test]
+    fn strategy_parses_and_round_trips() {
+        let cases = [
+            ("exact", NnStrategy::Exact),
+            ("auto", NnStrategy::Auto),
+            (
+                "approx",
+                NnStrategy::Approx {
+                    cell_size: DEFAULT_CELL_SIZE,
+                    max_ring: DEFAULT_MAX_RING,
+                },
+            ),
+            (
+                "approx:0.5,2",
+                NnStrategy::Approx {
+                    cell_size: 0.5,
+                    max_ring: 2,
+                },
+            ),
+            (
+                "approx(2.5,4)",
+                NnStrategy::Approx {
+                    cell_size: 2.5,
+                    max_ring: 4,
+                },
+            ),
+        ];
+        for (s, want) in cases {
+            let got: NnStrategy = s.parse().unwrap_or_else(|e| panic!("{s:?}: {e:#}"));
+            assert_eq!(got, want, "{s:?}");
+            let shown = got.to_string();
+            let again: NnStrategy = shown.parse().unwrap();
+            assert_eq!(again, got, "display {shown:?} must round-trip");
+        }
+        for bad in ["", "grid", "approx:1", "approx:0,2", "approx:-1,2", "approx:1,x"] {
+            assert!(bad.parse::<NnStrategy>().is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn auto_strategy_flips_on_map_size() {
+        assert!(!NnStrategy::Auto.wants_grid(AUTO_GRID_MIN_POINTS - 1));
+        assert!(NnStrategy::Auto.wants_grid(AUTO_GRID_MIN_POINTS));
+        assert!(!NnStrategy::Exact.wants_grid(usize::MAX));
+        let approx = NnStrategy::Approx {
+            cell_size: 0.5,
+            max_ring: 3,
+        };
+        assert!(approx.wants_grid(1));
+        assert_eq!(approx.grid_params(), (0.5, 3));
+        assert_eq!(NnStrategy::Auto.grid_params(), (DEFAULT_CELL_SIZE, DEFAULT_MAX_RING));
+        assert_eq!(NnStrategy::default(), NnStrategy::Exact, "inert default");
+    }
+}

@@ -6,12 +6,13 @@
 //! concurrently scheduled tests cannot pollute the counters.
 
 use fpps::alloc_counter::{snapshot, CountingAlloc};
-use fpps::fpps_api::{FppsIcp, KernelBackend};
+use fpps::fpps_api::{FppsIcp, KdTreeCpuBackend, KernelBackend};
 use fpps::math::{Mat3, Mat4, Vec3};
 use fpps::pointcloud::PointCloud;
 use fpps::pool::ring::SpscRing;
 use fpps::pool::BufferPool;
 use fpps::rng::Pcg32;
+use fpps::voxelgrid::NnStrategy;
 use std::sync::{Arc, Mutex};
 
 #[global_allocator]
@@ -77,6 +78,21 @@ fn native_sim_steady_state_alignment_is_allocation_free() {
 #[test]
 fn kdtree_steady_state_alignment_is_allocation_free() {
     assert_steady_state_is_allocation_free(FppsIcp::kdtree_cpu(), "kdtree-cpu");
+}
+
+#[test]
+fn kdtree_with_voxel_grid_steady_state_is_allocation_free() {
+    // The voxel-grid NN path must keep the warm-path guarantee: the grid
+    // is built once at upload (cached by the residency slot alongside the
+    // kd-tree), and its ring-scan queries plus the chunked query loop and
+    // cancellation checks are pure reads. tests/nn_strategy.rs proves
+    // this exact strategy routes queries through the grid.
+    let mut b = KdTreeCpuBackend::new();
+    b.set_nn_strategy(NnStrategy::Approx {
+        cell_size: 1.0,
+        max_ring: 2,
+    });
+    assert_steady_state_is_allocation_free(FppsIcp::with_backend(b), "kdtree-cpu+grid");
 }
 
 #[test]

@@ -197,6 +197,58 @@ fn wedged_lane_is_cut_off_by_the_watchdog() {
 }
 
 #[test]
+fn deadline_expired_job_on_a_large_map_stops_between_chunks() {
+    // City-scale containment, no injected stall needed: the map is big
+    // enough that the alignment alone blows the deadline. The watchdog
+    // raises the lane's cancellation token, the chunked NN loop checks
+    // it between fixed-size query blocks and bails mid-step, and the
+    // job surfaces as a contained DeadlineExceeded instead of running
+    // the full scan to completion.
+    let target = structured_cloud(120_000, 901);
+    let source = structured_cloud(50_000, 902);
+    let jobs = vec![RegistrationJob::new(0, 0, source, target, Mat4::IDENTITY)];
+    let sup = SupervisorConfig {
+        deadline: Some(Duration::from_millis(250)),
+        ..Default::default()
+    };
+    let start = Instant::now();
+    let report = run_registration_batch_supervised(
+        jobs,
+        1,
+        2,
+        LaneIcpConfig::default(),
+        sup,
+        |_lane, _tier| Ok(KdTreeCpuBackend::new()),
+    )
+    .unwrap();
+    let elapsed = start.elapsed();
+
+    // 50k queries × 50 iterations against a 120k-point map would take
+    // far longer than this bound if the deadline were ignored.
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "deadline containment must cut the scan short, ran {elapsed:?}"
+    );
+    assert_exactly_once(&report, 1);
+    let o = &report.outcomes[0];
+    assert_eq!(
+        o.stop,
+        StopReason::DeadlineExceeded,
+        "oversized job must surface the deadline, got {:?} ({:?})",
+        o.stop,
+        o.error
+    );
+    assert!(o.is_failed() && o.rmse.is_nan(), "contained failure");
+    assert!(
+        o.error.as_deref().unwrap_or("").contains("deadline"),
+        "the error names the deadline: {:?}",
+        o.error
+    );
+    let deadline_missed: usize = report.lanes.iter().map(|l| l.deadline_missed).sum();
+    assert!(deadline_missed >= 1, "the miss must be accounted on a lane");
+}
+
+#[test]
 fn corrupted_transforms_are_contained_or_retried() {
     let n = 3;
     let baseline = clean_baseline(n);
