@@ -1,9 +1,14 @@
-//! Multi-client registration service demo — the coordinator's lane pool
-//! as a long-running system component: M concurrent client streams
-//! (each a LiDAR source producing frame pairs at its own rate) are
-//! multiplexed over K worker lanes, each lane owning its own backend
-//! instance, the way the FPPS host process would serve several
-//! perception stacks from one shared accelerator.
+//! Multi-client registration service demo — the serving tier as a
+//! long-running system component: M concurrent client streams (each a
+//! LiDAR source producing frame pairs at its own rate) are multiplexed
+//! over K worker lanes through non-blocking submission handles, the way
+//! the FPPS host process would serve several perception stacks from one
+//! shared accelerator.
+//!
+//! The old thread-per-client pattern is gone: a bounded pool of driver
+//! threads (at most 8) fans the streams out over per-client
+//! `ClientStream`s with bounded backpressure — a full stream parks the
+//! driver briefly instead of blocking a lane.
 //!
 //! Reports aggregate throughput, p50/p99 service latency, queue-wait
 //! backpressure, and per-lane / per-stream breakdowns.
@@ -11,23 +16,35 @@
 //!   cargo run --release --example registration_server -- \
 //!       [--streams 4] [--lanes 2] [--frames 10] [--backend native-sim]
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 use fpps::cli::{backend_selection, Parser};
 use fpps::coordinator::{
-    run_supervised_lane_pool, sequence_pair_jobs, LaneIcpConfig, PipelineConfig, SupervisorConfig,
+    sequence_pair_jobs, CompletionHandle, LaneIcpConfig, PipelineConfig, ServingConfig,
+    ServingPool, SloClass, Submission, SupervisorConfig,
 };
 use fpps::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
 use fpps::fpps_api::{BackendHandle, FailoverChain};
 use fpps::report::Table;
 
 fn main() -> Result<()> {
-    let p = Parser::new("registration_server", "multi-client lane-pool demo")
+    let p = Parser::new("registration_server", "multi-client serving-tier demo")
         .opt("streams", "concurrent client streams", Some("4"))
         .opt("frames", "frames per stream", Some("10"))
         .opt("sample", "source sample size", Some("1024"))
         .opt("capacity", "target buffer capacity", Some("8192"))
+        .opt(
+            "slo",
+            "SLO class: latency-critical | standard | best-effort",
+            Some("standard"),
+        )
+        .opt(
+            "stream-depth",
+            "per-client in-flight bound before park/shed",
+            Some("4"),
+        )
         .lane_opts("2")
         .backend_opts()
         .supervision_opts();
@@ -38,8 +55,9 @@ fn main() -> Result<()> {
     let queue_depth: usize = a.get_or("queue-depth", 4)?;
     let sample: usize = a.get_or("sample", 1024)?;
     let capacity: usize = a.get_or("capacity", 8192)?;
+    let slo: SloClass = a.get_or("slo", SloClass::Standard)?;
+    let stream_depth: usize = a.get_or("stream-depth", 4)?;
     let (kind, artifacts) = backend_selection(&a)?;
-    let artifacts = artifacts.as_path();
     // Fault-tolerance knobs: a service puts an SLO on every job and
     // survives a flaky device (see README "Fault tolerance").
     let deadline_ms: u64 = a.get_or("deadline-ms", 0)?;
@@ -72,53 +90,56 @@ fn main() -> Result<()> {
         .collect();
     println!(
         "serving {streams} client streams x {frames} frames over {lanes} lane(s), \
-         queue depth {queue_depth}"
+         queue depth {queue_depth}, stream depth {stream_depth}"
     );
 
-    // Producer side: one thread per client stream. Acquisition (raycast +
-    // sample + downsample) runs concurrently with alignment on the lanes,
-    // and the bounded queue applies backpressure to fast clients.
-    let sequences_ref = &sequences;
-    let failover_ref = &failover;
-    let report = run_supervised_lane_pool(
+    let pool = ServingPool::start(
         lanes,
         queue_depth,
         LaneIcpConfig::default(),
         sup,
-        |_lane, tier| BackendHandle::create(failover_ref.kind_for_tier(tier), artifacts),
-        move |tx| {
-            std::thread::scope(|scope| -> Result<()> {
-                let mut handles = Vec::new();
-                for (stream, seq) in sequences_ref.iter().enumerate() {
-                    let tx = tx.clone();
-                    handles.push(scope.spawn(move || -> Result<()> {
+        ServingConfig {
+            stream_depth,
+            ..Default::default()
+        },
+        move |_lane, tier| BackendHandle::create(failover.kind_for_tier(tier), &artifacts),
+    )?;
+
+    // Driver side: a bounded pool of threads (≤ 8, however many streams
+    // there are) fans the client streams out over submission handles.
+    // Acquisition (raycast + sample + downsample) runs on the drivers,
+    // concurrent with alignment on the lanes; a stream at its in-flight
+    // depth parks its driver for a beat instead of blocking anything.
+    let drivers = streams.min(8);
+    // Each driver owns the `ClientStream`s of the streams it serves —
+    // handed over by move, so nothing is shared but the pool internals.
+    let mut per_driver: Vec<Vec<(usize, fpps::coordinator::ClientStream)>> =
+        (0..drivers).map(|_| Vec::new()).collect();
+    for stream in 0..streams {
+        per_driver[stream % drivers].push((stream, pool.client()));
+    }
+    let sequences_ref = &sequences;
+    let handles: Vec<CompletionHandle> = std::thread::scope(|scope| -> Result<Vec<_>> {
+        let mut joins = Vec::new();
+        for assigned in per_driver {
+            joins.push(scope.spawn(move || -> Result<Vec<CompletionHandle>> {
+                let mut collected = Vec::new();
+                for (stream, client) in assigned {
+                    let seq = &sequences_ref[stream];
+                    // Acquisition for this stream, preserving the panic
+                    // contract of the old thread-per-client producers: a
+                    // panicked client surfaces as a nonzero exit naming
+                    // the stream — not a torn-down driver thread.
+                    let jobs = match catch_unwind(AssertUnwindSafe(|| {
                         let cfg = PipelineConfig {
                             source_sample: sample,
                             target_capacity: capacity,
                             seed: 7 + stream as u64,
                             ..Default::default()
                         };
-                        // Acquisition (raycast + sample + downsample) for
-                        // this stream happens here, concurrent with the
-                        // other streams and with alignment on the lanes.
-                        let jobs = sequence_pair_jobs(seq, frames, stream, &cfg)
-                            .with_context(|| format!("stream {stream} acquisition"))?;
-                        for mut job in jobs {
-                            job.mark_submitted(); // queue wait starts at send
-                            if tx.send(job).is_err() {
-                                return Ok(()); // pool shut down
-                            }
-                        }
-                        Ok(())
-                    }));
-                }
-                drop(tx);
-                // A panicked client thread must surface as a nonzero
-                // exit naming the stream — not vanish into a generic
-                // producer error (or worse, a truncated-but-zero run).
-                for (stream, h) in handles.into_iter().enumerate() {
-                    match h.join() {
-                        Ok(r) => r?,
+                        sequence_pair_jobs(seq, frames, stream, &cfg)
+                    })) {
+                        Ok(r) => r.with_context(|| format!("stream {stream} acquisition"))?,
                         Err(payload) => {
                             let msg = payload
                                 .downcast_ref::<&str>()
@@ -127,16 +148,45 @@ fn main() -> Result<()> {
                                 .unwrap_or_else(|| "non-string panic payload".to_string());
                             anyhow::bail!("client stream {stream} producer panicked: {msg}");
                         }
+                    };
+                    for job in jobs {
+                        let mut job = job.with_slo(slo);
+                        loop {
+                            match client.try_submit(job)? {
+                                Submission::Accepted(h) | Submission::Shed(h) => {
+                                    collected.push(h);
+                                    break;
+                                }
+                                Submission::Parked(parked) => {
+                                    job = parked;
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                            }
+                        }
                     }
                 }
-                Ok(())
-            })
-        },
-    )?;
+                Ok(collected)
+            }));
+        }
+        let mut all = Vec::new();
+        for j in joins {
+            match j.join() {
+                Ok(r) => all.extend(r?),
+                Err(_) => anyhow::bail!("driver thread panicked"),
+            }
+        }
+        Ok(all)
+    })?;
+
+    let report = pool.shutdown()?;
+    assert!(
+        handles.iter().all(|h| h.is_complete()),
+        "shutdown resolves every handle"
+    );
 
     // ---- service log (last few responses) ----
     println!("\nservice log (last 5):");
-    for o in report.outcomes.iter().rev().take(5).rev() {
+    for o in report.lane_report.outcomes.iter().rev().take(5).rev() {
         println!(
             "  stream {:>2} job {:>10}  lane {}  rmse {:.3} m  wait {:>6.1} ms  \
              service {:>7.1} ms  |t| {:.2} m",
@@ -150,8 +200,9 @@ fn main() -> Result<()> {
         );
     }
 
-    // ---- per-lane breakdown (merged into the aggregate below) ----
-    report.lane_table("\nPer-lane breakdown").print();
+    // ---- per-lane and per-class breakdowns ----
+    report.lane_report.lane_table("\nPer-lane breakdown").print();
+    report.class_table().print();
 
     // ---- per-stream accounting ----
     let mut st = Table::new("\nPer-stream results").header(&[
@@ -160,7 +211,12 @@ fn main() -> Result<()> {
     for stream in 0..streams {
         let (mut jobs, mut ok_jobs) = (0usize, 0usize);
         let (mut rmse_sum, mut service_sum) = (0.0f64, 0.0f64);
-        for o in report.outcomes.iter().filter(|o| o.stream == stream) {
+        for o in report
+            .lane_report
+            .outcomes
+            .iter()
+            .filter(|o| o.stream == stream)
+        {
             jobs += 1;
             service_sum += o.service_ms;
             // Contained failures carry NaN rmse; keep them out of the
@@ -190,31 +246,33 @@ fn main() -> Result<()> {
     println!("\nserver summary:");
     println!(
         "  served {} alignments in {:.1} s  ->  {:.2} jobs/s aggregate",
-        report.outcomes.len(),
-        report.wall_ms / 1e3,
-        report.jobs_per_s()
+        report.lane_report.outcomes.len(),
+        report.lane_report.wall_ms / 1e3,
+        report.lane_report.jobs_per_s()
     );
     println!(
         "  service latency: mean {:.1} ms  p50 {:.1}  p99 {:.1}",
-        report.service.mean_ms(),
-        report.service.percentile_ms(50.0),
-        report.service.percentile_ms(99.0)
+        report.lane_report.service.mean_ms(),
+        report.lane_report.service.percentile_ms(50.0),
+        report.lane_report.service.percentile_ms(99.0)
     );
     println!(
         "  queue wait (backpressure): mean {:.1} ms  max {:.1} ms",
-        report.queue_wait.mean_ms(),
-        report.queue_wait.max_ms()
+        report.lane_report.queue_wait.mean_ms(),
+        report.lane_report.queue_wait.max_ms()
     );
     anyhow::ensure!(
-        report.outcomes.len() == streams * frames.saturating_sub(1),
-        "dropped jobs: served {} of {}",
-        report.outcomes.len(),
+        report.lane_report.outcomes.len() + report.total_shed()
+            == streams * frames.saturating_sub(1),
+        "dropped jobs: served {} + shed {} of {}",
+        report.lane_report.outcomes.len(),
+        report.total_shed(),
         streams * frames.saturating_sub(1)
     );
     anyhow::ensure!(
-        report.failed_jobs() == 0,
+        report.contained_failures() == 0,
         "{} jobs failed (contained per lane; see RegistrationOutcome::error)",
-        report.failed_jobs()
+        report.contained_failures()
     );
     println!("\nregistration_server OK");
     Ok(())

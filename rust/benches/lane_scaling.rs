@@ -10,6 +10,7 @@
 //!
 //!   cargo bench --bench lane_scaling
 //!   FPPS_BENCH_PAIRS=64 cargo bench --bench lane_scaling   # longer run
+//!   FPPS_BENCH_JSON=BENCH_lane_scaling.json cargo bench --bench lane_scaling
 
 use fpps::coordinator::{
     run_registration_batch, sequence_pair_jobs, LaneIcpConfig, PipelineConfig,
@@ -69,6 +70,7 @@ fn main() {
     ]);
     let mut base_jps = 0.0f64;
     let mut four_lane_ratio = None;
+    let mut measured: Vec<(usize, usize, f64)> = Vec::new();
     for &lanes in &lane_counts {
         let report = run_registration_batch(
             batch(),
@@ -80,6 +82,7 @@ fn main() {
         .expect("lane pool run");
         assert_eq!(report.outcomes.len(), jobs, "work conservation");
         let jps = report.jobs_per_s();
+        measured.push((lanes, report.outcomes.len(), jps));
         if lanes == 1 {
             base_jps = jps;
         }
@@ -105,6 +108,24 @@ fn main() {
             "\n4-lane vs 1-lane aggregate throughput: {r:.2}x \
              (target ≥ 2x with ≥ 4 cores; this host has {cores})"
         );
+    }
+
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        // Deterministic contract keys: the run shape and per-row work
+        // conservation. jobs_per_s is machine-dependent and stays out
+        // of the committed baseline.
+        let rows: Vec<String> = measured
+            .iter()
+            .map(|(lanes, served, jps)| {
+                format!("    {{\"lanes\": {lanes}, \"served\": {served}, \"jobs_per_s\": {jps:.2}}}")
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"lane_scaling\",\n  \"jobs\": {jobs},\n  \"rows\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n")
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
     }
     println!("lane_scaling bench complete");
 }

@@ -1,0 +1,168 @@
+//! Bench: serving-tier end-to-end latency per SLO class.
+//!
+//! A population of client streams (cycling through the three
+//! [`SloClass`]es) submits canonical frame pairs through non-blocking
+//! submission handles; the report is each class's p50/p99/p999
+//! end-to-end latency (submission to completion, queue wait included)
+//! plus aggregate throughput.
+//!
+//! The run shape is deterministic by construction: every client submits
+//! exactly its stream depth, no deadlines are set, and the pool-wide
+//! in-flight bound exceeds the job count — so nothing can park or shed
+//! and the per-class submitted/ok counts are exact contract keys for
+//! the CI `bench_diff` gate (latency and throughput keys are
+//! machine-dependent and stay out of the committed baseline).
+//!
+//!   cargo bench --bench serving_latency
+//!   FPPS_BENCH_CLIENTS=256 cargo bench --bench serving_latency
+//!   FPPS_BENCH_JSON=BENCH_serving.json cargo bench --bench serving_latency
+
+use fpps::coordinator::{
+    LaneIcpConfig, RegistrationJob, ServingConfig, ServingPool, SloClass, Submission,
+    SupervisorConfig,
+};
+use fpps::fpps_api::NativeSimBackend;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+const JOBS_PER_CLIENT: usize = 4;
+const STREAM_DEPTH: usize = 4; // == JOBS_PER_CLIENT: no stream ever fills
+const LANES: usize = 2;
+const PAIRS: usize = 32;
+const POINTS: usize = 320;
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+fn main() {
+    let clients: usize = std::env::var("FPPS_BENCH_CLIENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+        .max(1);
+    let jobs = clients * JOBS_PER_CLIENT;
+    println!(
+        "serving latency: {clients} clients x {JOBS_PER_CLIENT} jobs over {LANES} lane(s), \
+         stream depth {STREAM_DEPTH}, native-sim backend\n"
+    );
+
+    let canonical: Vec<(u64, Arc<PointCloud>, Arc<PointCloud>)> = (0..PAIRS)
+        .map(|k| {
+            let target = Arc::new(structured_cloud(POINTS, 100 + k as u64));
+            let gt = Mat4::from_rt(
+                Mat3::rot_z(0.005 * (k as f64 + 1.0)),
+                Vec3::new(0.05 + 0.01 * (k % 8) as f64, -0.03, 0.01),
+            );
+            let source = Arc::new(target.transformed(&gt.inverse_rigid()));
+            (k as u64, source, target)
+        })
+        .collect();
+
+    let pool = ServingPool::start(
+        LANES,
+        4,
+        LaneIcpConfig::default(),
+        SupervisorConfig::default(),
+        ServingConfig {
+            stream_depth: STREAM_DEPTH,
+            max_in_flight: jobs.max(1024),
+        },
+        |_lane, _tier| Ok(NativeSimBackend::new()),
+    )
+    .expect("serving pool start");
+
+    let streams: Vec<_> = (0..clients).map(|_| pool.client()).collect();
+    let mut handles = Vec::with_capacity(jobs);
+    for (c, stream) in streams.iter().enumerate() {
+        let class = SloClass::all()[c % 3];
+        for k in 0..JOBS_PER_CLIENT {
+            let (key, source, target) = &canonical[(c + k) % PAIRS];
+            let mut job = RegistrationJob::new_keyed(
+                (c * JOBS_PER_CLIENT + k) as u64,
+                c,
+                Arc::clone(source),
+                Arc::clone(target),
+                *key,
+                Mat4::IDENTITY,
+            )
+            .with_slo(class);
+            // Defensive park-retry; by construction nothing parks here.
+            loop {
+                match stream.try_submit(job).expect("submit") {
+                    Submission::Accepted(h) | Submission::Shed(h) => {
+                        handles.push(h);
+                        break;
+                    }
+                    Submission::Parked(back) => {
+                        job = back;
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+            }
+        }
+    }
+
+    let report = pool.shutdown().expect("serving pool shutdown");
+    assert!(
+        handles.iter().all(|h| h.is_complete()),
+        "shutdown resolves every handle"
+    );
+    assert_eq!(report.lane_report.outcomes.len(), jobs, "work conservation");
+    assert_eq!(report.total_shed(), 0, "nothing can shed in this shape");
+    assert_eq!(report.contained_failures(), 0, "no contained failures");
+
+    report.class_table().print();
+    report.lane_report.lane_table("\nPer-lane breakdown").print();
+    println!(
+        "\nserved {jobs} jobs in {:.1} s  ->  {:.1} jobs/s aggregate",
+        report.lane_report.wall_ms / 1e3,
+        report.lane_report.jobs_per_s()
+    );
+
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        let class_objs: Vec<String> = report
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "    \"{}\": {{\"submitted\": {}, \"completed\": {}, \"ok\": {}, \
+                     \"shed\": {}, \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \"p999_ms\": {:.2}}}",
+                    c.class.name(),
+                    c.submitted,
+                    c.completed,
+                    c.ok,
+                    c.shed,
+                    c.latency.percentile_ms(50.0),
+                    c.latency.percentile_ms(99.0),
+                    c.latency.percentile_ms(99.9)
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"serving_latency\",\n  \"clients\": {clients},\n  \
+             \"jobs_per_client\": {JOBS_PER_CLIENT},\n  \"jobs\": {jobs},\n  \
+             \"lanes\": {LANES},\n  \"stream_depth\": {STREAM_DEPTH},\n  \
+             \"shed_total\": {},\n  \"classes\": {{\n{}\n  }},\n  \
+             \"jobs_per_s\": {:.2}\n}}\n",
+            report.total_shed(),
+            class_objs.join(",\n"),
+            report.lane_report.jobs_per_s()
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
+    }
+    println!("serving_latency bench complete");
+}

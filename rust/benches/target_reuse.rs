@@ -8,6 +8,7 @@
 //!
 //!   cargo bench --bench target_reuse
 //!   FPPS_BENCH_SCANS=64 cargo bench --bench target_reuse   # longer run
+//!   FPPS_BENCH_JSON=BENCH_target_reuse.json cargo bench --bench target_reuse
 
 use fpps::fpps_api::FppsIcp;
 use fpps::icp::{align_with_tree, IcpParams};
@@ -132,5 +133,22 @@ fn main() {
         cached_builds
     );
     assert_eq!(cached_builds, 1, "resident map must build exactly once");
+
+    if let Ok(path) = std::env::var("FPPS_BENCH_JSON") {
+        // Deterministic contract keys: run shape and kd-build counts
+        // (fresh rebuilds once per scan, the resident map builds once).
+        // Wall times and the speedup ratio are machine-dependent and
+        // stay out of the committed baseline.
+        let json = format!(
+            "{{\n  \"bench\": \"target_reuse\",\n  \"scans\": {scans},\n  \
+             \"map_points\": {},\n  \"fresh_builds\": {fresh_builds},\n  \
+             \"cached_builds\": {cached_builds},\n  \"fresh_ms\": {fresh_ms:.1},\n  \
+             \"cached_ms\": {cached_ms:.1},\n  \"speedup\": {:.2}\n}}\n",
+            map.len(),
+            fresh_ms / cached_ms.max(1e-9)
+        );
+        std::fs::write(&path, json).expect("write FPPS_BENCH_JSON");
+        println!("wrote bench results to {path}");
+    }
     println!("target_reuse bench complete");
 }

@@ -225,6 +225,26 @@ impl Parser {
         )
     }
 
+    /// Attach the serving-tier options of `fpps serve` and the
+    /// load-generator example: `--slo` (default submission class),
+    /// `--clients` (simulated client streams), and `--stream-depth`
+    /// (per-stream in-flight bound — a full stream parks or sheds, it
+    /// never queues deeper). No parser defaults so a config file's
+    /// `slo=`/`clients=`/`stream_depth=` can supply them.
+    pub fn serving_opts(self) -> Self {
+        self.opt(
+            "slo",
+            "SLO class: latency-critical | standard | best-effort",
+            None,
+        )
+        .opt("clients", "simulated client streams", None)
+        .opt(
+            "stream-depth",
+            "per-client in-flight bound before park/shed",
+            None,
+        )
+    }
+
     /// Attach the lane-supervision options shared by the multi-lane
     /// subcommands/examples: `--deadline-ms` (per-job deadline from
     /// submission, 0 = off), `--retries` (transient-failure retry
@@ -371,6 +391,35 @@ mod tests {
         // A garbage chain errors instead of silently falling back.
         let a = p.parse(&toks(&["--failover", "fpga,asic"])).unwrap();
         assert!(a.get_parsed::<FailoverChain>("failover").is_err());
+    }
+
+    #[test]
+    fn serving_opts_parse() {
+        use crate::coordinator::SloClass;
+        let p = Parser::new("demo", "test").serving_opts();
+        // No parser defaults: config-file values win when flags are absent.
+        let a = p.parse(&toks(&[])).unwrap();
+        assert!(a.get("slo").is_none());
+        assert!(a.get("clients").is_none());
+        assert_eq!(a.get_or("slo", SloClass::Standard).unwrap(), SloClass::Standard);
+        let a = p
+            .parse(&toks(&[
+                "--slo",
+                "latency-critical",
+                "--clients=5000",
+                "--stream-depth",
+                "2",
+            ]))
+            .unwrap();
+        assert_eq!(
+            a.get_or("slo", SloClass::Standard).unwrap(),
+            SloClass::LatencyCritical
+        );
+        assert_eq!(a.get_or::<usize>("clients", 0).unwrap(), 5000);
+        assert_eq!(a.get_or::<usize>("stream-depth", 0).unwrap(), 2);
+        // Garbage class errors instead of silently defaulting.
+        let a = p.parse(&toks(&["--slo", "realtime"])).unwrap();
+        assert!(a.get_parsed::<SloClass>("slo").is_err());
     }
 
     #[test]

@@ -150,6 +150,18 @@ pub struct RunConfig {
     /// for city-scale maps only). Reachable as `--nn-strategy` /
     /// `nn_strategy=`. See [`crate::voxelgrid::NnStrategy`].
     pub nn_strategy: crate::voxelgrid::NnStrategy,
+    /// Per-client-stream in-flight bound of the serving tier (`fpps
+    /// serve --stream-depth` / `stream_depth=`); a stream at its depth
+    /// parks or sheds instead of queueing deeper. See
+    /// [`crate::coordinator::ServingConfig`].
+    pub stream_depth: usize,
+    /// Simulated client count for `fpps serve` (`--clients` /
+    /// `clients=`).
+    pub clients: usize,
+    /// Default SLO class jobs are submitted under (`--slo` / `slo=`):
+    /// `latency-critical | standard | best-effort`. See
+    /// [`crate::coordinator::SloClass`].
+    pub slo: crate::coordinator::SloClass,
 }
 
 impl Default for RunConfig {
@@ -173,6 +185,9 @@ impl Default for RunConfig {
             retries: 0,
             failover: None,
             nn_strategy: crate::voxelgrid::NnStrategy::Exact,
+            stream_depth: 4,
+            clients: 64,
+            slo: crate::coordinator::SloClass::Standard,
         }
     }
 }
@@ -204,6 +219,9 @@ impl RunConfig {
             retries: kv.get_or("retries", d.retries)?,
             failover: kv.get_parsed("failover")?,
             nn_strategy: kv.get_or("nn_strategy", d.nn_strategy)?,
+            stream_depth: kv.get_or("stream_depth", d.stream_depth)?,
+            clients: kv.get_or("clients", d.clients)?,
+            slo: kv.get_or("slo", d.slo)?,
         })
     }
 
@@ -352,6 +370,30 @@ mod tests {
         assert_eq!(reparsed, chain);
         // Garbage chains error loudly instead of silently degrading.
         let kv = KvConfig::parse("failover=fpga\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_default() {
+        use crate::coordinator::SloClass;
+        // Defaults: shallow per-stream depth, standard class.
+        let d = RunConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(d.stream_depth, 4);
+        assert_eq!(d.clients, 64);
+        assert_eq!(d.slo, SloClass::Standard);
+
+        let kv = KvConfig::parse("stream_depth=2\nclients=5000\nslo=latency-critical\n").unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.stream_depth, 2);
+        assert_eq!(rc.clients, 5000);
+        assert_eq!(rc.slo, SloClass::LatencyCritical);
+        // Display round-trips through the config format.
+        let mut kv = KvConfig::default();
+        kv.set("slo", rc.slo);
+        let reparsed = RunConfig::from_kv(&KvConfig::parse(&kv.render()).unwrap()).unwrap();
+        assert_eq!(reparsed.slo, SloClass::LatencyCritical);
+        // Garbage errors loudly.
+        let kv = KvConfig::parse("slo=realtime\n").unwrap();
         assert!(RunConfig::from_kv(&kv).is_err());
     }
 

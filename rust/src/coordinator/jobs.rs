@@ -1,0 +1,377 @@
+//! Job and report types of the multi-lane registration engine: the
+//! [`RegistrationJob`] descriptor (with its [`SloClass`] serving class),
+//! the per-job [`RegistrationOutcome`], per-lane [`LaneStats`], and the
+//! aggregate [`LaneReport`].
+
+use crate::icp::StopReason;
+use crate::math::Mat4;
+use crate::metrics::TimingStats;
+use crate::pointcloud::PointCloud;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Multi-lane batched registration engine
+// ---------------------------------------------------------------------------
+
+/// Service-level objective class a job is submitted under. Carried on
+/// every [`RegistrationJob`] and interpreted by the serving tier
+/// ([`super::serving`]): it decides what happens when the pool is
+/// saturated or a deadline cannot be met — batch entry points ignore it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Must complete by its deadline or not run at all: admission sheds
+    /// the job (structured [`StopReason::Shed`] outcome, never queued)
+    /// when the stream or pool is full, or when the estimated queue wait
+    /// already exceeds the deadline budget.
+    LatencyCritical,
+    /// Default class: parked under backpressure (the caller retries),
+    /// served with the pool-wide deadline policy.
+    #[default]
+    Standard,
+    /// Throughput filler: parked under backpressure and only served with
+    /// whatever capacity the other classes leave over (no deadline
+    /// unless the job carries one).
+    BestEffort,
+}
+
+impl SloClass {
+    /// Kebab-case name, round-tripping with [`std::str::FromStr`]
+    /// (`latency-critical | standard | best-effort`) — the `--slo` CLI
+    /// flag and `slo=` run-config key both speak this spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::LatencyCritical => "latency-critical",
+            SloClass::Standard => "standard",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// All classes, in shedding-priority order (most latency-sensitive
+    /// first) — handy for per-class report tables.
+    pub fn all() -> [SloClass; 3] {
+        [
+            SloClass::LatencyCritical,
+            SloClass::Standard,
+            SloClass::BestEffort,
+        ]
+    }
+}
+
+impl std::fmt::Display for SloClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for SloClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "latency-critical" => Ok(SloClass::LatencyCritical),
+            "standard" => Ok(SloClass::Standard),
+            "best-effort" => Ok(SloClass::BestEffort),
+            other => Err(anyhow::anyhow!(
+                "unknown SLO class {other:?} (expected latency-critical | standard | best-effort)"
+            )),
+        }
+    }
+}
+
+/// One independent frame-pair registration request.
+pub struct RegistrationJob {
+    /// Caller-assigned id; results are returned sorted by it, so ids
+    /// define the deterministic output order regardless of lane count.
+    pub id: u64,
+    /// Client/stream the job belongs to (multi-client bookkeeping).
+    pub stream: usize,
+    /// Target identity for affinity scheduling: jobs with equal keys are
+    /// routed to the lane whose backend already holds that target, so
+    /// the resident-target cache hits across jobs. [`Self::new`] derives
+    /// it from the target's content fingerprint; [`Self::new_keyed`]
+    /// takes it from the caller (e.g. one shared map, hashed once).
+    pub target_key: u64,
+    /// Shared (like `target`) so the retry path re-stages the same
+    /// points by `Arc` clone — a retry never deep-copies the cloud.
+    pub source: Arc<PointCloud>,
+    /// Shared so map-reuse workloads submit M jobs against one cloud
+    /// without M copies.
+    pub target: Arc<PointCloud>,
+    /// Initial transform (`setTransformationMatrix`).
+    pub initial: Mat4,
+    /// Per-job deadline override, measured from submission; `None`
+    /// falls back to the pool-wide [`SupervisorConfig::deadline`](super::SupervisorConfig::deadline). A
+    /// job past its deadline — queued, between retries, or mid-flight
+    /// (cut off cooperatively between ICP iterations, or by the
+    /// watchdog when the lane is wedged) — is contained as a
+    /// [`StopReason::DeadlineExceeded`] outcome.
+    pub deadline: Option<Duration>,
+    /// Per-job retry-budget override for transient failures (errors,
+    /// panics); `None` falls back to [`SupervisorConfig::max_retries`](super::SupervisorConfig::max_retries).
+    pub max_retries: Option<u32>,
+    /// Serving class (ignored by the batch entry points; see
+    /// [`SloClass`]).
+    pub slo: SloClass,
+    pub(crate) submitted: Instant,
+}
+
+impl RegistrationJob {
+    pub fn new(
+        id: u64,
+        stream: usize,
+        source: impl Into<Arc<PointCloud>>,
+        target: impl Into<Arc<PointCloud>>,
+        initial: Mat4,
+    ) -> Self {
+        let target = target.into();
+        Self {
+            id,
+            stream,
+            target_key: target.fingerprint(),
+            source: source.into(),
+            target,
+            initial,
+            deadline: None,
+            max_retries: None,
+            slo: SloClass::Standard,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Like [`Self::new`] with a caller-supplied affinity key — skips
+    /// hashing the target, for callers that build many jobs against one
+    /// shared cloud (see [`localization_jobs`](super::localization_jobs)).
+    pub fn new_keyed(
+        id: u64,
+        stream: usize,
+        source: impl Into<Arc<PointCloud>>,
+        target: impl Into<Arc<PointCloud>>,
+        target_key: u64,
+        initial: Mat4,
+    ) -> Self {
+        Self {
+            id,
+            stream,
+            target_key,
+            source: source.into(),
+            target: target.into(),
+            initial,
+            deadline: None,
+            max_retries: None,
+            slo: SloClass::Standard,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Builder: per-job deadline (see the `deadline` field).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: per-job retry budget (see the `max_retries` field).
+    pub fn with_max_retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = Some(max_retries);
+        self
+    }
+
+    /// Builder: serving class (see [`SloClass`]).
+    pub fn with_slo(mut self, slo: SloClass) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Reset the submission timestamp — call immediately before sending
+    /// a job that was built ahead of time, so the reported queue wait
+    /// measures time *queued*, not time since construction.
+    pub fn mark_submitted(&mut self) {
+        self.submitted = Instant::now();
+    }
+}
+
+/// Result of one lane-pool job.
+#[derive(Clone, Debug)]
+pub struct RegistrationOutcome {
+    pub id: u64,
+    pub stream: usize,
+    /// Which lane served the job (scheduling detail — the transform must
+    /// not depend on it; see the `lane_engine` determinism test).
+    pub lane: usize,
+    pub transform: Mat4,
+    pub rmse: f64,
+    pub iterations: u32,
+    pub stop: StopReason,
+    /// Time from submission to a lane picking the job up.
+    pub queue_wait_ms: f64,
+    /// Time inside `align()` on the lane.
+    pub service_ms: f64,
+    /// `Some(message)` when the alignment itself errored (or its
+    /// deadline expired). A failed job is *contained*: its lane keeps
+    /// draining, the outcome carries the job's initial transform and
+    /// NaN rmse, and the rest of the batch is unaffected.
+    pub error: Option<String>,
+    /// Align attempts the job consumed (1 = served first try; larger
+    /// values mean transient failures were retried).
+    pub attempts: u32,
+}
+
+impl RegistrationOutcome {
+    /// Did the alignment error (as opposed to merely not converging)?
+    pub fn is_failed(&self) -> bool {
+        self.error.is_some()
+    }
+}
+
+/// ICP parameters shared by every lane (per-job overrides travel in the
+/// job's `initial` transform only, to keep lane-count invariance).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneIcpConfig {
+    pub max_correspondence_distance: f32,
+    pub max_iteration_count: u32,
+    pub transformation_epsilon: f64,
+    /// Per-class retention of each lane engine's staging-buffer arena
+    /// (see [`crate::pool::BufferPool`]); the CLI exposes it as
+    /// `--pool-capacity`, run configs as `pool_capacity=`.
+    pub pool_capacity: usize,
+}
+
+impl Default for LaneIcpConfig {
+    fn default() -> Self {
+        Self {
+            max_correspondence_distance: 1.0,
+            max_iteration_count: 50,
+            transformation_epsilon: 1e-5,
+            pool_capacity: crate::pool::DEFAULT_RETAIN,
+        }
+    }
+}
+
+/// Per-lane execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub jobs: usize,
+    /// Jobs whose alignment errored (contained per-job, see
+    /// [`RegistrationOutcome::error`]); included in `jobs`.
+    pub failed: usize,
+    /// Targets still resident on this lane's backend at the end of the
+    /// run (≤ its residency slot count).
+    pub resident_targets: usize,
+    /// Service latency samples of this lane.
+    pub service: TimingStats,
+    /// Queue-wait samples of the jobs this lane served (scheduler
+    /// pressure as seen from this lane).
+    pub queue_wait: TimingStats,
+    /// Cumulative backend ("device") time of this lane.
+    pub device_ms: f64,
+    /// Target uploads this lane's backend actually performed.
+    pub target_uploads: usize,
+    /// Alignments that found their target already resident (affinity
+    /// scheduling + unchanged target = cache hit).
+    pub target_hits: usize,
+    /// Resident targets this lane's backend LRU-evicted — with pool-wide
+    /// residency coordination this stays 0 while any lane has free
+    /// slots.
+    pub target_evictions: usize,
+    /// Transient-failure retries this lane performed (extra align
+    /// attempts beyond each job's first).
+    pub retries: usize,
+    /// Times this lane's backend was respawned from the factory after a
+    /// panic.
+    pub restarts: usize,
+    /// Jobs on this lane contained as [`StopReason::DeadlineExceeded`]
+    /// (cooperatively, pre-service, or cut off by the watchdog);
+    /// included in `failed`.
+    pub deadline_missed: usize,
+    /// Failover tier the lane's backend ended the run on (0 = primary;
+    /// higher tiers were engaged after repeated restarts, see
+    /// [`SupervisorConfig::restarts_per_tier`](super::SupervisorConfig::restarts_per_tier)).
+    pub backend_tier: usize,
+    /// Name of the backend serving the lane at the end of the run.
+    pub backend: String,
+}
+
+/// Aggregate report of one lane-pool run.
+#[derive(Debug)]
+pub struct LaneReport {
+    /// All outcomes, sorted by job id (deterministic order).
+    pub outcomes: Vec<RegistrationOutcome>,
+    /// Per-lane statistics, sorted by lane index.
+    pub lanes: Vec<LaneStats>,
+    /// Per-lane service stats merged into one aggregate distribution.
+    pub service: TimingStats,
+    /// Queue-wait distribution across all jobs (backpressure signal).
+    pub queue_wait: TimingStats,
+    pub wall_ms: f64,
+}
+
+/// Throughput over a wall-clock window, `None` when the window is too
+/// small (or non-finite) to yield a meaningful finite rate — an empty
+/// or instantaneous batch has no throughput, not an infinite one.
+fn rate_per_s(count: usize, wall_ms: f64) -> Option<f64> {
+    if !wall_ms.is_finite() || wall_ms <= f64::EPSILON {
+        return None;
+    }
+    let rate = count as f64 / (wall_ms / 1e3);
+    rate.is_finite().then_some(rate)
+}
+
+impl LaneReport {
+    /// Aggregate throughput over the whole run; 0.0 (never NaN/inf)
+    /// when the wall-clock window is degenerate.
+    pub fn jobs_per_s(&self) -> f64 {
+        rate_per_s(self.outcomes.len(), self.wall_ms).unwrap_or(0.0)
+    }
+
+    /// Render the per-lane breakdown — shared by the `fpps batch` /
+    /// `fpps localize` subcommands and the registration-server example.
+    /// Queue-wait and jobs/s make scheduler pressure visible: a lane
+    /// whose wait grows while its jobs/s stalls is the backpressure
+    /// bottleneck.
+    pub fn lane_table(&self, title: &str) -> crate::report::Table {
+        let mut t = crate::report::Table::new(title).header(&[
+            "lane",
+            "jobs",
+            "fail",
+            "mean (ms)",
+            "p99 (ms)",
+            "wait (ms)",
+            "jobs/s",
+            "tgt up/hit/ev",
+            "rt/rs/ddl",
+            "resident",
+            "device (ms)",
+            "backend",
+        ]);
+        for l in &self.lanes {
+            let jobs_per_s = match rate_per_s(l.jobs, self.wall_ms) {
+                Some(rate) => format!("{rate:.2}"),
+                None => "-".to_string(), // degenerate window: no rate
+            };
+            t.row(vec![
+                l.lane.to_string(),
+                l.jobs.to_string(),
+                l.failed.to_string(),
+                format!("{:.1}", l.service.mean_ms()),
+                format!("{:.1}", l.service.percentile_ms(99.0)),
+                format!("{:.1}", l.queue_wait.mean_ms()),
+                jobs_per_s,
+                format!(
+                    "{}/{}/{}",
+                    l.target_uploads, l.target_hits, l.target_evictions
+                ),
+                format!("{}/{}/{}", l.retries, l.restarts, l.deadline_missed),
+                l.resident_targets.to_string(),
+                format!("{:.1}", l.device_ms),
+                format!("{} (tier {})", l.backend, l.backend_tier),
+            ]);
+        }
+        t
+    }
+
+    /// Total contained job failures across all lanes.
+    pub fn failed_jobs(&self) -> usize {
+        self.lanes.iter().map(|l| l.failed).sum()
+    }
+}

@@ -1,2969 +1,55 @@
-//! Frame-stream coordinator — the host-side system layer of Fig. 2.
+//! Host-side coordinator: frame pipeline, multi-lane registration
+//! engine, and the event-driven serving tier.
 //!
-//! The paper's host "is responsible for data transmission and invokes
-//! kernel execution according to the instructions from APIs". At system
-//! level that means keeping the accelerator fed: while frame i is being
-//! aligned, frame i+1 is already being acquired and preprocessed
-//! (sampled, padded). This module implements that as a two-stage
-//! pipeline over std threads with bounded channels (backpressure), plus
-//! the scan-to-scan odometry driver used by the end-to-end example and
-//! the Table III / IV benches.
+//! The coordinator is split into focused submodules; everything is
+//! re-exported here so callers keep using `fpps::coordinator::X`:
 //!
-//! On top of the single-stream odometry pipeline sits the **multi-lane
-//! registration engine** ([`run_lane_pool`] / [`run_registration_batch`]):
-//! K worker lanes, each owning its own [`KernelBackend`] instance, are
-//! fed by a **pool-wide residency coordinator** ([`AffinityRouter`]) —
-//! jobs sharing a target key route to a lane whose backend already
-//! holds that target resident (no re-upload, no kd-tree rebuild), a
-//! *cold* key routes to a lane with a **free residency slot** before any
-//! warm lane is made to evict, and warm lanes are only stolen from once
-//! they have a real backlog ([`STEAL_BACKLOG`] jobs deep) with another
-//! lane idle. The coordinator mirrors each lane backend's LRU resident
-//! set, and the mirror is **corrected, not guessed**: every job
-//! completion reports [`JobFeedback`] `(lane, key, uploaded, hit, ok)`
-//! back to the dispatcher, which replays actual uploads and cache hits
-//! onto a confirmed resident mirror (including the device's own LRU
-//! eviction) and *un-warms* a key whose job failed before ever touching
-//! residency — so a poisoned job can never leave a phantom warm entry
-//! steering later jobs to a cache that does not exist. The feedback
-//! protocol extends across **lane restarts**: every [`JobFeedback`]
-//! carries the lane's *generation* (bumped each time the lane's backend
-//! is respawned), and when the dispatcher learns of a restart it bumps
-//! its own generation counter and clears both the warm and the
-//! confirmed-resident mirror for that lane — a freshly built backend
-//! holds nothing, whatever earlier feedback confirmed. Feedback still
-//! in flight from the previous backend (a *stale generation*) then only
-//! settles the lane's load estimate; it must never resurrect warm keys
-//! the restart just invalidated. A lane the watchdog declared wedged is
-//! marked *down* (routing avoids it until it reports recovery) and its
-//! queued jobs are drained back to the dispatcher and re-routed. Maps
-//! that
-//! cannot fit a residency slot at all are handled up front by
-//! residency-aware admission ([`AdmissionPolicy`]: reject with a
-//! structured [`AdmissionError`], or downsample-to-fit) instead of
-//! silent shrinking. Per-job failures are contained in their
-//! [`RegistrationOutcome`] instead of killing the lane. Per-lane
-//! [`TimingStats`] merge into an aggregate [`LaneReport`]. This is how
-//! related FPGA registration stacks treat the accelerator — a shared,
-//! multi-client resource with batched dispatch and device-resident
-//! reference clouds — and it is the scaling substrate every
-//! multi-client scenario here builds on: the scan-to-map
-//! [`run_localization`] scenario (M scans against one resident map) and
-//! the tile-crossing [`run_tiled_localization`] scenario (submap
-//! ping-pong across an LRU residency set).
+//! - [`pipeline`] — frame acquisition/preprocessing, capacity fitting,
+//!   residency-aware admission ([`AdmissionPolicy`], [`admit_map`]),
+//!   and the single-stream odometry driver ([`run_odometry`]).
+//! - [`jobs`] — the work items and results that flow through the lane
+//!   pool: [`RegistrationJob`] (now carrying an [`SloClass`]),
+//!   [`RegistrationOutcome`], per-lane stats and the merged
+//!   [`LaneReport`].
+//! - [`router`] — [`AffinityRouter`], the pool-wide residency
+//!   coordinator: a warm/resident mirror per lane corrected by per-job
+//!   feedback, free-slot-first placement, bounded stealing, and
+//!   down-lane rerouting.
+//! - [`supervise`] — the supervised lane pool: per-lane SPSC rings,
+//!   the dispatcher ([`run_supervised_lane_pool`]), heartbeat watchdog,
+//!   deadlines, retries with backoff, backend respawn/failover tiers,
+//!   and the batch entry points ([`run_registration_batch`],
+//!   [`run_registration_batch_supervised`]) as thin wrappers.
+//! - [`serving`] — the event-driven serving tier: non-blocking
+//!   [`ServingPool::submit`](ServingPool) returning a
+//!   [`CompletionHandle`] (hand-rolled waker-style completion events
+//!   off the dispatcher's done channel — no tokio), per-client
+//!   [`ClientStream`]s with bounded backpressure (a full stream sheds
+//!   or parks the client, never blocks a lane), and SLO-classed
+//!   shedding: latency-critical work that would miss its deadline is
+//!   resolved immediately with a structured
+//!   [`StopReason::Shed`](crate::icp::StopReason) outcome instead of
+//!   queueing.
+//! - [`scenarios`] — batch scenario builders/drivers on top of the
+//!   pool: frame-pair batches, scan-to-map localization, tiled submaps.
 //!
-//! The pool is **supervised** ([`run_supervised_lane_pool`]): each job
-//! may carry its own deadline and retry budget (with pool-wide defaults
-//! from [`SupervisorConfig`]), transient align errors retry with
-//! bounded exponential backoff, a watchdog thread cuts off jobs whose
-//! deadline passes mid-flight — containing them as
-//! [`StopReason::DeadlineExceeded`] outcomes and re-routing the wedged
-//! lane's queued jobs — a panicked lane respawns its backend from the
-//! factory (advancing down a failover tier ladder after repeated
-//! restarts, see [`crate::fpps_api::FailoverChain`]), and the
-//! restart/un-warm rules above keep the router's mirror truthful
-//! through all of it.
-//!
-//! The lane **data plane is zero-copy** (see the README "Data plane"
-//! section): per-lane queues are lock-free single-producer rings
-//! ([`crate::pool::ring::SpscRing`]) carrying small job descriptors,
-//! clouds travel by `Arc` (submission and retries re-stage the same
-//! shared points), and each lane engine stages into recycled arena
-//! buffers ([`crate::pool::BufferPool`], retention set by
-//! [`LaneIcpConfig::pool_capacity`]) — so a warm lane serves a job
-//! without heap allocation on the alignment hot path (enforced by
-//! `tests/alloc_regression.rs`, measured by the `data_plane` bench).
-
-use crate::dataset::Sequence;
-use crate::fpps_api::{CancelToken, FppsIcp, KernelBackend};
-use crate::icp::StopReason;
-use crate::math::Mat4;
-use crate::metrics::TimingStats;
-use crate::pointcloud::PointCloud;
-use crate::rng::Pcg32;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::VecDeque;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
-
-/// Preprocessed frame ready for alignment.
-pub struct PreparedFrame {
-    pub index: usize,
-    /// Sampled source cloud (the paper's 4096-point sample).
-    pub source_sample: PointCloud,
-    /// Full cloud (becomes the next frame's target).
-    pub full: PointCloud,
-}
-
-/// Pipeline configuration.
-///
-/// The preprocessing knobs implement the standard LiDAR-odometry front
-/// end (range crop, ground removal, voxel grid) that PCL-based
-/// registration pipelines run before ICP. Point-to-point scan-to-scan
-/// ICP on raw ring-structured scans is identity-biased (ground rings
-/// self-match; see DESIGN.md §3 "dataset realism"), so the front end is
-/// not optional for odometry-quality tracking — though the Table III /
-/// IV benches can disable pieces of it, as they compare CPU vs device
-/// under *identical* preprocessing.
-#[derive(Clone, Copy, Debug)]
-pub struct PipelineConfig {
-    /// Per-frame source sample size (paper: 4096).
-    pub source_sample: usize,
-    /// Target cap; clouds larger than this are voxel-downsampled to fit
-    /// the device target buffer.
-    pub target_capacity: usize,
-    /// Channel depth between acquisition and alignment (double
-    /// buffering = 2, like the device's ping-pong BRAM buffers).
-    pub queue_depth: usize,
-    pub seed: u64,
-    /// Range crop (m); 0 disables.
-    pub crop_range: f32,
-    /// Drop points below this sensor-frame z (ground removal; the
-    /// sensor sits ~1.73 m up, so −1.2 keeps everything ≥ ~0.5 m above
-    /// the road). `f32::NEG_INFINITY` disables.
-    pub ground_z_min: f32,
-    /// Voxel-grid leaf applied to both clouds (m); 0 disables.
-    pub voxel_leaf: f32,
-    /// Multi-start bootstrap: number of forward-translation seeds tried
-    /// on the first frame (and after tracking loss). 0 = identity only.
-    pub bootstrap_seeds: usize,
-    /// Spacing between bootstrap seeds along +x (m).
-    pub bootstrap_step: f32,
-    /// How maps whose footprint exceeds one residency slot
-    /// (`target_capacity` points) are admitted (see [`admit_map`]).
-    pub admission: AdmissionPolicy,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        Self {
-            source_sample: 4096,
-            target_capacity: 16_384,
-            queue_depth: 2,
-            seed: 7,
-            crop_range: 40.0,
-            ground_z_min: -1.2,
-            voxel_leaf: 0.15,
-            bootstrap_seeds: 9,
-            bootstrap_step: 0.3,
-            admission: AdmissionPolicy::DownsampleToFit,
-        }
-    }
-}
-
-impl PipelineConfig {
-    /// Paper-parity preprocessing: no front end at all (raw clouds),
-    /// as in the paper's "4096 points randomly sampled from the source".
-    pub fn raw() -> Self {
-        Self {
-            crop_range: 0.0,
-            ground_z_min: f32::NEG_INFINITY,
-            voxel_leaf: 0.0,
-            bootstrap_seeds: 0,
-            ..Default::default()
-        }
-    }
-}
-
-/// Front-end preprocessing shared by source and target.
-pub fn preprocess(cloud: &PointCloud, cfg: &PipelineConfig) -> PointCloud {
-    let mut out = PointCloud::with_capacity(cloud.len());
-    let r2max = if cfg.crop_range > 0.0 {
-        cfg.crop_range * cfg.crop_range
-    } else {
-        f32::INFINITY
-    };
-    for p in cloud.iter() {
-        let r2 = p[0] * p[0] + p[1] * p[1];
-        if r2 <= r2max && p[2] >= cfg.ground_z_min {
-            out.push(p);
-        }
-    }
-    if cfg.voxel_leaf > 0.0 {
-        out = out.voxel_downsample(cfg.voxel_leaf);
-    }
-    out
-}
-
-/// Per-frame odometry record.
-#[derive(Clone, Debug)]
-pub struct FrameRecord {
-    pub index: usize,
-    /// Scan-to-scan transform estimated by ICP.
-    pub relative: Mat4,
-    /// Accumulated pose (world ← sensor_i).
-    pub pose: Mat4,
-    pub rmse: f64,
-    pub iterations: u32,
-    pub stop: StopReason,
-    /// Wall time of the alignment (acquisition excluded — it overlaps).
-    pub align_ms: f64,
-}
-
-/// Odometry run output.
-#[derive(Debug)]
-pub struct OdometryResult {
-    pub records: Vec<FrameRecord>,
-    pub poses: Vec<Mat4>,
-    pub align_stats: TimingStats,
-    /// Time the alignment thread spent blocked waiting for frames — a
-    /// measure of how well acquisition hides behind alignment.
-    pub starvation_ms: f64,
-}
-
-impl OdometryResult {
-    /// Mean registration RMSE across frames (Table III row).
-    pub fn mean_rmse(&self) -> f64 {
-        let vals: Vec<f64> = self
-            .records
-            .iter()
-            .filter(|r| r.rmse.is_finite())
-            .map(|r| r.rmse)
-            .collect();
-        if vals.is_empty() {
-            f64::NAN
-        } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
-        }
-    }
-}
-
-/// Fit a cloud into the device target buffer: voxel-downsample with a
-/// growing leaf until it fits (PCL pipelines do exactly this to bound
-/// map density). `seed` drives the random-sample fallback, so different
-/// pipeline seeds produce different fallback samples (a fixed internal
-/// seed would silently make them identical).
-pub fn fit_to_capacity(cloud: PointCloud, capacity: usize, seed: u64) -> PointCloud {
-    if cloud.len() <= capacity {
-        return cloud;
-    }
-    let mut leaf = 0.1f32;
-    for _ in 0..12 {
-        let down = cloud.voxel_downsample(leaf);
-        if down.len() <= capacity {
-            return down;
-        }
-        leaf *= 1.6;
-    }
-    // Fall back to random sampling at the last resort (substream keeps
-    // it independent of the per-frame source-sampling streams).
-    let mut rng = Pcg32::substream(seed, 0xF17);
-    cloud.random_sample(capacity, &mut rng)
-}
-
-// ---------------------------------------------------------------------------
-// Residency-aware admission
-// ---------------------------------------------------------------------------
-
-/// What to do with a candidate resident map whose footprint exceeds one
-/// residency slot (`target_capacity` points). Parsed from the
-/// `admission=` config key and `--admission` CLI option.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum AdmissionPolicy {
-    /// Fail the run with a structured [`AdmissionError`] carrying the
-    /// `hwmodel` footprint — for serving setups where a silently
-    /// degraded map is worse than a loud rejection.
-    Reject,
-    /// Voxel-downsample (growing leaf, random-sample fallback) until the
-    /// map fits the slot, and record the decision — the pre-admission
-    /// behavior, made explicit and visible.
-    #[default]
-    DownsampleToFit,
-}
-
-impl std::str::FromStr for AdmissionPolicy {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<Self> {
-        Ok(match s {
-            "reject" => AdmissionPolicy::Reject,
-            "downsample" | "downsample-to-fit" => AdmissionPolicy::DownsampleToFit,
-            other => bail!("unknown admission policy {other:?} (expected reject | downsample)"),
-        })
-    }
-}
-
-impl std::fmt::Display for AdmissionPolicy {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
-            AdmissionPolicy::Reject => "reject",
-            AdmissionPolicy::DownsampleToFit => "downsample-to-fit",
-        })
-    }
-}
-
-/// Structured rejection of a map that does not fit one residency slot —
-/// returned (through `anyhow`, downcastable) by [`admit_map`] under
-/// [`AdmissionPolicy::Reject`].
-#[derive(Clone, Copy, Debug)]
-pub struct AdmissionError {
-    /// Raw point count of the offending map.
-    pub points: usize,
-    /// Points after padding to the kernel target block.
-    pub padded_points: usize,
-    /// HBM bytes the padded map would occupy.
-    pub footprint_bytes: u64,
-    /// Point capacity of one residency slot (`target_capacity`).
-    pub slot_capacity: usize,
-    /// HBM bytes one slot provides at that capacity.
-    pub slot_bytes: u64,
-}
-
-impl std::fmt::Display for AdmissionError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "map of {} points (padded {} = {} B HBM) exceeds the {}-point residency slot \
-             ({} B); rerun with `--admission downsample` or raise target_capacity",
-            self.points,
-            self.padded_points,
-            self.footprint_bytes,
-            self.slot_capacity,
-            self.slot_bytes
-        )
-    }
-}
-
-impl std::error::Error for AdmissionError {}
-
-/// What admission decided for one candidate map (recorded on the
-/// localization workloads so the decision is reportable, never silent).
-#[derive(Clone, Copy, Debug)]
-pub struct AdmissionDecision {
-    pub policy: AdmissionPolicy,
-    /// Point count before admission.
-    pub original_points: usize,
-    /// Point count actually admitted to the slot.
-    pub admitted_points: usize,
-    /// `hwmodel` footprint of the *original* cloud — what was asked of
-    /// the slot.
-    pub footprint: crate::hwmodel::TargetFootprint,
-    /// Point capacity of one residency slot at admission time.
-    pub slot_capacity: usize,
-}
-
-impl AdmissionDecision {
-    /// Did admission have to shrink the map to fit?
-    pub fn downsampled(&self) -> bool {
-        self.admitted_points < self.original_points
-    }
-}
-
-/// Residency-aware admission for one candidate resident map: estimate
-/// its padded HBM footprint via
-/// [`crate::hwmodel::AcceleratorConfig::target_footprint`], admit it
-/// unchanged when it fits a `cfg.target_capacity`-point slot, and
-/// otherwise apply `cfg.admission` — a structured rejection or an
-/// explicit downsample-to-fit — instead of the old silent shrink.
-pub fn admit_map(
-    cloud: PointCloud,
-    cfg: &PipelineConfig,
-) -> Result<(PointCloud, AdmissionDecision)> {
-    let hw = crate::hwmodel::AcceleratorConfig::default();
-    let block_m = crate::nn::KernelConfig::default().block_m;
-    let footprint = hw.target_footprint(cloud.len(), block_m);
-    let original_points = cloud.len();
-    let slot_capacity = cfg.target_capacity;
-    if footprint.fits_slot(slot_capacity) {
-        return Ok((
-            cloud,
-            AdmissionDecision {
-                policy: cfg.admission,
-                original_points,
-                admitted_points: original_points,
-                footprint,
-                slot_capacity,
-            },
-        ));
-    }
-    match cfg.admission {
-        AdmissionPolicy::Reject => Err(AdmissionError {
-            points: original_points,
-            padded_points: footprint.padded_points,
-            footprint_bytes: footprint.bytes,
-            slot_capacity,
-            slot_bytes: crate::hwmodel::AcceleratorConfig::resident_target_bytes(slot_capacity),
-        }
-        .into()),
-        AdmissionPolicy::DownsampleToFit => {
-            let fitted = fit_to_capacity(cloud, slot_capacity, cfg.seed);
-            let admitted_points = fitted.len();
-            Ok((
-                fitted,
-                AdmissionDecision {
-                    policy: cfg.admission,
-                    original_points,
-                    admitted_points,
-                    footprint,
-                    slot_capacity,
-                },
-            ))
-        }
-    }
-}
-
-/// Acquisition stage: generates/loads frames, samples the source, and
-/// pushes prepared frames downstream. Runs on its own thread.
-fn acquisition_thread(
-    seq: &Sequence,
-    frames: usize,
-    cfg: PipelineConfig,
-    tx: SyncSender<Result<PreparedFrame>>,
-) {
-    for i in 0..frames {
-        let item = (|| -> Result<PreparedFrame> {
-            let cloud = preprocess(&seq.frame(i)?, &cfg);
-            let mut rng = Pcg32::substream(cfg.seed, i as u64);
-            let source_sample = cloud.random_sample(cfg.source_sample, &mut rng);
-            let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
-            Ok(PreparedFrame {
-                index: i,
-                source_sample,
-                full,
-            })
-        })();
-        // Receiver hung up → stop early.
-        if tx.send(item).is_err() {
-            return;
-        }
-    }
-}
-
-/// Run scan-to-scan odometry over the first `frames` frames of `seq`
-/// using the FPPS API with the given backend.
-///
-/// Frame 0 initialises the map; each subsequent frame aligns its sample
-/// against the previous frame's full cloud, seeding ICP with the
-/// previous relative motion (constant-velocity prior — standard LiDAR
-/// odometry practice that also matches the paper's per-frame "initial
-/// transformation matrix" API).
-pub fn run_odometry<B: KernelBackend>(
-    seq: &Sequence,
-    frames: usize,
-    cfg: PipelineConfig,
-    icp: &mut FppsIcp<B>,
-) -> Result<OdometryResult> {
-    let frames = frames.min(seq.len());
-    let (tx, rx): (_, Receiver<Result<PreparedFrame>>) = sync_channel(cfg.queue_depth);
-
-    std::thread::scope(|scope| {
-        scope.spawn(|| acquisition_thread(seq, frames, cfg, tx));
-
-        let mut records = Vec::new();
-        let mut poses = vec![Mat4::IDENTITY];
-        let mut align_stats = TimingStats::new();
-        let mut starvation_ms = 0.0;
-        let mut prev_full: Option<PointCloud> = None;
-        let mut prev_relative = Mat4::IDENTITY;
-
-        loop {
-            let wait0 = std::time::Instant::now();
-            let msg = match rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // acquisition finished
-            };
-            starvation_ms += wait0.elapsed().as_secs_f64() * 1e3;
-            let frame = msg.context("frame acquisition")?;
-
-            match prev_full.take() {
-                None => {
-                    // First frame: nothing to align against.
-                    prev_full = Some(frame.full);
-                }
-                Some(target) => {
-                    let t0 = std::time::Instant::now();
-                    let bootstrap = records.is_empty()
-                        || !matches!(
-                            records.last().map(|r: &FrameRecord| r.stop),
-                            Some(StopReason::Converged) | Some(StopReason::MaxIterations)
-                        );
-                    let res = if bootstrap && cfg.bootstrap_seeds > 0 {
-                        // Multi-start global initialisation: the vehicle
-                        // moves dominantly forward, so seed a fan of +x
-                        // translations and keep the lowest-RMSE result.
-                        let mut best: Option<crate::fpps_api::FppsResult> = None;
-                        for k in 0..=cfg.bootstrap_seeds {
-                            let seed_t = Mat4::from_rt(
-                                crate::math::Mat3::IDENTITY,
-                                crate::math::Vec3::new(
-                                    (k as f64) * cfg.bootstrap_step as f64,
-                                    0.0,
-                                    0.0,
-                                ),
-                            );
-                            icp.set_input_source(frame.source_sample.clone());
-                            icp.set_input_target(target.clone());
-                            icp.set_transformation_matrix(seed_t);
-                            let r = icp.align()?;
-                            let better = match &best {
-                                None => true,
-                                Some(b) => {
-                                    r.has_converged()
-                                        && (!b.has_converged() || r.rmse < b.rmse)
-                                }
-                            };
-                            if better {
-                                best = Some(r);
-                            }
-                        }
-                        best.expect("at least one bootstrap attempt")
-                    } else {
-                        icp.set_input_source(frame.source_sample);
-                        icp.set_input_target(target);
-                        icp.set_transformation_matrix(prev_relative);
-                        icp.align()?
-                    };
-                    let align_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    align_stats.record_ms(align_ms);
-
-                    // T maps source (frame i) into target (frame i−1)
-                    // coordinates — i.e. the relative motion.
-                    let relative = res.transformation;
-                    let pose = poses.last().unwrap().mul_mat(&relative);
-                    poses.push(pose);
-                    records.push(FrameRecord {
-                        index: frame.index,
-                        relative,
-                        pose,
-                        rmse: res.rmse,
-                        iterations: res.iterations,
-                        stop: res.stop,
-                        align_ms,
-                    });
-                    prev_relative = if res.has_converged() {
-                        relative
-                    } else {
-                        Mat4::IDENTITY
-                    };
-                    prev_full = Some(frame.full);
-                }
-            }
-        }
-
-        Ok(OdometryResult {
-            records,
-            poses,
-            align_stats,
-            starvation_ms,
-        })
-    })
-}
-
-// ---------------------------------------------------------------------------
-// Multi-lane batched registration engine
-// ---------------------------------------------------------------------------
-
-/// One independent frame-pair registration request.
-pub struct RegistrationJob {
-    /// Caller-assigned id; results are returned sorted by it, so ids
-    /// define the deterministic output order regardless of lane count.
-    pub id: u64,
-    /// Client/stream the job belongs to (multi-client bookkeeping).
-    pub stream: usize,
-    /// Target identity for affinity scheduling: jobs with equal keys are
-    /// routed to the lane whose backend already holds that target, so
-    /// the resident-target cache hits across jobs. [`Self::new`] derives
-    /// it from the target's content fingerprint; [`Self::new_keyed`]
-    /// takes it from the caller (e.g. one shared map, hashed once).
-    pub target_key: u64,
-    /// Shared (like `target`) so the retry path re-stages the same
-    /// points by `Arc` clone — a retry never deep-copies the cloud.
-    pub source: Arc<PointCloud>,
-    /// Shared so map-reuse workloads submit M jobs against one cloud
-    /// without M copies.
-    pub target: Arc<PointCloud>,
-    /// Initial transform (`setTransformationMatrix`).
-    pub initial: Mat4,
-    /// Per-job deadline override, measured from submission; `None`
-    /// falls back to the pool-wide [`SupervisorConfig::deadline`]. A
-    /// job past its deadline — queued, between retries, or mid-flight
-    /// (cut off cooperatively between ICP iterations, or by the
-    /// watchdog when the lane is wedged) — is contained as a
-    /// [`StopReason::DeadlineExceeded`] outcome.
-    pub deadline: Option<Duration>,
-    /// Per-job retry-budget override for transient failures (errors,
-    /// panics); `None` falls back to [`SupervisorConfig::max_retries`].
-    pub max_retries: Option<u32>,
-    submitted: Instant,
-}
-
-impl RegistrationJob {
-    pub fn new(
-        id: u64,
-        stream: usize,
-        source: impl Into<Arc<PointCloud>>,
-        target: impl Into<Arc<PointCloud>>,
-        initial: Mat4,
-    ) -> Self {
-        let target = target.into();
-        Self {
-            id,
-            stream,
-            target_key: target.fingerprint(),
-            source: source.into(),
-            target,
-            initial,
-            deadline: None,
-            max_retries: None,
-            submitted: Instant::now(),
-        }
-    }
-
-    /// Like [`Self::new`] with a caller-supplied affinity key — skips
-    /// hashing the target, for callers that build many jobs against one
-    /// shared cloud (see [`localization_jobs`]).
-    pub fn new_keyed(
-        id: u64,
-        stream: usize,
-        source: impl Into<Arc<PointCloud>>,
-        target: impl Into<Arc<PointCloud>>,
-        target_key: u64,
-        initial: Mat4,
-    ) -> Self {
-        Self {
-            id,
-            stream,
-            target_key,
-            source: source.into(),
-            target: target.into(),
-            initial,
-            deadline: None,
-            max_retries: None,
-            submitted: Instant::now(),
-        }
-    }
-
-    /// Builder: per-job deadline (see the `deadline` field).
-    pub fn with_deadline(mut self, deadline: Duration) -> Self {
-        self.deadline = Some(deadline);
-        self
-    }
-
-    /// Builder: per-job retry budget (see the `max_retries` field).
-    pub fn with_max_retries(mut self, max_retries: u32) -> Self {
-        self.max_retries = Some(max_retries);
-        self
-    }
-
-    /// Reset the submission timestamp — call immediately before sending
-    /// a job that was built ahead of time, so the reported queue wait
-    /// measures time *queued*, not time since construction.
-    pub fn mark_submitted(&mut self) {
-        self.submitted = Instant::now();
-    }
-}
-
-/// Result of one lane-pool job.
-#[derive(Clone, Debug)]
-pub struct RegistrationOutcome {
-    pub id: u64,
-    pub stream: usize,
-    /// Which lane served the job (scheduling detail — the transform must
-    /// not depend on it; see the `lane_engine` determinism test).
-    pub lane: usize,
-    pub transform: Mat4,
-    pub rmse: f64,
-    pub iterations: u32,
-    pub stop: StopReason,
-    /// Time from submission to a lane picking the job up.
-    pub queue_wait_ms: f64,
-    /// Time inside `align()` on the lane.
-    pub service_ms: f64,
-    /// `Some(message)` when the alignment itself errored (or its
-    /// deadline expired). A failed job is *contained*: its lane keeps
-    /// draining, the outcome carries the job's initial transform and
-    /// NaN rmse, and the rest of the batch is unaffected.
-    pub error: Option<String>,
-    /// Align attempts the job consumed (1 = served first try; larger
-    /// values mean transient failures were retried).
-    pub attempts: u32,
-}
-
-impl RegistrationOutcome {
-    /// Did the alignment error (as opposed to merely not converging)?
-    pub fn is_failed(&self) -> bool {
-        self.error.is_some()
-    }
-}
-
-/// ICP parameters shared by every lane (per-job overrides travel in the
-/// job's `initial` transform only, to keep lane-count invariance).
-#[derive(Clone, Copy, Debug)]
-pub struct LaneIcpConfig {
-    pub max_correspondence_distance: f32,
-    pub max_iteration_count: u32,
-    pub transformation_epsilon: f64,
-    /// Per-class retention of each lane engine's staging-buffer arena
-    /// (see [`crate::pool::BufferPool`]); the CLI exposes it as
-    /// `--pool-capacity`, run configs as `pool_capacity=`.
-    pub pool_capacity: usize,
-}
-
-impl Default for LaneIcpConfig {
-    fn default() -> Self {
-        Self {
-            max_correspondence_distance: 1.0,
-            max_iteration_count: 50,
-            transformation_epsilon: 1e-5,
-            pool_capacity: crate::pool::DEFAULT_RETAIN,
-        }
-    }
-}
-
-/// Per-lane execution statistics.
-#[derive(Clone, Debug, Default)]
-pub struct LaneStats {
-    pub lane: usize,
-    pub jobs: usize,
-    /// Jobs whose alignment errored (contained per-job, see
-    /// [`RegistrationOutcome::error`]); included in `jobs`.
-    pub failed: usize,
-    /// Targets still resident on this lane's backend at the end of the
-    /// run (≤ its residency slot count).
-    pub resident_targets: usize,
-    /// Service latency samples of this lane.
-    pub service: TimingStats,
-    /// Queue-wait samples of the jobs this lane served (scheduler
-    /// pressure as seen from this lane).
-    pub queue_wait: TimingStats,
-    /// Cumulative backend ("device") time of this lane.
-    pub device_ms: f64,
-    /// Target uploads this lane's backend actually performed.
-    pub target_uploads: usize,
-    /// Alignments that found their target already resident (affinity
-    /// scheduling + unchanged target = cache hit).
-    pub target_hits: usize,
-    /// Resident targets this lane's backend LRU-evicted — with pool-wide
-    /// residency coordination this stays 0 while any lane has free
-    /// slots.
-    pub target_evictions: usize,
-    /// Transient-failure retries this lane performed (extra align
-    /// attempts beyond each job's first).
-    pub retries: usize,
-    /// Times this lane's backend was respawned from the factory after a
-    /// panic.
-    pub restarts: usize,
-    /// Jobs on this lane contained as [`StopReason::DeadlineExceeded`]
-    /// (cooperatively, pre-service, or cut off by the watchdog);
-    /// included in `failed`.
-    pub deadline_missed: usize,
-    /// Failover tier the lane's backend ended the run on (0 = primary;
-    /// higher tiers were engaged after repeated restarts, see
-    /// [`SupervisorConfig::restarts_per_tier`]).
-    pub backend_tier: usize,
-    /// Name of the backend serving the lane at the end of the run.
-    pub backend: String,
-}
-
-/// Aggregate report of one lane-pool run.
-#[derive(Debug)]
-pub struct LaneReport {
-    /// All outcomes, sorted by job id (deterministic order).
-    pub outcomes: Vec<RegistrationOutcome>,
-    /// Per-lane statistics, sorted by lane index.
-    pub lanes: Vec<LaneStats>,
-    /// Per-lane service stats merged into one aggregate distribution.
-    pub service: TimingStats,
-    /// Queue-wait distribution across all jobs (backpressure signal).
-    pub queue_wait: TimingStats,
-    pub wall_ms: f64,
-}
-
-/// Throughput over a wall-clock window, `None` when the window is too
-/// small (or non-finite) to yield a meaningful finite rate — an empty
-/// or instantaneous batch has no throughput, not an infinite one.
-fn rate_per_s(count: usize, wall_ms: f64) -> Option<f64> {
-    if !wall_ms.is_finite() || wall_ms <= f64::EPSILON {
-        return None;
-    }
-    let rate = count as f64 / (wall_ms / 1e3);
-    rate.is_finite().then_some(rate)
-}
-
-impl LaneReport {
-    /// Aggregate throughput over the whole run; 0.0 (never NaN/inf)
-    /// when the wall-clock window is degenerate.
-    pub fn jobs_per_s(&self) -> f64 {
-        rate_per_s(self.outcomes.len(), self.wall_ms).unwrap_or(0.0)
-    }
-
-    /// Render the per-lane breakdown — shared by the `fpps batch` /
-    /// `fpps localize` subcommands and the registration-server example.
-    /// Queue-wait and jobs/s make scheduler pressure visible: a lane
-    /// whose wait grows while its jobs/s stalls is the backpressure
-    /// bottleneck.
-    pub fn lane_table(&self, title: &str) -> crate::report::Table {
-        let mut t = crate::report::Table::new(title).header(&[
-            "lane",
-            "jobs",
-            "fail",
-            "mean (ms)",
-            "p99 (ms)",
-            "wait (ms)",
-            "jobs/s",
-            "tgt up/hit/ev",
-            "rt/rs/ddl",
-            "resident",
-            "device (ms)",
-            "backend",
-        ]);
-        for l in &self.lanes {
-            let jobs_per_s = match rate_per_s(l.jobs, self.wall_ms) {
-                Some(rate) => format!("{rate:.2}"),
-                None => "-".to_string(), // degenerate window: no rate
-            };
-            t.row(vec![
-                l.lane.to_string(),
-                l.jobs.to_string(),
-                l.failed.to_string(),
-                format!("{:.1}", l.service.mean_ms()),
-                format!("{:.1}", l.service.percentile_ms(99.0)),
-                format!("{:.1}", l.queue_wait.mean_ms()),
-                jobs_per_s,
-                format!(
-                    "{}/{}/{}",
-                    l.target_uploads, l.target_hits, l.target_evictions
-                ),
-                format!("{}/{}/{}", l.retries, l.restarts, l.deadline_missed),
-                l.resident_targets.to_string(),
-                format!("{:.1}", l.device_ms),
-                format!("{} (tier {})", l.backend, l.backend_tier),
-            ]);
-        }
-        t
-    }
-
-    /// Total contained job failures across all lanes.
-    pub fn failed_jobs(&self) -> usize {
-        self.lanes.iter().map(|l| l.failed).sum()
-    }
-}
-
-/// Steal threshold: a warm lane keeps its key's jobs until it has this
-/// many in flight *and* another lane sits idle. One in-flight job is
-/// not a backlog — it drains sooner than a redundant target upload
-/// pays off — so stealing starts at a queue two deep.
-pub const STEAL_BACKLOG: usize = 2;
-
-/// Per-job completion feedback a lane reports to the dispatcher — the
-/// ground truth that corrects the [`AffinityRouter`]'s warm-set mirror
-/// (see [`AffinityRouter::completed`]).
-#[derive(Clone, Copy, Debug)]
-pub struct JobFeedback {
-    /// Lane that served the job.
-    pub lane: usize,
-    /// The job's target key.
-    pub key: u64,
-    /// The backend actually uploaded the target during this job (the
-    /// lane diffs its upload counter around `align()`), so the lane now
-    /// genuinely holds the key — even if the alignment later errored.
-    pub uploaded: bool,
-    /// The job re-activated an already-resident target (the cache-hit
-    /// counter advanced): the key is device-resident and was just
-    /// MRU-touched there — even if a later stage of the alignment
-    /// failed, which is why this cannot be inferred from `ok` alone.
-    pub hit: bool,
-    /// The alignment returned `Ok`.
-    pub ok: bool,
-    /// The lane's backend generation the job ran under (0 until the
-    /// first restart). Feedback whose generation trails the router's
-    /// ([`AffinityRouter::generation`]) is *stale*: the backend it
-    /// describes is gone, so it settles only the load estimate and
-    /// never touches the warm/resident mirrors (see
-    /// [`AffinityRouter::lane_restarted`]).
-    pub generation: u64,
-}
-
-/// Pool-wide residency coordinator — the routing core of the supervised
-/// dispatcher: a pure, deterministic state machine over
-/// per-lane **warm key sets** (the dispatcher-side mirror of each lane
-/// backend's LRU resident-target set) plus a pending-job load estimate
-/// and per-lane **slot occupancy** (free vs. warm). Separated from the
-/// channel plumbing so the scheduling policy is unit-testable without
-/// threads, and public so the property suite can drive it against real
-/// backends.
-///
-/// Invariants the channel loop must uphold:
-/// * routing state is committed via [`Self::committed`] only **after** a
-///   send succeeds (a failed `try_send` must not poison the warm sets);
-/// * every served job reports [`JobFeedback`] through
-///   [`Self::completed`], which *corrects* the optimistically committed
-///   mirror — replaying uploads and cache hits onto the confirmed
-///   resident mirror, and un-warming a key whose job failed before
-///   touching residency. The corrected warm sets stay a subset of each
-///   backend's [`KernelBackend::resident_epochs`] keys
-///   (property-tested).
-pub struct AffinityRouter {
-    /// Per-lane warm target keys, LRU first / MRU last, each bounded by
-    /// `slots` — uploads past capacity evict exactly like the backend.
-    warm: Vec<Vec<u64>>,
-    /// Keys *confirmed* device-resident per lane (LRU first), updated
-    /// only by [`JobFeedback`] — the exact mirror of each backend's
-    /// resident set as of its last processed completion. Distinct from
-    /// the warm set: `warm` also carries optimistic, not-yet-completed
-    /// commits (and drops keys conservatively on failure), while this
-    /// list replays the device's own upload/activate transitions, so a
-    /// device slot filled by a key the warm mirror later forgot still
-    /// counts as occupied.
-    resident: Vec<Vec<u64>>,
-    /// Jobs sent to each lane minus completions seen.
-    pending: Vec<usize>,
-    /// Residency slots mirrored per lane.
-    slots: usize,
-    /// Round-robin cursor for tie-breaking and spill.
-    rr: usize,
-    /// Per-lane backend generation: bumped by [`Self::lane_restarted`]
-    /// so feedback from a pre-restart backend is recognizably stale.
-    gen: Vec<u64>,
-    /// Lanes the supervisor declared wedged; routing avoids them until
-    /// they recover (unless every lane is down).
-    down: Vec<bool>,
-}
-
-impl AffinityRouter {
-    pub fn new(lanes: usize, slots: usize) -> Self {
-        Self {
-            warm: vec![Vec::new(); lanes],
-            resident: vec![Vec::new(); lanes],
-            pending: vec![0; lanes],
-            slots: slots.max(1),
-            rr: 0,
-            gen: vec![0; lanes],
-            down: vec![false; lanes],
-        }
-    }
-
-    pub fn lanes(&self) -> usize {
-        self.pending.len()
-    }
-
-    /// Jobs routed to `lane` and not yet completed.
-    pub fn pending(&self, lane: usize) -> usize {
-        self.pending[lane]
-    }
-
-    /// The mirror's warm keys of `lane`, LRU first / MRU last.
-    pub fn warm_keys(&self, lane: usize) -> &[u64] {
-        &self.warm[lane]
-    }
-
-    /// Backend generation the router currently expects from `lane`.
-    pub fn generation(&self, lane: usize) -> u64 {
-        self.gen[lane]
-    }
-
-    /// Is `lane` marked wedged/down for routing purposes?
-    pub fn is_down(&self, lane: usize) -> bool {
-        self.down[lane]
-    }
-
-    /// The supervisor respawned `lane`'s backend: the fresh instance
-    /// holds *nothing*, so clear both the warm and confirmed-resident
-    /// mirrors and bump the generation — feedback still in flight from
-    /// the old backend must not resurrect the keys this wipe dropped
-    /// (see [`Self::completed`]).
-    pub fn lane_restarted(&mut self, lane: usize) {
-        if lane >= self.lanes() {
-            return;
-        }
-        self.warm[lane].clear();
-        self.resident[lane].clear();
-        self.gen[lane] += 1;
-    }
-
-    /// Mark `lane` wedged (`down = true`) or recovered: routing skips
-    /// down lanes while any lane is still up.
-    pub fn set_down(&mut self, lane: usize, down: bool) {
-        if lane < self.lanes() {
-            self.down[lane] = down;
-        }
-    }
-
-    /// The supervisor drained `n` queued jobs off a wedged `lane` for
-    /// re-routing: they will never feed back from there, so settle the
-    /// load estimate now.
-    pub fn requeued(&mut self, lane: usize, n: usize) {
-        if lane < self.lanes() {
-            self.pending[lane] = self.pending[lane].saturating_sub(n);
-        }
-    }
-
-    /// Total jobs routed and not yet fed back, across all lanes.
-    pub fn total_pending(&self) -> usize {
-        self.pending.iter().sum()
-    }
-
-    /// Does the mirror say `lane` has an unoccupied residency slot — a
-    /// place a cold target can land without evicting anything? Uses the
-    /// larger of the optimistic warm count (committed, not yet
-    /// completed) and the confirmed resident count (a slot filled by a
-    /// key the warm mirror later forgot is still filled).
-    pub fn has_free_slot(&self, lane: usize) -> bool {
-        self.warm[lane].len().max(self.resident[lane].len()) < self.slots
-    }
-
-    /// Every *up* lane warm for `key` — after a steal there can be
-    /// several — least-loaded first (ties by lane index). Down lanes
-    /// are never warm candidates: their queue is not draining.
-    pub fn warm_lanes(&self, key: u64) -> Vec<usize> {
-        let mut v: Vec<usize> = (0..self.lanes())
-            .filter(|&l| !self.down[l] && self.warm[l].contains(&key))
-            .collect();
-        v.sort_by_key(|&l| self.pending[l]); // stable sort keeps index order on ties
-        v
-    }
-
-    /// Routing decision, in priority order:
-    /// 1. **warm hit** — the least-loaded warm lane, as long as its
-    ///    backlog stays under [`STEAL_BACKLOG`];
-    /// 2. **steal** — every warm lane is backlogged and a lane sits
-    ///    idle: the idle lane (free-slot lanes preferred) pays one extra
-    ///    upload rather than serializing a same-target batch;
-    /// 3. the least-loaded warm lane when nobody is idle;
-    /// 4. **free slot** — a cold key goes to the least-loaded lane with
-    ///    an unoccupied residency slot: filling free pool capacity
-    ///    always beats evicting a warm lane's LRU key;
-    /// 5. `None` — cold key, every slot on every lane occupied: the
-    ///    caller spills by load (an eviction is inevitable).
-    pub fn first_choice(&self, key: u64) -> Option<usize> {
-        let warm = self.warm_lanes(key);
-        if let Some(&best) = warm.first() {
-            if self.pending[best] < STEAL_BACKLOG {
-                return Some(best);
-            }
-            let idle = (0..self.lanes())
-                .filter(|&l| !self.down[l] && self.pending[l] == 0)
-                .min_by_key(|&l| !self.has_free_slot(l));
-            if let Some(idle) = idle {
-                return Some(idle);
-            }
-            return Some(best);
-        }
-        (0..self.lanes())
-            .filter(|&l| !self.down[l] && self.has_free_slot(l))
-            .min_by_key(|&l| self.pending[l])
-    }
-
-    /// Spill order for non-blocking attempts after [`Self::first_choice`]
-    /// found its queue full: everyone except the already-tried lane,
-    /// least-loaded first (a cold key must not queue behind a deep
-    /// backlog just because a lane's cache is fresh), free-slot lanes
-    /// before evicting ones at equal load, rotation order breaking the
-    /// remaining ties.
-    pub fn spill_order(&self, exclude: Option<usize>) -> Vec<usize> {
-        let lanes = self.lanes();
-        let mut order: Vec<usize> = (0..lanes)
-            .map(|i| (self.rr + i) % lanes)
-            .filter(|&l| Some(l) != exclude && !self.down[l])
-            .collect();
-        if order.is_empty() {
-            // Every other lane is down: spill anywhere rather than
-            // nowhere — jobs queue up and drain once a lane recovers.
-            order = (0..lanes)
-                .map(|i| (self.rr + i) % lanes)
-                .filter(|&l| Some(l) != exclude)
-                .collect();
-        }
-        order.sort_by_key(|&l| (self.pending[l], !self.has_free_slot(l)));
-        order
-    }
-
-    /// Lane to block on when every queue is full: the least-loaded warm
-    /// lane (keeps the cache hot), else the shortest queue — free-slot
-    /// lanes first at equal load, rotation order on remaining ties —
-    /// never a blind round-robin pick past a shorter queue.
-    pub fn blocking_choice(&self, key: u64) -> usize {
-        if let Some(&l) = self.warm_lanes(key).first() {
-            return l;
-        }
-        let lanes = self.lanes();
-        (0..lanes)
-            .map(|i| (self.rr + i) % lanes)
-            .min_by_key(|&l| (self.down[l], self.pending[l], !self.has_free_slot(l)))
-            .unwrap_or(0)
-    }
-
-    /// Touch `key` MRU on `lane`'s mirror, evicting past the slot count
-    /// exactly like the backend's LRU set.
-    fn touch_warm(&mut self, lane: usize, key: u64) {
-        let w = &mut self.warm[lane];
-        if let Some(i) = w.iter().position(|&k| k == key) {
-            w.remove(i);
-        }
-        w.push(key);
-        while w.len() > self.slots {
-            w.remove(0);
-        }
-    }
-
-    /// A job with `key` was *successfully* sent to `lane`: bump its
-    /// load, optimistically mark the key warm (MRU — so back-to-back
-    /// same-key jobs keep their affinity before the first completes),
-    /// advance the round-robin cursor. The optimism is corrected by
-    /// [`Self::completed`] once the job's real outcome is known.
-    pub fn committed(&mut self, lane: usize, key: u64) {
-        self.pending[lane] += 1;
-        self.touch_warm(lane, key);
-        self.rr = (lane + 1) % self.lanes();
-    }
-
-    /// Replay a confirmed device transition for `key` on `lane`'s
-    /// resident mirror — insert/touch MRU, and on capacity pressure
-    /// evict the resident LRU exactly like the device did, dropping the
-    /// evicted key from the warm mirror too (it is no longer on the
-    /// card, whatever the optimistic commits said).
-    fn confirm_resident(&mut self, lane: usize, key: u64) {
-        let r = &mut self.resident[lane];
-        if let Some(i) = r.iter().position(|&k| k == key) {
-            r.remove(i);
-        }
-        r.push(key);
-        while self.resident[lane].len() > self.slots {
-            let evicted = self.resident[lane].remove(0);
-            self.warm[lane].retain(|&k| k != evicted);
-        }
-        self.touch_warm(lane, key);
-    }
-
-    /// Apply one job's [`JobFeedback`]: drop the lane's load estimate,
-    /// then correct the mirror from the ground truth instead of keeping
-    /// the commit-time guess:
-    ///
-    /// * **uploaded** (even on a failed alignment — the device holds
-    ///   the target regardless) or **cache hit** (the key was resident
-    ///   and just MRU-touched, even if a later stage of the job
-    ///   failed): replay the transition on the confirmed resident
-    ///   mirror, including the device's own LRU eviction when an
-    ///   upload ran at capacity — so the mirror never retains a key
-    ///   the device dropped.
-    /// * **failed without touching residency** (neither uploaded nor
-    ///   hit): un-warm the key the optimistic commit guessed — the
-    ///   backend never gained it — while leaving the confirmed
-    ///   resident set untouched (failure changes no device slot).
-    ///
-    /// Feedback from a *stale generation* (the lane's backend was
-    /// respawned since the job ran, see [`Self::lane_restarted`])
-    /// settles the load estimate only: the backend it describes is
-    /// gone, so replaying it onto the mirror would resurrect keys the
-    /// restart wiped.
-    pub fn completed(&mut self, fb: JobFeedback) {
-        if fb.lane >= self.lanes() {
-            return;
-        }
-        self.pending[fb.lane] = self.pending[fb.lane].saturating_sub(1);
-        if fb.generation != self.gen[fb.lane] {
-            return;
-        }
-        if fb.uploaded || fb.hit {
-            self.confirm_resident(fb.lane, fb.key);
-        } else if !fb.ok {
-            self.warm[fb.lane].retain(|&k| k != fb.key);
-        }
-    }
-}
-
-/// Pool-wide fault-tolerance policy of [`run_supervised_lane_pool`].
-/// The defaults are deliberately inert (no deadline, no retries):
-/// [`run_lane_pool`] keeps its historical semantics unless a caller
-/// opts into supervision.
-#[derive(Clone, Copy, Debug)]
-pub struct SupervisorConfig {
-    /// Default per-job deadline, measured from submission; `None`
-    /// disables deadline enforcement (jobs may still opt in via
-    /// [`RegistrationJob::with_deadline`]).
-    pub deadline: Option<Duration>,
-    /// Default transient-failure retry budget per job (0 = first error
-    /// is final, matching the historical contained-failure behavior).
-    pub max_retries: u32,
-    /// First retry backoff; doubles per attempt up to `backoff_cap`.
-    pub backoff_base: Duration,
-    /// Upper bound on the exponential backoff between retries.
-    pub backoff_cap: Duration,
-    /// Backend restarts a lane absorbs before advancing one failover
-    /// tier (the factory's second argument): `tier = restarts /
-    /// restarts_per_tier`, so a backend that keeps panicking walks down
-    /// a [`crate::fpps_api::FailoverChain`] instead of thrashing.
-    pub restarts_per_tier: u32,
-    /// Deadline-watchdog poll interval.
-    pub watchdog_poll: Duration,
-}
-
-impl Default for SupervisorConfig {
-    fn default() -> Self {
-        Self {
-            deadline: None,
-            max_retries: 0,
-            backoff_base: Duration::from_millis(1),
-            backoff_cap: Duration::from_millis(50),
-            restarts_per_tier: 2,
-            watchdog_poll: Duration::from_millis(2),
-        }
-    }
-}
-
-impl SupervisorConfig {
-    /// Bounded exponential backoff before retry `attempt` (1-based).
-    fn backoff(&self, attempt: u32) -> Duration {
-        let factor = 1u32 << attempt.min(16);
-        self.backoff_base.saturating_mul(factor).min(self.backoff_cap)
-    }
-}
-
-/// Bounded per-lane job queue: a lock-free single-producer ring
-/// ([`crate::pool::ring::SpscRing`]) carrying small job descriptors —
-/// clouds travel by `Arc`, so enqueueing moves ~100 bytes and never
-/// copies points. The dispatcher is the only pusher; the lane worker
-/// and the deadline watchdog race pops on the CAS consumer side, so a
-/// third party can still *drain* a wedged lane's queue exactly-once
-/// without a lock (the mutex queue this replaces serialized every
-/// push/pop across the pool). One semantic difference is handled at
-/// the call sites: `close()` + `drain()` is no longer atomic against a
-/// concurrent push, so the dispatcher — the sole producer — re-drains
-/// a lane's ring when it learns the lane died (see
-/// [`dispatch_supervised`]).
-type LaneQueue = crate::pool::ring::SpscRing<RegistrationJob>;
-
-/// The lane's currently-served job, published for the deadline
-/// watchdog. The `claimed` flag is the exactly-once arbiter between the
-/// lane and the watchdog: whoever flips it first (under the heartbeat
-/// mutex) owns the job's outcome and feedback.
-#[derive(Clone)]
-struct ActiveJob {
-    id: u64,
-    stream: usize,
-    key: u64,
-    initial: Mat4,
-    queue_wait_ms: f64,
-    started: Instant,
-    deadline_at: Option<Instant>,
-    attempt: u32,
-    generation: u64,
-    claimed: bool,
-}
-
-/// Shared lane↔watchdog state: the active-job heartbeat plus the
-/// cancellation token installed into the lane's backend.
-struct Heartbeat {
-    active: Mutex<Option<ActiveJob>>,
-    cancel: CancelToken,
-}
-
-/// Supervision traffic from lanes and the watchdog to the dispatcher.
-enum LaneEvent {
-    /// Per-job completion feedback (the mirror-correction protocol).
-    Feedback(JobFeedback),
-    /// The lane's backend was respawned: un-warm it and bump its
-    /// feedback generation.
-    Restarted { lane: usize },
-    /// The watchdog cut off a wedged lane: route around it.
-    Wedged { lane: usize },
-    /// A wedged lane came back: it may take new jobs again.
-    Recovered { lane: usize },
-    /// Jobs drained off a wedged lane's queue, to be re-routed.
-    Requeue { lane: usize, jobs: Vec<RegistrationJob> },
-    /// The lane failed to start and will never serve: route around it
-    /// permanently (its worker error fails the pool after the drain).
-    Dead { lane: usize },
-}
-
-/// Try to place `job` via the router (first choice, then spill order);
-/// hands the job back when every candidate queue is full. Routing state
-/// is committed only after a push lands.
-fn route_job(
-    router: &mut AffinityRouter,
-    queues: &[Arc<LaneQueue>],
-    mut job: RegistrationJob,
-) -> Option<RegistrationJob> {
-    let key = job.target_key;
-    let mut tried = None;
-    if let Some(l) = router.first_choice(key) {
-        match queues[l].try_push(job) {
-            Ok(()) => {
-                router.committed(l, key);
-                return None;
-            }
-            Err(j) => {
-                job = j;
-                tried = Some(l); // don't re-attempt the full queue
-            }
-        }
-    }
-    for l in router.spill_order(tried) {
-        match queues[l].try_push(job) {
-            Ok(()) => {
-                router.committed(l, key);
-                return None;
-            }
-            Err(j) => job = j,
-        }
-    }
-    Some(job)
-}
-
-/// Route jobs from the shared intake queue to per-lane queues through
-/// the pool-wide residency coordinator ([`AffinityRouter`]): warm keys
-/// keep their lane while it keeps up, cold keys fill **free residency
-/// slots** anywhere in the pool before any warm lane is made to evict,
-/// and only when every slot is occupied does a cold key spill by load.
-/// `ev_rx` carries per-job [`JobFeedback`] plus the supervision events
-/// (restarts, wedges, re-queues), giving the dispatcher its load
-/// estimate, the ground truth that corrects the warm-set mirror, and
-/// the restart/un-warm signals — all without locking. Jobs that find
-/// every queue full are parked in a deferred list (never blocking the
-/// event loop) and placed as soon as feedback frees a slot; intake is
-/// only pulled while the deferred list is empty, so producer
-/// backpressure is preserved. The dispatcher exits — closing every lane
-/// queue — once intake has disconnected and every routed job has fed
-/// back. Routing can never change numerics: every job is an independent
-/// alignment, so `lanes = 1` and `lanes = K` stay bit-identical
-/// regardless of placement.
-fn dispatch_supervised(
-    rx: Receiver<RegistrationJob>,
-    queues: Vec<Arc<LaneQueue>>,
-    ev_rx: Receiver<LaneEvent>,
-    slots_rx: Receiver<usize>,
-) {
-    let lanes = queues.len();
-    // Mirror the *actual* backends, not an assumed default: every lane
-    // reports its backend's residency slot count once it exists (a lane
-    // that fails to start just drops its sender). The most conservative
-    // (minimum) count drives the warm sets — over-estimating residency
-    // would route jobs to lanes whose backend already evicted the key.
-    let mut slots: Option<usize> = None;
-    for _ in 0..lanes {
-        match slots_rx.recv() {
-            Ok(s) => slots = Some(slots.map_or(s, |m| m.min(s))),
-            Err(_) => break,
-        }
-    }
-    let mut router = AffinityRouter::new(lanes, slots.unwrap_or(1));
-    let mut deferred: VecDeque<RegistrationJob> = VecDeque::new();
-    let mut dead = vec![false; lanes];
-    let mut intake_open = true;
-
-    fn handle_event(
-        router: &mut AffinityRouter,
-        queues: &[Arc<LaneQueue>],
-        deferred: &mut VecDeque<RegistrationJob>,
-        dead: &mut [bool],
-        ev: LaneEvent,
-    ) {
-        match ev {
-            LaneEvent::Feedback(fb) => router.completed(fb),
-            LaneEvent::Restarted { lane } => router.lane_restarted(lane),
-            LaneEvent::Wedged { lane } => router.set_down(lane, true),
-            LaneEvent::Recovered { lane } => router.set_down(lane, false),
-            LaneEvent::Requeue { lane, jobs } => {
-                router.requeued(lane, jobs.len());
-                deferred.extend(jobs);
-            }
-            LaneEvent::Dead { lane } => {
-                dead[lane] = true;
-                router.set_down(lane, true);
-                // The ring's close+drain is not atomic against a push
-                // already in flight from this thread. As the sole
-                // producer we re-drain authoritatively here, so a job
-                // that landed after the dead lane's own drain is
-                // re-routed instead of rotting in a closed queue.
-                let jobs = queues[lane].drain();
-                if !jobs.is_empty() {
-                    router.requeued(lane, jobs.len());
-                    deferred.extend(jobs);
-                }
-            }
-        }
-    }
-
-    loop {
-        while let Ok(ev) = ev_rx.try_recv() {
-            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
-        }
-        if dead.iter().all(|&d| d) {
-            // No lane will ever serve again; stop routing so the pool
-            // can unwind and report the lane errors.
-            break;
-        }
-        // Place deferred jobs (watchdog re-queues and earlier overflow)
-        // before pulling new intake.
-        while let Some(job) = deferred.pop_front() {
-            if let Some(job) = route_job(&mut router, &queues, job) {
-                deferred.push_front(job); // still no room anywhere
-                break;
-            }
-        }
-        if intake_open && deferred.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(job) => {
-                    if let Some(job) = route_job(&mut router, &queues, job) {
-                        deferred.push_back(job);
-                    }
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => intake_open = false,
-            }
-        } else if !intake_open && deferred.is_empty() && router.total_pending() == 0 {
-            break; // every job routed and fed back: drain complete
-        } else if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(2)) {
-            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
-        }
-    }
-    for q in &queues {
-        q.close();
-    }
-}
-
-/// Deadline watchdog: polls every lane's heartbeat and, when a job's
-/// deadline has passed unclaimed, *claims* it — emitting the contained
-/// [`StopReason::DeadlineExceeded`] outcome and its feedback itself (so
-/// the pool's accounting completes even if the lane never returns),
-/// raising the lane's [`CancelToken`] so a cooperative backend abandons
-/// the wedged call, marking the lane down, and draining its queue back
-/// to the dispatcher for re-routing.
-#[allow(clippy::too_many_arguments)]
-fn watchdog_loop(
-    heartbeats: &[Arc<Heartbeat>],
-    queues: &[Arc<LaneQueue>],
-    out_tx: Sender<RegistrationOutcome>,
-    ev_tx: Sender<LaneEvent>,
-    poll: Duration,
-    stop: &AtomicBool,
-) {
-    while !stop.load(Ordering::SeqCst) {
-        for (lane, hb) in heartbeats.iter().enumerate() {
-            let claim = {
-                let mut g = hb.active.lock().unwrap();
-                let expired = g.as_ref().is_some_and(|a| {
-                    !a.claimed && a.deadline_at.is_some_and(|d| Instant::now() >= d)
-                });
-                if expired {
-                    let a = g.as_mut().expect("checked above");
-                    a.claimed = true;
-                    Some(a.clone())
-                } else {
-                    None
-                }
-            };
-            let Some(a) = claim else { continue };
-            // Cut the wedged call off, then take over the job's
-            // bookkeeping: one outcome, one feedback, queue re-routed.
-            hb.cancel.cancel();
-            out_tx
-                .send(RegistrationOutcome {
-                    id: a.id,
-                    stream: a.stream,
-                    lane,
-                    transform: a.initial,
-                    rmse: f64::NAN,
-                    iterations: 0,
-                    stop: StopReason::DeadlineExceeded,
-                    queue_wait_ms: a.queue_wait_ms,
-                    service_ms: a.started.elapsed().as_secs_f64() * 1e3,
-                    error: Some(format!(
-                        "job {} on lane {lane}: deadline exceeded (cut off by watchdog)",
-                        a.id
-                    )),
-                    attempts: a.attempt + 1,
-                })
-                .ok();
-            ev_tx
-                .send(LaneEvent::Feedback(JobFeedback {
-                    lane,
-                    key: a.key,
-                    uploaded: false, // conservative: un-warm, never claim
-                    hit: false,
-                    ok: false,
-                    generation: a.generation,
-                }))
-                .ok();
-            ev_tx.send(LaneEvent::Wedged { lane }).ok();
-            let drained = queues[lane].drain();
-            if !drained.is_empty() {
-                ev_tx
-                    .send(LaneEvent::Requeue {
-                        lane,
-                        jobs: drained,
-                    })
-                    .ok();
-            }
-        }
-        std::thread::sleep(poll);
-    }
-}
-
-/// How one align attempt on a lane resolved.
-enum Attempt {
-    Done(crate::fpps_api::FppsResult, bool, bool), // (result, uploaded, hit)
-    Failed(String),
-    Panicked(String),
-}
-
-/// Human-readable panic payload (what `panic!` carried, if a string).
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// Run a pool of `lanes` supervised worker lanes, each with its own
-/// bounded queue, fed by a target-affinity dispatcher (see
-/// [`dispatch_supervised`]) and overseen by a deadline watchdog (see
-/// [`watchdog_loop`]).
-///
-/// * `make_backend(lane, tier)` is called **on** each lane thread, so
-///   backends never cross threads and need not be `Send`. `tier` is the
-///   failover rung: 0 on startup, advancing by one per
-///   [`SupervisorConfig::restarts_per_tier`] backend restarts, so the
-///   factory can hand out progressively more conservative backends
-///   (e.g. along a [`crate::fpps_api::FailoverChain`]). A tier-0
-///   failure at startup is a pool-level error; a factory failure during
-///   a mid-run respawn is contained per job instead.
-/// * `produce(tx)` runs on its own thread and feeds the intake queue —
-///   it may clone the sender and fan out to per-client producer threads
-///   (see `examples/registration_server.rs`). A `send` error means the
-///   pool is shutting down; treat it as a stop signal, not a failure.
-///
-/// Fault containment on a lane, per job: transient align errors (and
-/// panics, which additionally respawn the backend from the factory)
-/// retry with bounded exponential backoff up to the job's retry budget;
-/// a job past its deadline is contained as
-/// [`StopReason::DeadlineExceeded`] — cooperatively between ICP
-/// iterations when the backend is healthy, or by the watchdog when it
-/// is wedged. Every submitted job yields **exactly one** outcome and
-/// exactly one feedback, whoever emits them.
-///
-/// Each job is an independent alignment, so the mapping of jobs to lanes
-/// cannot change any transform: `lanes = 1` and `lanes = K` produce
-/// bit-identical outcomes for a deterministic backend.
-pub fn run_supervised_lane_pool<B, F, P>(
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    sup: SupervisorConfig,
-    make_backend: F,
-    produce: P,
-) -> Result<LaneReport>
-where
-    B: KernelBackend,
-    F: Fn(usize, usize) -> Result<B> + Sync,
-    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
-{
-    let lanes = lanes.max(1);
-    let depth = queue_depth.max(1);
-    let (job_tx, job_rx) = sync_channel::<RegistrationJob>(depth);
-    let queues: Vec<Arc<LaneQueue>> = (0..lanes).map(|_| Arc::new(LaneQueue::new(depth))).collect();
-    let heartbeats: Vec<Arc<Heartbeat>> = (0..lanes)
-        .map(|_| {
-            Arc::new(Heartbeat {
-                active: Mutex::new(None),
-                cancel: CancelToken::new(),
-            })
-        })
-        .collect();
-    let (out_tx, out_rx) = channel::<RegistrationOutcome>();
-    let (lane_tx, lane_rx) = channel::<LaneStats>();
-    let (ev_tx, ev_rx) = channel::<LaneEvent>();
-    let (slots_tx, slots_rx) = channel::<usize>();
-    let watchdog_stop = AtomicBool::new(false);
-    let t0 = Instant::now();
-
-    std::thread::scope(|scope| -> Result<()> {
-        let producer = scope.spawn(move || produce(job_tx));
-        let disp_queues = queues.clone();
-        let dispatcher =
-            scope.spawn(move || dispatch_supervised(job_rx, disp_queues, ev_rx, slots_rx));
-        let wd_heartbeats = heartbeats.clone();
-        let wd_queues = queues.clone();
-        let wd_out = out_tx.clone();
-        let wd_ev = ev_tx.clone();
-        let wd_stop = &watchdog_stop;
-        let watchdog = scope.spawn(move || {
-            watchdog_loop(
-                &wd_heartbeats,
-                &wd_queues,
-                wd_out,
-                wd_ev,
-                sup.watchdog_poll,
-                wd_stop,
-            )
-        });
-        let mut workers = Vec::with_capacity(lanes);
-        for lane in 0..lanes {
-            let queue = Arc::clone(&queues[lane]);
-            let hb = Arc::clone(&heartbeats[lane]);
-            let out_tx = out_tx.clone();
-            let lane_tx = lane_tx.clone();
-            let ev_tx = ev_tx.clone();
-            let slots_tx = slots_tx.clone();
-            let make_backend = &make_backend;
-            workers.push(scope.spawn(move || -> Result<()> {
-                let make_icp = |tier: usize| -> Result<FppsIcp<B>> {
-                    let mut backend = make_backend(lane, tier).with_context(|| {
-                        format!("create backend for lane {lane} (failover tier {tier})")
-                    })?;
-                    backend.set_cancel_token(hb.cancel.clone());
-                    let mut icp = FppsIcp::with_backend(backend);
-                    icp.set_buffer_pool(crate::pool::BufferPool::new(icp_cfg.pool_capacity));
-                    icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
-                        .set_max_iteration_count(icp_cfg.max_iteration_count)
-                        .set_transformation_epsilon(icp_cfg.transformation_epsilon);
-                    Ok(icp)
-                };
-                // Tier-0 creation failure is a configuration error that
-                // fails the pool, exactly as before supervision existed —
-                // but the lane must still hand its queue back so the
-                // dispatcher can drain and the pool can unwind.
-                let mut icp: Option<FppsIcp<B>> = match make_icp(0) {
-                    Ok(engine) => Some(engine),
-                    Err(e) => {
-                        queue.close();
-                        let jobs = queue.drain();
-                        ev_tx.send(LaneEvent::Dead { lane }).ok();
-                        if !jobs.is_empty() {
-                            ev_tx.send(LaneEvent::Requeue { lane, jobs }).ok();
-                        }
-                        return Err(e);
-                    }
-                };
-                // Tell the dispatcher how much residency this lane
-                // really has, so its warm-set mirror matches the device.
-                let engine0 = icp.as_ref().expect("created above");
-                slots_tx.send(engine0.backend().residency_slots()).ok();
-                drop(slots_tx);
-                let mut stats = LaneStats {
-                    lane,
-                    backend: engine0.backend().name().to_string(),
-                    ..Default::default()
-                };
-                let mut generation: u64 = 0;
-                // Telemetry of backends retired by restarts, folded into
-                // the final stats: (device_ms, uploads, hits, evictions).
-                let mut retired = (0.0f64, 0u64, 0u64, 0u64);
-                let retire = |icp: &mut Option<FppsIcp<B>>, retired: &mut (f64, u64, u64, u64)| {
-                    if let Some(old) = icp.take() {
-                        retired.0 += old.backend().device_time().as_secs_f64() * 1e3;
-                        let (u, h, _) = old.target_cache_stats();
-                        retired.1 += u;
-                        retired.2 += h;
-                        retired.3 += old.backend().target_evictions();
-                    }
-                };
-
-                // Own queue, no lock contention with other lanes: the
-                // dispatcher already routed.
-                while let Some(job) = queue.pop() {
-                    let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
-                    let (id, stream, initial, key) =
-                        (job.id, job.stream, job.initial, job.target_key);
-                    let deadline_at =
-                        job.deadline.or(sup.deadline).map(|d| job.submitted + d);
-                    let max_retries = job.max_retries.unwrap_or(sup.max_retries);
-                    let t_serve = Instant::now();
-                    let mut attempt: u32 = 0;
-                    // `None` = the watchdog claimed the job (outcome and
-                    // feedback already emitted over there).
-                    let mut resolution: Option<(RegistrationOutcome, JobFeedback)> = None;
-                    let mut recovered_from_claim = false;
-                    loop {
-                        // A job past its deadline — expired in the
-                        // queue, or between retries — is contained
-                        // without touching the backend.
-                        if deadline_at.is_some_and(|d| Instant::now() >= d) {
-                            stats.deadline_missed += 1;
-                            resolution = Some((
-                                RegistrationOutcome {
-                                    id,
-                                    stream,
-                                    lane,
-                                    transform: initial,
-                                    rmse: f64::NAN,
-                                    iterations: 0,
-                                    stop: StopReason::DeadlineExceeded,
-                                    queue_wait_ms,
-                                    service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
-                                    error: Some(format!(
-                                        "job {id} on lane {lane}: deadline exceeded"
-                                    )),
-                                    attempts: attempt + 1,
-                                },
-                                JobFeedback {
-                                    lane,
-                                    key,
-                                    uploaded: false,
-                                    hit: false,
-                                    ok: false,
-                                    generation,
-                                },
-                            ));
-                            break;
-                        }
-                        // Respawn the backend if a panic retired it (or
-                        // an earlier respawn failed). A factory failure
-                        // here is contained in the job, not the pool.
-                        if icp.is_none() {
-                            let tier = stats.restarts / sup.restarts_per_tier.max(1) as usize;
-                            match make_icp(tier) {
-                                Ok(engine) => {
-                                    stats.backend_tier = tier;
-                                    stats.backend = engine.backend().name().to_string();
-                                    icp = Some(engine);
-                                }
-                                Err(e) => {
-                                    resolution = Some((
-                                        RegistrationOutcome {
-                                            id,
-                                            stream,
-                                            lane,
-                                            transform: initial,
-                                            rmse: f64::NAN,
-                                            iterations: 0,
-                                            stop: StopReason::Failed,
-                                            queue_wait_ms,
-                                            service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
-                                            error: Some(format!("job {id} on lane {lane}: {e:#}")),
-                                            attempts: attempt + 1,
-                                        },
-                                        JobFeedback {
-                                            lane,
-                                            key,
-                                            uploaded: false,
-                                            hit: false,
-                                            ok: false,
-                                            generation,
-                                        },
-                                    ));
-                                    break;
-                                }
-                            }
-                        }
-                        // Publish the attempt for the watchdog. If the
-                        // watchdog already claimed this job (stall cut
-                        // off between our checks), stop touching it.
-                        let claimed_already = {
-                            let mut g = hb.active.lock().unwrap();
-                            if g.as_ref().is_some_and(|a| a.claimed) {
-                                true
-                            } else {
-                                hb.cancel.reset();
-                                *g = Some(ActiveJob {
-                                    id,
-                                    stream,
-                                    key,
-                                    initial,
-                                    queue_wait_ms,
-                                    started: t_serve,
-                                    deadline_at,
-                                    attempt,
-                                    generation,
-                                    claimed: false,
-                                });
-                                false
-                            }
-                        };
-                        if claimed_already {
-                            recovered_from_claim = true;
-                            break;
-                        }
-                        let engine = icp.as_mut().expect("respawned above");
-                        let (uploads_before, hits_before, _) = engine.target_cache_stats();
-                        // Retries re-stage the same shared cloud: every
-                        // attempt costs one `Arc` refcount, never a
-                        // deep copy of the points.
-                        engine.set_input_source(Arc::clone(&job.source));
-                        engine.set_input_target(Arc::clone(&job.target));
-                        engine.set_transformation_matrix(initial);
-                        engine.set_deadline(deadline_at);
-                        // A panicking backend must not take the lane
-                        // (and with it the whole pool) down: contain the
-                        // unwind, respawn, retry.
-                        let served = match catch_unwind(AssertUnwindSafe(|| engine.align())) {
-                            Ok(Ok(res)) => {
-                                let (u1, h1, _) = engine.target_cache_stats();
-                                Attempt::Done(res, u1 > uploads_before, h1 > hits_before)
-                            }
-                            Ok(Err(e)) => Attempt::Failed(format!("{e:#}")),
-                            Err(payload) => Attempt::Panicked(panic_message(payload)),
-                        };
-                        // Resolve the claim race: whoever holds the
-                        // heartbeat lock first owns the job's outcome.
-                        let claimed = {
-                            let mut g = hb.active.lock().unwrap();
-                            let claimed = g.as_ref().is_some_and(|a| a.claimed);
-                            if !claimed {
-                                *g = None;
-                            }
-                            claimed
-                        };
-                        if matches!(served, Attempt::Panicked(_)) {
-                            // The engine (and its backend) is toast:
-                            // retire its telemetry, respawn next loop,
-                            // and tell the dispatcher to un-warm us.
-                            retire(&mut icp, &mut retired);
-                            stats.restarts += 1;
-                            generation += 1;
-                            ev_tx.send(LaneEvent::Restarted { lane }).ok();
-                        }
-                        if claimed {
-                            recovered_from_claim = true;
-                            break;
-                        }
-                        match served {
-                            Attempt::Done(mut res, uploaded, hit) => {
-                                // Hand the iteration-stat buffer back to
-                                // the engine so the next align reuses its
-                                // capacity (part of the zero-alloc path).
-                                if let Some(engine) = icp.as_mut() {
-                                    engine.recycle_stats(std::mem::take(&mut res.stats));
-                                }
-                                let deadline_hit = res.stop == StopReason::DeadlineExceeded;
-                                if deadline_hit {
-                                    stats.deadline_missed += 1;
-                                }
-                                resolution = Some((
-                                    RegistrationOutcome {
-                                        id,
-                                        stream,
-                                        lane,
-                                        // A deadline cut mid-alignment
-                                        // hands back the initial
-                                        // transform: partial progress is
-                                        // not a usable pose.
-                                        transform: if deadline_hit {
-                                            initial
-                                        } else {
-                                            res.transformation
-                                        },
-                                        rmse: if deadline_hit { f64::NAN } else { res.rmse },
-                                        iterations: res.iterations,
-                                        stop: res.stop,
-                                        queue_wait_ms,
-                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
-                                        error: deadline_hit.then(|| {
-                                            format!("job {id} on lane {lane}: deadline exceeded")
-                                        }),
-                                        attempts: attempt + 1,
-                                    },
-                                    JobFeedback {
-                                        lane,
-                                        key,
-                                        uploaded,
-                                        hit,
-                                        ok: !deadline_hit,
-                                        generation,
-                                    },
-                                ));
-                                break;
-                            }
-                            Attempt::Failed(msg) | Attempt::Panicked(msg) => {
-                                if attempt < max_retries {
-                                    attempt += 1;
-                                    stats.retries += 1;
-                                    std::thread::sleep(sup.backoff(attempt));
-                                    continue;
-                                }
-                                resolution = Some((
-                                    RegistrationOutcome {
-                                        id,
-                                        stream,
-                                        lane,
-                                        transform: initial,
-                                        rmse: f64::NAN,
-                                        iterations: 0,
-                                        stop: StopReason::Failed,
-                                        queue_wait_ms,
-                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
-                                        error: Some(format!("job {id} on lane {lane}: {msg}")),
-                                        attempts: attempt + 1,
-                                    },
-                                    JobFeedback {
-                                        lane,
-                                        key,
-                                        uploaded: false,
-                                        hit: false,
-                                        ok: false,
-                                        generation,
-                                    },
-                                ));
-                                break;
-                            }
-                        }
-                    }
-                    stats.jobs += 1;
-                    stats.queue_wait.record_ms(queue_wait_ms);
-                    stats.service.record_ms(t_serve.elapsed().as_secs_f64() * 1e3);
-                    if recovered_from_claim {
-                        // The watchdog already emitted this job's
-                        // outcome and feedback; just account it and
-                        // report the lane back up.
-                        stats.failed += 1;
-                        stats.deadline_missed += 1;
-                        {
-                            let mut g = hb.active.lock().unwrap();
-                            *g = None;
-                        }
-                        ev_tx.send(LaneEvent::Recovered { lane }).ok();
-                        continue;
-                    }
-                    let (outcome, feedback) = resolution.expect("every unclaimed job resolves");
-                    if outcome.is_failed() {
-                        stats.failed += 1;
-                    }
-                    out_tx.send(outcome).ok();
-                    ev_tx.send(LaneEvent::Feedback(feedback)).ok();
-                }
-                if let Some(engine) = icp.as_ref() {
-                    stats.resident_targets = engine.backend().resident_epochs().len();
-                    stats.device_ms =
-                        retired.0 + engine.backend().device_time().as_secs_f64() * 1e3;
-                    let (u, h, _) = engine.target_cache_stats();
-                    stats.target_uploads = (retired.1 + u) as usize;
-                    stats.target_hits = (retired.2 + h) as usize;
-                    stats.target_evictions =
-                        (retired.3 + engine.backend().target_evictions()) as usize;
-                } else {
-                    stats.device_ms = retired.0;
-                    stats.target_uploads = retired.1 as usize;
-                    stats.target_hits = retired.2 as usize;
-                    stats.target_evictions = retired.3 as usize;
-                }
-                lane_tx.send(stats).ok();
-                Ok(())
-            }));
-        }
-        // Drop the originals so the collection channels close when the
-        // last lane finishes (and the dispatcher's slot wait cannot hang
-        // on lanes that never started).
-        drop(out_tx);
-        drop(lane_tx);
-        drop(ev_tx);
-        drop(slots_tx);
-
-        match producer.join() {
-            Ok(r) => r.context("job producer")?,
-            Err(_) => bail!("job producer panicked"),
-        }
-        if dispatcher.join().is_err() {
-            bail!("affinity dispatcher panicked");
-        }
-        let mut worker_err = None;
-        for w in workers {
-            match w.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    worker_err.get_or_insert(e);
-                }
-                Err(_) => {
-                    worker_err.get_or_insert(anyhow!("lane worker panicked"));
-                }
-            }
-        }
-        watchdog_stop.store(true, Ordering::SeqCst);
-        if watchdog.join().is_err() {
-            bail!("deadline watchdog panicked");
-        }
-        match worker_err {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
-    })?;
-
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let mut outcomes: Vec<RegistrationOutcome> = out_rx.into_iter().collect();
-    outcomes.sort_by_key(|o| o.id);
-    let mut lane_stats: Vec<LaneStats> = lane_rx.into_iter().collect();
-    lane_stats.sort_by_key(|s| s.lane);
-
-    // Merge the per-lane distributions into the aggregate report.
-    let mut service = TimingStats::new();
-    for l in &lane_stats {
-        service.merge(&l.service);
-    }
-    let mut queue_wait = TimingStats::new();
-    for o in &outcomes {
-        queue_wait.record_ms(o.queue_wait_ms);
-    }
-
-    Ok(LaneReport {
-        outcomes,
-        lanes: lane_stats,
-        service,
-        queue_wait,
-        wall_ms,
-    })
-}
-
-/// Run a pool of `lanes` worker lanes with the inert default
-/// supervision policy (no deadlines, no retries) and a tier-blind
-/// backend factory — the historical entry point; see
-/// [`run_supervised_lane_pool`] for the full fault-tolerant form.
-pub fn run_lane_pool<B, F, P>(
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    make_backend: F,
-    produce: P,
-) -> Result<LaneReport>
-where
-    B: KernelBackend,
-    F: Fn(usize) -> Result<B> + Sync,
-    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
-{
-    run_supervised_lane_pool(
-        lanes,
-        queue_depth,
-        icp_cfg,
-        SupervisorConfig::default(),
-        move |lane, _tier| make_backend(lane),
-        produce,
-    )
-}
-
-/// Convenience wrapper: push a prebuilt batch of jobs through a
-/// supervised pool with an explicit fault-tolerance policy and a
-/// tier-aware backend factory.
-pub fn run_registration_batch_supervised<B, F>(
-    jobs: Vec<RegistrationJob>,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    sup: SupervisorConfig,
-    make_backend: F,
-) -> Result<LaneReport>
-where
-    B: KernelBackend,
-    F: Fn(usize, usize) -> Result<B> + Sync,
-{
-    let expected = jobs.len();
-    let report = run_supervised_lane_pool(
-        lanes,
-        queue_depth,
-        icp_cfg,
-        sup,
-        make_backend,
-        move |tx| {
-            for mut job in jobs {
-                job.mark_submitted(); // queue wait starts at send, not build
-                if tx.send(job).is_err() {
-                    break; // pool shut down early
-                }
-            }
-            Ok(())
-        },
-    )?;
-    if report.outcomes.len() != expected {
-        return Err(anyhow!(
-            "lane pool returned {} outcomes for {} jobs",
-            report.outcomes.len(),
-            expected
-        ));
-    }
-    Ok(report)
-}
-
-/// Convenience wrapper: push a prebuilt batch of jobs through the pool.
-pub fn run_registration_batch<B, F>(
-    jobs: Vec<RegistrationJob>,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    make_backend: F,
-) -> Result<LaneReport>
-where
-    B: KernelBackend,
-    F: Fn(usize) -> Result<B> + Sync,
-{
-    run_registration_batch_supervised(
-        jobs,
-        lanes,
-        queue_depth,
-        icp_cfg,
-        SupervisorConfig::default(),
-        move |lane, _tier| make_backend(lane),
-    )
-}
-
-/// Build frame-pair jobs (frame i aligned onto frame i−1) from a
-/// synthetic sequence — the shared job generator for the multi-client
-/// example, the `fpps batch` subcommand and the lane-scaling bench.
-pub fn sequence_pair_jobs(
-    seq: &Sequence,
-    frames: usize,
-    stream: usize,
-    cfg: &PipelineConfig,
-) -> Result<Vec<RegistrationJob>> {
-    let frames = frames.min(seq.len());
-    let mut jobs = Vec::new();
-    let mut prev: Option<PointCloud> = None;
-    for i in 0..frames {
-        let cloud = preprocess(&seq.frame(i)?, cfg);
-        let mut rng = Pcg32::substream(cfg.seed, i as u64);
-        let sample = cloud.random_sample(cfg.source_sample, &mut rng);
-        let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
-        if let Some(target) = prev.take() {
-            jobs.push(RegistrationJob::new(
-                (stream as u64) << 32 | i as u64,
-                stream,
-                sample,
-                target,
-                Mat4::IDENTITY,
-            ));
-        }
-        prev = Some(full);
-    }
-    Ok(jobs)
-}
-
-// ---------------------------------------------------------------------------
-// Scan-to-map localization (resident-target scenario)
-// ---------------------------------------------------------------------------
-
-/// Prebuilt scan-to-map localization workload: one shared map, M scan
-/// jobs against it, plus the ground-truth poses to score against.
-pub struct LocalizationWorkload {
-    /// The map every scan aligns against (frame-0 coordinates). All jobs
-    /// share this one `Arc` and one target key, so the lane pool keeps
-    /// it device-resident.
-    pub map: Arc<PointCloud>,
-    pub jobs: Vec<RegistrationJob>,
-    /// Ground-truth map←sensor poses, indexed like `jobs`.
-    pub truth: Vec<Mat4>,
-    /// What admission decided for the map (see [`admit_map`]).
-    pub admission: AdmissionDecision,
-}
-
-/// Build a localization workload from a synthetic sequence: the map is
-/// the union of all preprocessed scans placed into frame-0 coordinates
-/// by ground truth (then capacity-bounded), and each scan becomes a job
-/// whose prior is the *previous* frame's true pose — the "last known
-/// pose" a localization stack would start from.
-pub fn localization_jobs(
-    seq: &Sequence,
-    scans: usize,
-    cfg: &PipelineConfig,
-) -> Result<LocalizationWorkload> {
-    let scans = scans.min(seq.len());
-    if scans == 0 {
-        bail!("localization needs at least one scan");
-    }
-    let origin = seq.ground_truth[0].inverse_rigid();
-    let mut map = PointCloud::new();
-    let mut sources = Vec::with_capacity(scans);
-    let mut truth = Vec::with_capacity(scans);
-    for i in 0..scans {
-        let cloud = preprocess(&seq.frame(i)?, cfg);
-        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
-        let world = cloud.transformed(&pose);
-        map.xyz.extend_from_slice(&world.xyz);
-        let mut rng = Pcg32::substream(cfg.seed, i as u64);
-        sources.push(cloud.random_sample(cfg.source_sample, &mut rng));
-        truth.push(pose);
-    }
-    // Residency-aware admission replaces the old silent shrink: an
-    // oversized map is rejected or explicitly downsampled per policy.
-    let (map, admission) = admit_map(map, cfg)?;
-    let map = Arc::new(map);
-    let key = map.fingerprint(); // hash the shared map once, not per job
-
-    let mut jobs = Vec::with_capacity(scans);
-    for (i, source) in sources.into_iter().enumerate() {
-        let prior = match i {
-            0 => Mat4::IDENTITY,
-            _ => truth[i - 1],
-        };
-        jobs.push(RegistrationJob::new_keyed(
-            i as u64,
-            0,
-            source,
-            Arc::clone(&map),
-            key,
-            prior,
-        ));
-    }
-    Ok(LocalizationWorkload {
-        map,
-        jobs,
-        truth,
-        admission,
-    })
-}
-
-/// Per-scan translation error vs. `truth` (m), in job order (the job id
-/// indexes `truth`). Contained failures ([`RegistrationOutcome::error`])
-/// score NaN so a failed job can never masquerade as an accurate
-/// localization; [`mean_finite`] / [`max_finite`] skip them.
-fn translation_errors_vs_truth(report: &LaneReport, truth: &[Mat4]) -> Vec<f64> {
-    report
-        .outcomes
-        .iter()
-        .map(|o| {
-            if o.is_failed() {
-                f64::NAN
-            } else {
-                let gt = truth[o.id as usize];
-                (o.transform.translation() - gt.translation()).norm()
-            }
-        })
-        .collect()
-}
-
-/// Mean over the finite entries (NaN marks contained failures); NaN when
-/// nothing finite remains.
-fn mean_finite(vals: &[f64]) -> f64 {
-    let (mut sum, mut n) = (0.0f64, 0usize);
-    for v in vals.iter().copied().filter(|v| v.is_finite()) {
-        sum += v;
-        n += 1;
-    }
-    if n == 0 {
-        f64::NAN
-    } else {
-        sum / n as f64
-    }
-}
-
-/// Max over the finite entries; NaN when nothing finite remains (an
-/// all-failure run must not report a perfect 0.0 max error).
-fn max_finite(vals: &[f64]) -> f64 {
-    let mut max = f64::NAN;
-    for v in vals.iter().copied().filter(|v| v.is_finite()) {
-        max = if max.is_nan() { v } else { max.max(v) };
-    }
-    max
-}
-
-/// Result of a [`run_localization`] run.
-#[derive(Debug)]
-pub struct LocalizationResult {
-    pub report: LaneReport,
-    pub map_points: usize,
-    /// Per-scan translation error vs. ground truth (m), in job order;
-    /// NaN for contained failures.
-    pub translation_errors: Vec<f64>,
-    /// What admission decided for the map (see [`admit_map`]).
-    pub admission: AdmissionDecision,
-}
-
-impl LocalizationResult {
-    pub fn mean_translation_error(&self) -> f64 {
-        mean_finite(&self.translation_errors)
-    }
-
-    pub fn max_translation_error(&self) -> f64 {
-        max_finite(&self.translation_errors)
-    }
-}
-
-/// Scan-to-map localization: align `scans` frames of `seq` against one
-/// shared map over the lane pool. Every job carries the same target key,
-/// so the affinity dispatcher keeps the map resident — the kd-tree
-/// backend builds its index once for the whole run, and the amortized
-/// upload cost drops to zero (see `benches/target_reuse.rs`).
-pub fn run_localization<B, F>(
-    seq: &Sequence,
-    scans: usize,
-    cfg: &PipelineConfig,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    make_backend: F,
-) -> Result<LocalizationResult>
-where
-    B: KernelBackend,
-    F: Fn(usize) -> Result<B> + Sync,
-{
-    run_localization_supervised(
-        seq,
-        scans,
-        cfg,
-        lanes,
-        queue_depth,
-        icp_cfg,
-        SupervisorConfig::default(),
-        move |lane, _tier| make_backend(lane),
-    )
-}
-
-/// [`run_localization`] with an explicit fault-tolerance policy and a
-/// tier-aware backend factory (see [`run_supervised_lane_pool`]).
-#[allow(clippy::too_many_arguments)]
-pub fn run_localization_supervised<B, F>(
-    seq: &Sequence,
-    scans: usize,
-    cfg: &PipelineConfig,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    sup: SupervisorConfig,
-    make_backend: F,
-) -> Result<LocalizationResult>
-where
-    B: KernelBackend,
-    F: Fn(usize, usize) -> Result<B> + Sync,
-{
-    let workload = localization_jobs(seq, scans, cfg)?;
-    let map_points = workload.map.len();
-    let admission = workload.admission;
-    let report = run_registration_batch_supervised(
-        workload.jobs,
-        lanes,
-        queue_depth,
-        icp_cfg,
-        sup,
-        make_backend,
-    )?;
-    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
-    Ok(LocalizationResult {
-        report,
-        map_points,
-        translation_errors,
-        admission,
-    })
-}
-
-// ---------------------------------------------------------------------------
-// Tile-crossing localization (multi-target residency scenario)
-// ---------------------------------------------------------------------------
-
-/// Prebuilt tile-crossing localization workload: the trajectory is cut
-/// into `tiles` contiguous submaps and the job stream *interleaves*
-/// them — the submap ping-pong of a vehicle tracking along a tile
-/// boundary. On a single-slot backend every job re-uploads (and, on the
-/// kd-tree backend, rebuilds); with ≥ `tiles` residency slots each
-/// submap uploads once per serving lane and every further job is a
-/// cache hit (see `benches/tile_residency.rs`).
-pub struct TiledLocalizationWorkload {
-    /// One submap per tile (frame-0 coordinates), shared by its jobs.
-    pub maps: Vec<Arc<PointCloud>>,
-    /// Tile index of each job, in job-id order.
-    pub tile_of_job: Vec<usize>,
-    pub jobs: Vec<RegistrationJob>,
-    /// Ground-truth map←sensor poses, indexed by job id.
-    pub truth: Vec<Mat4>,
-    /// Per-tile admission decisions, tile order (see [`admit_map`]).
-    pub admissions: Vec<AdmissionDecision>,
-}
-
-/// Build a tile-crossing workload from a synthetic sequence: scans are
-/// assigned to `tiles` contiguous trajectory segments, each segment's
-/// union (placed into frame-0 coordinates by ground truth, then
-/// capacity-bounded) becomes one submap, and jobs are emitted
-/// round-robin across the tiles so consecutive jobs alternate submaps.
-pub fn tiled_localization_jobs(
-    seq: &Sequence,
-    scans: usize,
-    tiles: usize,
-    cfg: &PipelineConfig,
-) -> Result<TiledLocalizationWorkload> {
-    let scans = scans.min(seq.len());
-    if scans == 0 {
-        bail!("localization needs at least one scan");
-    }
-    let tiles = tiles.clamp(1, scans);
-    let tile_of_scan = |i: usize| (i * tiles) / scans;
-    let origin = seq.ground_truth[0].inverse_rigid();
-    let mut tile_clouds: Vec<PointCloud> = (0..tiles).map(|_| PointCloud::new()).collect();
-    let mut sources: Vec<Option<PointCloud>> = Vec::with_capacity(scans);
-    let mut poses = Vec::with_capacity(scans);
-    for i in 0..scans {
-        let cloud = preprocess(&seq.frame(i)?, cfg);
-        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
-        let world = cloud.transformed(&pose);
-        tile_clouds[tile_of_scan(i)].xyz.extend_from_slice(&world.xyz);
-        let mut rng = Pcg32::substream(cfg.seed, i as u64);
-        sources.push(Some(cloud.random_sample(cfg.source_sample, &mut rng)));
-        poses.push(pose);
-    }
-    // Each submap passes residency-aware admission on its own.
-    let mut maps = Vec::with_capacity(tiles);
-    let mut admissions = Vec::with_capacity(tiles);
-    for c in tile_clouds {
-        let (m, a) = admit_map(c, cfg)?;
-        maps.push(Arc::new(m));
-        admissions.push(a);
-    }
-    // Hash each shared submap once, not per job.
-    let keys: Vec<u64> = maps.iter().map(|m| m.fingerprint()).collect();
-
-    // Emission order: round-robin over the tiles (A,B,…,A,B,…), the
-    // maximal-ping-pong stress an LRU residency set exists for.
-    let mut by_tile: Vec<Vec<usize>> = vec![Vec::new(); tiles];
-    for i in 0..scans {
-        by_tile[tile_of_scan(i)].push(i);
-    }
-    let deepest = by_tile.iter().map(Vec::len).max().unwrap_or(0);
-    let mut jobs = Vec::with_capacity(scans);
-    let mut truth = Vec::with_capacity(scans);
-    let mut tile_of_job = Vec::with_capacity(scans);
-    for r in 0..deepest {
-        for (t, scans_of_tile) in by_tile.iter().enumerate() {
-            let Some(&i) = scans_of_tile.get(r) else {
-                continue;
-            };
-            // "Last known pose" prior, as in [`localization_jobs`].
-            let prior = if i == 0 { Mat4::IDENTITY } else { poses[i - 1] };
-            jobs.push(RegistrationJob::new_keyed(
-                jobs.len() as u64,
-                t,
-                sources[i].take().expect("each scan emitted once"),
-                Arc::clone(&maps[t]),
-                keys[t],
-                prior,
-            ));
-            truth.push(poses[i]);
-            tile_of_job.push(t);
-        }
-    }
-    Ok(TiledLocalizationWorkload {
-        maps,
-        tile_of_job,
-        jobs,
-        truth,
-        admissions,
-    })
-}
-
-/// Result of a [`run_tiled_localization`] run.
-#[derive(Debug)]
-pub struct TiledLocalizationResult {
-    pub report: LaneReport,
-    /// Points per submap, tile order.
-    pub map_points: Vec<usize>,
-    /// Per-scan translation error vs. ground truth (m), in job order;
-    /// NaN for contained failures.
-    pub translation_errors: Vec<f64>,
-    /// Per-tile admission decisions, tile order (see [`admit_map`]).
-    pub admissions: Vec<AdmissionDecision>,
-}
-
-impl TiledLocalizationResult {
-    pub fn mean_translation_error(&self) -> f64 {
-        mean_finite(&self.translation_errors)
-    }
-
-    pub fn max_translation_error(&self) -> f64 {
-        max_finite(&self.translation_errors)
-    }
-}
-
-/// Tile-crossing localization over the lane pool: `scans` frames of
-/// `seq` against `tiles` alternating submaps. With multi-target
-/// residency the per-lane upload count is bounded by the tile count —
-/// not the scan count — which `fpps localize --tiles` prints.
-#[allow(clippy::too_many_arguments)]
-pub fn run_tiled_localization<B, F>(
-    seq: &Sequence,
-    scans: usize,
-    tiles: usize,
-    cfg: &PipelineConfig,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    make_backend: F,
-) -> Result<TiledLocalizationResult>
-where
-    B: KernelBackend,
-    F: Fn(usize) -> Result<B> + Sync,
-{
-    run_tiled_localization_supervised(
-        seq,
-        scans,
-        tiles,
-        cfg,
-        lanes,
-        queue_depth,
-        icp_cfg,
-        SupervisorConfig::default(),
-        move |lane, _tier| make_backend(lane),
-    )
-}
-
-/// [`run_tiled_localization`] with an explicit fault-tolerance policy
-/// and a tier-aware backend factory (see [`run_supervised_lane_pool`]).
-#[allow(clippy::too_many_arguments)]
-pub fn run_tiled_localization_supervised<B, F>(
-    seq: &Sequence,
-    scans: usize,
-    tiles: usize,
-    cfg: &PipelineConfig,
-    lanes: usize,
-    queue_depth: usize,
-    icp_cfg: LaneIcpConfig,
-    sup: SupervisorConfig,
-    make_backend: F,
-) -> Result<TiledLocalizationResult>
-where
-    B: KernelBackend,
-    F: Fn(usize, usize) -> Result<B> + Sync,
-{
-    let workload = tiled_localization_jobs(seq, scans, tiles, cfg)?;
-    let map_points = workload.maps.iter().map(|m| m.len()).collect();
-    let admissions = workload.admissions.clone();
-    let report = run_registration_batch_supervised(
-        workload.jobs,
-        lanes,
-        queue_depth,
-        icp_cfg,
-        sup,
-        make_backend,
-    )?;
-    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
-    Ok(TiledLocalizationResult {
-        report,
-        map_points,
-        translation_errors,
-        admissions,
-    })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
-    use crate::metrics::absolute_trajectory_error;
-
-    fn tiny_sequence(frames: usize) -> Sequence {
-        let spec = sequence_specs()[3].clone(); // residential: gentle
-        Sequence::synthetic(spec, frames, 11, LidarConfig::tiny())
-    }
-
-    #[test]
-    fn fit_to_capacity_shrinks() {
-        let mut rng = Pcg32::new(1);
-        let mut c = PointCloud::with_capacity(5000);
-        for _ in 0..5000 {
-            c.push([rng.range(-40.0, 40.0), rng.range(-40.0, 40.0), rng.range(0.0, 5.0)]);
-        }
-        let f = fit_to_capacity(c.clone(), 1000, 7);
-        assert!(f.len() <= 1000);
-        assert!(f.len() > 100, "over-shrunk to {}", f.len());
-        // Under capacity → untouched.
-        assert_eq!(fit_to_capacity(c.clone(), 10_000, 7).len(), c.len());
-    }
-
-    #[test]
-    fn fit_to_capacity_fallback_respects_seed() {
-        // Force the random-sample fallback with a cloud too spread out
-        // for 12 voxel passes to tame, and check the pipeline seed
-        // actually reaches it (a fixed internal seed made all fallback
-        // samples identical regardless of cfg.seed).
-        let mut rng = Pcg32::new(2);
-        let mut c = PointCloud::with_capacity(4000);
-        for _ in 0..4000 {
-            c.push([
-                rng.range(-4.0e6, 4.0e6),
-                rng.range(-4.0e6, 4.0e6),
-                rng.range(-4.0e6, 4.0e6),
-            ]);
-        }
-        let a = fit_to_capacity(c.clone(), 100, 1);
-        let b = fit_to_capacity(c.clone(), 100, 1);
-        let d = fit_to_capacity(c.clone(), 100, 2);
-        assert_eq!(a.len(), 100);
-        assert_eq!(a.xyz, b.xyz, "same seed must reproduce the sample");
-        assert_ne!(a.xyz, d.xyz, "different seeds must differ");
-    }
-
-    #[test]
-    fn localization_workload_shares_one_target() {
-        let seq = tiny_sequence(5);
-        let cfg = PipelineConfig {
-            source_sample: 256,
-            target_capacity: 8192,
-            ..Default::default()
-        };
-        let w = localization_jobs(&seq, 5, &cfg).unwrap();
-        assert_eq!(w.jobs.len(), 5);
-        assert_eq!(w.truth.len(), 5);
-        let key = w.jobs[0].target_key;
-        for j in &w.jobs {
-            assert_eq!(j.target_key, key, "all scans share the map key");
-            assert!(Arc::ptr_eq(&j.target, &w.map), "no map copies");
-        }
-        // First scan's prior is identity (it *is* the map origin).
-        assert_eq!(w.jobs[0].initial.m, Mat4::IDENTITY.m);
-    }
-
-    #[test]
-    fn localization_tracks_ground_truth() {
-        let seq = tiny_sequence(5);
-        let cfg = PipelineConfig {
-            source_sample: 512,
-            target_capacity: 8192,
-            ..Default::default()
-        };
-        let res = run_localization(
-            &seq,
-            5,
-            &cfg,
-            2,
-            8,
-            LaneIcpConfig {
-                max_iteration_count: 30,
-                ..Default::default()
-            },
-            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
-        )
-        .unwrap();
-        assert_eq!(res.translation_errors.len(), 5);
-        assert!(
-            res.mean_translation_error() < 0.3,
-            "mean localization error {}",
-            res.mean_translation_error()
-        );
-        assert!(res.map_points > 0);
-        // Affinity + shared key: the map was uploaded by at most `lanes`
-        // backends, never once per scan.
-        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
-        assert!(uploads <= 2, "{uploads} uploads for 5 same-map scans");
-        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
-        assert_eq!(uploads + hits, 5, "every job either uploads or hits");
-    }
-
-    #[test]
-    fn odometry_runs_and_tracks() {
-        let frames = 6;
-        let seq = tiny_sequence(frames);
-        let mut icp = FppsIcp::native_sim();
-        icp.set_max_iteration_count(30);
-        let cfg = PipelineConfig {
-            source_sample: 1024,
-            target_capacity: 8192,
-            ..Default::default()
-        };
-        let res = run_odometry(&seq, frames, cfg, &mut icp).unwrap();
-        assert_eq!(res.records.len(), frames - 1);
-        assert_eq!(res.poses.len(), frames);
-        // Ground truth relative to frame 0.
-        let gt0 = seq.ground_truth[0];
-        let gt_rel: Vec<Mat4> = seq
-            .ground_truth
-            .iter()
-            .take(frames)
-            .map(|p| gt0.inverse_rigid().mul_mat(p))
-            .collect();
-        let ate = absolute_trajectory_error(&res.poses, &gt_rel);
-        assert!(ate < 0.6, "trajectory error too large: {ate}");
-        assert!(res.align_stats.count() == frames - 1);
-    }
-
-    #[test]
-    fn records_capture_convergence_info() {
-        let frames = 4;
-        let seq = tiny_sequence(frames);
-        let mut icp = FppsIcp::native_sim();
-        let res = run_odometry(&seq, frames, PipelineConfig {
-            source_sample: 512,
-            target_capacity: 4096,
-            ..Default::default()
-        }, &mut icp)
-        .unwrap();
-        for r in &res.records {
-            assert!(r.iterations >= 1);
-            assert!(r.align_ms > 0.0);
-            assert!(r.rmse.is_finite());
-        }
-    }
-
-    #[test]
-    fn zero_and_one_frame_edge_cases() {
-        let seq = tiny_sequence(2);
-        let mut icp = FppsIcp::native_sim();
-        let res = run_odometry(&seq, 1, PipelineConfig::default(), &mut icp).unwrap();
-        assert!(res.records.is_empty());
-        assert_eq!(res.poses.len(), 1);
-    }
-
-    // --- AffinityRouter: deterministic scheduling-policy harness ---
-
-    /// Shorthand for completion feedback in the router tests.
-    fn fb(lane: usize, key: u64, uploaded: bool, hit: bool, ok: bool) -> JobFeedback {
-        JobFeedback {
-            lane,
-            key,
-            uploaded,
-            hit,
-            ok,
-            generation: 0,
-        }
-    }
-
-    #[test]
-    fn stale_generation_feedback_does_not_resurrect_warm_keys() {
-        let mut r = AffinityRouter::new(2, 2);
-        // Lane 0 serves key 7 and the feedback confirms residency.
-        r.committed(0, 7);
-        r.completed(fb(0, 7, true, false, true));
-        assert_eq!(r.warm_keys(0), &[7]);
-        // Two more jobs for the key are in flight when the lane's
-        // backend is respawned: the restart clears the mirror and bumps
-        // the generation...
-        r.committed(0, 7);
-        r.committed(0, 7);
-        r.lane_restarted(0);
-        assert_eq!(r.generation(0), 1);
-        assert!(r.warm_keys(0).is_empty(), "restart must clear warm keys");
-        assert_eq!(r.pending(0), 2);
-        // ...so feedback from the old backend (generation 0) settles the
-        // load estimate but must NOT mark the key warm — the new backend
-        // holds nothing.
-        r.completed(fb(0, 7, true, true, true));
-        assert_eq!(r.pending(0), 1);
-        assert!(
-            r.warm_keys(0).is_empty(),
-            "stale-generation feedback resurrected a warm key"
-        );
-        // Current-generation feedback is trusted again.
-        let mut current = fb(0, 7, true, false, true);
-        current.generation = 1;
-        r.completed(current);
-        assert_eq!(r.pending(0), 0);
-        assert_eq!(r.warm_keys(0), &[7]);
-    }
-
-    #[test]
-    fn down_lanes_are_routed_around_until_recovery() {
-        let mut r = AffinityRouter::new(2, 1);
-        // Key 9 is warm on lane 1, which then gets marked down.
-        r.committed(1, 9);
-        r.completed(fb(1, 9, true, false, true));
-        r.set_down(1, true);
-        assert!(r.is_down(1));
-        // Warm affinity must not route to a down lane...
-        let choice = r.first_choice(9);
-        assert_ne!(choice, Some(1), "routed a job to a down lane");
-        // ...and the spill order skips it while any other lane is up.
-        assert!(!r.spill_order(None).contains(&1));
-        // Recovery restores warm affinity (the backend kept its cache:
-        // down ≠ restarted).
-        r.set_down(1, false);
-        assert_eq!(r.first_choice(9), Some(1));
-    }
-
-    #[test]
-    fn admission_policy_parses_and_displays() {
-        assert_eq!("reject".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Reject);
-        assert_eq!(
-            "downsample".parse::<AdmissionPolicy>().unwrap(),
-            AdmissionPolicy::DownsampleToFit
-        );
-        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::DownsampleToFit);
-        assert!("silent".parse::<AdmissionPolicy>().is_err());
-        assert_eq!(AdmissionPolicy::Reject.to_string(), "reject");
-        assert_eq!(
-            AdmissionPolicy::DownsampleToFit.to_string(),
-            "downsample-to-fit"
-        );
-    }
-
-    #[test]
-    fn router_reuses_every_warm_lane_after_a_steal() {
-        let mut r = AffinityRouter::new(2, 2);
-        // Cold key A: both lanes have free slots — least-loaded wins
-        // (tie → lane 0), no spill needed.
-        assert_eq!(r.first_choice(0xA), Some(0));
-        r.committed(0, 0xA);
-        r.committed(0, 0xA); // backlog of 2 on the warm lane
-        // Real backlog + idle lane 1 → steal to lane 1.
-        assert_eq!(r.first_choice(0xA), Some(1));
-        r.committed(1, 0xA);
-        // Both lanes are now warm for A. Lane 1 drains first: the
-        // dispatcher must see it as a warm candidate — the old
-        // `position()` scan only ever found lane 0.
-        r.completed(fb(1, 0xA, true, false, true));
-        assert_eq!(r.warm_lanes(0xA), vec![1, 0]);
-        assert_eq!(r.first_choice(0xA), Some(1), "least-loaded warm lane");
-        // Nobody idle: still route to the least-loaded *warm* lane
-        // rather than blocking round-robin.
-        r.committed(1, 0xA); // pending: lane0=2, lane1=1
-        assert_eq!(r.first_choice(0xA), Some(1));
-    }
-
-    #[test]
-    fn router_steals_only_on_real_backlog() {
-        let mut r = AffinityRouter::new(2, 2);
-        r.committed(0, 0xA);
-        // One in-flight job is NOT a backlog: the old router stole to
-        // the idle lane here, paying a redundant target upload.
-        assert_eq!(r.first_choice(0xA), Some(0), "no steal at pending 1");
-        r.committed(0, 0xA);
-        // Two deep with an idle lane → steal.
-        assert_eq!(r.first_choice(0xA), Some(1));
-        // No idle lane → stay on the least-loaded warm lane.
-        r.committed(1, 0xB);
-        assert_eq!(r.first_choice(0xA), Some(0));
-    }
-
-    #[test]
-    fn router_routes_cold_keys_to_free_slots_before_evicting() {
-        let mut r = AffinityRouter::new(2, 1);
-        r.committed(0, 0xA);
-        r.completed(fb(0, 0xA, true, false, true));
-        // Cold key B: lane 0 is idle but its only slot is warm; lane 1
-        // has the free slot — filling it beats evicting A.
-        assert!(!r.has_free_slot(0));
-        assert!(r.has_free_slot(1));
-        assert_eq!(r.first_choice(0xB), Some(1));
-        r.committed(1, 0xB);
-        r.completed(fb(1, 0xB, true, false, true));
-        // Every slot occupied → None: the channel loop spills by load
-        // (an eviction is now inevitable).
-        assert_eq!(r.first_choice(0xC), None);
-        assert_eq!(r.warm_lanes(0xA), vec![0], "A untouched on its lane");
-    }
-
-    #[test]
-    fn failed_upload_feedback_unwarms_the_mirror() {
-        let mut r = AffinityRouter::new(2, 1);
-        r.committed(0, 0xA);
-        assert_eq!(r.warm_lanes(0xA), vec![0], "optimistic commit");
-        // The job failed before its target upload: the backend never
-        // gained A, so the mirror must not keep claiming it.
-        r.completed(fb(0, 0xA, false, false, false));
-        assert!(r.warm_lanes(0xA).is_empty(), "failed upload un-warms");
-        assert!(r.has_free_slot(0), "slot freed for the next cold key");
-        // A failed alignment whose upload DID land keeps the key warm —
-        // the device holds the target regardless of the ICP error.
-        r.committed(1, 0xB);
-        r.completed(fb(1, 0xB, true, false, false));
-        assert_eq!(r.warm_lanes(0xB), vec![1]);
-        // A cache-hit completion confirms warmth.
-        r.committed(1, 0xB);
-        r.completed(fb(1, 0xB, false, true, true));
-        assert_eq!(r.warm_lanes(0xB), vec![1]);
-    }
-
-    #[test]
-    fn router_warm_sets_are_lru_bounded_like_the_backend() {
-        let mut r = AffinityRouter::new(1, 2);
-        r.committed(0, 0xA);
-        r.committed(0, 0xB);
-        assert_eq!(r.warm_lanes(0xA), vec![0]);
-        // A third key evicts the LRU key (A), not the MRU one.
-        r.committed(0, 0xC);
-        assert!(r.warm_lanes(0xA).is_empty(), "A evicted");
-        assert_eq!(r.warm_lanes(0xB), vec![0]);
-        assert_eq!(r.warm_lanes(0xC), vec![0]);
-        // Re-touching B keeps it MRU: D evicts C.
-        r.committed(0, 0xB);
-        r.committed(0, 0xD);
-        assert!(r.warm_lanes(0xC).is_empty());
-        assert_eq!(r.warm_lanes(0xB), vec![0]);
-    }
-
-    #[test]
-    fn router_blocking_choice_prefers_warmth_then_shortest_queue() {
-        let mut r = AffinityRouter::new(3, 2);
-        r.committed(0, 0xA);
-        r.committed(0, 0xA);
-        r.committed(1, 0xB);
-        // Key A: lane 0 is warm, so block there even though it is the
-        // longest queue (the cache hit outweighs one queue slot).
-        assert_eq!(r.blocking_choice(0xA), 0);
-        // Cold key: shortest queue wins (lane 2 is empty) — the old
-        // fall-through blocked on the round-robin cursor regardless.
-        assert_eq!(r.blocking_choice(0xF), 2);
-        // And among equals the rotation cursor breaks the tie.
-        r.committed(2, 0xC); // pending now [2, 1, 1], rr = 0
-        assert_eq!(r.blocking_choice(0xF), 1);
-    }
-
-    #[test]
-    fn router_spill_orders_by_load_and_skips_the_tried_lane() {
-        let mut r = AffinityRouter::new(3, 2);
-        r.committed(1, 0xA); // pending [0,1,0]
-        r.committed(2, 0xB);
-        r.committed(2, 0xC); // pending [0,1,2]
-        // Load first: a fresh (cache-empty) lane does not excuse a deep
-        // backlog — the old order let a cold key queue behind lane 2
-        // just because its cache was empty.
-        assert_eq!(r.spill_order(None), vec![0, 1, 2]);
-        // The lane whose queue already returned Full is skipped, not
-        // re-attempted.
-        assert_eq!(r.spill_order(Some(0)), vec![1, 2]);
-        // At equal load, a free residency slot breaks the tie: spilling
-        // where nothing needs evicting beats spilling onto a warm slot.
-        let mut r = AffinityRouter::new(2, 1);
-        r.committed(0, 0xA);
-        r.committed(1, 0xB);
-        r.completed(fb(0, 0xA, true, false, true)); // lane 0: idle, slot warm
-        r.completed(fb(1, 0xB, false, false, false)); // lane 1: idle, slot free
-        assert_eq!(r.spill_order(None), vec![1, 0]);
-    }
-
-    // --- Tile-crossing workload ---
-
-    #[test]
-    fn tiled_workload_interleaves_tiles_and_shares_submaps() {
-        let seq = tiny_sequence(6);
-        let cfg = PipelineConfig {
-            source_sample: 256,
-            target_capacity: 8192,
-            ..Default::default()
-        };
-        let w = tiled_localization_jobs(&seq, 6, 2, &cfg).unwrap();
-        assert_eq!(w.maps.len(), 2);
-        assert_eq!(w.jobs.len(), 6);
-        assert_eq!(w.truth.len(), 6);
-        // Round-robin emission: consecutive jobs alternate tiles.
-        assert_eq!(w.tile_of_job, vec![0, 1, 0, 1, 0, 1]);
-        for (job, &t) in w.jobs.iter().zip(&w.tile_of_job) {
-            assert_eq!(job.stream, t);
-            assert!(Arc::ptr_eq(&job.target, &w.maps[t]), "submaps are shared");
-            assert_eq!(job.target_key, w.maps[t].fingerprint());
-        }
-        // Ids are the emission order (deterministic outcome order).
-        for (k, job) in w.jobs.iter().enumerate() {
-            assert_eq!(job.id, k as u64);
-        }
-        // Two tiles → two distinct keys.
-        assert_ne!(w.jobs[0].target_key, w.jobs[1].target_key);
-        // Degenerate tile counts clamp instead of failing.
-        assert_eq!(tiled_localization_jobs(&seq, 6, 0, &cfg).unwrap().maps.len(), 1);
-        assert_eq!(tiled_localization_jobs(&seq, 6, 99, &cfg).unwrap().maps.len(), 6);
-    }
-
-    #[test]
-    fn tiled_localization_tracks_ground_truth_with_bounded_uploads() {
-        let seq = tiny_sequence(6);
-        let cfg = PipelineConfig {
-            source_sample: 512,
-            target_capacity: 8192,
-            ..Default::default()
-        };
-        let res = run_tiled_localization(
-            &seq,
-            6,
-            2,
-            &cfg,
-            1,
-            4,
-            LaneIcpConfig {
-                max_iteration_count: 30,
-                ..Default::default()
-            },
-            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
-        )
-        .unwrap();
-        assert_eq!(res.report.outcomes.len(), 6);
-        assert_eq!(res.map_points.len(), 2);
-        assert!(
-            res.mean_translation_error() < 0.3,
-            "mean tile-localization error {}",
-            res.mean_translation_error()
-        );
-        // One lane, two submaps, A,B,A,B,… order: the LRU residency set
-        // absorbs the ping-pong — exactly one upload per submap.
-        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
-        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
-        assert_eq!(uploads, 2, "one upload per tile, not per scan");
-        assert_eq!(uploads + hits, 6);
-        assert_eq!(res.report.lanes[0].resident_targets, 2);
-        assert_eq!(res.report.failed_jobs(), 0);
-    }
-}
+//! Every lane owns one kernel backend (one accelerator context); jobs
+//! are routed by target-key affinity so cross-frame map reuse skips the
+//! target DMA and kd-tree rebuild. Payloads ride `Arc`s through
+//! lock-free rings (zero-copy data plane); outcomes are bit-identical
+//! to the sequential path for every Ok result, whichever entry point —
+//! batch, localization, or serving — produced them.
+
+pub mod jobs;
+pub mod pipeline;
+pub mod router;
+pub mod scenarios;
+pub mod serving;
+pub mod supervise;
+
+pub use jobs::*;
+pub use pipeline::*;
+pub use router::*;
+pub use scenarios::*;
+pub use serving::*;
+pub use supervise::*;

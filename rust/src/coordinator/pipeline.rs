@@ -1,0 +1,601 @@
+//! Frame pipeline: acquisition/preprocessing, capacity fitting,
+//! residency-aware admission control, and the single-stream scan-to-scan
+//! odometry driver.
+//!
+//! This is the data-preparation layer every scenario shares: frames are
+//! sampled/padded ([`preprocess`], [`fit_to_capacity`]), oversized maps
+//! hit an explicit [`AdmissionPolicy`] ([`admit_map`]) instead of a
+//! silent shrink, and [`run_odometry`] implements the paper's two-stage
+//! host pipeline (acquire frame i+1 while frame i aligns).
+
+use crate::dataset::Sequence;
+use crate::fpps_api::{FppsIcp, KernelBackend};
+use crate::math::Mat4;
+use crate::metrics::TimingStats;
+use crate::pointcloud::PointCloud;
+use crate::rng::Pcg32;
+use anyhow::{bail, Result};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::time::Instant;
+
+/// Preprocessed frame ready for alignment.
+pub struct PreparedFrame {
+    pub index: usize,
+    /// Sampled source cloud (the paper's 4096-point sample).
+    pub source_sample: PointCloud,
+    /// Full cloud (becomes the next frame's target).
+    pub full: PointCloud,
+}
+
+/// Pipeline configuration.
+///
+/// The preprocessing knobs implement the standard LiDAR-odometry front
+/// end (range crop, ground removal, voxel grid) that PCL-based
+/// registration pipelines run before ICP. Point-to-point scan-to-scan
+/// ICP on raw ring-structured scans is identity-biased (ground rings
+/// self-match; see DESIGN.md §3 "dataset realism"), so the front end is
+/// not optional for odometry-quality tracking — though the Table III /
+/// IV benches can disable pieces of it, as they compare CPU vs device
+/// under *identical* preprocessing.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Per-frame source sample size (paper: 4096).
+    pub source_sample: usize,
+    /// Target cap; clouds larger than this are voxel-downsampled to fit
+    /// the device target buffer.
+    pub target_capacity: usize,
+    /// Channel depth between acquisition and alignment (double
+    /// buffering = 2, like the device's ping-pong BRAM buffers).
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// Range crop (m); 0 disables.
+    pub crop_range: f32,
+    /// Drop points below this sensor-frame z (ground removal; the
+    /// sensor sits ~1.73 m up, so −1.2 keeps everything ≥ ~0.5 m above
+    /// the road). `f32::NEG_INFINITY` disables.
+    pub ground_z_min: f32,
+    /// Voxel-grid leaf applied to both clouds (m); 0 disables.
+    pub voxel_leaf: f32,
+    /// Multi-start bootstrap: number of forward-translation seeds tried
+    /// on the first frame (and after tracking loss). 0 = identity only.
+    pub bootstrap_seeds: usize,
+    /// Spacing between bootstrap seeds along +x (m).
+    pub bootstrap_step: f32,
+    /// How maps whose footprint exceeds one residency slot
+    /// (`target_capacity` points) are admitted (see [`admit_map`]).
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            source_sample: 4096,
+            target_capacity: 16_384,
+            queue_depth: 2,
+            seed: 7,
+            crop_range: 40.0,
+            ground_z_min: -1.2,
+            voxel_leaf: 0.15,
+            bootstrap_seeds: 9,
+            bootstrap_step: 0.3,
+            admission: AdmissionPolicy::DownsampleToFit,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Paper-parity preprocessing: no front end at all (raw clouds),
+    /// as in the paper's "4096 points randomly sampled from the source".
+    pub fn raw() -> Self {
+        Self {
+            crop_range: 0.0,
+            ground_z_min: f32::NEG_INFINITY,
+            voxel_leaf: 0.0,
+            bootstrap_seeds: 0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Front-end preprocessing shared by source and target.
+pub fn preprocess(cloud: &PointCloud, cfg: &PipelineConfig) -> PointCloud {
+    let mut out = PointCloud::with_capacity(cloud.len());
+    let r2max = if cfg.crop_range > 0.0 {
+        cfg.crop_range * cfg.crop_range
+    } else {
+        f32::INFINITY
+    };
+    for p in cloud.iter() {
+        let r2 = p[0] * p[0] + p[1] * p[1];
+        if r2 <= r2max && p[2] >= cfg.ground_z_min {
+            out.push(p);
+        }
+    }
+    if cfg.voxel_leaf > 0.0 {
+        out = out.voxel_downsample(cfg.voxel_leaf);
+    }
+    out
+}
+
+/// Per-frame odometry record.
+#[derive(Clone, Debug)]
+pub struct FrameRecord {
+    pub index: usize,
+    /// Scan-to-scan transform estimated by ICP.
+    pub relative: Mat4,
+    /// Accumulated pose (world ← sensor_i).
+    pub pose: Mat4,
+    pub rmse: f64,
+    pub iterations: u32,
+    pub stop: StopReason,
+    /// Wall time of the alignment (acquisition excluded — it overlaps).
+    pub align_ms: f64,
+}
+
+/// Odometry run output.
+#[derive(Debug)]
+pub struct OdometryResult {
+    pub records: Vec<FrameRecord>,
+    pub poses: Vec<Mat4>,
+    pub align_stats: TimingStats,
+    /// Time the alignment thread spent blocked waiting for frames — a
+    /// measure of how well acquisition hides behind alignment.
+    pub starvation_ms: f64,
+}
+
+impl OdometryResult {
+    /// Mean registration RMSE across frames (Table III row).
+    pub fn mean_rmse(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.rmse.is_finite())
+            .map(|r| r.rmse)
+            .collect();
+        if vals.is_empty() {
+            f64::NAN
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+}
+
+/// Fit a cloud into the device target buffer: voxel-downsample with a
+/// growing leaf until it fits (PCL pipelines do exactly this to bound
+/// map density). `seed` drives the random-sample fallback, so different
+/// pipeline seeds produce different fallback samples (a fixed internal
+/// seed would silently make them identical).
+pub fn fit_to_capacity(cloud: PointCloud, capacity: usize, seed: u64) -> PointCloud {
+    if cloud.len() <= capacity {
+        return cloud;
+    }
+    let mut leaf = 0.1f32;
+    for _ in 0..12 {
+        let down = cloud.voxel_downsample(leaf);
+        if down.len() <= capacity {
+            return down;
+        }
+        leaf *= 1.6;
+    }
+    // Fall back to random sampling at the last resort (substream keeps
+    // it independent of the per-frame source-sampling streams).
+    let mut rng = Pcg32::substream(seed, 0xF17);
+    cloud.random_sample(capacity, &mut rng)
+}
+
+// ---------------------------------------------------------------------------
+// Residency-aware admission
+// ---------------------------------------------------------------------------
+
+/// What to do with a candidate resident map whose footprint exceeds one
+/// residency slot (`target_capacity` points). Parsed from the
+/// `admission=` config key and `--admission` CLI option.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Fail the run with a structured [`AdmissionError`] carrying the
+    /// `hwmodel` footprint — for serving setups where a silently
+    /// degraded map is worse than a loud rejection.
+    Reject,
+    /// Voxel-downsample (growing leaf, random-sample fallback) until the
+    /// map fits the slot, and record the decision — the pre-admission
+    /// behavior, made explicit and visible.
+    #[default]
+    DownsampleToFit,
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "reject" => AdmissionPolicy::Reject,
+            "downsample" | "downsample-to-fit" => AdmissionPolicy::DownsampleToFit,
+            other => bail!("unknown admission policy {other:?} (expected reject | downsample)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::DownsampleToFit => "downsample-to-fit",
+        })
+    }
+}
+
+/// Structured rejection of a map that does not fit one residency slot —
+/// returned (through `anyhow`, downcastable) by [`admit_map`] under
+/// [`AdmissionPolicy::Reject`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionError {
+    /// Raw point count of the offending map.
+    pub points: usize,
+    /// Points after padding to the kernel target block.
+    pub padded_points: usize,
+    /// HBM bytes the padded map would occupy.
+    pub footprint_bytes: u64,
+    /// Point capacity of one residency slot (`target_capacity`).
+    pub slot_capacity: usize,
+    /// HBM bytes one slot provides at that capacity.
+    pub slot_bytes: u64,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "map of {} points (padded {} = {} B HBM) exceeds the {}-point residency slot \
+             ({} B); rerun with `--admission downsample` or raise target_capacity",
+            self.points,
+            self.padded_points,
+            self.footprint_bytes,
+            self.slot_capacity,
+            self.slot_bytes
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// What admission decided for one candidate map (recorded on the
+/// localization workloads so the decision is reportable, never silent).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionDecision {
+    pub policy: AdmissionPolicy,
+    /// Point count before admission.
+    pub original_points: usize,
+    /// Point count actually admitted to the slot.
+    pub admitted_points: usize,
+    /// `hwmodel` footprint of the *original* cloud — what was asked of
+    /// the slot.
+    pub footprint: crate::hwmodel::TargetFootprint,
+    /// Point capacity of one residency slot at admission time.
+    pub slot_capacity: usize,
+}
+
+impl AdmissionDecision {
+    /// Did admission have to shrink the map to fit?
+    pub fn downsampled(&self) -> bool {
+        self.admitted_points < self.original_points
+    }
+}
+
+/// Residency-aware admission for one candidate resident map: estimate
+/// its padded HBM footprint via
+/// [`crate::hwmodel::AcceleratorConfig::target_footprint`], admit it
+/// unchanged when it fits a `cfg.target_capacity`-point slot, and
+/// otherwise apply `cfg.admission` — a structured rejection or an
+/// explicit downsample-to-fit — instead of the old silent shrink.
+pub fn admit_map(
+    cloud: PointCloud,
+    cfg: &PipelineConfig,
+) -> Result<(PointCloud, AdmissionDecision)> {
+    let hw = crate::hwmodel::AcceleratorConfig::default();
+    let block_m = crate::nn::KernelConfig::default().block_m;
+    let footprint = hw.target_footprint(cloud.len(), block_m);
+    let original_points = cloud.len();
+    let slot_capacity = cfg.target_capacity;
+    if footprint.fits_slot(slot_capacity) {
+        return Ok((
+            cloud,
+            AdmissionDecision {
+                policy: cfg.admission,
+                original_points,
+                admitted_points: original_points,
+                footprint,
+                slot_capacity,
+            },
+        ));
+    }
+    match cfg.admission {
+        AdmissionPolicy::Reject => Err(AdmissionError {
+            points: original_points,
+            padded_points: footprint.padded_points,
+            footprint_bytes: footprint.bytes,
+            slot_capacity,
+            slot_bytes: crate::hwmodel::AcceleratorConfig::resident_target_bytes(slot_capacity),
+        }
+        .into()),
+        AdmissionPolicy::DownsampleToFit => {
+            let fitted = fit_to_capacity(cloud, slot_capacity, cfg.seed);
+            let admitted_points = fitted.len();
+            Ok((
+                fitted,
+                AdmissionDecision {
+                    policy: cfg.admission,
+                    original_points,
+                    admitted_points,
+                    footprint,
+                    slot_capacity,
+                },
+            ))
+        }
+    }
+}
+
+/// Acquisition stage: generates/loads frames, samples the source, and
+/// pushes prepared frames downstream. Runs on its own thread.
+fn acquisition_thread(
+    seq: &Sequence,
+    frames: usize,
+    cfg: PipelineConfig,
+    tx: SyncSender<Result<PreparedFrame>>,
+) {
+    for i in 0..frames {
+        let item = (|| -> Result<PreparedFrame> {
+            let cloud = preprocess(&seq.frame(i)?, &cfg);
+            let mut rng = Pcg32::substream(cfg.seed, i as u64);
+            let source_sample = cloud.random_sample(cfg.source_sample, &mut rng);
+            let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
+            Ok(PreparedFrame {
+                index: i,
+                source_sample,
+                full,
+            })
+        })();
+        // Receiver hung up → stop early.
+        if tx.send(item).is_err() {
+            return;
+        }
+    }
+}
+
+/// Run scan-to-scan odometry over the first `frames` frames of `seq`
+/// using the FPPS API with the given backend.
+///
+/// Frame 0 initialises the map; each subsequent frame aligns its sample
+/// against the previous frame's full cloud, seeding ICP with the
+/// previous relative motion (constant-velocity prior — standard LiDAR
+/// odometry practice that also matches the paper's per-frame "initial
+/// transformation matrix" API).
+pub fn run_odometry<B: KernelBackend>(
+    seq: &Sequence,
+    frames: usize,
+    cfg: PipelineConfig,
+    icp: &mut FppsIcp<B>,
+) -> Result<OdometryResult> {
+    let frames = frames.min(seq.len());
+    let (tx, rx): (_, Receiver<Result<PreparedFrame>>) = sync_channel(cfg.queue_depth);
+
+    std::thread::scope(|scope| {
+        scope.spawn(|| acquisition_thread(seq, frames, cfg, tx));
+
+        let mut records = Vec::new();
+        let mut poses = vec![Mat4::IDENTITY];
+        let mut align_stats = TimingStats::new();
+        let mut starvation_ms = 0.0;
+        let mut prev_full: Option<PointCloud> = None;
+        let mut prev_relative = Mat4::IDENTITY;
+
+        loop {
+            let wait0 = std::time::Instant::now();
+            let msg = match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // acquisition finished
+            };
+            starvation_ms += wait0.elapsed().as_secs_f64() * 1e3;
+            let frame = msg.context("frame acquisition")?;
+
+            match prev_full.take() {
+                None => {
+                    // First frame: nothing to align against.
+                    prev_full = Some(frame.full);
+                }
+                Some(target) => {
+                    let t0 = std::time::Instant::now();
+                    let bootstrap = records.is_empty()
+                        || !matches!(
+                            records.last().map(|r: &FrameRecord| r.stop),
+                            Some(StopReason::Converged) | Some(StopReason::MaxIterations)
+                        );
+                    let res = if bootstrap && cfg.bootstrap_seeds > 0 {
+                        // Multi-start global initialisation: the vehicle
+                        // moves dominantly forward, so seed a fan of +x
+                        // translations and keep the lowest-RMSE result.
+                        let mut best: Option<crate::fpps_api::FppsResult> = None;
+                        for k in 0..=cfg.bootstrap_seeds {
+                            let seed_t = Mat4::from_rt(
+                                crate::math::Mat3::IDENTITY,
+                                crate::math::Vec3::new(
+                                    (k as f64) * cfg.bootstrap_step as f64,
+                                    0.0,
+                                    0.0,
+                                ),
+                            );
+                            icp.set_input_source(frame.source_sample.clone());
+                            icp.set_input_target(target.clone());
+                            icp.set_transformation_matrix(seed_t);
+                            let r = icp.align()?;
+                            let better = match &best {
+                                None => true,
+                                Some(b) => {
+                                    r.has_converged()
+                                        && (!b.has_converged() || r.rmse < b.rmse)
+                                }
+                            };
+                            if better {
+                                best = Some(r);
+                            }
+                        }
+                        best.expect("at least one bootstrap attempt")
+                    } else {
+                        icp.set_input_source(frame.source_sample);
+                        icp.set_input_target(target);
+                        icp.set_transformation_matrix(prev_relative);
+                        icp.align()?
+                    };
+                    let align_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    align_stats.record_ms(align_ms);
+
+                    // T maps source (frame i) into target (frame i−1)
+                    // coordinates — i.e. the relative motion.
+                    let relative = res.transformation;
+                    let pose = poses.last().unwrap().mul_mat(&relative);
+                    poses.push(pose);
+                    records.push(FrameRecord {
+                        index: frame.index,
+                        relative,
+                        pose,
+                        rmse: res.rmse,
+                        iterations: res.iterations,
+                        stop: res.stop,
+                        align_ms,
+                    });
+                    prev_relative = if res.has_converged() {
+                        relative
+                    } else {
+                        Mat4::IDENTITY
+                    };
+                    prev_full = Some(frame.full);
+                }
+            }
+        }
+
+        Ok(OdometryResult {
+            records,
+            poses,
+            align_stats,
+            starvation_ms,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+    use crate::metrics::absolute_trajectory_error;
+
+    fn tiny_sequence(frames: usize) -> Sequence {
+        let spec = sequence_specs()[3].clone(); // residential: gentle
+        Sequence::synthetic(spec, frames, 11, LidarConfig::tiny())
+    }
+
+    #[test]
+    fn fit_to_capacity_shrinks() {
+        let mut rng = Pcg32::new(1);
+        let mut c = PointCloud::with_capacity(5000);
+        for _ in 0..5000 {
+            c.push([rng.range(-40.0, 40.0), rng.range(-40.0, 40.0), rng.range(0.0, 5.0)]);
+        }
+        let f = fit_to_capacity(c.clone(), 1000, 7);
+        assert!(f.len() <= 1000);
+        assert!(f.len() > 100, "over-shrunk to {}", f.len());
+        // Under capacity → untouched.
+        assert_eq!(fit_to_capacity(c.clone(), 10_000, 7).len(), c.len());
+    }
+
+    #[test]
+    fn fit_to_capacity_fallback_respects_seed() {
+        // Force the random-sample fallback with a cloud too spread out
+        // for 12 voxel passes to tame, and check the pipeline seed
+        // actually reaches it (a fixed internal seed made all fallback
+        // samples identical regardless of cfg.seed).
+        let mut rng = Pcg32::new(2);
+        let mut c = PointCloud::with_capacity(4000);
+        for _ in 0..4000 {
+            c.push([
+                rng.range(-4.0e6, 4.0e6),
+                rng.range(-4.0e6, 4.0e6),
+                rng.range(-4.0e6, 4.0e6),
+            ]);
+        }
+        let a = fit_to_capacity(c.clone(), 100, 1);
+        let b = fit_to_capacity(c.clone(), 100, 1);
+        let d = fit_to_capacity(c.clone(), 100, 2);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.xyz, b.xyz, "same seed must reproduce the sample");
+        assert_ne!(a.xyz, d.xyz, "different seeds must differ");
+    }
+
+    #[test]
+    fn odometry_runs_and_tracks() {
+        let frames = 6;
+        let seq = tiny_sequence(frames);
+        let mut icp = FppsIcp::native_sim();
+        icp.set_max_iteration_count(30);
+        let cfg = PipelineConfig {
+            source_sample: 1024,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let res = run_odometry(&seq, frames, cfg, &mut icp).unwrap();
+        assert_eq!(res.records.len(), frames - 1);
+        assert_eq!(res.poses.len(), frames);
+        // Ground truth relative to frame 0.
+        let gt0 = seq.ground_truth[0];
+        let gt_rel: Vec<Mat4> = seq
+            .ground_truth
+            .iter()
+            .take(frames)
+            .map(|p| gt0.inverse_rigid().mul_mat(p))
+            .collect();
+        let ate = absolute_trajectory_error(&res.poses, &gt_rel);
+        assert!(ate < 0.6, "trajectory error too large: {ate}");
+        assert!(res.align_stats.count() == frames - 1);
+    }
+
+    #[test]
+    fn records_capture_convergence_info() {
+        let frames = 4;
+        let seq = tiny_sequence(frames);
+        let mut icp = FppsIcp::native_sim();
+        let res = run_odometry(&seq, frames, PipelineConfig {
+            source_sample: 512,
+            target_capacity: 4096,
+            ..Default::default()
+        }, &mut icp)
+        .unwrap();
+        for r in &res.records {
+            assert!(r.iterations >= 1);
+            assert!(r.align_ms > 0.0);
+            assert!(r.rmse.is_finite());
+        }
+    }
+
+    #[test]
+    fn zero_and_one_frame_edge_cases() {
+        let seq = tiny_sequence(2);
+        let mut icp = FppsIcp::native_sim();
+        let res = run_odometry(&seq, 1, PipelineConfig::default(), &mut icp).unwrap();
+        assert!(res.records.is_empty());
+        assert_eq!(res.poses.len(), 1);
+    }
+
+    #[test]
+    fn admission_policy_parses_and_displays() {
+        assert_eq!("reject".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Reject);
+        assert_eq!(
+            "downsample".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::DownsampleToFit
+        );
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::DownsampleToFit);
+        assert!("silent".parse::<AdmissionPolicy>().is_err());
+        assert_eq!(AdmissionPolicy::Reject.to_string(), "reject");
+        assert_eq!(
+            AdmissionPolicy::DownsampleToFit.to_string(),
+            "downsample-to-fit"
+        );
+    }
+}

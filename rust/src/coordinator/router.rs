@@ -1,0 +1,535 @@
+//! Pool-wide residency coordination: the [`AffinityRouter`] mirrors each
+//! lane backend's LRU resident-target set (corrected by per-job
+//! [`JobFeedback`], generation-stamped across lane restarts) and decides
+//! where every job goes — warm lanes keep their keys, cold keys fill
+//! free residency slots before any warm lane evicts, and stealing only
+//! starts at a real backlog ([`STEAL_BACKLOG`]) with another lane idle.
+
+/// Steal threshold: a warm lane keeps its key's jobs until it has this
+/// many in flight *and* another lane sits idle. One in-flight job is
+/// not a backlog — it drains sooner than a redundant target upload
+/// pays off — so stealing starts at a queue two deep.
+pub const STEAL_BACKLOG: usize = 2;
+
+/// Per-job completion feedback a lane reports to the dispatcher — the
+/// ground truth that corrects the [`AffinityRouter`]'s warm-set mirror
+/// (see [`AffinityRouter::completed`]).
+#[derive(Clone, Copy, Debug)]
+pub struct JobFeedback {
+    /// Lane that served the job.
+    pub lane: usize,
+    /// The job's target key.
+    pub key: u64,
+    /// The backend actually uploaded the target during this job (the
+    /// lane diffs its upload counter around `align()`), so the lane now
+    /// genuinely holds the key — even if the alignment later errored.
+    pub uploaded: bool,
+    /// The job re-activated an already-resident target (the cache-hit
+    /// counter advanced): the key is device-resident and was just
+    /// MRU-touched there — even if a later stage of the alignment
+    /// failed, which is why this cannot be inferred from `ok` alone.
+    pub hit: bool,
+    /// The alignment returned `Ok`.
+    pub ok: bool,
+    /// The lane's backend generation the job ran under (0 until the
+    /// first restart). Feedback whose generation trails the router's
+    /// ([`AffinityRouter::generation`]) is *stale*: the backend it
+    /// describes is gone, so it settles only the load estimate and
+    /// never touches the warm/resident mirrors (see
+    /// [`AffinityRouter::lane_restarted`]).
+    pub generation: u64,
+}
+
+/// Pool-wide residency coordinator — the routing core of the supervised
+/// dispatcher: a pure, deterministic state machine over
+/// per-lane **warm key sets** (the dispatcher-side mirror of each lane
+/// backend's LRU resident-target set) plus a pending-job load estimate
+/// and per-lane **slot occupancy** (free vs. warm). Separated from the
+/// channel plumbing so the scheduling policy is unit-testable without
+/// threads, and public so the property suite can drive it against real
+/// backends.
+///
+/// Invariants the channel loop must uphold:
+/// * routing state is committed via [`Self::committed`] only **after** a
+///   send succeeds (a failed `try_send` must not poison the warm sets);
+/// * every served job reports [`JobFeedback`] through
+///   [`Self::completed`], which *corrects* the optimistically committed
+///   mirror — replaying uploads and cache hits onto the confirmed
+///   resident mirror, and un-warming a key whose job failed before
+///   touching residency. The corrected warm sets stay a subset of each
+///   backend's [`KernelBackend::resident_epochs`] keys
+///   (property-tested).
+pub struct AffinityRouter {
+    /// Per-lane warm target keys, LRU first / MRU last, each bounded by
+    /// `slots` — uploads past capacity evict exactly like the backend.
+    warm: Vec<Vec<u64>>,
+    /// Keys *confirmed* device-resident per lane (LRU first), updated
+    /// only by [`JobFeedback`] — the exact mirror of each backend's
+    /// resident set as of its last processed completion. Distinct from
+    /// the warm set: `warm` also carries optimistic, not-yet-completed
+    /// commits (and drops keys conservatively on failure), while this
+    /// list replays the device's own upload/activate transitions, so a
+    /// device slot filled by a key the warm mirror later forgot still
+    /// counts as occupied.
+    resident: Vec<Vec<u64>>,
+    /// Jobs sent to each lane minus completions seen.
+    pending: Vec<usize>,
+    /// Residency slots mirrored per lane.
+    slots: usize,
+    /// Round-robin cursor for tie-breaking and spill.
+    rr: usize,
+    /// Per-lane backend generation: bumped by [`Self::lane_restarted`]
+    /// so feedback from a pre-restart backend is recognizably stale.
+    gen: Vec<u64>,
+    /// Lanes the supervisor declared wedged; routing avoids them until
+    /// they recover (unless every lane is down).
+    down: Vec<bool>,
+}
+
+impl AffinityRouter {
+    pub fn new(lanes: usize, slots: usize) -> Self {
+        Self {
+            warm: vec![Vec::new(); lanes],
+            resident: vec![Vec::new(); lanes],
+            pending: vec![0; lanes],
+            slots: slots.max(1),
+            rr: 0,
+            gen: vec![0; lanes],
+            down: vec![false; lanes],
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Jobs routed to `lane` and not yet completed.
+    pub fn pending(&self, lane: usize) -> usize {
+        self.pending[lane]
+    }
+
+    /// The mirror's warm keys of `lane`, LRU first / MRU last.
+    pub fn warm_keys(&self, lane: usize) -> &[u64] {
+        &self.warm[lane]
+    }
+
+    /// Backend generation the router currently expects from `lane`.
+    pub fn generation(&self, lane: usize) -> u64 {
+        self.gen[lane]
+    }
+
+    /// Is `lane` marked wedged/down for routing purposes?
+    pub fn is_down(&self, lane: usize) -> bool {
+        self.down[lane]
+    }
+
+    /// The supervisor respawned `lane`'s backend: the fresh instance
+    /// holds *nothing*, so clear both the warm and confirmed-resident
+    /// mirrors and bump the generation — feedback still in flight from
+    /// the old backend must not resurrect the keys this wipe dropped
+    /// (see [`Self::completed`]).
+    pub fn lane_restarted(&mut self, lane: usize) {
+        if lane >= self.lanes() {
+            return;
+        }
+        self.warm[lane].clear();
+        self.resident[lane].clear();
+        self.gen[lane] += 1;
+    }
+
+    /// Mark `lane` wedged (`down = true`) or recovered: routing skips
+    /// down lanes while any lane is still up.
+    pub fn set_down(&mut self, lane: usize, down: bool) {
+        if lane < self.lanes() {
+            self.down[lane] = down;
+        }
+    }
+
+    /// The supervisor drained `n` queued jobs off a wedged `lane` for
+    /// re-routing: they will never feed back from there, so settle the
+    /// load estimate now.
+    pub fn requeued(&mut self, lane: usize, n: usize) {
+        if lane < self.lanes() {
+            self.pending[lane] = self.pending[lane].saturating_sub(n);
+        }
+    }
+
+    /// Total jobs routed and not yet fed back, across all lanes.
+    pub fn total_pending(&self) -> usize {
+        self.pending.iter().sum()
+    }
+
+    /// Does the mirror say `lane` has an unoccupied residency slot — a
+    /// place a cold target can land without evicting anything? Uses the
+    /// larger of the optimistic warm count (committed, not yet
+    /// completed) and the confirmed resident count (a slot filled by a
+    /// key the warm mirror later forgot is still filled).
+    pub fn has_free_slot(&self, lane: usize) -> bool {
+        self.warm[lane].len().max(self.resident[lane].len()) < self.slots
+    }
+
+    /// Every *up* lane warm for `key` — after a steal there can be
+    /// several — least-loaded first (ties by lane index). Down lanes
+    /// are never warm candidates: their queue is not draining.
+    pub fn warm_lanes(&self, key: u64) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.lanes())
+            .filter(|&l| !self.down[l] && self.warm[l].contains(&key))
+            .collect();
+        v.sort_by_key(|&l| self.pending[l]); // stable sort keeps index order on ties
+        v
+    }
+
+    /// Routing decision, in priority order:
+    /// 1. **warm hit** — the least-loaded warm lane, as long as its
+    ///    backlog stays under [`STEAL_BACKLOG`];
+    /// 2. **steal** — every warm lane is backlogged and a lane sits
+    ///    idle: the idle lane (free-slot lanes preferred) pays one extra
+    ///    upload rather than serializing a same-target batch;
+    /// 3. the least-loaded warm lane when nobody is idle;
+    /// 4. **free slot** — a cold key goes to the least-loaded lane with
+    ///    an unoccupied residency slot: filling free pool capacity
+    ///    always beats evicting a warm lane's LRU key;
+    /// 5. `None` — cold key, every slot on every lane occupied: the
+    ///    caller spills by load (an eviction is inevitable).
+    pub fn first_choice(&self, key: u64) -> Option<usize> {
+        let warm = self.warm_lanes(key);
+        if let Some(&best) = warm.first() {
+            if self.pending[best] < STEAL_BACKLOG {
+                return Some(best);
+            }
+            let idle = (0..self.lanes())
+                .filter(|&l| !self.down[l] && self.pending[l] == 0)
+                .min_by_key(|&l| !self.has_free_slot(l));
+            if let Some(idle) = idle {
+                return Some(idle);
+            }
+            return Some(best);
+        }
+        (0..self.lanes())
+            .filter(|&l| !self.down[l] && self.has_free_slot(l))
+            .min_by_key(|&l| self.pending[l])
+    }
+
+    /// Spill order for non-blocking attempts after [`Self::first_choice`]
+    /// found its queue full: everyone except the already-tried lane,
+    /// least-loaded first (a cold key must not queue behind a deep
+    /// backlog just because a lane's cache is fresh), free-slot lanes
+    /// before evicting ones at equal load, rotation order breaking the
+    /// remaining ties.
+    pub fn spill_order(&self, exclude: Option<usize>) -> Vec<usize> {
+        let lanes = self.lanes();
+        let mut order: Vec<usize> = (0..lanes)
+            .map(|i| (self.rr + i) % lanes)
+            .filter(|&l| Some(l) != exclude && !self.down[l])
+            .collect();
+        if order.is_empty() {
+            // Every other lane is down: spill anywhere rather than
+            // nowhere — jobs queue up and drain once a lane recovers.
+            order = (0..lanes)
+                .map(|i| (self.rr + i) % lanes)
+                .filter(|&l| Some(l) != exclude)
+                .collect();
+        }
+        order.sort_by_key(|&l| (self.pending[l], !self.has_free_slot(l)));
+        order
+    }
+
+    /// Lane to block on when every queue is full: the least-loaded warm
+    /// lane (keeps the cache hot), else the shortest queue — free-slot
+    /// lanes first at equal load, rotation order on remaining ties —
+    /// never a blind round-robin pick past a shorter queue.
+    pub fn blocking_choice(&self, key: u64) -> usize {
+        if let Some(&l) = self.warm_lanes(key).first() {
+            return l;
+        }
+        let lanes = self.lanes();
+        (0..lanes)
+            .map(|i| (self.rr + i) % lanes)
+            .min_by_key(|&l| (self.down[l], self.pending[l], !self.has_free_slot(l)))
+            .unwrap_or(0)
+    }
+
+    /// Touch `key` MRU on `lane`'s mirror, evicting past the slot count
+    /// exactly like the backend's LRU set.
+    fn touch_warm(&mut self, lane: usize, key: u64) {
+        let w = &mut self.warm[lane];
+        if let Some(i) = w.iter().position(|&k| k == key) {
+            w.remove(i);
+        }
+        w.push(key);
+        while w.len() > self.slots {
+            w.remove(0);
+        }
+    }
+
+    /// A job with `key` was *successfully* sent to `lane`: bump its
+    /// load, optimistically mark the key warm (MRU — so back-to-back
+    /// same-key jobs keep their affinity before the first completes),
+    /// advance the round-robin cursor. The optimism is corrected by
+    /// [`Self::completed`] once the job's real outcome is known.
+    pub fn committed(&mut self, lane: usize, key: u64) {
+        self.pending[lane] += 1;
+        self.touch_warm(lane, key);
+        self.rr = (lane + 1) % self.lanes();
+    }
+
+    /// Replay a confirmed device transition for `key` on `lane`'s
+    /// resident mirror — insert/touch MRU, and on capacity pressure
+    /// evict the resident LRU exactly like the device did, dropping the
+    /// evicted key from the warm mirror too (it is no longer on the
+    /// card, whatever the optimistic commits said).
+    fn confirm_resident(&mut self, lane: usize, key: u64) {
+        let r = &mut self.resident[lane];
+        if let Some(i) = r.iter().position(|&k| k == key) {
+            r.remove(i);
+        }
+        r.push(key);
+        while self.resident[lane].len() > self.slots {
+            let evicted = self.resident[lane].remove(0);
+            self.warm[lane].retain(|&k| k != evicted);
+        }
+        self.touch_warm(lane, key);
+    }
+
+    /// Apply one job's [`JobFeedback`]: drop the lane's load estimate,
+    /// then correct the mirror from the ground truth instead of keeping
+    /// the commit-time guess:
+    ///
+    /// * **uploaded** (even on a failed alignment — the device holds
+    ///   the target regardless) or **cache hit** (the key was resident
+    ///   and just MRU-touched, even if a later stage of the job
+    ///   failed): replay the transition on the confirmed resident
+    ///   mirror, including the device's own LRU eviction when an
+    ///   upload ran at capacity — so the mirror never retains a key
+    ///   the device dropped.
+    /// * **failed without touching residency** (neither uploaded nor
+    ///   hit): un-warm the key the optimistic commit guessed — the
+    ///   backend never gained it — while leaving the confirmed
+    ///   resident set untouched (failure changes no device slot).
+    ///
+    /// Feedback from a *stale generation* (the lane's backend was
+    /// respawned since the job ran, see [`Self::lane_restarted`])
+    /// settles the load estimate only: the backend it describes is
+    /// gone, so replaying it onto the mirror would resurrect keys the
+    /// restart wiped.
+    pub fn completed(&mut self, fb: JobFeedback) {
+        if fb.lane >= self.lanes() {
+            return;
+        }
+        self.pending[fb.lane] = self.pending[fb.lane].saturating_sub(1);
+        if fb.generation != self.gen[fb.lane] {
+            return;
+        }
+        if fb.uploaded || fb.hit {
+            self.confirm_resident(fb.lane, fb.key);
+        } else if !fb.ok {
+            self.warm[fb.lane].retain(|&k| k != fb.key);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // --- AffinityRouter: deterministic scheduling-policy harness ---
+
+    /// Shorthand for completion feedback in the router tests.
+    fn fb(lane: usize, key: u64, uploaded: bool, hit: bool, ok: bool) -> JobFeedback {
+        JobFeedback {
+            lane,
+            key,
+            uploaded,
+            hit,
+            ok,
+            generation: 0,
+        }
+    }
+
+    #[test]
+    fn stale_generation_feedback_does_not_resurrect_warm_keys() {
+        let mut r = AffinityRouter::new(2, 2);
+        // Lane 0 serves key 7 and the feedback confirms residency.
+        r.committed(0, 7);
+        r.completed(fb(0, 7, true, false, true));
+        assert_eq!(r.warm_keys(0), &[7]);
+        // Two more jobs for the key are in flight when the lane's
+        // backend is respawned: the restart clears the mirror and bumps
+        // the generation...
+        r.committed(0, 7);
+        r.committed(0, 7);
+        r.lane_restarted(0);
+        assert_eq!(r.generation(0), 1);
+        assert!(r.warm_keys(0).is_empty(), "restart must clear warm keys");
+        assert_eq!(r.pending(0), 2);
+        // ...so feedback from the old backend (generation 0) settles the
+        // load estimate but must NOT mark the key warm — the new backend
+        // holds nothing.
+        r.completed(fb(0, 7, true, true, true));
+        assert_eq!(r.pending(0), 1);
+        assert!(
+            r.warm_keys(0).is_empty(),
+            "stale-generation feedback resurrected a warm key"
+        );
+        // Current-generation feedback is trusted again.
+        let mut current = fb(0, 7, true, false, true);
+        current.generation = 1;
+        r.completed(current);
+        assert_eq!(r.pending(0), 0);
+        assert_eq!(r.warm_keys(0), &[7]);
+    }
+
+    #[test]
+    fn down_lanes_are_routed_around_until_recovery() {
+        let mut r = AffinityRouter::new(2, 1);
+        // Key 9 is warm on lane 1, which then gets marked down.
+        r.committed(1, 9);
+        r.completed(fb(1, 9, true, false, true));
+        r.set_down(1, true);
+        assert!(r.is_down(1));
+        // Warm affinity must not route to a down lane...
+        let choice = r.first_choice(9);
+        assert_ne!(choice, Some(1), "routed a job to a down lane");
+        // ...and the spill order skips it while any other lane is up.
+        assert!(!r.spill_order(None).contains(&1));
+        // Recovery restores warm affinity (the backend kept its cache:
+        // down ≠ restarted).
+        r.set_down(1, false);
+        assert_eq!(r.first_choice(9), Some(1));
+    }
+
+    #[test]
+    fn router_reuses_every_warm_lane_after_a_steal() {
+        let mut r = AffinityRouter::new(2, 2);
+        // Cold key A: both lanes have free slots — least-loaded wins
+        // (tie → lane 0), no spill needed.
+        assert_eq!(r.first_choice(0xA), Some(0));
+        r.committed(0, 0xA);
+        r.committed(0, 0xA); // backlog of 2 on the warm lane
+        // Real backlog + idle lane 1 → steal to lane 1.
+        assert_eq!(r.first_choice(0xA), Some(1));
+        r.committed(1, 0xA);
+        // Both lanes are now warm for A. Lane 1 drains first: the
+        // dispatcher must see it as a warm candidate — the old
+        // `position()` scan only ever found lane 0.
+        r.completed(fb(1, 0xA, true, false, true));
+        assert_eq!(r.warm_lanes(0xA), vec![1, 0]);
+        assert_eq!(r.first_choice(0xA), Some(1), "least-loaded warm lane");
+        // Nobody idle: still route to the least-loaded *warm* lane
+        // rather than blocking round-robin.
+        r.committed(1, 0xA); // pending: lane0=2, lane1=1
+        assert_eq!(r.first_choice(0xA), Some(1));
+    }
+
+    #[test]
+    fn router_steals_only_on_real_backlog() {
+        let mut r = AffinityRouter::new(2, 2);
+        r.committed(0, 0xA);
+        // One in-flight job is NOT a backlog: the old router stole to
+        // the idle lane here, paying a redundant target upload.
+        assert_eq!(r.first_choice(0xA), Some(0), "no steal at pending 1");
+        r.committed(0, 0xA);
+        // Two deep with an idle lane → steal.
+        assert_eq!(r.first_choice(0xA), Some(1));
+        // No idle lane → stay on the least-loaded warm lane.
+        r.committed(1, 0xB);
+        assert_eq!(r.first_choice(0xA), Some(0));
+    }
+
+    #[test]
+    fn router_routes_cold_keys_to_free_slots_before_evicting() {
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        r.completed(fb(0, 0xA, true, false, true));
+        // Cold key B: lane 0 is idle but its only slot is warm; lane 1
+        // has the free slot — filling it beats evicting A.
+        assert!(!r.has_free_slot(0));
+        assert!(r.has_free_slot(1));
+        assert_eq!(r.first_choice(0xB), Some(1));
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, true, false, true));
+        // Every slot occupied → None: the channel loop spills by load
+        // (an eviction is now inevitable).
+        assert_eq!(r.first_choice(0xC), None);
+        assert_eq!(r.warm_lanes(0xA), vec![0], "A untouched on its lane");
+    }
+
+    #[test]
+    fn failed_upload_feedback_unwarms_the_mirror() {
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        assert_eq!(r.warm_lanes(0xA), vec![0], "optimistic commit");
+        // The job failed before its target upload: the backend never
+        // gained A, so the mirror must not keep claiming it.
+        r.completed(fb(0, 0xA, false, false, false));
+        assert!(r.warm_lanes(0xA).is_empty(), "failed upload un-warms");
+        assert!(r.has_free_slot(0), "slot freed for the next cold key");
+        // A failed alignment whose upload DID land keeps the key warm —
+        // the device holds the target regardless of the ICP error.
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, true, false, false));
+        assert_eq!(r.warm_lanes(0xB), vec![1]);
+        // A cache-hit completion confirms warmth.
+        r.committed(1, 0xB);
+        r.completed(fb(1, 0xB, false, true, true));
+        assert_eq!(r.warm_lanes(0xB), vec![1]);
+    }
+
+    #[test]
+    fn router_warm_sets_are_lru_bounded_like_the_backend() {
+        let mut r = AffinityRouter::new(1, 2);
+        r.committed(0, 0xA);
+        r.committed(0, 0xB);
+        assert_eq!(r.warm_lanes(0xA), vec![0]);
+        // A third key evicts the LRU key (A), not the MRU one.
+        r.committed(0, 0xC);
+        assert!(r.warm_lanes(0xA).is_empty(), "A evicted");
+        assert_eq!(r.warm_lanes(0xB), vec![0]);
+        assert_eq!(r.warm_lanes(0xC), vec![0]);
+        // Re-touching B keeps it MRU: D evicts C.
+        r.committed(0, 0xB);
+        r.committed(0, 0xD);
+        assert!(r.warm_lanes(0xC).is_empty());
+        assert_eq!(r.warm_lanes(0xB), vec![0]);
+    }
+
+    #[test]
+    fn router_blocking_choice_prefers_warmth_then_shortest_queue() {
+        let mut r = AffinityRouter::new(3, 2);
+        r.committed(0, 0xA);
+        r.committed(0, 0xA);
+        r.committed(1, 0xB);
+        // Key A: lane 0 is warm, so block there even though it is the
+        // longest queue (the cache hit outweighs one queue slot).
+        assert_eq!(r.blocking_choice(0xA), 0);
+        // Cold key: shortest queue wins (lane 2 is empty) — the old
+        // fall-through blocked on the round-robin cursor regardless.
+        assert_eq!(r.blocking_choice(0xF), 2);
+        // And among equals the rotation cursor breaks the tie.
+        r.committed(2, 0xC); // pending now [2, 1, 1], rr = 0
+        assert_eq!(r.blocking_choice(0xF), 1);
+    }
+
+    #[test]
+    fn router_spill_orders_by_load_and_skips_the_tried_lane() {
+        let mut r = AffinityRouter::new(3, 2);
+        r.committed(1, 0xA); // pending [0,1,0]
+        r.committed(2, 0xB);
+        r.committed(2, 0xC); // pending [0,1,2]
+        // Load first: a fresh (cache-empty) lane does not excuse a deep
+        // backlog — the old order let a cold key queue behind lane 2
+        // just because its cache was empty.
+        assert_eq!(r.spill_order(None), vec![0, 1, 2]);
+        // The lane whose queue already returned Full is skipped, not
+        // re-attempted.
+        assert_eq!(r.spill_order(Some(0)), vec![1, 2]);
+        // At equal load, a free residency slot breaks the tie: spilling
+        // where nothing needs evicting beats spilling onto a warm slot.
+        let mut r = AffinityRouter::new(2, 1);
+        r.committed(0, 0xA);
+        r.committed(1, 0xB);
+        r.completed(fb(0, 0xA, true, false, true)); // lane 0: idle, slot warm
+        r.completed(fb(1, 0xB, false, false, false)); // lane 1: idle, slot free
+        assert_eq!(r.spill_order(None), vec![1, 0]);
+    }
+}

@@ -1,0 +1,588 @@
+//! Batch scenario builders and drivers on top of the lane pool: frame
+//! pair batches ([`sequence_pair_jobs`]), scan-to-map localization
+//! ([`run_localization`] / [`run_localization_supervised`]), and the
+//! tile-crossing submap scenario ([`run_tiled_localization`] /
+//! [`run_tiled_localization_supervised`]).
+
+use super::jobs::{LaneIcpConfig, LaneReport, RegistrationJob};
+use super::pipeline::{admit_map, fit_to_capacity, preprocess, AdmissionDecision, PipelineConfig};
+use super::supervise::{run_registration_batch, run_registration_batch_supervised};
+use super::SupervisorConfig;
+use crate::dataset::Sequence;
+use crate::fpps_api::KernelBackend;
+use crate::math::Mat4;
+use crate::pointcloud::PointCloud;
+use crate::rng::Pcg32;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Build frame-pair jobs (frame i aligned onto frame i−1) from a
+/// synthetic sequence — the shared job generator for the multi-client
+/// example, the `fpps batch` subcommand and the lane-scaling bench.
+pub fn sequence_pair_jobs(
+    seq: &Sequence,
+    frames: usize,
+    stream: usize,
+    cfg: &PipelineConfig,
+) -> Result<Vec<RegistrationJob>> {
+    let frames = frames.min(seq.len());
+    let mut jobs = Vec::new();
+    let mut prev: Option<PointCloud> = None;
+    for i in 0..frames {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        let sample = cloud.random_sample(cfg.source_sample, &mut rng);
+        let full = fit_to_capacity(cloud, cfg.target_capacity, cfg.seed);
+        if let Some(target) = prev.take() {
+            jobs.push(RegistrationJob::new(
+                (stream as u64) << 32 | i as u64,
+                stream,
+                sample,
+                target,
+                Mat4::IDENTITY,
+            ));
+        }
+        prev = Some(full);
+    }
+    Ok(jobs)
+}
+
+// ---------------------------------------------------------------------------
+// Scan-to-map localization (resident-target scenario)
+// ---------------------------------------------------------------------------
+
+/// Prebuilt scan-to-map localization workload: one shared map, M scan
+/// jobs against it, plus the ground-truth poses to score against.
+pub struct LocalizationWorkload {
+    /// The map every scan aligns against (frame-0 coordinates). All jobs
+    /// share this one `Arc` and one target key, so the lane pool keeps
+    /// it device-resident.
+    pub map: Arc<PointCloud>,
+    pub jobs: Vec<RegistrationJob>,
+    /// Ground-truth map←sensor poses, indexed like `jobs`.
+    pub truth: Vec<Mat4>,
+    /// What admission decided for the map (see [`admit_map`]).
+    pub admission: AdmissionDecision,
+}
+
+/// Build a localization workload from a synthetic sequence: the map is
+/// the union of all preprocessed scans placed into frame-0 coordinates
+/// by ground truth (then capacity-bounded), and each scan becomes a job
+/// whose prior is the *previous* frame's true pose — the "last known
+/// pose" a localization stack would start from.
+pub fn localization_jobs(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+) -> Result<LocalizationWorkload> {
+    let scans = scans.min(seq.len());
+    if scans == 0 {
+        bail!("localization needs at least one scan");
+    }
+    let origin = seq.ground_truth[0].inverse_rigid();
+    let mut map = PointCloud::new();
+    let mut sources = Vec::with_capacity(scans);
+    let mut truth = Vec::with_capacity(scans);
+    for i in 0..scans {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
+        let world = cloud.transformed(&pose);
+        map.xyz.extend_from_slice(&world.xyz);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        sources.push(cloud.random_sample(cfg.source_sample, &mut rng));
+        truth.push(pose);
+    }
+    // Residency-aware admission replaces the old silent shrink: an
+    // oversized map is rejected or explicitly downsampled per policy.
+    let (map, admission) = admit_map(map, cfg)?;
+    let map = Arc::new(map);
+    let key = map.fingerprint(); // hash the shared map once, not per job
+
+    let mut jobs = Vec::with_capacity(scans);
+    for (i, source) in sources.into_iter().enumerate() {
+        let prior = match i {
+            0 => Mat4::IDENTITY,
+            _ => truth[i - 1],
+        };
+        jobs.push(RegistrationJob::new_keyed(
+            i as u64,
+            0,
+            source,
+            Arc::clone(&map),
+            key,
+            prior,
+        ));
+    }
+    Ok(LocalizationWorkload {
+        map,
+        jobs,
+        truth,
+        admission,
+    })
+}
+
+/// Per-scan translation error vs. `truth` (m), in job order (the job id
+/// indexes `truth`). Contained failures ([`RegistrationOutcome::error`](super::RegistrationOutcome))
+/// score NaN so a failed job can never masquerade as an accurate
+/// localization; [`mean_finite`] / [`max_finite`] skip them.
+fn translation_errors_vs_truth(report: &LaneReport, truth: &[Mat4]) -> Vec<f64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| {
+            if o.is_failed() {
+                f64::NAN
+            } else {
+                let gt = truth[o.id as usize];
+                (o.transform.translation() - gt.translation()).norm()
+            }
+        })
+        .collect()
+}
+
+/// Mean over the finite entries (NaN marks contained failures); NaN when
+/// nothing finite remains.
+fn mean_finite(vals: &[f64]) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for v in vals.iter().copied().filter(|v| v.is_finite()) {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Max over the finite entries; NaN when nothing finite remains (an
+/// all-failure run must not report a perfect 0.0 max error).
+fn max_finite(vals: &[f64]) -> f64 {
+    let mut max = f64::NAN;
+    for v in vals.iter().copied().filter(|v| v.is_finite()) {
+        max = if max.is_nan() { v } else { max.max(v) };
+    }
+    max
+}
+
+/// Result of a [`run_localization`] run.
+#[derive(Debug)]
+pub struct LocalizationResult {
+    pub report: LaneReport,
+    pub map_points: usize,
+    /// Per-scan translation error vs. ground truth (m), in job order;
+    /// NaN for contained failures.
+    pub translation_errors: Vec<f64>,
+    /// What admission decided for the map (see [`admit_map`]).
+    pub admission: AdmissionDecision,
+}
+
+impl LocalizationResult {
+    pub fn mean_translation_error(&self) -> f64 {
+        mean_finite(&self.translation_errors)
+    }
+
+    pub fn max_translation_error(&self) -> f64 {
+        max_finite(&self.translation_errors)
+    }
+}
+
+/// Scan-to-map localization: align `scans` frames of `seq` against one
+/// shared map over the lane pool. Every job carries the same target key,
+/// so the affinity dispatcher keeps the map resident — the kd-tree
+/// backend builds its index once for the whole run, and the amortized
+/// upload cost drops to zero (see `benches/target_reuse.rs`).
+pub fn run_localization<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<LocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    run_localization_supervised(
+        seq,
+        scans,
+        cfg,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
+}
+
+/// [`run_localization`] with an explicit fault-tolerance policy and a
+/// tier-aware backend factory (see [`run_supervised_lane_pool`](super::run_supervised_lane_pool)).
+#[allow(clippy::too_many_arguments)]
+pub fn run_localization_supervised<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<LocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
+    let workload = localization_jobs(seq, scans, cfg)?;
+    let map_points = workload.map.len();
+    let admission = workload.admission;
+    let report = run_registration_batch_supervised(
+        workload.jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+    )?;
+    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
+    Ok(LocalizationResult {
+        report,
+        map_points,
+        translation_errors,
+        admission,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tile-crossing localization (multi-target residency scenario)
+// ---------------------------------------------------------------------------
+
+/// Prebuilt tile-crossing localization workload: the trajectory is cut
+/// into `tiles` contiguous submaps and the job stream *interleaves*
+/// them — the submap ping-pong of a vehicle tracking along a tile
+/// boundary. On a single-slot backend every job re-uploads (and, on the
+/// kd-tree backend, rebuilds); with ≥ `tiles` residency slots each
+/// submap uploads once per serving lane and every further job is a
+/// cache hit (see `benches/tile_residency.rs`).
+pub struct TiledLocalizationWorkload {
+    /// One submap per tile (frame-0 coordinates), shared by its jobs.
+    pub maps: Vec<Arc<PointCloud>>,
+    /// Tile index of each job, in job-id order.
+    pub tile_of_job: Vec<usize>,
+    pub jobs: Vec<RegistrationJob>,
+    /// Ground-truth map←sensor poses, indexed by job id.
+    pub truth: Vec<Mat4>,
+    /// Per-tile admission decisions, tile order (see [`admit_map`]).
+    pub admissions: Vec<AdmissionDecision>,
+}
+
+/// Build a tile-crossing workload from a synthetic sequence: scans are
+/// assigned to `tiles` contiguous trajectory segments, each segment's
+/// union (placed into frame-0 coordinates by ground truth, then
+/// capacity-bounded) becomes one submap, and jobs are emitted
+/// round-robin across the tiles so consecutive jobs alternate submaps.
+pub fn tiled_localization_jobs(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+) -> Result<TiledLocalizationWorkload> {
+    let scans = scans.min(seq.len());
+    if scans == 0 {
+        bail!("localization needs at least one scan");
+    }
+    let tiles = tiles.clamp(1, scans);
+    let tile_of_scan = |i: usize| (i * tiles) / scans;
+    let origin = seq.ground_truth[0].inverse_rigid();
+    let mut tile_clouds: Vec<PointCloud> = (0..tiles).map(|_| PointCloud::new()).collect();
+    let mut sources: Vec<Option<PointCloud>> = Vec::with_capacity(scans);
+    let mut poses = Vec::with_capacity(scans);
+    for i in 0..scans {
+        let cloud = preprocess(&seq.frame(i)?, cfg);
+        let pose = origin.mul_mat(&seq.ground_truth[i]); // map ← sensor_i
+        let world = cloud.transformed(&pose);
+        tile_clouds[tile_of_scan(i)].xyz.extend_from_slice(&world.xyz);
+        let mut rng = Pcg32::substream(cfg.seed, i as u64);
+        sources.push(Some(cloud.random_sample(cfg.source_sample, &mut rng)));
+        poses.push(pose);
+    }
+    // Each submap passes residency-aware admission on its own.
+    let mut maps = Vec::with_capacity(tiles);
+    let mut admissions = Vec::with_capacity(tiles);
+    for c in tile_clouds {
+        let (m, a) = admit_map(c, cfg)?;
+        maps.push(Arc::new(m));
+        admissions.push(a);
+    }
+    // Hash each shared submap once, not per job.
+    let keys: Vec<u64> = maps.iter().map(|m| m.fingerprint()).collect();
+
+    // Emission order: round-robin over the tiles (A,B,…,A,B,…), the
+    // maximal-ping-pong stress an LRU residency set exists for.
+    let mut by_tile: Vec<Vec<usize>> = vec![Vec::new(); tiles];
+    for i in 0..scans {
+        by_tile[tile_of_scan(i)].push(i);
+    }
+    let deepest = by_tile.iter().map(Vec::len).max().unwrap_or(0);
+    let mut jobs = Vec::with_capacity(scans);
+    let mut truth = Vec::with_capacity(scans);
+    let mut tile_of_job = Vec::with_capacity(scans);
+    for r in 0..deepest {
+        for (t, scans_of_tile) in by_tile.iter().enumerate() {
+            let Some(&i) = scans_of_tile.get(r) else {
+                continue;
+            };
+            // "Last known pose" prior, as in [`localization_jobs`].
+            let prior = if i == 0 { Mat4::IDENTITY } else { poses[i - 1] };
+            jobs.push(RegistrationJob::new_keyed(
+                jobs.len() as u64,
+                t,
+                sources[i].take().expect("each scan emitted once"),
+                Arc::clone(&maps[t]),
+                keys[t],
+                prior,
+            ));
+            truth.push(poses[i]);
+            tile_of_job.push(t);
+        }
+    }
+    Ok(TiledLocalizationWorkload {
+        maps,
+        tile_of_job,
+        jobs,
+        truth,
+        admissions,
+    })
+}
+
+/// Result of a [`run_tiled_localization`] run.
+#[derive(Debug)]
+pub struct TiledLocalizationResult {
+    pub report: LaneReport,
+    /// Points per submap, tile order.
+    pub map_points: Vec<usize>,
+    /// Per-scan translation error vs. ground truth (m), in job order;
+    /// NaN for contained failures.
+    pub translation_errors: Vec<f64>,
+    /// Per-tile admission decisions, tile order (see [`admit_map`]).
+    pub admissions: Vec<AdmissionDecision>,
+}
+
+impl TiledLocalizationResult {
+    pub fn mean_translation_error(&self) -> f64 {
+        mean_finite(&self.translation_errors)
+    }
+
+    pub fn max_translation_error(&self) -> f64 {
+        max_finite(&self.translation_errors)
+    }
+}
+
+/// Tile-crossing localization over the lane pool: `scans` frames of
+/// `seq` against `tiles` alternating submaps. With multi-target
+/// residency the per-lane upload count is bounded by the tile count —
+/// not the scan count — which `fpps localize --tiles` prints.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_localization<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<TiledLocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    run_tiled_localization_supervised(
+        seq,
+        scans,
+        tiles,
+        cfg,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
+}
+
+/// [`run_tiled_localization`] with an explicit fault-tolerance policy
+/// and a tier-aware backend factory (see [`run_supervised_lane_pool`](super::run_supervised_lane_pool)).
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_localization_supervised<B, F>(
+    seq: &Sequence,
+    scans: usize,
+    tiles: usize,
+    cfg: &PipelineConfig,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<TiledLocalizationResult>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
+    let workload = tiled_localization_jobs(seq, scans, tiles, cfg)?;
+    let map_points = workload.maps.iter().map(|m| m.len()).collect();
+    let admissions = workload.admissions.clone();
+    let report = run_registration_batch_supervised(
+        workload.jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+    )?;
+    let translation_errors = translation_errors_vs_truth(&report, &workload.truth);
+    Ok(TiledLocalizationResult {
+        report,
+        map_points,
+        translation_errors,
+        admissions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{lidar::LidarConfig, sequence_specs, Sequence};
+
+    fn tiny_sequence(frames: usize) -> Sequence {
+        let spec = sequence_specs()[3].clone(); // residential: gentle
+        Sequence::synthetic(spec, frames, 11, LidarConfig::tiny())
+    }
+
+    #[test]
+    fn localization_workload_shares_one_target() {
+        let seq = tiny_sequence(5);
+        let cfg = PipelineConfig {
+            source_sample: 256,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let w = localization_jobs(&seq, 5, &cfg).unwrap();
+        assert_eq!(w.jobs.len(), 5);
+        assert_eq!(w.truth.len(), 5);
+        let key = w.jobs[0].target_key;
+        for j in &w.jobs {
+            assert_eq!(j.target_key, key, "all scans share the map key");
+            assert!(Arc::ptr_eq(&j.target, &w.map), "no map copies");
+        }
+        // First scan's prior is identity (it *is* the map origin).
+        assert_eq!(w.jobs[0].initial.m, Mat4::IDENTITY.m);
+    }
+
+    #[test]
+    fn localization_tracks_ground_truth() {
+        let seq = tiny_sequence(5);
+        let cfg = PipelineConfig {
+            source_sample: 512,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let res = run_localization(
+            &seq,
+            5,
+            &cfg,
+            2,
+            8,
+            LaneIcpConfig {
+                max_iteration_count: 30,
+                ..Default::default()
+            },
+            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(res.translation_errors.len(), 5);
+        assert!(
+            res.mean_translation_error() < 0.3,
+            "mean localization error {}",
+            res.mean_translation_error()
+        );
+        assert!(res.map_points > 0);
+        // Affinity + shared key: the map was uploaded by at most `lanes`
+        // backends, never once per scan.
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        assert!(uploads <= 2, "{uploads} uploads for 5 same-map scans");
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        assert_eq!(uploads + hits, 5, "every job either uploads or hits");
+    }
+
+    // --- Tile-crossing workload ---
+
+    #[test]
+    fn tiled_workload_interleaves_tiles_and_shares_submaps() {
+        let seq = tiny_sequence(6);
+        let cfg = PipelineConfig {
+            source_sample: 256,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let w = tiled_localization_jobs(&seq, 6, 2, &cfg).unwrap();
+        assert_eq!(w.maps.len(), 2);
+        assert_eq!(w.jobs.len(), 6);
+        assert_eq!(w.truth.len(), 6);
+        // Round-robin emission: consecutive jobs alternate tiles.
+        assert_eq!(w.tile_of_job, vec![0, 1, 0, 1, 0, 1]);
+        for (job, &t) in w.jobs.iter().zip(&w.tile_of_job) {
+            assert_eq!(job.stream, t);
+            assert!(Arc::ptr_eq(&job.target, &w.maps[t]), "submaps are shared");
+            assert_eq!(job.target_key, w.maps[t].fingerprint());
+        }
+        // Ids are the emission order (deterministic outcome order).
+        for (k, job) in w.jobs.iter().enumerate() {
+            assert_eq!(job.id, k as u64);
+        }
+        // Two tiles → two distinct keys.
+        assert_ne!(w.jobs[0].target_key, w.jobs[1].target_key);
+        // Degenerate tile counts clamp instead of failing.
+        assert_eq!(tiled_localization_jobs(&seq, 6, 0, &cfg).unwrap().maps.len(), 1);
+        assert_eq!(tiled_localization_jobs(&seq, 6, 99, &cfg).unwrap().maps.len(), 6);
+    }
+
+    #[test]
+    fn tiled_localization_tracks_ground_truth_with_bounded_uploads() {
+        let seq = tiny_sequence(6);
+        let cfg = PipelineConfig {
+            source_sample: 512,
+            target_capacity: 8192,
+            ..Default::default()
+        };
+        let res = run_tiled_localization(
+            &seq,
+            6,
+            2,
+            &cfg,
+            1,
+            4,
+            LaneIcpConfig {
+                max_iteration_count: 30,
+                ..Default::default()
+            },
+            |_| Ok(crate::fpps_api::KdTreeCpuBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(res.report.outcomes.len(), 6);
+        assert_eq!(res.map_points.len(), 2);
+        assert!(
+            res.mean_translation_error() < 0.3,
+            "mean tile-localization error {}",
+            res.mean_translation_error()
+        );
+        // One lane, two submaps, A,B,A,B,… order: the LRU residency set
+        // absorbs the ping-pong — exactly one upload per submap.
+        let uploads: usize = res.report.lanes.iter().map(|l| l.target_uploads).sum();
+        let hits: usize = res.report.lanes.iter().map(|l| l.target_hits).sum();
+        assert_eq!(uploads, 2, "one upload per tile, not per scan");
+        assert_eq!(uploads + hits, 6);
+        assert_eq!(res.report.lanes[0].resident_targets, 2);
+        assert_eq!(res.report.failed_jobs(), 0);
+    }
+}

@@ -1,0 +1,830 @@
+//! Event-driven serving tier on top of the supervised lane pool.
+//!
+//! Batch entry points block the submitting thread until the whole batch
+//! drains; a server cannot afford that. [`ServingPool`] decouples
+//! request ingest from accelerator occupancy: [`ServingPool::submit`]
+//! and [`ClientStream::try_submit`] return immediately with a
+//! [`CompletionHandle`], and the handle is fulfilled by a hand-rolled
+//! waker-style completion event the moment the dispatcher's done
+//! channel emits the job's outcome (see
+//! [`run_supervised_lane_pool_tapped`]) — no tokio, the crate stays
+//! `anyhow`-only.
+//!
+//! Backpressure never blocks a lane: every client stream carries a
+//! bounded in-flight gate, and a submission that finds the stream (or
+//! the pool) full is either **parked** — the job is handed back for the
+//! caller to retry — or **shed** with a structured
+//! [`StopReason::Shed`] outcome, depending on its [`SloClass`].
+//! Latency-critical work is never queued into a future it cannot meet:
+//! when the estimated queue wait already exceeds the job's deadline
+//! budget, the pool resolves the handle immediately instead of letting
+//! the job expire in a queue.
+
+use super::jobs::{LaneIcpConfig, LaneReport, RegistrationJob, RegistrationOutcome, SloClass};
+use super::supervise::{run_supervised_lane_pool_tapped, SupervisorConfig};
+use crate::fpps_api::KernelBackend;
+use crate::icp::StopReason;
+use crate::math::Mat4;
+use crate::metrics::TimingStats;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Admission policy of the serving tier (how much work may be in
+/// flight, per client stream and pool-wide) — distinct from the
+/// residency-footprint [`AdmissionPolicy`](super::AdmissionPolicy),
+/// which guards device memory rather than queueing.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingConfig {
+    /// Per-[`ClientStream`] in-flight bound: a stream at its depth
+    /// parks (or sheds, for latency-critical work) further submissions.
+    /// `0` admits nothing through that stream — useful to drain.
+    pub stream_depth: usize,
+    /// Pool-wide in-flight bound across all streams; the backstop that
+    /// keeps aggregate queueing (and thus queue wait) bounded no matter
+    /// how many streams exist. `0` admits nothing.
+    pub max_in_flight: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            stream_depth: 4,
+            max_in_flight: 1024,
+        }
+    }
+}
+
+/// What happened to a [`ClientStream::try_submit`] call. Accepting and
+/// shedding both yield a [`CompletionHandle`] (a shed handle is already
+/// complete, carrying the structured [`StopReason::Shed`] outcome);
+/// parking hands the job back untouched so the caller can retry —
+/// [`RegistrationJob`] is deliberately not `Clone`, the points never
+/// get copied on the admission path.
+pub enum Submission {
+    /// Queued; the handle completes when a lane (or the watchdog)
+    /// resolves the job.
+    Accepted(CompletionHandle),
+    /// Refused by admission; the handle is already complete with a
+    /// [`StopReason::Shed`] outcome explaining why.
+    Shed(CompletionHandle),
+    /// Stream or pool full and the job's class queues rather than
+    /// sheds: the job is handed back, retry when capacity frees up.
+    Parked(RegistrationJob),
+}
+
+/// A job's completion slot: outcome + optional waker, guarded by one
+/// mutex, with a condvar for the blocking waiters.
+struct CompletionSlot {
+    outcome: Option<RegistrationOutcome>,
+    done: bool,
+    waker: Option<Box<dyn FnOnce() + Send>>,
+}
+
+struct Completion {
+    slot: Mutex<CompletionSlot>,
+    cv: Condvar,
+}
+
+impl Completion {
+    fn new() -> Self {
+        Completion {
+            slot: Mutex::new(CompletionSlot {
+                outcome: None,
+                done: false,
+                waker: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Resolve a completion: store the outcome, wake blocking waiters, and
+/// fire the registered waker (outside the lock — wakers may re-enter
+/// the pool).
+fn complete(c: &Completion, outcome: RegistrationOutcome) {
+    let waker = {
+        let mut slot = c.slot.lock().unwrap();
+        slot.outcome = Some(outcome);
+        slot.done = true;
+        c.cv.notify_all();
+        slot.waker.take()
+    };
+    if let Some(w) = waker {
+        w();
+    }
+}
+
+/// Handle to one submitted job's eventual [`RegistrationOutcome`].
+///
+/// Completion is edge-triggered and hand-rolled: the pool's outcome tap
+/// fulfills the handle the moment the job resolves, waking any
+/// [`Self::wait`]er and firing the [`Self::set_waker`] callback. The
+/// outcome itself is moved out exactly once — by whichever of
+/// [`Self::try_take`] / [`Self::wait`] / [`Self::wait_timeout`] gets
+/// there first.
+pub struct CompletionHandle {
+    id: u64,
+    class: SloClass,
+    inner: Arc<Completion>,
+}
+
+impl CompletionHandle {
+    /// Id of the job this handle tracks.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// SLO class the job was submitted under.
+    pub fn class(&self) -> SloClass {
+        self.class
+    }
+
+    /// Has the job resolved (even if its outcome was already taken)?
+    pub fn is_complete(&self) -> bool {
+        self.inner.slot.lock().unwrap().done
+    }
+
+    /// Non-blocking: the outcome if the job has resolved and nobody
+    /// took it yet.
+    pub fn try_take(&self) -> Option<RegistrationOutcome> {
+        self.inner.slot.lock().unwrap().outcome.take()
+    }
+
+    /// Block until the job resolves.
+    ///
+    /// # Panics
+    /// If the outcome was already consumed by [`Self::try_take`] /
+    /// [`Self::wait_timeout`].
+    pub fn wait(self) -> RegistrationOutcome {
+        let mut slot = self.inner.slot.lock().unwrap();
+        while !slot.done {
+            slot = self.inner.cv.wait(slot).unwrap();
+        }
+        slot.outcome
+            .take()
+            .expect("completion outcome already consumed")
+    }
+
+    /// Block until the job resolves or `timeout` elapses; `None` on
+    /// timeout (or when the outcome was already taken).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<RegistrationOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.inner.slot.lock().unwrap();
+        while !slot.done {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self.inner.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+            if res.timed_out() && !slot.done {
+                return None;
+            }
+        }
+        slot.outcome.take()
+    }
+
+    /// Register a callback fired exactly once when the job resolves —
+    /// immediately (on the caller's thread) if it already has, else on
+    /// the pool's collector thread. The last registration wins; an
+    /// earlier unfired waker is dropped. Wakers must not block: they
+    /// run on the thread that fulfills every handle in the pool.
+    pub fn set_waker(&self, waker: impl FnOnce() + Send + 'static) {
+        let mut boxed: Option<Box<dyn FnOnce() + Send>> = Some(Box::new(waker));
+        let fire = {
+            let mut slot = self.inner.slot.lock().unwrap();
+            if slot.done {
+                boxed.take()
+            } else {
+                slot.waker = boxed.take();
+                None
+            }
+        };
+        if let Some(w) = fire {
+            w();
+        }
+    }
+}
+
+/// Per-stream in-flight counter (the stream's backpressure gate).
+struct StreamGate {
+    in_flight: AtomicUsize,
+}
+
+/// Registry entry for an accepted-but-unresolved job.
+struct Pending {
+    completion: Arc<Completion>,
+    gate: Arc<StreamGate>,
+    class: SloClass,
+    stream: usize,
+    initial: Mat4,
+    submitted: Instant,
+}
+
+/// Per-class serving accumulators (guarded by one mutex in [`Shared`]).
+#[derive(Default)]
+struct ClassAccum {
+    submitted: usize,
+    completed: usize,
+    ok: usize,
+    failed: usize,
+    shed: usize,
+    latency: TimingStats,
+}
+
+fn class_index(class: SloClass) -> usize {
+    match class {
+        SloClass::LatencyCritical => 0,
+        SloClass::Standard => 1,
+        SloClass::BestEffort => 2,
+    }
+}
+
+/// State shared between the submitting threads and the pool's outcome
+/// tap.
+struct Shared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    in_flight: AtomicUsize,
+    closed: AtomicBool,
+    classes: Mutex<[ClassAccum; 3]>,
+    /// EMA of observed service time, feeding the queue-wait estimate
+    /// behind latency-critical deadline shedding. 0.0 until the first
+    /// outcome lands.
+    ema_service_ms: Mutex<f64>,
+}
+
+impl Shared {
+    fn new() -> Self {
+        Shared {
+            pending: Mutex::new(HashMap::new()),
+            in_flight: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            classes: Mutex::new(Default::default()),
+            ema_service_ms: Mutex::new(0.0),
+        }
+    }
+
+    /// The pool's outcome tap: resolve the job's handle, release its
+    /// gates, and fold the completion into the per-class stats. Runs on
+    /// the pool's collector thread, once per outcome.
+    fn fulfill(&self, outcome: &RegistrationOutcome) {
+        let entry = self.pending.lock().unwrap().remove(&outcome.id);
+        let Some(p) = entry else {
+            return; // not a serving submission (defensive; cannot happen)
+        };
+        p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+        let latency_ms = p.submitted.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut classes = self.classes.lock().unwrap();
+            let acc = &mut classes[class_index(p.class)];
+            acc.completed += 1;
+            if outcome.is_failed() {
+                acc.failed += 1;
+            } else {
+                acc.ok += 1;
+            }
+            acc.latency.record_ms(latency_ms);
+        }
+        {
+            let mut ema = self.ema_service_ms.lock().unwrap();
+            *ema = if *ema == 0.0 {
+                outcome.service_ms
+            } else {
+                0.8 * *ema + 0.2 * outcome.service_ms
+            };
+        }
+        complete(&p.completion, outcome.clone());
+    }
+
+    fn account_shed(&self, class: SloClass) {
+        let mut classes = self.classes.lock().unwrap();
+        let acc = &mut classes[class_index(class)];
+        acc.submitted += 1;
+        acc.shed += 1;
+    }
+}
+
+/// The structured outcome of a shed: the job never reached a lane, the
+/// initial transform is handed back, and `lane` is `usize::MAX`
+/// (deliberately meaningless — no lane ever saw the job).
+fn shed_outcome(id: u64, stream: usize, initial: Mat4, reason: &str) -> RegistrationOutcome {
+    RegistrationOutcome {
+        id,
+        stream,
+        lane: usize::MAX,
+        transform: initial,
+        rmse: f64::NAN,
+        iterations: 0,
+        stop: StopReason::Shed,
+        queue_wait_ms: 0.0,
+        service_ms: 0.0,
+        error: Some(format!("job {id} shed before queueing: {reason}")),
+        attempts: 0,
+    }
+}
+
+enum IntakeMsg {
+    Job(RegistrationJob),
+    Shutdown,
+}
+
+/// Per-client submission endpoint with its own bounded in-flight gate.
+/// Cheap to create (two `Arc`s); make one per simulated client. All
+/// admission decisions — gate checks, SLO shedding, the deadline-doom
+/// estimate — happen on the submitting thread, so a full stream can
+/// never block a lane.
+pub struct ClientStream {
+    shared: Arc<Shared>,
+    intake: Sender<IntakeMsg>,
+    gate: Arc<StreamGate>,
+    stream_depth: usize,
+    max_in_flight: usize,
+    lanes: usize,
+    sup_deadline: Option<Duration>,
+}
+
+impl ClientStream {
+    /// Non-blocking submission. Returns [`Submission::Accepted`] with a
+    /// live handle, [`Submission::Shed`] with an already-resolved
+    /// handle (latency-critical jobs refused by admission), or
+    /// [`Submission::Parked`] handing the job back (standard /
+    /// best-effort jobs under backpressure).
+    ///
+    /// Job ids must be unique among in-flight submissions — they key
+    /// the completion registry; a duplicate is an error.
+    pub fn try_submit(&self, mut job: RegistrationJob) -> Result<Submission> {
+        if self.shared.closed.load(Ordering::Acquire) {
+            bail!("serving pool is shut down");
+        }
+        let class = job.slo;
+        if self.gate.in_flight.load(Ordering::Acquire) >= self.stream_depth {
+            return Ok(self.refuse(job, "stream at its in-flight depth"));
+        }
+        if self.shared.in_flight.load(Ordering::Acquire) >= self.max_in_flight {
+            return Ok(self.refuse(job, "pool at its in-flight bound"));
+        }
+        if class == SloClass::LatencyCritical {
+            if let Some(budget) = job.deadline.or(self.sup_deadline) {
+                let in_flight = self.shared.in_flight.load(Ordering::Acquire);
+                let ema = *self.shared.ema_service_ms.lock().unwrap();
+                let est_wait_ms = in_flight as f64 / self.lanes as f64 * ema;
+                if budget.as_secs_f64() * 1e3 <= est_wait_ms {
+                    return Ok(self.shed(job, "estimated queue wait exceeds deadline budget"));
+                }
+            }
+        }
+        let completion = Arc::new(Completion::new());
+        {
+            let mut pending = self.shared.pending.lock().unwrap();
+            match pending.entry(job.id) {
+                std::collections::hash_map::Entry::Occupied(_) => {
+                    bail!("job id {} is already in flight", job.id)
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(Pending {
+                        completion: Arc::clone(&completion),
+                        gate: Arc::clone(&self.gate),
+                        class,
+                        stream: job.stream,
+                        initial: job.initial,
+                        submitted: Instant::now(),
+                    });
+                }
+            }
+        }
+        self.gate.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.shared.classes.lock().unwrap()[class_index(class)].submitted += 1;
+        job.mark_submitted(); // queue wait starts now, not at job build
+        let id = job.id;
+        if self.intake.send(IntakeMsg::Job(job)).is_err() {
+            // Pool shut down between the closed check and the send:
+            // undo the registration and report the truth.
+            if let Some(p) = self.shared.pending.lock().unwrap().remove(&id) {
+                p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+                self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+            }
+            bail!("serving pool is shut down");
+        }
+        Ok(Submission::Accepted(CompletionHandle {
+            id,
+            class,
+            inner: completion,
+        }))
+    }
+
+    /// Jobs currently in flight through this stream.
+    pub fn in_flight(&self) -> usize {
+        self.gate.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Backpressure refusal: shed latency-critical work (it must not
+    /// queue), park everything else.
+    fn refuse(&self, job: RegistrationJob, reason: &str) -> Submission {
+        if job.slo == SloClass::LatencyCritical {
+            self.shed(job, reason)
+        } else {
+            Submission::Parked(job)
+        }
+    }
+
+    fn shed(&self, job: RegistrationJob, reason: &str) -> Submission {
+        self.shared.account_shed(job.slo);
+        let completion = Arc::new(Completion::new());
+        complete(
+            &completion,
+            shed_outcome(job.id, job.stream, job.initial, reason),
+        );
+        Submission::Shed(CompletionHandle {
+            id: job.id,
+            class: job.slo,
+            inner: completion,
+        })
+    }
+}
+
+/// Per-class serving statistics, reported by [`ServingPool::shutdown`].
+#[derive(Clone, Debug)]
+pub struct SloClassStats {
+    pub class: SloClass,
+    /// Submissions admitted or shed under this class (parks excluded —
+    /// a parked job was never accepted).
+    pub submitted: usize,
+    /// Jobs that reached a lane and resolved.
+    pub completed: usize,
+    /// Completed without a contained error.
+    pub ok: usize,
+    /// Completed with a contained error (align failure or deadline);
+    /// included in `completed`.
+    pub failed: usize,
+    /// Refused by admission with a structured [`StopReason::Shed`]
+    /// outcome; included in `submitted`, never in `completed`.
+    pub shed: usize,
+    /// Submit-to-completion latency of completed jobs (queue wait +
+    /// service + completion plumbing).
+    pub latency: TimingStats,
+}
+
+/// Everything a serving run produced: the pool's [`LaneReport`] plus
+/// the per-SLO-class serving view.
+pub struct ServingReport {
+    pub lane_report: LaneReport,
+    /// One entry per [`SloClass`], in [`SloClass::all`] order.
+    pub classes: Vec<SloClassStats>,
+}
+
+impl ServingReport {
+    /// Render the per-class latency/shedding breakdown (p50/p99/p999 —
+    /// the numbers the load generator and `fpps serve` print).
+    pub fn class_table(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new("serving classes").header(&[
+            "class",
+            "submitted",
+            "completed",
+            "ok",
+            "fail",
+            "shed",
+            "p50 (ms)",
+            "p99 (ms)",
+            "p999 (ms)",
+        ]);
+        for c in &self.classes {
+            t.row(vec![
+                c.class.to_string(),
+                c.submitted.to_string(),
+                c.completed.to_string(),
+                c.ok.to_string(),
+                c.failed.to_string(),
+                c.shed.to_string(),
+                format!("{:.2}", c.latency.percentile_ms(50.0)),
+                format!("{:.2}", c.latency.percentile_ms(99.0)),
+                format!("{:.2}", c.latency.percentile_ms(99.9)),
+            ]);
+        }
+        t
+    }
+
+    /// Total sheds across all classes.
+    pub fn total_shed(&self) -> usize {
+        self.classes.iter().map(|c| c.shed).sum()
+    }
+
+    /// Contained failures that were *not* deliberate sheds — the error
+    /// count an exit gate should look at (outcome-derived, so it can
+    /// never diverge from the printed failure list).
+    pub fn contained_failures(&self) -> usize {
+        self.lane_report
+            .outcomes
+            .iter()
+            .filter(|o| o.is_failed() && o.stop != StopReason::Shed)
+            .count()
+    }
+}
+
+/// Non-blocking serving front-end over the supervised lane pool.
+///
+/// [`Self::start`] spawns the pool on a background thread; submissions
+/// go through [`Self::submit`] (accept-or-shed, never blocks) or
+/// per-client [`ClientStream`]s ([`Self::client`]) with bounded
+/// backpressure. [`Self::shutdown`] stops intake, drains the pool, and
+/// returns the [`ServingReport`].
+///
+/// Serving cannot change numerics: a job accepted here runs through
+/// exactly the same lane-pool path as a batch submission, so Ok
+/// outcomes stay bit-identical to the sequential engine (asserted by
+/// `tests/serving.rs` and the `lane_engine` identity test).
+pub struct ServingPool {
+    shared: Arc<Shared>,
+    intake: Sender<IntakeMsg>,
+    handle: std::thread::JoinHandle<Result<LaneReport>>,
+    stream_depth: usize,
+    max_in_flight: usize,
+    lanes: usize,
+    sup_deadline: Option<Duration>,
+}
+
+impl ServingPool {
+    /// Start the pool: `lanes` supervised worker lanes (see
+    /// [`run_supervised_lane_pool_tapped`]) behind an unbounded intake
+    /// stage, so admission happens in [`ClientStream::try_submit`]
+    /// (shed/park) rather than by blocking the submitter on a bounded
+    /// queue. `make_backend` follows the lane-pool factory contract
+    /// (called on the lane thread, tier-aware).
+    pub fn start<B, F>(
+        lanes: usize,
+        queue_depth: usize,
+        icp_cfg: LaneIcpConfig,
+        sup: SupervisorConfig,
+        cfg: ServingConfig,
+        make_backend: F,
+    ) -> Result<ServingPool>
+    where
+        B: KernelBackend + 'static,
+        F: Fn(usize, usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let (intake, intake_rx) = channel::<IntakeMsg>();
+        let shared = Arc::new(Shared::new());
+        let tap_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("fpps-serving".into())
+            .spawn(move || {
+                run_supervised_lane_pool_tapped(
+                    lanes,
+                    queue_depth,
+                    icp_cfg,
+                    sup,
+                    make_backend,
+                    move |tx| {
+                        // Forwarder: the only place that may block on the
+                        // pool's bounded queue — never a client thread.
+                        for msg in intake_rx {
+                            match msg {
+                                IntakeMsg::Job(job) => {
+                                    if tx.send(job).is_err() {
+                                        break; // pool unwinding early
+                                    }
+                                }
+                                IntakeMsg::Shutdown => break,
+                            }
+                        }
+                        Ok(())
+                    },
+                    move |outcome| tap_shared.fulfill(outcome),
+                )
+            })
+            .context("spawn serving pool thread")?;
+        Ok(ServingPool {
+            shared,
+            intake,
+            handle,
+            stream_depth: cfg.stream_depth,
+            max_in_flight: cfg.max_in_flight,
+            lanes: lanes.max(1),
+            sup_deadline: sup.deadline,
+        })
+    }
+
+    /// A fresh per-client stream with its own bounded in-flight gate.
+    pub fn client(&self) -> ClientStream {
+        ClientStream {
+            shared: Arc::clone(&self.shared),
+            intake: self.intake.clone(),
+            gate: Arc::new(StreamGate {
+                in_flight: AtomicUsize::new(0),
+            }),
+            stream_depth: self.stream_depth,
+            max_in_flight: self.max_in_flight,
+            lanes: self.lanes,
+            sup_deadline: self.sup_deadline,
+        }
+    }
+
+    /// One-shot submission without a per-client stream: accepts or
+    /// sheds, never parks and never blocks. (Backpressure that parks —
+    /// so the caller can retry — is the [`ClientStream`] contract.)
+    pub fn submit(&self, job: RegistrationJob) -> Result<CompletionHandle> {
+        // A throwaway gate deep enough to never refuse: only the
+        // pool-wide bound applies to the one-shot path.
+        let stream = ClientStream {
+            shared: Arc::clone(&self.shared),
+            intake: self.intake.clone(),
+            gate: Arc::new(StreamGate {
+                in_flight: AtomicUsize::new(0),
+            }),
+            stream_depth: usize::MAX,
+            max_in_flight: self.max_in_flight,
+            lanes: self.lanes,
+            sup_deadline: self.sup_deadline,
+        };
+        match stream.try_submit(job)? {
+            Submission::Accepted(h) | Submission::Shed(h) => Ok(h),
+            Submission::Parked(job) => {
+                // Pool at capacity and the class parks: the one-shot
+                // path has nowhere to park, so shed with structure.
+                self.shared.account_shed(job.slo);
+                let completion = Arc::new(Completion::new());
+                complete(
+                    &completion,
+                    shed_outcome(
+                        job.id,
+                        job.stream,
+                        job.initial,
+                        "pool at its in-flight bound",
+                    ),
+                );
+                Ok(CompletionHandle {
+                    id: job.id,
+                    class: job.slo,
+                    inner: completion,
+                })
+            }
+        }
+    }
+
+    /// Jobs currently in flight pool-wide.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Stop intake, drain everything already admitted, and report.
+    /// Stragglers accepted concurrently with shutdown (their jobs were
+    /// still in the intake stage) are resolved with a shed outcome —
+    /// no handle is ever left dangling.
+    pub fn shutdown(self) -> Result<ServingReport> {
+        self.shared.closed.store(true, Ordering::Release);
+        self.intake.send(IntakeMsg::Shutdown).ok();
+        let lane_report = match self.handle.join() {
+            Ok(r) => r?,
+            Err(_) => bail!("serving pool thread panicked"),
+        };
+        // The pool is gone; nothing concurrent remains. Sweep the
+        // registry so every outstanding handle resolves.
+        let leftovers: Vec<(u64, Pending)> = {
+            let mut pending = self.shared.pending.lock().unwrap();
+            pending.drain().collect()
+        };
+        for (id, p) in leftovers {
+            p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+            self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+            {
+                let mut classes = self.shared.classes.lock().unwrap();
+                let acc = &mut classes[class_index(p.class)];
+                acc.shed += 1;
+            }
+            complete(
+                &p.completion,
+                shed_outcome(id, p.stream, p.initial, "pool shut down before dispatch"),
+            );
+        }
+        let classes = {
+            let accs = self.shared.classes.lock().unwrap();
+            SloClass::all()
+                .iter()
+                .map(|&class| {
+                    let a = &accs[class_index(class)];
+                    SloClassStats {
+                        class,
+                        submitted: a.submitted,
+                        completed: a.completed,
+                        ok: a.ok,
+                        failed: a.failed,
+                        shed: a.shed,
+                        latency: a.latency.clone(),
+                    }
+                })
+                .collect()
+        };
+        Ok(ServingReport {
+            lane_report,
+            classes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64) -> RegistrationOutcome {
+        RegistrationOutcome {
+            id,
+            stream: 0,
+            lane: 0,
+            transform: Mat4::IDENTITY,
+            rmse: 0.0,
+            iterations: 1,
+            stop: StopReason::Converged,
+            queue_wait_ms: 0.0,
+            service_ms: 1.0,
+            error: None,
+            attempts: 1,
+        }
+    }
+
+    fn handle(id: u64) -> (Arc<Completion>, CompletionHandle) {
+        let completion = Arc::new(Completion::new());
+        let h = CompletionHandle {
+            id,
+            class: SloClass::Standard,
+            inner: Arc::clone(&completion),
+        };
+        (completion, h)
+    }
+
+    #[test]
+    fn handle_try_take_then_complete() {
+        let (completion, h) = handle(7);
+        assert!(!h.is_complete());
+        assert!(h.try_take().is_none());
+        complete(&completion, outcome(7));
+        assert!(h.is_complete());
+        let o = h.try_take().expect("resolved");
+        assert_eq!(o.id, 7);
+        // The outcome moves out exactly once.
+        assert!(h.try_take().is_none());
+        assert!(h.is_complete());
+    }
+
+    #[test]
+    fn handle_wait_blocks_until_complete() {
+        let (completion, h) = handle(3);
+        let t = std::thread::spawn(move || h.wait().id);
+        std::thread::sleep(Duration::from_millis(10));
+        complete(&completion, outcome(3));
+        assert_eq!(t.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn handle_wait_timeout_expires() {
+        let (completion, h) = handle(4);
+        assert!(h.wait_timeout(Duration::from_millis(5)).is_none());
+        complete(&completion, outcome(4));
+        let o = h.wait_timeout(Duration::from_millis(5)).expect("resolved");
+        assert_eq!(o.id, 4);
+    }
+
+    #[test]
+    fn waker_fires_on_completion() {
+        let (completion, h) = handle(5);
+        let fired = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&fired);
+        h.set_waker(move || flag.store(true, Ordering::SeqCst));
+        assert!(!fired.load(Ordering::SeqCst));
+        complete(&completion, outcome(5));
+        assert!(fired.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn waker_fires_immediately_when_already_complete() {
+        let (completion, h) = handle(6);
+        complete(&completion, outcome(6));
+        let fired = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&fired);
+        h.set_waker(move || flag.store(true, Ordering::SeqCst));
+        assert!(fired.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn shed_outcome_is_structured() {
+        let o = shed_outcome(9, 2, Mat4::IDENTITY, "test reason");
+        assert_eq!(o.stop, StopReason::Shed);
+        assert_eq!(o.lane, usize::MAX);
+        assert!(o.is_failed());
+        assert!(o.error.as_deref().unwrap().contains("test reason"));
+        assert!(o.rmse.is_nan());
+    }
+
+    #[test]
+    fn slo_class_round_trips() {
+        for class in SloClass::all() {
+            let parsed: SloClass = class.name().parse().expect("round trip");
+            assert_eq!(parsed, class);
+        }
+        assert!("realtime".parse::<SloClass>().is_err());
+    }
+}

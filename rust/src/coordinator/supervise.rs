@@ -1,0 +1,987 @@
+//! Lane supervision and dispatch: the supervised worker-lane pool
+//! ([`run_supervised_lane_pool`]), its event-driven dispatcher
+//! (`dispatch_supervised` over [`LaneEvent`]s), the deadline watchdog,
+//! and the batch entry points ([`run_lane_pool`],
+//! [`run_registration_batch`], [`run_registration_batch_supervised`])
+//! preserved as thin wrappers around the supervised core.
+
+use super::jobs::{LaneIcpConfig, LaneReport, LaneStats, RegistrationJob, RegistrationOutcome};
+use super::router::{AffinityRouter, JobFeedback};
+use crate::fpps_api::{CancelToken, FppsIcp, KernelBackend};
+use crate::icp::StopReason;
+use crate::math::Mat4;
+use crate::metrics::TimingStats;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Pool-wide fault-tolerance policy of [`run_supervised_lane_pool`].
+/// The defaults are deliberately inert (no deadline, no retries):
+/// [`run_lane_pool`] keeps its historical semantics unless a caller
+/// opts into supervision.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Default per-job deadline, measured from submission; `None`
+    /// disables deadline enforcement (jobs may still opt in via
+    /// [`RegistrationJob::with_deadline`]).
+    pub deadline: Option<Duration>,
+    /// Default transient-failure retry budget per job (0 = first error
+    /// is final, matching the historical contained-failure behavior).
+    pub max_retries: u32,
+    /// First retry backoff; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    /// Upper bound on the exponential backoff between retries.
+    pub backoff_cap: Duration,
+    /// Backend restarts a lane absorbs before advancing one failover
+    /// tier (the factory's second argument): `tier = restarts /
+    /// restarts_per_tier`, so a backend that keeps panicking walks down
+    /// a [`crate::fpps_api::FailoverChain`] instead of thrashing.
+    pub restarts_per_tier: u32,
+    /// Deadline-watchdog poll interval.
+    pub watchdog_poll: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            max_retries: 0,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(50),
+            restarts_per_tier: 2,
+            watchdog_poll: Duration::from_millis(2),
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// Bounded exponential backoff before retry `attempt` (1-based).
+    fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u32 << attempt.min(16);
+        self.backoff_base.saturating_mul(factor).min(self.backoff_cap)
+    }
+}
+
+/// Bounded per-lane job queue: a lock-free single-producer ring
+/// ([`crate::pool::ring::SpscRing`]) carrying small job descriptors —
+/// clouds travel by `Arc`, so enqueueing moves ~100 bytes and never
+/// copies points. The dispatcher is the only pusher; the lane worker
+/// and the deadline watchdog race pops on the CAS consumer side, so a
+/// third party can still *drain* a wedged lane's queue exactly-once
+/// without a lock (the mutex queue this replaces serialized every
+/// push/pop across the pool). One semantic difference is handled at
+/// the call sites: `close()` + `drain()` is no longer atomic against a
+/// concurrent push, so the dispatcher — the sole producer — re-drains
+/// a lane's ring when it learns the lane died (see
+/// [`dispatch_supervised`]).
+type LaneQueue = crate::pool::ring::SpscRing<RegistrationJob>;
+
+/// The lane's currently-served job, published for the deadline
+/// watchdog. The `claimed` flag is the exactly-once arbiter between the
+/// lane and the watchdog: whoever flips it first (under the heartbeat
+/// mutex) owns the job's outcome and feedback.
+#[derive(Clone)]
+struct ActiveJob {
+    id: u64,
+    stream: usize,
+    key: u64,
+    initial: Mat4,
+    queue_wait_ms: f64,
+    started: Instant,
+    deadline_at: Option<Instant>,
+    attempt: u32,
+    generation: u64,
+    claimed: bool,
+}
+
+/// Shared lane↔watchdog state: the active-job heartbeat plus the
+/// cancellation token installed into the lane's backend.
+struct Heartbeat {
+    active: Mutex<Option<ActiveJob>>,
+    cancel: CancelToken,
+}
+
+/// Supervision traffic from lanes and the watchdog to the dispatcher.
+enum LaneEvent {
+    /// Per-job completion feedback (the mirror-correction protocol).
+    Feedback(JobFeedback),
+    /// The lane's backend was respawned: un-warm it and bump its
+    /// feedback generation.
+    Restarted { lane: usize },
+    /// The watchdog cut off a wedged lane: route around it.
+    Wedged { lane: usize },
+    /// A wedged lane came back: it may take new jobs again.
+    Recovered { lane: usize },
+    /// Jobs drained off a wedged lane's queue, to be re-routed.
+    Requeue { lane: usize, jobs: Vec<RegistrationJob> },
+    /// The lane failed to start and will never serve: route around it
+    /// permanently (its worker error fails the pool after the drain).
+    Dead { lane: usize },
+}
+
+/// Try to place `job` via the router (first choice, then spill order);
+/// hands the job back when every candidate queue is full. Routing state
+/// is committed only after a push lands.
+fn route_job(
+    router: &mut AffinityRouter,
+    queues: &[Arc<LaneQueue>],
+    mut job: RegistrationJob,
+) -> Option<RegistrationJob> {
+    let key = job.target_key;
+    let mut tried = None;
+    if let Some(l) = router.first_choice(key) {
+        match queues[l].try_push(job) {
+            Ok(()) => {
+                router.committed(l, key);
+                return None;
+            }
+            Err(j) => {
+                job = j;
+                tried = Some(l); // don't re-attempt the full queue
+            }
+        }
+    }
+    for l in router.spill_order(tried) {
+        match queues[l].try_push(job) {
+            Ok(()) => {
+                router.committed(l, key);
+                return None;
+            }
+            Err(j) => job = j,
+        }
+    }
+    Some(job)
+}
+
+/// Route jobs from the shared intake queue to per-lane queues through
+/// the pool-wide residency coordinator ([`AffinityRouter`]): warm keys
+/// keep their lane while it keeps up, cold keys fill **free residency
+/// slots** anywhere in the pool before any warm lane is made to evict,
+/// and only when every slot is occupied does a cold key spill by load.
+/// `ev_rx` carries per-job [`JobFeedback`] plus the supervision events
+/// (restarts, wedges, re-queues), giving the dispatcher its load
+/// estimate, the ground truth that corrects the warm-set mirror, and
+/// the restart/un-warm signals — all without locking. Jobs that find
+/// every queue full are parked in a deferred list (never blocking the
+/// event loop) and placed as soon as feedback frees a slot; intake is
+/// only pulled while the deferred list is empty, so producer
+/// backpressure is preserved. The dispatcher exits — closing every lane
+/// queue — once intake has disconnected and every routed job has fed
+/// back. Routing can never change numerics: every job is an independent
+/// alignment, so `lanes = 1` and `lanes = K` stay bit-identical
+/// regardless of placement.
+fn dispatch_supervised(
+    rx: Receiver<RegistrationJob>,
+    queues: Vec<Arc<LaneQueue>>,
+    ev_rx: Receiver<LaneEvent>,
+    slots_rx: Receiver<usize>,
+) {
+    let lanes = queues.len();
+    // Mirror the *actual* backends, not an assumed default: every lane
+    // reports its backend's residency slot count once it exists (a lane
+    // that fails to start just drops its sender). The most conservative
+    // (minimum) count drives the warm sets — over-estimating residency
+    // would route jobs to lanes whose backend already evicted the key.
+    let mut slots: Option<usize> = None;
+    for _ in 0..lanes {
+        match slots_rx.recv() {
+            Ok(s) => slots = Some(slots.map_or(s, |m| m.min(s))),
+            Err(_) => break,
+        }
+    }
+    let mut router = AffinityRouter::new(lanes, slots.unwrap_or(1));
+    let mut deferred: VecDeque<RegistrationJob> = VecDeque::new();
+    let mut dead = vec![false; lanes];
+    let mut intake_open = true;
+
+    fn handle_event(
+        router: &mut AffinityRouter,
+        queues: &[Arc<LaneQueue>],
+        deferred: &mut VecDeque<RegistrationJob>,
+        dead: &mut [bool],
+        ev: LaneEvent,
+    ) {
+        match ev {
+            LaneEvent::Feedback(fb) => router.completed(fb),
+            LaneEvent::Restarted { lane } => router.lane_restarted(lane),
+            LaneEvent::Wedged { lane } => router.set_down(lane, true),
+            LaneEvent::Recovered { lane } => router.set_down(lane, false),
+            LaneEvent::Requeue { lane, jobs } => {
+                router.requeued(lane, jobs.len());
+                deferred.extend(jobs);
+            }
+            LaneEvent::Dead { lane } => {
+                dead[lane] = true;
+                router.set_down(lane, true);
+                // The ring's close+drain is not atomic against a push
+                // already in flight from this thread. As the sole
+                // producer we re-drain authoritatively here, so a job
+                // that landed after the dead lane's own drain is
+                // re-routed instead of rotting in a closed queue.
+                let jobs = queues[lane].drain();
+                if !jobs.is_empty() {
+                    router.requeued(lane, jobs.len());
+                    deferred.extend(jobs);
+                }
+            }
+        }
+    }
+
+    loop {
+        while let Ok(ev) = ev_rx.try_recv() {
+            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
+        }
+        if dead.iter().all(|&d| d) {
+            // No lane will ever serve again; stop routing so the pool
+            // can unwind and report the lane errors.
+            break;
+        }
+        // Place deferred jobs (watchdog re-queues and earlier overflow)
+        // before pulling new intake.
+        while let Some(job) = deferred.pop_front() {
+            if let Some(job) = route_job(&mut router, &queues, job) {
+                deferred.push_front(job); // still no room anywhere
+                break;
+            }
+        }
+        if intake_open && deferred.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(job) => {
+                    if let Some(job) = route_job(&mut router, &queues, job) {
+                        deferred.push_back(job);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => intake_open = false,
+            }
+        } else if !intake_open && deferred.is_empty() && router.total_pending() == 0 {
+            break; // every job routed and fed back: drain complete
+        } else if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(2)) {
+            handle_event(&mut router, &queues, &mut deferred, &mut dead, ev);
+        }
+    }
+    for q in &queues {
+        q.close();
+    }
+}
+
+/// Deadline watchdog: polls every lane's heartbeat and, when a job's
+/// deadline has passed unclaimed, *claims* it — emitting the contained
+/// [`StopReason::DeadlineExceeded`] outcome and its feedback itself (so
+/// the pool's accounting completes even if the lane never returns),
+/// raising the lane's [`CancelToken`] so a cooperative backend abandons
+/// the wedged call, marking the lane down, and draining its queue back
+/// to the dispatcher for re-routing.
+#[allow(clippy::too_many_arguments)]
+fn watchdog_loop(
+    heartbeats: &[Arc<Heartbeat>],
+    queues: &[Arc<LaneQueue>],
+    out_tx: Sender<RegistrationOutcome>,
+    ev_tx: Sender<LaneEvent>,
+    poll: Duration,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        for (lane, hb) in heartbeats.iter().enumerate() {
+            let claim = {
+                let mut g = hb.active.lock().unwrap();
+                let expired = g.as_ref().is_some_and(|a| {
+                    !a.claimed && a.deadline_at.is_some_and(|d| Instant::now() >= d)
+                });
+                if expired {
+                    let a = g.as_mut().expect("checked above");
+                    a.claimed = true;
+                    Some(a.clone())
+                } else {
+                    None
+                }
+            };
+            let Some(a) = claim else { continue };
+            // Cut the wedged call off, then take over the job's
+            // bookkeeping: one outcome, one feedback, queue re-routed.
+            hb.cancel.cancel();
+            out_tx
+                .send(RegistrationOutcome {
+                    id: a.id,
+                    stream: a.stream,
+                    lane,
+                    transform: a.initial,
+                    rmse: f64::NAN,
+                    iterations: 0,
+                    stop: StopReason::DeadlineExceeded,
+                    queue_wait_ms: a.queue_wait_ms,
+                    service_ms: a.started.elapsed().as_secs_f64() * 1e3,
+                    error: Some(format!(
+                        "job {} on lane {lane}: deadline exceeded (cut off by watchdog)",
+                        a.id
+                    )),
+                    attempts: a.attempt + 1,
+                })
+                .ok();
+            ev_tx
+                .send(LaneEvent::Feedback(JobFeedback {
+                    lane,
+                    key: a.key,
+                    uploaded: false, // conservative: un-warm, never claim
+                    hit: false,
+                    ok: false,
+                    generation: a.generation,
+                }))
+                .ok();
+            ev_tx.send(LaneEvent::Wedged { lane }).ok();
+            let drained = queues[lane].drain();
+            if !drained.is_empty() {
+                ev_tx
+                    .send(LaneEvent::Requeue {
+                        lane,
+                        jobs: drained,
+                    })
+                    .ok();
+            }
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// How one align attempt on a lane resolved.
+enum Attempt {
+    Done(crate::fpps_api::FppsResult, bool, bool), // (result, uploaded, hit)
+    Failed(String),
+    Panicked(String),
+}
+
+/// Human-readable panic payload (what `panic!` carried, if a string).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a pool of `lanes` supervised worker lanes, each with its own
+/// bounded queue, fed by a target-affinity dispatcher (see
+/// [`dispatch_supervised`]) and overseen by a deadline watchdog (see
+/// [`watchdog_loop`]).
+///
+/// * `make_backend(lane, tier)` is called **on** each lane thread, so
+///   backends never cross threads and need not be `Send`. `tier` is the
+///   failover rung: 0 on startup, advancing by one per
+///   [`SupervisorConfig::restarts_per_tier`] backend restarts, so the
+///   factory can hand out progressively more conservative backends
+///   (e.g. along a [`crate::fpps_api::FailoverChain`]). A tier-0
+///   failure at startup is a pool-level error; a factory failure during
+///   a mid-run respawn is contained per job instead.
+/// * `produce(tx)` runs on its own thread and feeds the intake queue —
+///   it may clone the sender and fan out to per-client producer threads
+///   (see `examples/registration_server.rs`). A `send` error means the
+///   pool is shutting down; treat it as a stop signal, not a failure.
+///
+/// Fault containment on a lane, per job: transient align errors (and
+/// panics, which additionally respawn the backend from the factory)
+/// retry with bounded exponential backoff up to the job's retry budget;
+/// a job past its deadline is contained as
+/// [`StopReason::DeadlineExceeded`] — cooperatively between ICP
+/// iterations when the backend is healthy, or by the watchdog when it
+/// is wedged. Every submitted job yields **exactly one** outcome and
+/// exactly one feedback, whoever emits them.
+///
+/// Each job is an independent alignment, so the mapping of jobs to lanes
+/// cannot change any transform: `lanes = 1` and `lanes = K` produce
+/// bit-identical outcomes for a deterministic backend.
+pub fn run_supervised_lane_pool<B, F, P>(
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+    produce: P,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
+{
+    run_supervised_lane_pool_tapped(lanes, queue_depth, icp_cfg, sup, make_backend, produce, |_| {})
+}
+
+/// [`run_supervised_lane_pool`] with a live outcome tap: `on_outcome`
+/// runs on a dedicated collector thread the moment each job's outcome
+/// is emitted (by a lane or the watchdog), *before* the pool has
+/// drained. This is the completion-event source of the serving tier
+/// ([`super::serving`]): the tap fulfills per-job completion handles
+/// while the pool keeps running, which a post-drain loop over the
+/// report could never do. The outcomes still end up in the returned
+/// [`LaneReport`], sorted by id, exactly as without the tap.
+pub fn run_supervised_lane_pool_tapped<B, F, P, O>(
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+    produce: P,
+    mut on_outcome: O,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
+    O: FnMut(&RegistrationOutcome) + Send,
+{
+    let lanes = lanes.max(1);
+    let depth = queue_depth.max(1);
+    let (job_tx, job_rx) = sync_channel::<RegistrationJob>(depth);
+    let queues: Vec<Arc<LaneQueue>> = (0..lanes).map(|_| Arc::new(LaneQueue::new(depth))).collect();
+    let heartbeats: Vec<Arc<Heartbeat>> = (0..lanes)
+        .map(|_| {
+            Arc::new(Heartbeat {
+                active: Mutex::new(None),
+                cancel: CancelToken::new(),
+            })
+        })
+        .collect();
+    let (out_tx, out_rx) = channel::<RegistrationOutcome>();
+    let (lane_tx, lane_rx) = channel::<LaneStats>();
+    let (ev_tx, ev_rx) = channel::<LaneEvent>();
+    let (slots_tx, slots_rx) = channel::<usize>();
+    let watchdog_stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+
+    let mut outcomes = std::thread::scope(|scope| -> Result<Vec<RegistrationOutcome>> {
+        // Collector: drains outcomes live (feeding the tap) instead of
+        // letting them pile up in the channel until the pool unwinds.
+        // It exits when the last `out_tx` clone drops — the watchdog
+        // holds one, so it must be joined only after the watchdog.
+        let collector = scope.spawn(move || {
+            let mut outcomes = Vec::new();
+            for o in out_rx {
+                on_outcome(&o);
+                outcomes.push(o);
+            }
+            outcomes
+        });
+        let producer = scope.spawn(move || produce(job_tx));
+        let disp_queues = queues.clone();
+        let dispatcher =
+            scope.spawn(move || dispatch_supervised(job_rx, disp_queues, ev_rx, slots_rx));
+        let wd_heartbeats = heartbeats.clone();
+        let wd_queues = queues.clone();
+        let wd_out = out_tx.clone();
+        let wd_ev = ev_tx.clone();
+        let wd_stop = &watchdog_stop;
+        let watchdog = scope.spawn(move || {
+            watchdog_loop(
+                &wd_heartbeats,
+                &wd_queues,
+                wd_out,
+                wd_ev,
+                sup.watchdog_poll,
+                wd_stop,
+            )
+        });
+        let mut workers = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let queue = Arc::clone(&queues[lane]);
+            let hb = Arc::clone(&heartbeats[lane]);
+            let out_tx = out_tx.clone();
+            let lane_tx = lane_tx.clone();
+            let ev_tx = ev_tx.clone();
+            let slots_tx = slots_tx.clone();
+            let make_backend = &make_backend;
+            workers.push(scope.spawn(move || -> Result<()> {
+                let make_icp = |tier: usize| -> Result<FppsIcp<B>> {
+                    let mut backend = make_backend(lane, tier).with_context(|| {
+                        format!("create backend for lane {lane} (failover tier {tier})")
+                    })?;
+                    backend.set_cancel_token(hb.cancel.clone());
+                    let mut icp = FppsIcp::with_backend(backend);
+                    icp.set_buffer_pool(crate::pool::BufferPool::new(icp_cfg.pool_capacity));
+                    icp.set_max_correspondence_distance(icp_cfg.max_correspondence_distance)
+                        .set_max_iteration_count(icp_cfg.max_iteration_count)
+                        .set_transformation_epsilon(icp_cfg.transformation_epsilon);
+                    Ok(icp)
+                };
+                // Tier-0 creation failure is a configuration error that
+                // fails the pool, exactly as before supervision existed —
+                // but the lane must still hand its queue back so the
+                // dispatcher can drain and the pool can unwind.
+                let mut icp: Option<FppsIcp<B>> = match make_icp(0) {
+                    Ok(engine) => Some(engine),
+                    Err(e) => {
+                        queue.close();
+                        let jobs = queue.drain();
+                        ev_tx.send(LaneEvent::Dead { lane }).ok();
+                        if !jobs.is_empty() {
+                            ev_tx.send(LaneEvent::Requeue { lane, jobs }).ok();
+                        }
+                        return Err(e);
+                    }
+                };
+                // Tell the dispatcher how much residency this lane
+                // really has, so its warm-set mirror matches the device.
+                let engine0 = icp.as_ref().expect("created above");
+                slots_tx.send(engine0.backend().residency_slots()).ok();
+                drop(slots_tx);
+                let mut stats = LaneStats {
+                    lane,
+                    backend: engine0.backend().name().to_string(),
+                    ..Default::default()
+                };
+                let mut generation: u64 = 0;
+                // Telemetry of backends retired by restarts, folded into
+                // the final stats: (device_ms, uploads, hits, evictions).
+                let mut retired = (0.0f64, 0u64, 0u64, 0u64);
+                let retire = |icp: &mut Option<FppsIcp<B>>, retired: &mut (f64, u64, u64, u64)| {
+                    if let Some(old) = icp.take() {
+                        retired.0 += old.backend().device_time().as_secs_f64() * 1e3;
+                        let (u, h, _) = old.target_cache_stats();
+                        retired.1 += u;
+                        retired.2 += h;
+                        retired.3 += old.backend().target_evictions();
+                    }
+                };
+
+                // Own queue, no lock contention with other lanes: the
+                // dispatcher already routed.
+                while let Some(job) = queue.pop() {
+                    let queue_wait_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    let (id, stream, initial, key) =
+                        (job.id, job.stream, job.initial, job.target_key);
+                    let deadline_at =
+                        job.deadline.or(sup.deadline).map(|d| job.submitted + d);
+                    let max_retries = job.max_retries.unwrap_or(sup.max_retries);
+                    let t_serve = Instant::now();
+                    let mut attempt: u32 = 0;
+                    // `None` = the watchdog claimed the job (outcome and
+                    // feedback already emitted over there).
+                    let mut resolution: Option<(RegistrationOutcome, JobFeedback)> = None;
+                    let mut recovered_from_claim = false;
+                    loop {
+                        // A job past its deadline — expired in the
+                        // queue, or between retries — is contained
+                        // without touching the backend.
+                        if deadline_at.is_some_and(|d| Instant::now() >= d) {
+                            stats.deadline_missed += 1;
+                            resolution = Some((
+                                RegistrationOutcome {
+                                    id,
+                                    stream,
+                                    lane,
+                                    transform: initial,
+                                    rmse: f64::NAN,
+                                    iterations: 0,
+                                    stop: StopReason::DeadlineExceeded,
+                                    queue_wait_ms,
+                                    service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                    error: Some(format!(
+                                        "job {id} on lane {lane}: deadline exceeded"
+                                    )),
+                                    attempts: attempt + 1,
+                                },
+                                JobFeedback {
+                                    lane,
+                                    key,
+                                    uploaded: false,
+                                    hit: false,
+                                    ok: false,
+                                    generation,
+                                },
+                            ));
+                            break;
+                        }
+                        // Respawn the backend if a panic retired it (or
+                        // an earlier respawn failed). A factory failure
+                        // here is contained in the job, not the pool.
+                        if icp.is_none() {
+                            let tier = stats.restarts / sup.restarts_per_tier.max(1) as usize;
+                            match make_icp(tier) {
+                                Ok(engine) => {
+                                    stats.backend_tier = tier;
+                                    stats.backend = engine.backend().name().to_string();
+                                    icp = Some(engine);
+                                }
+                                Err(e) => {
+                                    resolution = Some((
+                                        RegistrationOutcome {
+                                            id,
+                                            stream,
+                                            lane,
+                                            transform: initial,
+                                            rmse: f64::NAN,
+                                            iterations: 0,
+                                            stop: StopReason::Failed,
+                                            queue_wait_ms,
+                                            service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                            error: Some(format!("job {id} on lane {lane}: {e:#}")),
+                                            attempts: attempt + 1,
+                                        },
+                                        JobFeedback {
+                                            lane,
+                                            key,
+                                            uploaded: false,
+                                            hit: false,
+                                            ok: false,
+                                            generation,
+                                        },
+                                    ));
+                                    break;
+                                }
+                            }
+                        }
+                        // Publish the attempt for the watchdog. If the
+                        // watchdog already claimed this job (stall cut
+                        // off between our checks), stop touching it.
+                        let claimed_already = {
+                            let mut g = hb.active.lock().unwrap();
+                            if g.as_ref().is_some_and(|a| a.claimed) {
+                                true
+                            } else {
+                                hb.cancel.reset();
+                                *g = Some(ActiveJob {
+                                    id,
+                                    stream,
+                                    key,
+                                    initial,
+                                    queue_wait_ms,
+                                    started: t_serve,
+                                    deadline_at,
+                                    attempt,
+                                    generation,
+                                    claimed: false,
+                                });
+                                false
+                            }
+                        };
+                        if claimed_already {
+                            recovered_from_claim = true;
+                            break;
+                        }
+                        let engine = icp.as_mut().expect("respawned above");
+                        let (uploads_before, hits_before, _) = engine.target_cache_stats();
+                        // Retries re-stage the same shared cloud: every
+                        // attempt costs one `Arc` refcount, never a
+                        // deep copy of the points.
+                        engine.set_input_source(Arc::clone(&job.source));
+                        engine.set_input_target(Arc::clone(&job.target));
+                        engine.set_transformation_matrix(initial);
+                        engine.set_deadline(deadline_at);
+                        // A panicking backend must not take the lane
+                        // (and with it the whole pool) down: contain the
+                        // unwind, respawn, retry.
+                        let served = match catch_unwind(AssertUnwindSafe(|| engine.align())) {
+                            Ok(Ok(res)) => {
+                                let (u1, h1, _) = engine.target_cache_stats();
+                                Attempt::Done(res, u1 > uploads_before, h1 > hits_before)
+                            }
+                            Ok(Err(e)) => Attempt::Failed(format!("{e:#}")),
+                            Err(payload) => Attempt::Panicked(panic_message(payload)),
+                        };
+                        // Resolve the claim race: whoever holds the
+                        // heartbeat lock first owns the job's outcome.
+                        let claimed = {
+                            let mut g = hb.active.lock().unwrap();
+                            let claimed = g.as_ref().is_some_and(|a| a.claimed);
+                            if !claimed {
+                                *g = None;
+                            }
+                            claimed
+                        };
+                        if matches!(served, Attempt::Panicked(_)) {
+                            // The engine (and its backend) is toast:
+                            // retire its telemetry, respawn next loop,
+                            // and tell the dispatcher to un-warm us.
+                            retire(&mut icp, &mut retired);
+                            stats.restarts += 1;
+                            generation += 1;
+                            ev_tx.send(LaneEvent::Restarted { lane }).ok();
+                        }
+                        if claimed {
+                            recovered_from_claim = true;
+                            break;
+                        }
+                        match served {
+                            Attempt::Done(mut res, uploaded, hit) => {
+                                // Hand the iteration-stat buffer back to
+                                // the engine so the next align reuses its
+                                // capacity (part of the zero-alloc path).
+                                if let Some(engine) = icp.as_mut() {
+                                    engine.recycle_stats(std::mem::take(&mut res.stats));
+                                }
+                                let deadline_hit = res.stop == StopReason::DeadlineExceeded;
+                                if deadline_hit {
+                                    stats.deadline_missed += 1;
+                                }
+                                resolution = Some((
+                                    RegistrationOutcome {
+                                        id,
+                                        stream,
+                                        lane,
+                                        // A deadline cut mid-alignment
+                                        // hands back the initial
+                                        // transform: partial progress is
+                                        // not a usable pose.
+                                        transform: if deadline_hit {
+                                            initial
+                                        } else {
+                                            res.transformation
+                                        },
+                                        rmse: if deadline_hit { f64::NAN } else { res.rmse },
+                                        iterations: res.iterations,
+                                        stop: res.stop,
+                                        queue_wait_ms,
+                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                        error: deadline_hit.then(|| {
+                                            format!("job {id} on lane {lane}: deadline exceeded")
+                                        }),
+                                        attempts: attempt + 1,
+                                    },
+                                    JobFeedback {
+                                        lane,
+                                        key,
+                                        uploaded,
+                                        hit,
+                                        ok: !deadline_hit,
+                                        generation,
+                                    },
+                                ));
+                                break;
+                            }
+                            Attempt::Failed(msg) | Attempt::Panicked(msg) => {
+                                if attempt < max_retries {
+                                    attempt += 1;
+                                    stats.retries += 1;
+                                    std::thread::sleep(sup.backoff(attempt));
+                                    continue;
+                                }
+                                resolution = Some((
+                                    RegistrationOutcome {
+                                        id,
+                                        stream,
+                                        lane,
+                                        transform: initial,
+                                        rmse: f64::NAN,
+                                        iterations: 0,
+                                        stop: StopReason::Failed,
+                                        queue_wait_ms,
+                                        service_ms: t_serve.elapsed().as_secs_f64() * 1e3,
+                                        error: Some(format!("job {id} on lane {lane}: {msg}")),
+                                        attempts: attempt + 1,
+                                    },
+                                    JobFeedback {
+                                        lane,
+                                        key,
+                                        uploaded: false,
+                                        hit: false,
+                                        ok: false,
+                                        generation,
+                                    },
+                                ));
+                                break;
+                            }
+                        }
+                    }
+                    stats.jobs += 1;
+                    stats.queue_wait.record_ms(queue_wait_ms);
+                    stats.service.record_ms(t_serve.elapsed().as_secs_f64() * 1e3);
+                    if recovered_from_claim {
+                        // The watchdog already emitted this job's
+                        // outcome and feedback; just account it and
+                        // report the lane back up.
+                        stats.failed += 1;
+                        stats.deadline_missed += 1;
+                        {
+                            let mut g = hb.active.lock().unwrap();
+                            *g = None;
+                        }
+                        ev_tx.send(LaneEvent::Recovered { lane }).ok();
+                        continue;
+                    }
+                    let (outcome, feedback) = resolution.expect("every unclaimed job resolves");
+                    if outcome.is_failed() {
+                        stats.failed += 1;
+                    }
+                    out_tx.send(outcome).ok();
+                    ev_tx.send(LaneEvent::Feedback(feedback)).ok();
+                }
+                if let Some(engine) = icp.as_ref() {
+                    stats.resident_targets = engine.backend().resident_epochs().len();
+                    stats.device_ms =
+                        retired.0 + engine.backend().device_time().as_secs_f64() * 1e3;
+                    let (u, h, _) = engine.target_cache_stats();
+                    stats.target_uploads = (retired.1 + u) as usize;
+                    stats.target_hits = (retired.2 + h) as usize;
+                    stats.target_evictions =
+                        (retired.3 + engine.backend().target_evictions()) as usize;
+                } else {
+                    stats.device_ms = retired.0;
+                    stats.target_uploads = retired.1 as usize;
+                    stats.target_hits = retired.2 as usize;
+                    stats.target_evictions = retired.3 as usize;
+                }
+                lane_tx.send(stats).ok();
+                Ok(())
+            }));
+        }
+        // Drop the originals so the collection channels close when the
+        // last lane finishes (and the dispatcher's slot wait cannot hang
+        // on lanes that never started).
+        drop(out_tx);
+        drop(lane_tx);
+        drop(ev_tx);
+        drop(slots_tx);
+
+        match producer.join() {
+            Ok(r) => r.context("job producer")?,
+            Err(_) => bail!("job producer panicked"),
+        }
+        if dispatcher.join().is_err() {
+            bail!("affinity dispatcher panicked");
+        }
+        let mut worker_err = None;
+        for w in workers {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err.get_or_insert(anyhow!("lane worker panicked"));
+                }
+            }
+        }
+        watchdog_stop.store(true, Ordering::SeqCst);
+        if watchdog.join().is_err() {
+            bail!("deadline watchdog panicked");
+        }
+        // All `out_tx` clones are gone once the watchdog returns, so
+        // the collector's loop has terminated; join it even on the
+        // worker-error path so partial outcomes are not silently lost.
+        let outcomes = match collector.join() {
+            Ok(v) => v,
+            Err(_) => bail!("outcome collector panicked"),
+        };
+        match worker_err {
+            Some(e) => Err(e),
+            None => Ok(outcomes),
+        }
+    })?;
+
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    outcomes.sort_by_key(|o| o.id);
+    let mut lane_stats: Vec<LaneStats> = lane_rx.into_iter().collect();
+    lane_stats.sort_by_key(|s| s.lane);
+
+    // Merge the per-lane distributions into the aggregate report.
+    let mut service = TimingStats::new();
+    for l in &lane_stats {
+        service.merge(&l.service);
+    }
+    let mut queue_wait = TimingStats::new();
+    for o in &outcomes {
+        queue_wait.record_ms(o.queue_wait_ms);
+    }
+
+    Ok(LaneReport {
+        outcomes,
+        lanes: lane_stats,
+        service,
+        queue_wait,
+        wall_ms,
+    })
+}
+
+/// Run a pool of `lanes` worker lanes with the inert default
+/// supervision policy (no deadlines, no retries) and a tier-blind
+/// backend factory — the historical entry point; see
+/// [`run_supervised_lane_pool`] for the full fault-tolerant form.
+pub fn run_lane_pool<B, F, P>(
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+    produce: P,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+    P: FnOnce(SyncSender<RegistrationJob>) -> Result<()> + Send,
+{
+    run_supervised_lane_pool(
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+        produce,
+    )
+}
+
+/// Convenience wrapper: push a prebuilt batch of jobs through a
+/// supervised pool with an explicit fault-tolerance policy and a
+/// tier-aware backend factory.
+pub fn run_registration_batch_supervised<B, F>(
+    jobs: Vec<RegistrationJob>,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    sup: SupervisorConfig,
+    make_backend: F,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize, usize) -> Result<B> + Sync,
+{
+    let expected = jobs.len();
+    let report = run_supervised_lane_pool(
+        lanes,
+        queue_depth,
+        icp_cfg,
+        sup,
+        make_backend,
+        move |tx| {
+            for mut job in jobs {
+                job.mark_submitted(); // queue wait starts at send, not build
+                if tx.send(job).is_err() {
+                    break; // pool shut down early
+                }
+            }
+            Ok(())
+        },
+    )?;
+    if report.outcomes.len() != expected {
+        return Err(anyhow!(
+            "lane pool returned {} outcomes for {} jobs",
+            report.outcomes.len(),
+            expected
+        ));
+    }
+    Ok(report)
+}
+
+/// Convenience wrapper: push a prebuilt batch of jobs through the pool.
+pub fn run_registration_batch<B, F>(
+    jobs: Vec<RegistrationJob>,
+    lanes: usize,
+    queue_depth: usize,
+    icp_cfg: LaneIcpConfig,
+    make_backend: F,
+) -> Result<LaneReport>
+where
+    B: KernelBackend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    run_registration_batch_supervised(
+        jobs,
+        lanes,
+        queue_depth,
+        icp_cfg,
+        SupervisorConfig::default(),
+        move |lane, _tier| make_backend(lane),
+    )
+}

@@ -33,6 +33,11 @@
 //! selectable at *runtime* through [`BackendHandle`] / [`BackendKind`]
 //! (the multi-lane coordinator instantiates one backend per lane), so
 //! nothing above this layer is monomorphised to a single device.
+//! Long-running services sit one layer up again: the serving tier
+//! ([`crate::coordinator::serving`]) multiplexes many client streams
+//! over these per-lane backends through non-blocking submission
+//! handles, with SLO-classed admission deciding what parks or sheds
+//! when the lanes saturate.
 //!
 //! # Residency protocol
 //!

@@ -74,6 +74,14 @@ pub enum StopReason {
     /// an SLO signal, distinct from both data quality and
     /// [`StopReason::Failed`] infrastructure errors.
     DeadlineExceeded,
+    /// The serving tier refused the job before it ever reached a lane
+    /// queue: admission (stream/pool backpressure) or the SLO policy
+    /// decided the job would miss its deadline anyway. The alignment
+    /// never ran — the outcome hands back the initial transform with a
+    /// structured error, so latency-critical callers learn immediately
+    /// instead of waiting out a doomed queue. Only
+    /// `coordinator::serving` constructs this.
+    Shed,
 }
 
 /// Per-iteration diagnostics (consumed by benches and EXPERIMENTS.md).

@@ -151,6 +151,57 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_on_empty_input_are_zero() {
+        // The serving report reads p50/p99/p999 for classes that may
+        // have no completions — all must be a clean 0.0, never a panic.
+        let t = TimingStats::new();
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(t.percentile_ms(p), 0.0, "p{p} on empty input");
+        }
+    }
+
+    #[test]
+    fn percentiles_on_single_sample_return_it() {
+        let mut t = TimingStats::new();
+        t.record_ms(7.5);
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(t.percentile_ms(p), 7.5, "p{p} of one sample");
+        }
+    }
+
+    #[test]
+    fn percentiles_on_tied_values_return_the_tie() {
+        let mut t = TimingStats::new();
+        for _ in 0..100 {
+            t.record_ms(3.0);
+        }
+        for p in [50.0, 99.0, 99.9] {
+            assert_eq!(t.percentile_ms(p), 3.0, "p{p} of 100 tied samples");
+        }
+        // One outlier: the tail percentiles find it, the median ignores it.
+        t.record_ms(42.0);
+        assert_eq!(t.percentile_ms(50.0), 3.0);
+        assert_eq!(t.percentile_ms(99.9), 42.0);
+        assert_eq!(t.percentile_ms(100.0), 42.0);
+    }
+
+    #[test]
+    fn tail_percentiles_use_nearest_rank() {
+        // 0, 1, …, 999 ms: nearest-rank on (p/100)·(n−1) — p50 rounds
+        // 499.5 up to index 500, p99 hits 989.01 → 989, p99.9 hits
+        // 998.001 → 998.
+        let mut t = TimingStats::new();
+        for ms in 0..1000 {
+            t.record_ms(ms as f64);
+        }
+        assert_eq!(t.percentile_ms(0.0), 0.0);
+        assert_eq!(t.percentile_ms(50.0), 500.0);
+        assert_eq!(t.percentile_ms(99.0), 989.0);
+        assert_eq!(t.percentile_ms(99.9), 998.0);
+        assert_eq!(t.percentile_ms(100.0), 999.0);
+    }
+
+    #[test]
     fn merge_preserves_exact_percentiles() {
         let mut a = TimingStats::new();
         let mut b = TimingStats::new();

@@ -68,6 +68,44 @@ fn k_lanes_match_sequential_bitwise() {
 }
 
 #[test]
+fn serving_tier_matches_sequential_bitwise() {
+    // Same determinism claim through the serving tier: a job accepted
+    // by `ServingPool::submit` runs the exact same lane-pool path as a
+    // batch submission, so Ok outcomes stay bit-identical.
+    use fpps::coordinator::{ServingConfig, ServingPool, SupervisorConfig};
+    let cfg = LaneIcpConfig::default();
+    let seq = run_registration_batch(synthetic_jobs(8), 1, 2, cfg, |_| {
+        Ok(NativeSimBackend::new())
+    })
+    .unwrap();
+
+    let pool = ServingPool::start(
+        3,
+        2,
+        cfg,
+        SupervisorConfig::default(),
+        ServingConfig::default(),
+        |_lane, _tier| Ok(NativeSimBackend::new()),
+    )
+    .unwrap();
+    let handles: Vec<_> = synthetic_jobs(8)
+        .into_iter()
+        .map(|j| pool.submit(j).unwrap())
+        .collect();
+    let served: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    let report = pool.shutdown().unwrap();
+    assert_eq!(report.total_shed(), 0);
+
+    for (a, b) in seq.outcomes.iter().zip(served.iter()) {
+        assert_eq!(a.id, b.id, "handles resolve in submission (= id) order");
+        assert_eq!(a.transform.m, b.transform.m, "job {} transform", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {} rmse", a.id);
+        assert_eq!(a.iterations, b.iterations, "job {} iterations", a.id);
+        assert_eq!(a.stop, b.stop);
+    }
+}
+
+#[test]
 fn lanes_match_on_a_seeded_synthetic_sequence() {
     // Same claim at system level: frame pairs cut from one seeded
     // synthetic LiDAR sequence, shared job generator, 1 vs 3 lanes.

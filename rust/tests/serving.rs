@@ -1,0 +1,260 @@
+//! Integration tests for the event-driven serving tier: non-blocking
+//! submission handles, SLO-classed admission (park vs shed), structured
+//! shed outcomes, waker-style completion events, and bit-identical
+//! agreement with the batch path for Ok outcomes.
+
+use fpps::coordinator::{
+    run_registration_batch, LaneIcpConfig, RegistrationJob, ServingConfig, ServingPool, SloClass,
+    Submission, SupervisorConfig,
+};
+use fpps::fpps_api::NativeSimBackend;
+use fpps::icp::StopReason;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::rng::Pcg32;
+use std::time::Duration;
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+/// One seeded frame-pair job; calling this twice with the same id
+/// builds bit-identical inputs.
+fn job(id: u64) -> RegistrationJob {
+    let target = structured_cloud(600, 100 + id);
+    let gt = Mat4::from_rt(
+        Mat3::rot_z(0.01 * (id as f64 + 1.0)),
+        Vec3::new(0.1 + 0.02 * id as f64, -0.05, 0.01),
+    );
+    let source = target.transformed(&gt.inverse_rigid());
+    RegistrationJob::new(id, id as usize % 3, source, target, Mat4::IDENTITY)
+}
+
+fn pool(lanes: usize, cfg: ServingConfig) -> ServingPool {
+    ServingPool::start(
+        lanes,
+        2,
+        LaneIcpConfig::default(),
+        SupervisorConfig::default(),
+        cfg,
+        |_lane, _tier| Ok(NativeSimBackend::new()),
+    )
+    .unwrap()
+}
+
+#[test]
+fn submit_resolves_handles_with_real_outcomes() {
+    let p = pool(2, ServingConfig::default());
+    let handles: Vec<_> = (0..6).map(|k| p.submit(job(k)).unwrap()).collect();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    for (k, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.id, k as u64);
+        assert!(!o.is_failed(), "job {k}: {:?}", o.error);
+        assert!(o.rmse.is_finite());
+    }
+    let report = p.shutdown().unwrap();
+    assert_eq!(report.lane_report.outcomes.len(), 6);
+    assert_eq!(report.total_shed(), 0);
+    assert_eq!(report.contained_failures(), 0);
+    // Per-class accounting: all six were standard submissions.
+    let std_stats = report
+        .classes
+        .iter()
+        .find(|c| c.class == SloClass::Standard)
+        .unwrap();
+    assert_eq!(std_stats.submitted, 6);
+    assert_eq!(std_stats.completed, 6);
+    assert_eq!(std_stats.ok, 6);
+    assert_eq!(std_stats.latency.count(), 6);
+}
+
+#[test]
+fn serving_matches_batch_bitwise_for_ok_outcomes() {
+    let batch = run_registration_batch(
+        (0..5).map(job).collect(),
+        1,
+        2,
+        LaneIcpConfig::default(),
+        |_| Ok(NativeSimBackend::new()),
+    )
+    .unwrap();
+
+    let p = pool(3, ServingConfig::default());
+    let handles: Vec<_> = (0..5).map(|k| p.submit(job(k)).unwrap()).collect();
+    let served: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    p.shutdown().unwrap();
+
+    for (a, b) in batch.outcomes.iter().zip(served.iter()) {
+        assert_eq!(a.id, b.id, "handles resolve in submission (= id) order");
+        // Bit-identical Ok outcomes: serving must not touch numerics.
+        assert_eq!(a.transform.m, b.transform.m, "job {} transform", a.id);
+        assert_eq!(a.rmse.to_bits(), b.rmse.to_bits(), "job {} rmse", a.id);
+        assert_eq!(a.iterations, b.iterations, "job {} iterations", a.id);
+        assert_eq!(a.stop, b.stop);
+    }
+}
+
+#[test]
+fn latency_critical_doomed_jobs_shed_not_queued() {
+    let p = pool(1, ServingConfig::default());
+    let client = p.client();
+    let doomed = job(0)
+        .with_slo(SloClass::LatencyCritical)
+        .with_deadline(Duration::ZERO);
+    match client.try_submit(doomed).unwrap() {
+        Submission::Shed(h) => {
+            assert!(h.is_complete(), "shed handles resolve immediately");
+            assert_eq!(h.class(), SloClass::LatencyCritical);
+            let o = h.try_take().unwrap();
+            assert_eq!(o.stop, StopReason::Shed);
+            assert_eq!(o.lane, usize::MAX, "no lane ever saw the job");
+            assert!(o.is_failed());
+            assert!(o.error.as_deref().unwrap().contains("shed"));
+            assert!(o.rmse.is_nan());
+        }
+        _ => panic!("a zero-budget latency-critical job must shed, not queue"),
+    }
+    let report = p.shutdown().unwrap();
+    let lc = report
+        .classes
+        .iter()
+        .find(|c| c.class == SloClass::LatencyCritical)
+        .unwrap();
+    assert_eq!(lc.submitted, 1);
+    assert_eq!(lc.shed, 1);
+    assert_eq!(lc.completed, 0);
+    assert_eq!(report.lane_report.outcomes.len(), 0);
+    // Sheds are deliberate refusals, not contained failures.
+    assert_eq!(report.contained_failures(), 0);
+}
+
+#[test]
+fn full_pool_parks_standard_and_sheds_latency_critical() {
+    // max_in_flight = 0 admits nothing: deterministic backpressure.
+    let p = pool(
+        1,
+        ServingConfig {
+            stream_depth: 4,
+            max_in_flight: 0,
+        },
+    );
+    let client = p.client();
+    match client.try_submit(job(0)).unwrap() {
+        Submission::Parked(j) => assert_eq!(j.id, 0, "standard work is handed back intact"),
+        _ => panic!("standard class must park under backpressure"),
+    }
+    match client.try_submit(job(1).with_slo(SloClass::BestEffort)).unwrap() {
+        Submission::Parked(_) => {}
+        _ => panic!("best-effort parks under backpressure too"),
+    }
+    match client.try_submit(job(2).with_slo(SloClass::LatencyCritical)).unwrap() {
+        Submission::Shed(h) => {
+            let o = h.wait();
+            assert_eq!(o.stop, StopReason::Shed);
+            assert!(o.error.as_deref().unwrap().contains("in-flight bound"));
+        }
+        _ => panic!("latency-critical must shed instead of parking"),
+    }
+    let report = p.shutdown().unwrap();
+    assert_eq!(report.total_shed(), 1);
+    assert_eq!(report.lane_report.outcomes.len(), 0);
+}
+
+#[test]
+fn full_stream_gate_applies_per_client() {
+    // stream_depth = 0: each client stream refuses its first submission,
+    // while the one-shot path (pool-wide bound only) still serves.
+    let p = pool(
+        1,
+        ServingConfig {
+            stream_depth: 0,
+            max_in_flight: 64,
+        },
+    );
+    let client = p.client();
+    assert!(matches!(
+        client.try_submit(job(0)).unwrap(),
+        Submission::Parked(_)
+    ));
+    let h = p.submit(job(1)).unwrap();
+    assert!(!h.wait().is_failed());
+    p.shutdown().unwrap();
+}
+
+#[test]
+fn duplicate_in_flight_id_errors() {
+    let p = pool(1, ServingConfig::default());
+    // A heavy job keeps id 9 in flight while the duplicate arrives.
+    let target = structured_cloud(4000, 7);
+    let gt = Mat4::from_rt(Mat3::rot_z(0.02), Vec3::new(0.1, -0.05, 0.01));
+    let source = target.transformed(&gt.inverse_rigid());
+    let heavy = RegistrationJob::new(9, 0, source, target, Mat4::IDENTITY);
+    let h = p.submit(heavy).unwrap();
+    assert!(p.submit(job(9)).is_err(), "in-flight ids must be unique");
+    assert!(!h.wait().is_failed());
+    p.shutdown().unwrap();
+}
+
+#[test]
+fn waker_fires_when_outcome_lands() {
+    let p = pool(1, ServingConfig::default());
+    let h = p.submit(job(3)).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    h.set_waker(move || tx.send(()).unwrap());
+    rx.recv_timeout(Duration::from_secs(60)).expect("waker fired");
+    assert!(h.is_complete());
+    assert!(h.try_take().unwrap().rmse.is_finite());
+    p.shutdown().unwrap();
+}
+
+#[test]
+fn parked_work_retries_to_completion() {
+    let p = pool(
+        2,
+        ServingConfig {
+            stream_depth: 1,
+            max_in_flight: 64,
+        },
+    );
+    let client = p.client();
+    let mut handles = Vec::new();
+    for k in 0..6 {
+        let mut j = job(k);
+        loop {
+            match client.try_submit(j).unwrap() {
+                Submission::Accepted(h) => {
+                    handles.push(h);
+                    break;
+                }
+                Submission::Shed(_) => unreachable!("standard class never sheds"),
+                Submission::Parked(back) => {
+                    j = back;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+    for h in handles {
+        assert!(!h.wait().is_failed());
+    }
+    let report = p.shutdown().unwrap();
+    assert_eq!(report.lane_report.outcomes.len(), 6);
+    assert_eq!(report.total_shed(), 0);
+}
+
+#[test]
+fn submit_after_shutdown_errors() {
+    let p = pool(1, ServingConfig::default());
+    let client = p.client();
+    p.shutdown().unwrap();
+    assert!(client.try_submit(job(1)).is_err(), "closed pool refuses work");
+}
