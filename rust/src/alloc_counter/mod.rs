@@ -40,10 +40,13 @@ impl Default for CountingAlloc {
     }
 }
 
-// Safety: defers entirely to `System`; the counters are lock-free
-// atomics, safe inside the allocator.
+// SAFETY: defers entirely to `System` (which upholds the `GlobalAlloc`
+// contract); the added counters are lock-free atomics and never
+// allocate, so they are safe inside the allocator itself.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — monotonic counters; snapshots are taken
+        // from quiescent test code, never used for synchronization.
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
@@ -54,6 +57,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // ordering: Relaxed — monotonic counters (see `alloc`).
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
@@ -81,6 +85,8 @@ impl AllocSnapshot {
 /// Snapshot the global counters (zeros unless [`CountingAlloc`] is
 /// installed in this binary).
 pub fn snapshot() -> AllocSnapshot {
+    // ordering: Relaxed — monotonic counters read for reporting; tests
+    // difference snapshots taken on one thread.
     AllocSnapshot {
         allocations: ALLOCATIONS.load(Ordering::Relaxed),
         bytes: ALLOCATED_BYTES.load(Ordering::Relaxed),

@@ -187,6 +187,47 @@ fn lookup(leaves: &[(String, f64)], key: &str) -> Option<f64> {
     leaves.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
 }
 
+/// The gate itself, kept pure so the boundary semantics are unit-tested:
+/// walks every baseline key not matched by a `--skip` substring and
+/// returns `(keys_compared, failure_messages)`. A baseline key missing
+/// from `fresh` fails; baseline 0 demands exactly 0; otherwise relative
+/// drift strictly above `tolerance` fails (the boundary itself passes).
+fn diff_leaves(
+    base: &[(String, f64)],
+    fresh: &[(String, f64)],
+    tolerance: f64,
+    skips: &[String],
+) -> (usize, Vec<String>) {
+    let skipped = |key: &str| skips.iter().any(|s| key.contains(s.as_str()));
+    let mut failures = Vec::new();
+    let mut compared = 0usize;
+    for (key, b) in base {
+        if skipped(key) {
+            continue;
+        }
+        let Some(n) = lookup(fresh, key) else {
+            failures.push(format!("{key}: present in baseline, missing from fresh run"));
+            continue;
+        };
+        compared += 1;
+        if *b == 0.0 {
+            if n != 0.0 {
+                failures.push(format!("{key}: baseline 0, fresh {n} (zero contract broken)"));
+            }
+        } else {
+            let rel = (n - b).abs() / b.abs();
+            if rel > tolerance {
+                failures.push(format!(
+                    "{key}: baseline {b}, fresh {n} ({:+.1}% > ±{:.0}%)",
+                    (n / b - 1.0) * 100.0,
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+    (compared, failures)
+}
+
 fn run() -> Result<bool> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut files = Vec::new();
@@ -212,34 +253,7 @@ fn run() -> Result<bool> {
 
     let base = numeric_leaves(baseline)?;
     let new = numeric_leaves(fresh)?;
-    let skipped = |key: &str| skips.iter().any(|s| key.contains(s.as_str()));
-
-    let mut failures = Vec::new();
-    let mut compared = 0usize;
-    for (key, b) in &base {
-        if skipped(key) {
-            continue;
-        }
-        let Some(n) = lookup(&new, key) else {
-            failures.push(format!("{key}: present in baseline, missing from fresh run"));
-            continue;
-        };
-        compared += 1;
-        if *b == 0.0 {
-            if n != 0.0 {
-                failures.push(format!("{key}: baseline 0, fresh {n} (zero contract broken)"));
-            }
-        } else {
-            let rel = (n - b).abs() / b.abs();
-            if rel > tolerance {
-                failures.push(format!(
-                    "{key}: baseline {b}, fresh {n} ({:+.1}% > ±{:.0}%)",
-                    (n / b - 1.0) * 100.0,
-                    tolerance * 100.0
-                ));
-            }
-        }
-    }
+    let (compared, failures) = diff_leaves(&base, &new, tolerance, &skips);
 
     println!(
         "bench_diff: {baseline} vs {fresh} — {compared} keys compared \
@@ -266,5 +280,81 @@ fn main() -> ExitCode {
             eprintln!("bench_diff error: {e:#}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaves(json: &str) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        Parser::new(json).value("", &mut out).expect("test JSON parses");
+        out
+    }
+
+    fn diff(base: &str, fresh: &str, skips: &[&str]) -> (usize, Vec<String>) {
+        let skips: Vec<String> = skips.iter().map(|s| s.to_string()).collect();
+        diff_leaves(&leaves(base), &leaves(fresh), 0.15, &skips)
+    }
+
+    #[test]
+    fn missing_baseline_key_fails() {
+        let (compared, failures) = diff(r#"{"a": 1, "b": 2}"#, r#"{"a": 1}"#, &[]);
+        assert_eq!(compared, 1);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("missing from fresh run"), "{failures:?}");
+    }
+
+    #[test]
+    fn extra_fresh_keys_are_ignored() {
+        let (compared, failures) = diff(r#"{"a": 1}"#, r#"{"a": 1, "extra": 99}"#, &[]);
+        assert_eq!(compared, 1);
+        assert!(failures.is_empty(), "{failures:?}");
+    }
+
+    #[test]
+    fn zero_baseline_demands_exact_zero() {
+        let (_, ok) = diff(r#"{"allocs": 0}"#, r#"{"allocs": 0}"#, &[]);
+        assert!(ok.is_empty());
+        // Even a drift far inside the relative tolerance breaks the
+        // zero contract.
+        let (_, bad) = diff(r#"{"allocs": 0}"#, r#"{"allocs": 0.0001}"#, &[]);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].contains("zero contract"), "{bad:?}");
+    }
+
+    #[test]
+    fn tolerance_boundary_is_inclusive() {
+        // Exactly +15% on a base of 100 is 115: rel == tolerance passes.
+        let (_, at) = diff(r#"{"k": 100}"#, r#"{"k": 115}"#, &[]);
+        assert!(at.is_empty(), "{at:?}");
+        let (_, under) = diff(r#"{"k": 100}"#, r#"{"k": 85}"#, &[]);
+        assert!(under.is_empty(), "{under:?}");
+        // Strictly past the boundary fails, in both directions.
+        let (_, over) = diff(r#"{"k": 100}"#, r#"{"k": 115.1}"#, &[]);
+        assert_eq!(over.len(), 1);
+        let (_, below) = diff(r#"{"k": 100}"#, r#"{"k": 84.9}"#, &[]);
+        assert_eq!(below.len(), 1);
+    }
+
+    #[test]
+    fn skip_filters_by_substring_even_when_missing() {
+        // `_ms` keys are machine-dependent: drift and absence both pass.
+        let base = r#"{"upload_ms": 5, "count": 7}"#;
+        let (compared, failures) = diff(base, r#"{"count": 7}"#, &["_ms"]);
+        assert_eq!(compared, 1);
+        assert!(failures.is_empty(), "{failures:?}");
+        let (_, drift) = diff(base, r#"{"upload_ms": 50, "count": 7}"#, &["_ms"]);
+        assert!(drift.is_empty(), "{drift:?}");
+    }
+
+    #[test]
+    fn nested_paths_and_arrays_get_dotted_keys() {
+        let base = r#"{"tiers": [{"points": 10}, {"points": 20}], "cfg": {"lanes": 2}}"#;
+        let l = leaves(base);
+        assert_eq!(lookup(&l, "tiers[0].points"), Some(10.0));
+        assert_eq!(lookup(&l, "tiers[1].points"), Some(20.0));
+        assert_eq!(lookup(&l, "cfg.lanes"), Some(2.0));
     }
 }

@@ -1,0 +1,405 @@
+//! In-repo invariant linter for the lock-free data plane.
+//!
+//! Walks the crate sources (`rust/src` by default) and enforces the
+//! concurrency-hygiene rules that `clippy` cannot express:
+//!
+//! - **R1 (safety-comments)** — every `unsafe` block or `unsafe impl`
+//!   carries a `// SAFETY:` comment on the same line or in the eight
+//!   lines above it. (`unsafe fn` *declarations* are exempt: the
+//!   obligation sits at the call/impl site, matching
+//!   `clippy::undocumented_unsafe_blocks`.)
+//! - **R2 (ordering-comments)** — every non-`SeqCst` memory ordering
+//!   (`Relaxed` / `Acquire` / `Release` / `AcqRel`) carries an
+//!   `// ordering:` justification on the same line or in the eight
+//!   lines above it. `SeqCst` is the self-explanatory default and needs
+//!   no comment.
+//! - **R3 (panic-free runtime)** — no `unwrap()` / `expect()` /
+//!   `panic!` / `unreachable!` / `todo!` / `unimplemented!` on the
+//!   coordinator / pool runtime paths. Lock acquisition
+//!   (`.lock().unwrap()` — poisoning only follows a panic that already
+//!   tore the pool down) and condvar waits are exempt, as is the
+//!   explicit allowlist below; tests are always exempt.
+//! - **R4 (documented surface)** — every `pub` fn / struct / enum /
+//!   trait / type / const / static in `coordinator` / `pool` has a
+//!   `///` doc comment (`pub mod` is covered by the module's own `//!`
+//!   docs).
+//!
+//! R1/R2 apply to the whole tree; R3/R4 only to `src/coordinator` and
+//! `src/pool` (the supervised data plane, where a stray panic kills a
+//! lane). The trailing `#[cfg(test)] mod tests` of each file is
+//! skipped — every file in this crate keeps its tests last.
+//!
+//! Usage: `cargo run --bin fpps_lint` (add a path argument to lint
+//! another tree). Exits nonzero when any violation is found.
+//! `--self-test` seeds one violation per rule through the same checker
+//! and fails if any goes undetected — CI runs it before trusting the
+//! clean pass.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Deliberate panic sites on the supervised runtime paths: invariants
+/// that are locally provable (and cheaper to prove than to thread
+/// `Result` through the dispatcher). Keyed by path suffix + a needle
+/// that must appear on the flagged line.
+const PANIC_ALLOWLIST: &[(&str, &str)] = &[
+    ("coordinator/supervise.rs", "created above"),
+    ("coordinator/supervise.rs", "respawned above"),
+    ("coordinator/supervise.rs", "every unclaimed job resolves"),
+    ("coordinator/completion.rs", "completion outcome already consumed"),
+    ("coordinator/pipeline.rs", "at least one bootstrap attempt"),
+    ("coordinator/pipeline.rs", "poses.last().unwrap()"),
+    ("coordinator/scenarios.rs", "each scan emitted once"),
+];
+
+/// Non-SeqCst orderings that need an `// ordering:` justification.
+const WEAK_ORDERINGS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+];
+
+/// Panic constructs banned from the coordinator/pool runtime paths.
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Pub-item keywords R4 requires docs for (`pub mod` / `pub use` /
+/// `pub(crate)` / pub struct fields are out of scope).
+const PUB_ITEMS: &[&str] = &[
+    "pub fn ",
+    "pub struct ",
+    "pub enum ",
+    "pub trait ",
+    "pub type ",
+    "pub const ",
+    "pub static ",
+];
+
+/// How many lines above a flagged site a justifying comment may sit.
+const COMMENT_WINDOW: usize = 8;
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: &'static str,
+}
+
+/// One source line split into its code part (string literals blanked,
+/// comments removed) and its line-comment text.
+struct Line<'a> {
+    raw: &'a str,
+    code: String,
+    comment: String,
+}
+
+/// Split a line into code and comment, blanking string literals so
+/// pattern text inside them cannot trigger (or suppress) a rule.
+/// Handles escapes and char literals; block comments are rare in this
+/// tree and treated as code.
+fn split_line(raw: &str) -> (String, String) {
+    let b = raw.as_bytes();
+    let mut code = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'"' {
+            // Blank the string literal.
+            code.push('"');
+            i += 1;
+            while i < b.len() {
+                match b[i] {
+                    b'\\' => i += 2,
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            code.push('"');
+            continue;
+        }
+        if c == b'\'' {
+            // Char literal ('x', '\n', '\'') vs lifetime ('a).
+            if i + 2 < b.len() && b[i + 1] == b'\\' {
+                if let Some(off) = b[i + 2..].iter().position(|&x| x == b'\'') {
+                    code.push_str("' '");
+                    i += off + 3;
+                    continue;
+                }
+            } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                code.push_str("' '");
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as-is.
+            code.push('\'');
+            i += 1;
+            continue;
+        }
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            return (code, raw[i..].to_string());
+        }
+        code.push(c as char);
+        i += 1;
+    }
+    (code, String::new())
+}
+
+/// Does any comment on this line or the `COMMENT_WINDOW` lines above it
+/// contain `needle`?
+fn comment_nearby(lines: &[Line<'_>], i: usize, needle: &str) -> bool {
+    let lo = i.saturating_sub(COMMENT_WINDOW);
+    lines[lo..=i].iter().any(|l| l.comment.contains(needle))
+}
+
+/// Does `code` contain an `unsafe` token needing a SAFETY comment — a
+/// block or an `unsafe impl`, not an `unsafe fn` declaration?
+fn has_unsafe_site(code: &str) -> bool {
+    let mut rest = code;
+    while let Some(pos) = rest.find("unsafe") {
+        let prev_ok = match rest[..pos].bytes().last() {
+            Some(c) => !c.is_ascii_alphanumeric() && c != b'_',
+            None => true,
+        };
+        let next_ok = match rest.as_bytes().get(pos + 6) {
+            Some(&c) => !c.is_ascii_alphanumeric() && c != b'_',
+            None => true,
+        };
+        let after = rest[pos + 6..].trim_start();
+        let is_decl = after.starts_with("fn ") || after.starts_with("fn(");
+        if prev_ok && next_ok && !is_decl {
+            return true;
+        }
+        rest = &rest[pos + 6..];
+    }
+    false
+}
+
+/// Lint one file's source. `strict` enables R3/R4 (the coordinator /
+/// pool scope); R1/R2 always run.
+fn lint_source(relpath: &str, src: &str, strict: bool) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut lines: Vec<Line<'_>> = Vec::new();
+    for raw in src.lines() {
+        if raw.trim() == "#[cfg(test)]" {
+            break; // trailing test mod: out of scope for every rule
+        }
+        let (code, comment) = split_line(raw);
+        lines.push(Line { raw, code, comment });
+    }
+    let mut push = |line: usize, rule: &'static str, msg: &'static str| {
+        findings.push(Finding {
+            file: relpath.to_string(),
+            line: line + 1,
+            rule,
+            msg,
+        });
+    };
+    for i in 0..lines.len() {
+        let code = lines[i].code.as_str();
+        // R1: SAFETY comments on unsafe blocks/impls.
+        if has_unsafe_site(code) && !comment_nearby(&lines, i, "SAFETY:") {
+            push(i, "R1", "unsafe block/impl without a nearby `// SAFETY:` comment");
+        }
+        // R2: ordering justifications on non-SeqCst atomics.
+        if WEAK_ORDERINGS.iter().any(|p| code.contains(p))
+            && !comment_nearby(&lines, i, "ordering:")
+        {
+            push(i, "R2", "non-SeqCst ordering without a nearby `// ordering:` comment");
+        }
+        if !strict {
+            continue;
+        }
+        // R3: panic-free runtime paths.
+        if PANIC_PATTERNS.iter().any(|p| code.contains(p)) {
+            let lock_chain = code.contains(".lock()")
+                || (code.trim() == ".unwrap()"
+                    && i > 0
+                    && lines[i - 1].code.trim_end().ends_with(".lock()"));
+            let condvar = code.contains(".wait(") || code.contains(".wait_timeout(");
+            let allowed = PANIC_ALLOWLIST
+                .iter()
+                .any(|(file, needle)| relpath.ends_with(file) && lines[i].raw.contains(needle));
+            if !lock_chain && !condvar && !allowed {
+                push(i, "R3", "panic construct on a coordinator/pool runtime path");
+            }
+        }
+        // R4: documented pub surface.
+        if PUB_ITEMS.iter().any(|k| code.trim_start().starts_with(k)) {
+            let mut j = i;
+            let mut documented = false;
+            while j > 0 {
+                j -= 1;
+                let t = lines[j].raw.trim_start();
+                if t.starts_with("#[") || t.starts_with("#![") {
+                    continue; // attributes may sit between doc and item
+                }
+                documented = t.starts_with("///");
+                break;
+            }
+            if !documented {
+                push(i, "R4", "undocumented pub item in coordinator/pool");
+            }
+        }
+    }
+    findings
+}
+
+/// R3/R4 apply only to the supervised data plane.
+fn strict_scope(relpath: &str) -> bool {
+    relpath.contains("coordinator/") || relpath.contains("pool/")
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut findings = Vec::new();
+    for p in &files {
+        let rel = p.to_string_lossy().replace('\\', "/");
+        let src = fs::read_to_string(p)?;
+        findings.extend(lint_source(&rel, &src, strict_scope(&rel)));
+    }
+    Ok(findings)
+}
+
+/// Seed one violation per rule (plus a clean twin) through the checker;
+/// any undetected seed is a linter bug and fails the run.
+fn self_test() -> bool {
+    let seed_r1 = "fn f(p: *mut u8) {\n    let _ = unsafe { *p };\n}\n";
+    let seed_r1_clean =
+        "fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid.\n    let _ = unsafe { *p };\n}\n";
+    let seed_r2 = "fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n";
+    let seed_r2_clean =
+        "fn f(a: &AtomicUsize) -> usize {\n    // ordering: Relaxed — statistics counter.\n    a.load(Ordering::Relaxed)\n}\n";
+    let seed_r3 = "/// Doc.\npub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let seed_r3_clean = "/// Doc.\npub fn f(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let seed_r4 = "pub fn f() {}\n";
+    let seed_r4_clean = "/// Documented.\npub fn f() {}\n";
+    let cases: &[(&str, &str, bool, &str, usize)] = &[
+        ("seed_r1.rs", seed_r1, false, "R1", 1),
+        ("seed_r1_clean.rs", seed_r1_clean, false, "R1", 0),
+        ("seed_r2.rs", seed_r2, false, "R2", 1),
+        ("seed_r2_clean.rs", seed_r2_clean, false, "R2", 0),
+        ("coordinator/seed_r3.rs", seed_r3, true, "R3", 1),
+        ("coordinator/seed_r3_clean.rs", seed_r3_clean, true, "R3", 0),
+        ("coordinator/seed_r4.rs", seed_r4, true, "R4", 1),
+        ("coordinator/seed_r4_clean.rs", seed_r4_clean, true, "R4", 0),
+    ];
+    let mut ok = true;
+    for (name, src, strict, rule, expect) in cases {
+        let got = lint_source(name, src, *strict)
+            .iter()
+            .filter(|f| f.rule == *rule)
+            .count();
+        if got != *expect {
+            eprintln!("self-test FAILED: {name}: expected {expect} {rule} finding(s), got {got}");
+            ok = false;
+        }
+    }
+    if ok {
+        println!("fpps_lint self-test: all seeded violations detected");
+    }
+    ok
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a.as_str() == "--self-test") {
+        if self_test() {
+            return ExitCode::SUCCESS;
+        }
+        return ExitCode::FAILURE;
+    }
+    // Workspace root and crate dir both work without arguments.
+    let root = match args.first() {
+        Some(p) => PathBuf::from(p),
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust/src"),
+        None => PathBuf::from("src"),
+    };
+    let findings = match lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("fpps_lint: cannot lint {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("fpps_lint: clean ({})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("fpps_lint: {} violation(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let (code, comment) = split_line("let x = \"unsafe .unwrap()\"; // trailing");
+        assert_eq!(code, "let x = \"\"; ");
+        assert_eq!(comment, "// trailing");
+        let (code, _) = split_line("if b == b'\"' { toggle() }");
+        assert!(!code.contains('"'), "char-literal quote must not leak: {code}");
+    }
+
+    #[test]
+    fn unsafe_fn_declarations_are_exempt() {
+        assert!(!has_unsafe_site("unsafe fn alloc(&self) -> *mut u8 {"));
+        assert!(has_unsafe_site("unsafe impl Send for X {}"));
+        assert!(has_unsafe_site("let v = cell.with(|p| unsafe { *p });"));
+        assert!(!has_unsafe_site("let has_unsafe_site = 1;"));
+    }
+
+    #[test]
+    fn trailing_test_mod_is_skipped() {
+        let src =
+            "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(lint_source("coordinator/x.rs", src, true).is_empty());
+    }
+
+    #[test]
+    fn allowlist_is_path_and_needle_scoped() {
+        let src =
+            "/// Doc.\npub fn f(x: Option<u32>) -> u32 {\n    x.expect(\"created above\")\n}\n";
+        assert!(lint_source("coordinator/supervise.rs", src, true).is_empty());
+        // Same needle in a different file still fails.
+        assert_eq!(lint_source("coordinator/other.rs", src, true).len(), 1);
+    }
+
+    #[test]
+    fn seeded_self_test_passes() {
+        assert!(self_test());
+    }
+}

@@ -1,0 +1,136 @@
+//! Exactly-once claim arbitration between a worker and its watchdog.
+//!
+//! A lane publishes its in-flight job into a [`ClaimSlot`]; the deadline
+//! watchdog may *claim* the job when its deadline passes. Whoever flips
+//! the claimed flag first — always under the slot's mutex — owns the
+//! job's outcome and feedback, so every job resolves exactly once no
+//! matter how the lane and the watchdog race.
+//!
+//! The slot is generic and synchronizes through [`crate::sync`], so the
+//! publish/claim/finish protocol is model-checked under `--cfg loom`
+//! (see `tests/loom_models.rs`) with the same code that runs in
+//! production inside `coordinator::supervise`.
+
+use crate::sync::Mutex;
+
+/// A published job plus the exactly-once arbitration flag.
+struct Claimed<T> {
+    job: T,
+    claimed: bool,
+}
+
+/// Mutex-guarded slot holding at most one published job and the
+/// claimed flag arbitrating its ownership (see the module docs).
+pub struct ClaimSlot<T> {
+    slot: Mutex<Option<Claimed<T>>>,
+}
+
+impl<T: Clone> Default for ClaimSlot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Clone> ClaimSlot<T> {
+    /// An empty slot.
+    pub fn new() -> Self {
+        Self {
+            slot: Mutex::new(None),
+        }
+    }
+
+    /// Publish `job` as the in-flight work item. Returns `false` —
+    /// without installing — when the previously published job is still
+    /// claimed (the watchdog owns it; the caller must back off and
+    /// recover). On success, `on_install` runs under the slot lock
+    /// *before* the job becomes visible, so per-attempt state (e.g.
+    /// resetting a cancellation token) cannot race a claim of the
+    /// freshly published job.
+    pub fn publish_with(&self, job: T, on_install: impl FnOnce()) -> bool {
+        let mut g = self.slot.lock().unwrap();
+        if g.as_ref().is_some_and(|a| a.claimed) {
+            return false;
+        }
+        on_install();
+        *g = Some(Claimed {
+            job,
+            claimed: false,
+        });
+        true
+    }
+
+    /// Watchdog side: claim the published job if `expired` says so.
+    /// Returns a clone of the job exactly once — a second call (or a
+    /// racing one) sees the claimed flag and returns `None`.
+    pub fn try_claim(&self, expired: impl FnOnce(&T) -> bool) -> Option<T> {
+        let mut g = self.slot.lock().unwrap();
+        let a = g.as_mut()?;
+        if a.claimed || !expired(&a.job) {
+            return None;
+        }
+        a.claimed = true;
+        Some(a.job.clone())
+    }
+
+    /// Worker side, after the attempt finished: resolve the claim race.
+    /// Returns `true` when the watchdog claimed the job meanwhile — the
+    /// slot is left occupied for the recovery path ([`ClaimSlot::clear`])
+    /// and the caller must *not* emit an outcome. Returns `false` (and
+    /// empties the slot) when the worker owns the resolution.
+    pub fn finish(&self) -> bool {
+        let mut g = self.slot.lock().unwrap();
+        let claimed = g.as_ref().is_some_and(|a| a.claimed);
+        if !claimed {
+            *g = None;
+        }
+        claimed
+    }
+
+    /// Recovery: drop whatever is published (claimed or not).
+    pub fn clear(&self) {
+        let mut g = self.slot.lock().unwrap();
+        *g = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_owns_unclaimed_jobs() {
+        let s = ClaimSlot::new();
+        assert!(s.publish_with(7u32, || {}));
+        assert_eq!(s.try_claim(|_| false), None, "not expired -> no claim");
+        assert!(!s.finish(), "unclaimed job resolves on the worker side");
+        assert_eq!(s.try_claim(|_| true), None, "slot already empty");
+    }
+
+    #[test]
+    fn watchdog_claims_exactly_once() {
+        let s = ClaimSlot::new();
+        assert!(s.publish_with(7u32, || {}));
+        assert_eq!(s.try_claim(|j| *j == 7), Some(7));
+        assert_eq!(s.try_claim(|_| true), None, "second claim refused");
+        assert!(s.finish(), "worker must defer to the watchdog");
+        s.clear();
+        assert!(s.publish_with(8u32, || {}), "cleared slot accepts again");
+        assert!(!s.finish());
+    }
+
+    #[test]
+    fn publish_refused_while_claimed() {
+        let s = ClaimSlot::new();
+        let mut installs = 0;
+        assert!(s.publish_with(1u32, || installs += 1));
+        assert_eq!(s.try_claim(|_| true), Some(1));
+        assert!(
+            !s.publish_with(2u32, || installs += 1),
+            "claimed job blocks the next publish"
+        );
+        assert_eq!(installs, 1, "refused publish must not run on_install");
+        s.clear();
+        assert!(s.publish_with(2u32, || installs += 1));
+        assert_eq!(installs, 2);
+    }
+}

@@ -1,0 +1,187 @@
+//! Waker-style completion cell backing [`super::serving::CompletionHandle`].
+//!
+//! A [`CompletionCell`] is a one-shot rendezvous: the producer side
+//! calls [`CompletionCell::complete`] exactly once; consumers poll
+//! ([`CompletionCell::try_take`]), block ([`CompletionCell::wait`] /
+//! [`CompletionCell::wait_timeout`]), or register a callback
+//! ([`CompletionCell::set_waker`]) that fires exactly once — on the
+//! completing thread, outside the lock, or immediately on the
+//! registering thread when the cell already resolved.
+//!
+//! The cell synchronizes through [`crate::sync`], so the
+//! no-missed-wakeup and exactly-once-waker properties are model-checked
+//! under `--cfg loom` (see `tests/loom_models.rs`) with the same code
+//! the serving tier runs in production.
+
+use crate::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome + waker storage, guarded by one mutex.
+struct Slot<T> {
+    outcome: Option<T>,
+    done: bool,
+    waker: Option<Box<dyn FnOnce() + Send>>,
+}
+
+/// One-shot completion rendezvous (see the module docs).
+pub struct CompletionCell<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for CompletionCell<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CompletionCell<T> {
+    /// An unresolved cell.
+    pub fn new() -> Self {
+        Self {
+            slot: Mutex::new(Slot {
+                outcome: None,
+                done: false,
+                waker: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Resolve the cell: store the outcome, wake blocking waiters, and
+    /// fire the registered waker (outside the lock — wakers may
+    /// re-enter the pool).
+    pub fn complete(&self, outcome: T) {
+        let waker = {
+            let mut slot = self.slot.lock().unwrap();
+            slot.outcome = Some(outcome);
+            slot.done = true;
+            self.cv.notify_all();
+            slot.waker.take()
+        };
+        if let Some(w) = waker {
+            w();
+        }
+    }
+
+    /// Has the cell resolved (even if its outcome was already taken)?
+    pub fn is_complete(&self) -> bool {
+        self.slot.lock().unwrap().done
+    }
+
+    /// Non-blocking: the outcome if the cell resolved and nobody took
+    /// it yet.
+    pub fn try_take(&self) -> Option<T> {
+        self.slot.lock().unwrap().outcome.take()
+    }
+
+    /// Block until the cell resolves.
+    ///
+    /// # Panics
+    /// If the outcome was already consumed by [`Self::try_take`] /
+    /// [`Self::wait_timeout`].
+    pub fn wait(&self) -> T {
+        let mut slot = self.slot.lock().unwrap();
+        while !slot.done {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        slot.outcome
+            .take()
+            .expect("completion outcome already consumed")
+    }
+
+    /// Block until the cell resolves or `timeout` elapses; `None` on
+    /// timeout (or when the outcome was already taken).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.slot.lock().unwrap();
+        while !slot.done {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+            if res.timed_out() && !slot.done {
+                return None;
+            }
+        }
+        slot.outcome.take()
+    }
+
+    /// Register a callback fired exactly once when the cell resolves —
+    /// immediately (on the caller's thread) if it already has, else on
+    /// the completing thread. The last registration wins; an earlier
+    /// unfired waker is dropped. Wakers must not block: in the serving
+    /// tier they run on the thread that fulfills every handle.
+    pub fn set_waker(&self, waker: impl FnOnce() + Send + 'static) {
+        let mut boxed: Option<Box<dyn FnOnce() + Send>> = Some(Box::new(waker));
+        let fire = {
+            let mut slot = self.slot.lock().unwrap();
+            if slot.done {
+                boxed.take()
+            } else {
+                slot.waker = boxed.take();
+                None
+            }
+        };
+        if let Some(w) = fire {
+            w();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn outcome_is_taken_exactly_once() {
+        let c = CompletionCell::new();
+        assert!(!c.is_complete());
+        assert_eq!(c.try_take(), None);
+        c.complete(41u32);
+        assert!(c.is_complete());
+        assert_eq!(c.try_take(), Some(41));
+        assert_eq!(c.try_take(), None, "second take gets nothing");
+        assert!(c.is_complete(), "done survives the take");
+    }
+
+    #[test]
+    fn waker_fires_once_on_complete() {
+        let c = CompletionCell::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        // ordering: Relaxed — single-threaded test counter.
+        c.set_waker(move || {
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(fired.load(Ordering::Relaxed), 0, "not before completion");
+        c.complete(1u32);
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn waker_fires_immediately_after_completion() {
+        let c = CompletionCell::new();
+        c.complete(1u32);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        // ordering: Relaxed — single-threaded test counter.
+        c.set_waker(move || {
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(fired.load(Ordering::Relaxed), 1, "fires on registration");
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_delivers() {
+        let c = CompletionCell::new();
+        assert_eq!(c.wait_timeout(Duration::from_millis(5)), None);
+        c.complete(9u32);
+        assert_eq!(c.wait_timeout(Duration::from_millis(5)), Some(9));
+        assert_eq!(c.wait_timeout(Duration::from_millis(1)), None, "consumed");
+    }
+}

@@ -117,6 +117,9 @@ pub struct RegistrationJob {
 }
 
 impl RegistrationJob {
+    /// A standard-class job with no deadline and the pool-default retry
+    /// budget; the target key is fingerprinted from `target`. Tune with
+    /// the builder-style setters below.
     pub fn new(
         id: u64,
         stream: usize,

@@ -32,6 +32,12 @@
 //!   queueing.
 //! - [`scenarios`] — batch scenario builders/drivers on top of the
 //!   pool: frame-pair batches, scan-to-map localization, tiled submaps.
+//! - [`claim`] — [`claim::ClaimSlot`], the exactly-once worker/watchdog
+//!   claim arbitration extracted from the heartbeat protocol and
+//!   model-checked under `--cfg loom`.
+//! - [`completion`] — [`completion::CompletionCell`], the generic
+//!   waker-style completion rendezvous behind [`CompletionHandle`],
+//!   also model-checked under `--cfg loom`.
 //!
 //! Every lane owns one kernel backend (one accelerator context); jobs
 //! are routed by target-key affinity so cross-frame map reuse skips the
@@ -40,6 +46,8 @@
 //! to the sequential path for every Ok result, whichever entry point —
 //! batch, localization, or serving — produced them.
 
+pub mod claim;
+pub mod completion;
 pub mod jobs;
 pub mod pipeline;
 pub mod router;

@@ -87,6 +87,8 @@ pub struct AffinityRouter {
 }
 
 impl AffinityRouter {
+    /// A router over `lanes` lanes, each with `slots` residency slots
+    /// (`slots` is clamped to ≥ 1).
     pub fn new(lanes: usize, slots: usize) -> Self {
         Self {
             warm: vec![Vec::new(); lanes],
@@ -99,6 +101,7 @@ impl AffinityRouter {
         }
     }
 
+    /// Number of lanes this router places jobs across.
     pub fn lanes(&self) -> usize {
         self.pending.len()
     }

@@ -178,10 +178,12 @@ pub struct LocalizationResult {
 }
 
 impl LocalizationResult {
+    /// Mean translation error across scans with a finite error (m).
     pub fn mean_translation_error(&self) -> f64 {
         mean_finite(&self.translation_errors)
     }
 
+    /// Worst finite per-scan translation error (m).
     pub fn max_translation_error(&self) -> f64 {
         max_finite(&self.translation_errors)
     }
@@ -370,10 +372,12 @@ pub struct TiledLocalizationResult {
 }
 
 impl TiledLocalizationResult {
+    /// Mean translation error across scans with a finite error (m).
     pub fn mean_translation_error(&self) -> f64 {
         mean_finite(&self.translation_errors)
     }
 
+    /// Worst finite per-scan translation error (m).
     pub fn max_translation_error(&self) -> f64 {
         max_finite(&self.translation_errors)
     }

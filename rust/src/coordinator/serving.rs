@@ -20,6 +20,7 @@
 //! budget, the pool resolves the handle immediately instead of letting
 //! the job expire in a queue.
 
+use super::completion::CompletionCell;
 use super::jobs::{LaneIcpConfig, LaneReport, RegistrationJob, RegistrationOutcome, SloClass};
 use super::supervise::{run_supervised_lane_pool_tapped, SupervisorConfig};
 use crate::fpps_api::KernelBackend;
@@ -30,7 +31,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Admission policy of the serving tier (how much work may be in
@@ -76,47 +77,10 @@ pub enum Submission {
     Parked(RegistrationJob),
 }
 
-/// A job's completion slot: outcome + optional waker, guarded by one
-/// mutex, with a condvar for the blocking waiters.
-struct CompletionSlot {
-    outcome: Option<RegistrationOutcome>,
-    done: bool,
-    waker: Option<Box<dyn FnOnce() + Send>>,
-}
-
-struct Completion {
-    slot: Mutex<CompletionSlot>,
-    cv: Condvar,
-}
-
-impl Completion {
-    fn new() -> Self {
-        Completion {
-            slot: Mutex::new(CompletionSlot {
-                outcome: None,
-                done: false,
-                waker: None,
-            }),
-            cv: Condvar::new(),
-        }
-    }
-}
-
-/// Resolve a completion: store the outcome, wake blocking waiters, and
-/// fire the registered waker (outside the lock — wakers may re-enter
-/// the pool).
-fn complete(c: &Completion, outcome: RegistrationOutcome) {
-    let waker = {
-        let mut slot = c.slot.lock().unwrap();
-        slot.outcome = Some(outcome);
-        slot.done = true;
-        c.cv.notify_all();
-        slot.waker.take()
-    };
-    if let Some(w) = waker {
-        w();
-    }
-}
+/// The serving tier's one-shot completion cell — the generic waker
+/// state machine lives in [`super::completion`] (model-checked under
+/// `--cfg loom`); serving pins it to [`RegistrationOutcome`].
+type Completion = CompletionCell<RegistrationOutcome>;
 
 /// Handle to one submitted job's eventual [`RegistrationOutcome`].
 ///
@@ -145,13 +109,13 @@ impl CompletionHandle {
 
     /// Has the job resolved (even if its outcome was already taken)?
     pub fn is_complete(&self) -> bool {
-        self.inner.slot.lock().unwrap().done
+        self.inner.is_complete()
     }
 
     /// Non-blocking: the outcome if the job has resolved and nobody
     /// took it yet.
     pub fn try_take(&self) -> Option<RegistrationOutcome> {
-        self.inner.slot.lock().unwrap().outcome.take()
+        self.inner.try_take()
     }
 
     /// Block until the job resolves.
@@ -160,32 +124,13 @@ impl CompletionHandle {
     /// If the outcome was already consumed by [`Self::try_take`] /
     /// [`Self::wait_timeout`].
     pub fn wait(self) -> RegistrationOutcome {
-        let mut slot = self.inner.slot.lock().unwrap();
-        while !slot.done {
-            slot = self.inner.cv.wait(slot).unwrap();
-        }
-        slot.outcome
-            .take()
-            .expect("completion outcome already consumed")
+        self.inner.wait()
     }
 
     /// Block until the job resolves or `timeout` elapses; `None` on
     /// timeout (or when the outcome was already taken).
     pub fn wait_timeout(&self, timeout: Duration) -> Option<RegistrationOutcome> {
-        let deadline = Instant::now() + timeout;
-        let mut slot = self.inner.slot.lock().unwrap();
-        while !slot.done {
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, res) = self.inner.cv.wait_timeout(slot, deadline - now).unwrap();
-            slot = guard;
-            if res.timed_out() && !slot.done {
-                return None;
-            }
-        }
-        slot.outcome.take()
+        self.inner.wait_timeout(timeout)
     }
 
     /// Register a callback fired exactly once when the job resolves —
@@ -194,19 +139,7 @@ impl CompletionHandle {
     /// earlier unfired waker is dropped. Wakers must not block: they
     /// run on the thread that fulfills every handle in the pool.
     pub fn set_waker(&self, waker: impl FnOnce() + Send + 'static) {
-        let mut boxed: Option<Box<dyn FnOnce() + Send>> = Some(Box::new(waker));
-        let fire = {
-            let mut slot = self.inner.slot.lock().unwrap();
-            if slot.done {
-                boxed.take()
-            } else {
-                slot.waker = boxed.take();
-                None
-            }
-        };
-        if let Some(w) = fire {
-            w();
-        }
+        self.inner.set_waker(waker)
     }
 }
 
@@ -276,6 +209,9 @@ impl Shared {
         let Some(p) = entry else {
             return; // not a serving submission (defensive; cannot happen)
         };
+        // ordering: AcqRel — gate decrements pair with the AcqRel
+        // increments in `try_submit`, so a submitter that observes a
+        // freed slot also observes the completed job's registry removal.
         p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
         self.in_flight.fetch_sub(1, Ordering::AcqRel);
         let latency_ms = p.submitted.elapsed().as_secs_f64() * 1e3;
@@ -298,7 +234,7 @@ impl Shared {
                 0.8 * *ema + 0.2 * outcome.service_ms
             };
         }
-        complete(&p.completion, outcome.clone());
+        p.completion.complete(outcome.clone());
     }
 
     fn account_shed(&self, class: SloClass) {
@@ -358,18 +294,25 @@ impl ClientStream {
     /// Job ids must be unique among in-flight submissions — they key
     /// the completion registry; a duplicate is an error.
     pub fn try_submit(&self, mut job: RegistrationJob) -> Result<Submission> {
+        // ordering: Acquire — pairs with the Release close in `shutdown`
+        // so a submitter that sees `closed` also sees the drained state.
         if self.shared.closed.load(Ordering::Acquire) {
             bail!("serving pool is shut down");
         }
         let class = job.slo;
+        // ordering: Acquire — pairs with the AcqRel decrements in
+        // `fulfill`; admission must observe completed jobs' releases.
         if self.gate.in_flight.load(Ordering::Acquire) >= self.stream_depth {
             return Ok(self.refuse(job, "stream at its in-flight depth"));
         }
+        // ordering: Acquire — pool-wide bound, same pairing as above.
         if self.shared.in_flight.load(Ordering::Acquire) >= self.max_in_flight {
             return Ok(self.refuse(job, "pool at its in-flight bound"));
         }
         if class == SloClass::LatencyCritical {
             if let Some(budget) = job.deadline.or(self.sup_deadline) {
+                // ordering: Acquire — consistent view for the queue-wait
+                // estimate (an advisory heuristic, not a hard bound).
                 let in_flight = self.shared.in_flight.load(Ordering::Acquire);
                 let ema = *self.shared.ema_service_ms.lock().unwrap();
                 let est_wait_ms = in_flight as f64 / self.lanes as f64 * ema;
@@ -397,6 +340,8 @@ impl ClientStream {
                 }
             }
         }
+        // ordering: AcqRel — pairs with the admission loads and the
+        // `fulfill` decrements (see the comments above).
         self.gate.in_flight.fetch_add(1, Ordering::AcqRel);
         self.shared.in_flight.fetch_add(1, Ordering::AcqRel);
         self.shared.classes.lock().unwrap()[class_index(class)].submitted += 1;
@@ -406,6 +351,7 @@ impl ClientStream {
             // Pool shut down between the closed check and the send:
             // undo the registration and report the truth.
             if let Some(p) = self.shared.pending.lock().unwrap().remove(&id) {
+                // ordering: AcqRel — undo of the increments above.
                 p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
                 self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
             }
@@ -420,6 +366,7 @@ impl ClientStream {
 
     /// Jobs currently in flight through this stream.
     pub fn in_flight(&self) -> usize {
+        // ordering: Acquire — pairs with the `fulfill` decrements.
         self.gate.in_flight.load(Ordering::Acquire)
     }
 
@@ -436,10 +383,7 @@ impl ClientStream {
     fn shed(&self, job: RegistrationJob, reason: &str) -> Submission {
         self.shared.account_shed(job.slo);
         let completion = Arc::new(Completion::new());
-        complete(
-            &completion,
-            shed_outcome(job.id, job.stream, job.initial, reason),
-        );
+        completion.complete(shed_outcome(job.id, job.stream, job.initial, reason));
         Submission::Shed(CompletionHandle {
             id: job.id,
             class: job.slo,
@@ -648,15 +592,12 @@ impl ServingPool {
                 // path has nowhere to park, so shed with structure.
                 self.shared.account_shed(job.slo);
                 let completion = Arc::new(Completion::new());
-                complete(
-                    &completion,
-                    shed_outcome(
-                        job.id,
-                        job.stream,
-                        job.initial,
-                        "pool at its in-flight bound",
-                    ),
-                );
+                completion.complete(shed_outcome(
+                    job.id,
+                    job.stream,
+                    job.initial,
+                    "pool at its in-flight bound",
+                ));
                 Ok(CompletionHandle {
                     id: job.id,
                     class: job.slo,
@@ -668,6 +609,7 @@ impl ServingPool {
 
     /// Jobs currently in flight pool-wide.
     pub fn in_flight(&self) -> usize {
+        // ordering: Acquire — pairs with the `fulfill` decrements.
         self.shared.in_flight.load(Ordering::Acquire)
     }
 
@@ -676,6 +618,8 @@ impl ServingPool {
     /// still in the intake stage) are resolved with a shed outcome —
     /// no handle is ever left dangling.
     pub fn shutdown(self) -> Result<ServingReport> {
+        // ordering: Release — pairs with the Acquire load in
+        // `try_submit`; submitters that see `closed` bail out cleanly.
         self.shared.closed.store(true, Ordering::Release);
         self.intake.send(IntakeMsg::Shutdown).ok();
         let lane_report = match self.handle.join() {
@@ -689,6 +633,8 @@ impl ServingPool {
             pending.drain().collect()
         };
         for (id, p) in leftovers {
+            // ordering: AcqRel — mirrors `fulfill`; nothing concurrent
+            // remains at this point, the pairing is for uniformity.
             p.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
             self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
             {
@@ -696,10 +642,8 @@ impl ServingPool {
                 let acc = &mut classes[class_index(p.class)];
                 acc.shed += 1;
             }
-            complete(
-                &p.completion,
-                shed_outcome(id, p.stream, p.initial, "pool shut down before dispatch"),
-            );
+            p.completion
+                .complete(shed_outcome(id, p.stream, p.initial, "pool shut down before dispatch"));
         }
         let classes = {
             let accs = self.shared.classes.lock().unwrap();
@@ -761,7 +705,7 @@ mod tests {
         let (completion, h) = handle(7);
         assert!(!h.is_complete());
         assert!(h.try_take().is_none());
-        complete(&completion, outcome(7));
+        completion.complete(outcome(7));
         assert!(h.is_complete());
         let o = h.try_take().expect("resolved");
         assert_eq!(o.id, 7);
@@ -775,7 +719,7 @@ mod tests {
         let (completion, h) = handle(3);
         let t = std::thread::spawn(move || h.wait().id);
         std::thread::sleep(Duration::from_millis(10));
-        complete(&completion, outcome(3));
+        completion.complete(outcome(3));
         assert_eq!(t.join().unwrap(), 3);
     }
 
@@ -783,7 +727,7 @@ mod tests {
     fn handle_wait_timeout_expires() {
         let (completion, h) = handle(4);
         assert!(h.wait_timeout(Duration::from_millis(5)).is_none());
-        complete(&completion, outcome(4));
+        completion.complete(outcome(4));
         let o = h.wait_timeout(Duration::from_millis(5)).expect("resolved");
         assert_eq!(o.id, 4);
     }
@@ -795,14 +739,14 @@ mod tests {
         let flag = Arc::clone(&fired);
         h.set_waker(move || flag.store(true, Ordering::SeqCst));
         assert!(!fired.load(Ordering::SeqCst));
-        complete(&completion, outcome(5));
+        completion.complete(outcome(5));
         assert!(fired.load(Ordering::SeqCst));
     }
 
     #[test]
     fn waker_fires_immediately_when_already_complete() {
         let (completion, h) = handle(6);
-        complete(&completion, outcome(6));
+        completion.complete(outcome(6));
         let fired = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&fired);
         h.set_waker(move || flag.store(true, Ordering::SeqCst));

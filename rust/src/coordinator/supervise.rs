@@ -5,6 +5,7 @@
 //! [`run_registration_batch`], [`run_registration_batch_supervised`])
 //! preserved as thin wrappers around the supervised core.
 
+use super::claim::ClaimSlot;
 use super::jobs::{LaneIcpConfig, LaneReport, LaneStats, RegistrationJob, RegistrationOutcome};
 use super::router::{AffinityRouter, JobFeedback};
 use crate::fpps_api::{CancelToken, FppsIcp, KernelBackend};
@@ -16,7 +17,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Pool-wide fault-tolerance policy of [`run_supervised_lane_pool`].
@@ -81,9 +82,10 @@ impl SupervisorConfig {
 type LaneQueue = crate::pool::ring::SpscRing<RegistrationJob>;
 
 /// The lane's currently-served job, published for the deadline
-/// watchdog. The `claimed` flag is the exactly-once arbiter between the
-/// lane and the watchdog: whoever flips it first (under the heartbeat
-/// mutex) owns the job's outcome and feedback.
+/// watchdog through a [`ClaimSlot`], whose claimed flag is the
+/// exactly-once arbiter between the lane and the watchdog: whoever
+/// flips it first (under the slot mutex) owns the job's outcome and
+/// feedback.
 #[derive(Clone)]
 struct ActiveJob {
     id: u64,
@@ -95,13 +97,12 @@ struct ActiveJob {
     deadline_at: Option<Instant>,
     attempt: u32,
     generation: u64,
-    claimed: bool,
 }
 
-/// Shared lane↔watchdog state: the active-job heartbeat plus the
+/// Shared lane↔watchdog state: the active-job claim slot plus the
 /// cancellation token installed into the lane's backend.
 struct Heartbeat {
-    active: Mutex<Option<ActiveJob>>,
+    active: ClaimSlot<ActiveJob>,
     cancel: CancelToken,
 }
 
@@ -287,20 +288,8 @@ fn watchdog_loop(
 ) {
     while !stop.load(Ordering::SeqCst) {
         for (lane, hb) in heartbeats.iter().enumerate() {
-            let claim = {
-                let mut g = hb.active.lock().unwrap();
-                let expired = g.as_ref().is_some_and(|a| {
-                    !a.claimed && a.deadline_at.is_some_and(|d| Instant::now() >= d)
-                });
-                if expired {
-                    let a = g.as_mut().expect("checked above");
-                    a.claimed = true;
-                    Some(a.clone())
-                } else {
-                    None
-                }
-            };
-            let Some(a) = claim else { continue };
+            let expired = |a: &ActiveJob| a.deadline_at.is_some_and(|d| Instant::now() >= d);
+            let Some(a) = hb.active.try_claim(expired) else { continue };
             // Cut the wedged call off, then take over the job's
             // bookkeeping: one outcome, one feedback, queue re-routed.
             hb.cancel.cancel();
@@ -441,7 +430,7 @@ where
     let heartbeats: Vec<Arc<Heartbeat>> = (0..lanes)
         .map(|_| {
             Arc::new(Heartbeat {
-                active: Mutex::new(None),
+                active: ClaimSlot::new(),
                 cancel: CancelToken::new(),
             })
         })
@@ -637,27 +626,23 @@ where
                         // Publish the attempt for the watchdog. If the
                         // watchdog already claimed this job (stall cut
                         // off between our checks), stop touching it.
-                        let claimed_already = {
-                            let mut g = hb.active.lock().unwrap();
-                            if g.as_ref().is_some_and(|a| a.claimed) {
-                                true
-                            } else {
-                                hb.cancel.reset();
-                                *g = Some(ActiveJob {
-                                    id,
-                                    stream,
-                                    key,
-                                    initial,
-                                    queue_wait_ms,
-                                    started: t_serve,
-                                    deadline_at,
-                                    attempt,
-                                    generation,
-                                    claimed: false,
-                                });
-                                false
-                            }
-                        };
+                        let claimed_already = !hb.active.publish_with(
+                            ActiveJob {
+                                id,
+                                stream,
+                                key,
+                                initial,
+                                queue_wait_ms,
+                                started: t_serve,
+                                deadline_at,
+                                attempt,
+                                generation,
+                            },
+                            // Reset the cancel token under the slot lock
+                            // so a claim of this fresh attempt can never
+                            // have its cancellation wiped.
+                            || hb.cancel.reset(),
+                        );
                         if claimed_already {
                             recovered_from_claim = true;
                             break;
@@ -683,15 +668,8 @@ where
                             Err(payload) => Attempt::Panicked(panic_message(payload)),
                         };
                         // Resolve the claim race: whoever holds the
-                        // heartbeat lock first owns the job's outcome.
-                        let claimed = {
-                            let mut g = hb.active.lock().unwrap();
-                            let claimed = g.as_ref().is_some_and(|a| a.claimed);
-                            if !claimed {
-                                *g = None;
-                            }
-                            claimed
-                        };
+                        // claim-slot lock first owns the job's outcome.
+                        let claimed = hb.active.finish();
                         if matches!(served, Attempt::Panicked(_)) {
                             // The engine (and its backend) is toast:
                             // retire its telemetry, respawn next loop,
@@ -795,10 +773,7 @@ where
                         // report the lane back up.
                         stats.failed += 1;
                         stats.deadline_missed += 1;
-                        {
-                            let mut g = hb.active.lock().unwrap();
-                            *g = None;
-                        }
+                        hb.active.clear();
                         ev_tx.send(LaneEvent::Recovered { lane }).ok();
                         continue;
                     }

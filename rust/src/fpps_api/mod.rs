@@ -964,6 +964,8 @@ impl KernelBackend for KdTreeCpuBackend {
         }
         self.builds += 1;
         if let Some(c) = &self.shared_builds {
+            // ordering: Relaxed — test-observability build counter; no
+            // data is published through it.
             c.fetch_add(1, Ordering::Relaxed);
         }
         let tree = OwnedKdTree::build(kept);

@@ -41,5 +41,6 @@ pub mod prop;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod sync;
 pub mod voxelgrid;
 pub mod bench_support;

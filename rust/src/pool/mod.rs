@@ -31,10 +31,10 @@
 
 pub mod ring;
 
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{Arc, Mutex};
 use std::collections::HashMap;
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// Smallest capacity class (in `f32` elements). Tiny acquires all share
 /// one shelf instead of fragmenting across classes.
@@ -106,6 +106,8 @@ impl BufferPool {
     /// (zero heap traffic), freshly allocated otherwise.
     pub fn acquire(&self, capacity: usize) -> PooledBuf {
         let class = Self::class_of(capacity);
+        // ordering: Relaxed — monotonic statistics counters; readers only
+        // need eventual totals, never cross-thread publication.
         self.inner.acquires.fetch_add(1, Ordering::Relaxed);
         let recycled = self
             .inner
@@ -116,10 +118,12 @@ impl BufferPool {
             .and_then(Vec::pop);
         let buf = match recycled {
             Some(b) => {
+                // ordering: Relaxed — statistics counter, as above.
                 self.inner.recycles.fetch_add(1, Ordering::Relaxed);
                 b
             }
             None => {
+                // ordering: Relaxed — statistics counter, as above.
                 self.inner.grows.fetch_add(1, Ordering::Relaxed);
                 Vec::with_capacity(class)
             }
@@ -135,11 +139,15 @@ impl BufferPool {
     /// not free already-shelved buffers eagerly; they are trimmed as
     /// they cycle.
     pub fn set_retain(&self, retain: usize) {
+        // ordering: Relaxed — an advisory knob; a return that reads the
+        // old value a beat late only shelves/frees one extra buffer.
         self.inner.retain.store(retain, Ordering::Relaxed);
     }
 
     /// Snapshot of the cumulative activity counters.
     pub fn stats(&self) -> PoolStats {
+        // ordering: Relaxed — monotonic counters read for reporting; no
+        // data is published through them.
         PoolStats {
             acquires: self.inner.acquires.load(Ordering::Relaxed),
             recycles: self.inner.recycles.load(Ordering::Relaxed),
@@ -185,6 +193,7 @@ impl Drop for PooledBuf {
     fn drop(&mut self) {
         let mut buf = std::mem::take(&mut self.buf);
         buf.clear();
+        // ordering: Relaxed — advisory retention knob (see `set_retain`).
         let retain = self.pool.retain.load(Ordering::Relaxed);
         if retain > 0 {
             let mut shelves = self.pool.shelves.lock().unwrap();
@@ -194,6 +203,7 @@ impl Drop for PooledBuf {
                 return;
             }
         }
+        // ordering: Relaxed — statistics counter (see `acquire`).
         self.pool.discards.fetch_add(1, Ordering::Relaxed);
     }
 }

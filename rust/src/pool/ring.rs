@@ -27,11 +27,15 @@
 //! sleeper is registered, and sleepers re-arm with a bounded
 //! `wait_timeout` so a lost wakeup can cost milliseconds, never a
 //! deadlock.
+//!
+//! All synchronization goes through [`crate::sync`], so the ring runs
+//! unchanged under the `--cfg loom` model checker; the exactly-once and
+//! no-lost-job properties are model-checked in `tests/loom_models.rs`.
 
-use std::cell::UnsafeCell;
+use crate::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use crate::sync::cell::UnsafeCell;
+use crate::sync::{Condvar, Mutex};
 use std::mem::MaybeUninit;
-use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 /// How long a sleeping consumer waits before re-checking the ring on
@@ -67,10 +71,18 @@ pub struct SpscRing<T> {
     wake: Condvar,
 }
 
-// Safety: values move producer -> exactly one consumer; the sequence
-// protocol (Acquire/Release on `seq`) orders every slot access, and a
-// slot is never read and written concurrently.
+// SAFETY: values move producer -> exactly one consumer; the sequence
+// protocol (Acquire/Release on `seq`) orders every slot access — the
+// producer writes a slot only after observing the consumers' "slot
+// free" sequence, and a consumer reads it only after observing the
+// producer's "slot published" sequence — and the tail CAS makes the
+// claimant unique, so a slot is never read and written concurrently.
+// `T: Send` is required because values cross threads by move.
 unsafe impl<T: Send> Send for SpscRing<T> {}
+// SAFETY: `&SpscRing` only exposes the atomic cursors and the
+// CAS-claimed slot protocol justified above; no `&self` method hands
+// out a reference into a slot, so sharing the ring across threads adds
+// no access the `Send` justification does not already cover.
 unsafe impl<T: Send> Sync for SpscRing<T> {}
 
 impl<T> SpscRing<T> {
@@ -103,20 +115,34 @@ impl<T> SpscRing<T> {
         if self.closed.load(Ordering::SeqCst) {
             return Err(v);
         }
+        // ordering: Relaxed — `head` is written only by this (single
+        // producer) thread, so its own last store is always visible.
         let pos = self.head.load(Ordering::Relaxed);
         // Logical-capacity bound (tail only advances, so this check is
         // conservative: at worst we report full a beat late).
+        // ordering: Acquire pairs with the consumers' AcqRel CAS so the
+        // fullness check never runs ahead of a claimed slot.
         if pos.wrapping_sub(self.tail.load(Ordering::Acquire)) >= self.cap {
             return Err(v);
         }
         let slot = &self.slots[pos & self.mask];
         // A consumer that claimed this slot a lap ago may still be
         // reading it; its sequence bump is the all-clear.
+        // ordering: Acquire pairs with the consumer's Release sequence
+        // bump, ordering its read-out before our overwrite.
         if slot.seq.load(Ordering::Acquire) != pos {
             return Err(v);
         }
-        unsafe { (*slot.val.get()).write(v) };
+        // SAFETY: the sequence check above proved the slot is free for
+        // the push at `pos` (every prior consumer finished reading it),
+        // and we are the single producer, so no other thread writes this
+        // slot until the Release store below hands it to a consumer.
+        slot.val.with_mut(|p| unsafe { (*p).write(v) });
+        // ordering: Release publishes the slot write above to the
+        // consumer's Acquire sequence load.
         slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+        // ordering: Release so `is_empty`/`len` observers see the slot
+        // publish no later than the cursor move.
         self.head.store(pos.wrapping_add(1), Ordering::Release);
         // Dekker-style handshake with `pop`: publish-then-check against
         // its register-then-recheck, so either we see the sleeper or it
@@ -131,13 +157,21 @@ impl<T> SpscRing<T> {
 
     /// Non-blocking pop. Safe to call from multiple threads.
     pub fn try_pop(&self) -> Option<T> {
+        // ordering: Relaxed — the CAS below (re)validates the cursor; a
+        // stale read only costs a retry.
         let mut pos = self.tail.load(Ordering::Relaxed);
         loop {
             let slot = &self.slots[pos & self.mask];
+            // ordering: Acquire pairs with the producer's Release publish
+            // so the slot value is visible before we claim it.
             let seq = slot.seq.load(Ordering::Acquire);
             let expect = pos.wrapping_add(1);
             if seq == expect {
                 // Slot is readable: claim it or chase the winner.
+                // ordering: AcqRel — Acquire so the winner's slot read
+                // starts after the producer's publish; Release so our
+                // claim is visible to the producer's fullness check.
+                // Failure is Relaxed: we just retry with the fresh value.
                 match self.tail.compare_exchange_weak(
                     pos,
                     expect,
@@ -145,8 +179,16 @@ impl<T> SpscRing<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        // SAFETY: the CAS made this thread the unique
+                        // claimant of `pos`, and the Acquire sequence
+                        // load above synchronized with the producer's
+                        // Release publish, so the slot holds an
+                        // initialized value no other thread will touch
+                        // until the sequence bump below.
+                        let v = slot.val.with_mut(|p| unsafe { (*p).assume_init_read() });
                         // Free the slot for the producer's next lap.
+                        // ordering: Release orders our read-out before
+                        // the producer's next-lap overwrite.
                         slot.seq
                             .store(pos.wrapping_add(self.mask + 1), Ordering::Release);
                         return Some(v);
@@ -155,6 +197,8 @@ impl<T> SpscRing<T> {
                 }
             } else if seq.wrapping_sub(expect) as isize > 0 {
                 // Another consumer already took this slot; re-read tail.
+                // ordering: Relaxed — revalidated by the seq/CAS protocol
+                // on the next iteration.
                 pos = self.tail.load(Ordering::Relaxed);
             } else {
                 // seq == pos: empty at this cursor.
@@ -208,18 +252,23 @@ impl<T> SpscRing<T> {
         self.wake.notify_all();
     }
 
+    /// Whether [`SpscRing::close`] has been called.
     pub fn is_closed(&self) -> bool {
         self.closed.load(Ordering::SeqCst)
     }
 
     /// Snapshot emptiness (racy, advisory only).
     pub fn is_empty(&self) -> bool {
+        // ordering: Acquire on both cursors keeps the snapshot no older
+        // than the caller's last synchronization point; the result is
+        // advisory either way.
         let tail = self.tail.load(Ordering::Acquire);
         self.head.load(Ordering::Acquire) == tail
     }
 
     /// Snapshot occupancy (racy, advisory only).
     pub fn len(&self) -> usize {
+        // ordering: Acquire, as in `is_empty` — advisory snapshot.
         let tail = self.tail.load(Ordering::Acquire);
         self.head.load(Ordering::Acquire).wrapping_sub(tail)
     }
@@ -236,13 +285,24 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    // Miri executes these loops ~100x slower than native; shrink the
+    // iteration counts there while keeping the native sizes honest.
+    #[cfg(miri)]
+    const FIFO_ITEMS: u64 = 300;
+    #[cfg(not(miri))]
+    const FIFO_ITEMS: u64 = 1000;
+    #[cfg(miri)]
+    const RACE_ITEMS: u64 = 300;
+    #[cfg(not(miri))]
+    const RACE_ITEMS: u64 = 10_000;
+
     #[test]
     fn fifo_and_wraparound() {
         // Capacity 4: push/pop far more items than slots so every slot
         // is reused many laps with sequence numbers wrapping the ring.
         let r = SpscRing::new(4);
         let mut next_out = 0u64;
-        for i in 0..1000u64 {
+        for i in 0..FIFO_ITEMS {
             r.try_push(i).unwrap();
             if i % 3 == 0 {
                 while let Some(v) = r.try_pop() {
@@ -255,7 +315,7 @@ mod tests {
             assert_eq!(v, next_out);
             next_out += 1;
         }
-        assert_eq!(next_out, 1000);
+        assert_eq!(next_out, FIFO_ITEMS);
     }
 
     #[test]
@@ -327,7 +387,7 @@ mod tests {
         // One producer, one popping worker, one draining "watchdog":
         // every item is seen exactly once across both consumers.
         let r = Arc::new(SpscRing::new(8));
-        let total = 10_000u64;
+        let total = RACE_ITEMS;
         let worker = {
             let r = Arc::clone(&r);
             std::thread::spawn(move || {

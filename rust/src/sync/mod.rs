@@ -1,0 +1,96 @@
+//! Concurrency shim: `std::sync` in production, a model checker under test.
+//!
+//! Every concurrent primitive used by the lock-free data plane — atomics,
+//! mutexes, condvars, and the `UnsafeCell` slots inside the SPSC ring — is
+//! imported through this module instead of `std::sync` directly. The shim
+//! compiles in one of two modes:
+//!
+//! - **Normal builds** (`cfg(not(loom))`): zero-cost re-exports of the
+//!   `std::sync` types, plus a `#[repr(transparent)]` [`cell::UnsafeCell`]
+//!   wrapper whose `with`/`with_mut` accessors compile down to a bare
+//!   pointer handoff. Release binaries are bit-for-bit what they were when
+//!   the code named `std::sync` directly.
+//!
+//! - **Model-checking builds** (`RUSTFLAGS="--cfg loom"`): the same names
+//!   resolve to the in-repo model checker in [`model`], which executes the
+//!   code under a deterministic scheduler, explores interleavings
+//!   exhaustively (bounded DFS over preemption points), tracks
+//!   happens-before with vector clocks, and panics on data races against
+//!   the `UnsafeCell` slots. The loom-model tests in
+//!   `rust/tests/loom_models.rs` only compile in this mode.
+//!
+//! The cfg name `loom` is kept so that the models are source-compatible
+//! with the external [loom](https://docs.rs/loom) crate: if a vendored
+//! loom checkout is ever added (the runtime dependency story stays
+//! anyhow-only, so it cannot come from crates.io here), the re-exports
+//! below can switch to it without touching any ported module. Until then
+//! [`model`] provides the subset the data plane needs with the same API
+//! surface. See README "Correctness tooling" for how to run the models.
+//!
+//! What the model checker does and does not prove is documented on
+//! [`model`]; the headline caveat is that execution is sequentially
+//! consistent (races and ordering-sensitive happens-before edges are
+//! detected via vector clocks, but weak-memory value reordering is not
+//! simulated).
+
+pub mod model;
+
+#[cfg(not(loom))]
+mod imp {
+    pub use std::sync::atomic;
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+    /// Cell wrapper matching loom's `UnsafeCell` accessor API.
+    pub mod cell {
+        /// `std::cell::UnsafeCell` behind loom's `with`/`with_mut` API.
+        ///
+        /// In normal builds this is a transparent, zero-cost wrapper: the
+        /// closures receive the raw pointer from the underlying cell and
+        /// the caller remains responsible for aliasing discipline exactly
+        /// as with `std::cell::UnsafeCell`. Under `--cfg loom` the same
+        /// API performs vector-clock race detection on every access.
+        #[derive(Debug, Default)]
+        #[repr(transparent)]
+        pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+        impl<T> UnsafeCell<T> {
+            /// Wraps a value.
+            pub const fn new(v: T) -> Self {
+                Self(std::cell::UnsafeCell::new(v))
+            }
+
+            /// Unwraps the value.
+            pub fn into_inner(self) -> T {
+                self.0.into_inner()
+            }
+
+            /// Calls `f` with a shared raw pointer to the contents.
+            pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+                f(self.0.get())
+            }
+
+            /// Calls `f` with an exclusive raw pointer to the contents.
+            pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+                f(self.0.get())
+            }
+        }
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    pub use crate::sync::model::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+    pub use std::sync::Arc;
+
+    /// Atomics routed through the model checker.
+    pub mod atomic {
+        pub use crate::sync::model::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    }
+
+    /// Race-checked cell routed through the model checker.
+    pub mod cell {
+        pub use crate::sync::model::UnsafeCell;
+    }
+}
+
+pub use imp::*;

@@ -1,0 +1,197 @@
+//! Long randomized stress for the lock-free data plane, `#[ignore]`d by
+//! default: the nightly ThreadSanitizer job runs it with
+//! `--include-ignored`, and it can be run locally with
+//!
+//!   cargo test -q --test stress -- --include-ignored
+//!   FPPS_STRESS_SEED=7 cargo test -q --test stress -- --include-ignored
+//!
+//! These are schedule-shotgun companions to the exhaustive (but tiny)
+//! loom models in `tests/loom_models.rs`: the same exactly-once and
+//! lost-wakeup invariants, checked at scale under real OS scheduling
+//! with a seeded random mix of operations.
+
+use fpps::coordinator::{
+    LaneIcpConfig, RegistrationJob, ServingConfig, ServingPool, SloClass, Submission,
+    SupervisorConfig,
+};
+use fpps::fpps_api::NativeSimBackend;
+use fpps::math::{Mat3, Mat4, Vec3};
+use fpps::pointcloud::PointCloud;
+use fpps::pool::ring::SpscRing;
+use fpps::rng::Pcg32;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn seed() -> u64 {
+    std::env::var("FPPS_STRESS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1F5)
+}
+
+/// Producer, consumer, and a drain-happy watchdog churn one SPSC ring;
+/// every pushed item must surface exactly once across the consumer's
+/// pops, the watchdog's drains, and the final sweep.
+#[test]
+#[ignore = "long randomized stress; nightly TSan job runs it with --include-ignored"]
+fn ring_randomized_push_pop_drain_is_exactly_once() {
+    const ITEMS: u64 = 100_000;
+    let ring: Arc<SpscRing<u64>> = Arc::new(SpscRing::new(64));
+
+    let producer = {
+        let ring = Arc::clone(&ring);
+        let mut rng = Pcg32::new(seed());
+        thread::spawn(move || {
+            for i in 0..ITEMS {
+                let mut v = i;
+                loop {
+                    match ring.try_push(v) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            v = back;
+                            thread::yield_now();
+                        }
+                    }
+                }
+                if rng.below(64) == 0 {
+                    thread::yield_now();
+                }
+            }
+            ring.close();
+        })
+    };
+
+    let consumer = {
+        let ring = Arc::clone(&ring);
+        let mut rng = Pcg32::new(seed() ^ 0x5EED);
+        thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = ring.pop() {
+                got.push(v);
+                if rng.below(128) == 0 {
+                    thread::yield_now();
+                }
+            }
+            got
+        })
+    };
+
+    let watchdog = {
+        let ring = Arc::clone(&ring);
+        let mut rng = Pcg32::new(seed() ^ 0xD06);
+        thread::spawn(move || {
+            let mut got = Vec::new();
+            while !ring.is_closed() {
+                if rng.below(4) == 0 {
+                    got.extend(ring.drain());
+                }
+                thread::yield_now();
+            }
+            got
+        })
+    };
+
+    producer.join().expect("producer");
+    let mut all = consumer.join().expect("consumer");
+    all.extend(watchdog.join().expect("watchdog"));
+    all.extend(ring.drain());
+    all.sort_unstable();
+    let expect: Vec<u64> = (0..ITEMS).collect();
+    assert_eq!(all, expect, "every item exactly once, none lost or duplicated");
+}
+
+fn structured_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::new(seed);
+    let mut c = PointCloud::with_capacity(n);
+    for i in 0..n {
+        match i % 3 {
+            0 => c.push([rng.range(-5.0, 5.0), rng.range(-5.0, 5.0), 0.0]),
+            1 => c.push([rng.range(-5.0, 5.0), 5.0, rng.range(0.0, 3.0)]),
+            _ => c.push([-5.0, rng.range(-5.0, 5.0), rng.range(0.0, 3.0)]),
+        }
+    }
+    c
+}
+
+fn stress_job(id: u64, class: SloClass) -> RegistrationJob {
+    let target = structured_cloud(300, 100 + id);
+    let gt = Mat4::from_rt(
+        Mat3::rot_z(0.01 * (id as f64 % 7.0 + 1.0)),
+        Vec3::new(0.1, -0.05, 0.01),
+    );
+    let source = target.transformed(&gt.inverse_rigid());
+    RegistrationJob::new(id, id as usize % 3, source, target, Mat4::IDENTITY).with_slo(class)
+}
+
+/// A storm of client threads with random SLO classes and a random mix
+/// of completion styles (blocking wait, timeout polling, waker +
+/// channel); every admitted or shed job must resolve exactly once with
+/// its own id.
+#[test]
+#[ignore = "long randomized stress; nightly TSan job runs it with --include-ignored"]
+fn serving_randomized_submission_storm_resolves_every_job() {
+    const CLIENTS: u64 = 4;
+    const JOBS_PER_CLIENT: u64 = 16;
+    let pool = ServingPool::start(
+        2,
+        2,
+        LaneIcpConfig::default(),
+        SupervisorConfig::default(),
+        ServingConfig::default(),
+        |_lane, _tier| Ok(NativeSimBackend::new()),
+    )
+    .expect("pool start");
+
+    let mut workers = Vec::new();
+    for t in 0..CLIENTS {
+        let client = pool.client();
+        workers.push(thread::spawn(move || {
+            let mut rng = Pcg32::substream(seed(), t);
+            let mut resolved = 0u64;
+            for k in 0..JOBS_PER_CLIENT {
+                let id = t * 1000 + k;
+                let class = match rng.below(3) {
+                    0 => SloClass::Standard,
+                    1 => SloClass::BestEffort,
+                    _ => SloClass::LatencyCritical,
+                };
+                let mut job = stress_job(id, class);
+                let handle = loop {
+                    match client.try_submit(job).expect("pool alive") {
+                        Submission::Accepted(h) | Submission::Shed(h) => break h,
+                        Submission::Parked(back) => {
+                            job = back;
+                            thread::yield_now();
+                        }
+                    }
+                };
+                assert_eq!(handle.id(), id);
+                let outcome = match rng.below(3) {
+                    0 => handle.wait(),
+                    1 => loop {
+                        if let Some(o) = handle.wait_timeout(Duration::from_millis(50)) {
+                            break o;
+                        }
+                    },
+                    _ => {
+                        let (tx, rx) = mpsc::channel();
+                        handle.set_waker(move || {
+                            tx.send(()).ok();
+                        });
+                        rx.recv().expect("waker fires");
+                        handle.try_take().expect("complete after waker")
+                    }
+                };
+                assert_eq!(outcome.id, id, "outcome routed to the submitting handle");
+                resolved += 1;
+            }
+            resolved
+        }));
+    }
+
+    let total: u64 = workers.into_iter().map(|w| w.join().expect("client")).sum();
+    assert_eq!(total, CLIENTS * JOBS_PER_CLIENT, "every job resolved exactly once");
+    pool.shutdown().expect("clean shutdown");
+}
